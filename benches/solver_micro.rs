@@ -1,0 +1,64 @@
+//! Micro-benchmarks of the planner hot paths (the §Perf iteration log in
+//! EXPERIMENTS.md tracks these): interval-DP throughput, full chain solve,
+//! MIQP branch-and-bound, cost-matrix construction, simulator iterations,
+//! and end-to-end UOP wall time.
+//!
+//! Run: `cargo bench --bench solver_micro`
+
+use uniap::cluster::ClusterEnv;
+use uniap::cost::cost_modeling;
+use uniap::graph::models;
+use uniap::planner::{chain, uop, PlannerConfig};
+use uniap::profiling::Profile;
+use uniap::report::bench::{bench, section};
+use uniap::sim::{simulate_plan, SimConfig};
+
+fn main() {
+    let cfg = PlannerConfig::default();
+    let bert = models::bert_huge();
+    let env = ClusterEnv::env_b();
+    let profile = Profile::analytic(&env, &bert);
+
+    section("cost model");
+    bench("cost_modeling(BERT-Huge, pp=2, c=4)", 1, 10, || {
+        std::hint::black_box(cost_modeling(&profile, &bert, 2, 16, 4));
+    });
+
+    section("chain solver");
+    let costs = cost_modeling(&profile, &bert, 2, 16, 4);
+    bench("solve_chain(BERT-Huge, pp=2, c=4)", 1, 5, || {
+        std::hint::black_box(chain::solve_chain(&bert, &costs, &cfg));
+    });
+    let costs8 = cost_modeling(&profile, &bert, 8, 16, 4);
+    bench("solve_chain(BERT-Huge, pp=8, c=4)", 1, 5, || {
+        std::hint::black_box(chain::solve_chain(&bert, &costs8, &cfg));
+    });
+    bench("solve_interval(BERT-Huge, 0..33)", 1, 10, || {
+        std::hint::black_box(chain::solve_interval(&costs, 0, 33, 128));
+    });
+
+    section("MIQP branch & bound");
+    let toy = models::synthetic_chain(8, 5e11, 2e7, 2e6);
+    let ptoy = Profile::analytic(&env, &toy);
+    let ctoy = cost_modeling(&ptoy, &toy, 4, 8, 4);
+    bench("solve_miqp(8 layers, pp=4)", 1, 10, || {
+        std::hint::black_box(uniap::miqp::solve_miqp(&toy, &ctoy, &cfg));
+    });
+
+    section("simulator");
+    let plan = chain::solve_chain(&bert, &costs, &cfg).unwrap();
+    let sim_cfg = SimConfig::default();
+    bench("simulate_plan(BERT-Huge, 5 iters)", 1, 20, || {
+        std::hint::black_box(simulate_plan(&bert, &profile, &plan, &sim_cfg));
+    });
+
+    section("end-to-end UOP");
+    bench("uop(BERT-Huge, EnvB, B=16)", 0, 3, || {
+        std::hint::black_box(uop(&profile, &bert, 16, &cfg));
+    });
+    let swin = models::swin_huge();
+    let pswin = Profile::analytic(&ClusterEnv::env_a(), &swin);
+    bench("uop(Swin-Huge, EnvA, B=128)", 0, 1, || {
+        std::hint::black_box(uop(&pswin, &swin, 128, &cfg));
+    });
+}

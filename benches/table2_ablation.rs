@@ -1,0 +1,45 @@
+//! Table 2: ablation on the importance of unifying the strategy space —
+//! inter-layer-only and intra-layer-only restrictions vs full UniAP on
+//! EnvB (B = 16 / 12 / 64 / 32).
+//!
+//! Run: `cargo bench --bench table2_ablation`
+
+use uniap::baselines::{Baseline, BaselineKind};
+use uniap::cluster::ClusterEnv;
+use uniap::graph::models;
+use uniap::planner::PlannerConfig;
+use uniap::profiling::Profile;
+use uniap::report::Table;
+use uniap::sim::{simulate_plan, SimConfig};
+
+fn main() {
+    let cfg = PlannerConfig::default();
+    let env = ClusterEnv::env_b();
+    let workloads: Vec<(&str, usize)> =
+        vec![("bert", 16), ("t5-16", 12), ("vit", 64), ("swin", 32)];
+    println!("# Table 2 — ablation on strategy-space unification (EnvB)\n");
+    let mut table = Table::new(&["model", "Inter-only", "Intra-only", "UniAP"]);
+    for (name, batch) in workloads {
+        let graph = models::by_name(name).unwrap();
+        let profile = Profile::analytic(&env, &graph);
+        let mut cells = Vec::new();
+        for kind in [BaselineKind::InterOnly, BaselineKind::IntraOnly, BaselineKind::UniAP] {
+            let r = Baseline::run(kind, &profile, &graph, batch, &cfg);
+            let cell = match r.plan {
+                None => "SOL×".to_string(),
+                Some(plan) => {
+                    let sim = simulate_plan(&graph, &profile, &plan, &SimConfig::default());
+                    if sim.oom {
+                        "CUDA×".to_string()
+                    } else {
+                        uniap::metrics::pm(sim.throughput, sim.throughput_std, 2)
+                    }
+                }
+            };
+            cells.push(cell);
+        }
+        table.row(vec![graph.name.clone(), cells[0].clone(), cells[1].clone(), cells[2].clone()]);
+    }
+    print!("{}", table.to_markdown());
+    println!("\npaper shape: restrictions lose throughput or fail outright; UniAP never loses.");
+}

@@ -1,0 +1,56 @@
+//! Table 5 (Appendix G): statistics over Megatron's candidate parallel
+//! strategies on EnvE — what a user faces without an optimizer: top-1 vs
+//! top-2 vs median vs slowest throughput, and how many candidates are
+//! outright infeasible.
+//!
+//! Run: `cargo bench --bench table5_megatron_stats`
+
+use uniap::baselines::megatron;
+use uniap::cluster::ClusterEnv;
+use uniap::graph::models;
+use uniap::planner::PlannerConfig;
+use uniap::profiling::Profile;
+use uniap::report::Table;
+
+fn main() {
+    let cfg = PlannerConfig::default();
+    let env = ClusterEnv::env_e();
+    println!("# Table 5 — Megatron candidate statistics (EnvE)\n");
+    let mut table = Table::new(&[
+        "model", "batch", "top-1", "top-2", "slowest", "median", "#infeasible", "#candidate",
+    ]);
+    for (name, batch) in [("llama-7b", 8usize), ("llama-13b", 4)] {
+        let graph = models::by_name(name).unwrap();
+        let profile = Profile::analytic(&env, &graph);
+        let grid = megatron::run(&profile, &graph, batch, &cfg);
+        match megatron::stats(&grid) {
+            Some(s) => {
+                table.row(vec![
+                    graph.name.clone(),
+                    batch.to_string(),
+                    format!("{:.2}", s.top1),
+                    format!("{:.2}", s.top2),
+                    format!("{:.2}", s.slowest),
+                    format!("{:.2}", s.median),
+                    s.infeasible.to_string(),
+                    s.total.to_string(),
+                ]);
+            }
+            None => {
+                table.row(vec![
+                    graph.name.clone(),
+                    batch.to_string(),
+                    "—".into(),
+                    "—".into(),
+                    "—".into(),
+                    "—".into(),
+                    grid.candidates.len().to_string(),
+                    grid.candidates.len().to_string(),
+                ]);
+            }
+        }
+    }
+    print!("{}", table.to_markdown());
+    println!("\npaper shape: most candidates infeasible; picking blind sacrifices");
+    println!("throughput (top-1 ≫ median), motivating automatic optimization.");
+}

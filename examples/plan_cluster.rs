@@ -1,0 +1,76 @@
+//! Plan every paper model across every environment — the Appendix D-style
+//! visualisation of candidate `(P, S)` solutions plus a full cross-matrix
+//! of optimal strategies, including the toy 3-layer example of Figure 6.
+//!
+//! Run: `cargo run --release --example plan_cluster`
+
+use uniap::cluster::ClusterEnv;
+use uniap::cost::cost_modeling;
+use uniap::graph::models;
+use uniap::planner::{uop, PlannerConfig};
+use uniap::profiling::Profile;
+use uniap::report::Table;
+
+fn main() {
+    // ---- Appendix D: a 3-layer model on 2 stages × 4 GPUs ------------
+    println!("# Appendix D: candidate (P, S) for a 3-layer model\n");
+    let toy = models::synthetic_chain(3, 2e12, 5e7, 8e6);
+    let env = ClusterEnv::env_b(); // 8 GPUs
+    let profile = Profile::analytic(&env, &toy);
+    let costs = cost_modeling(&profile, &toy, 2, 8, 4);
+    let plan = uniap::planner::chain::solve_chain(&toy, &costs, &PlannerConfig::default())
+        .expect("toy is feasible");
+    println!("P matrix (layers × stages):");
+    for u in 0..toy.num_layers() {
+        let row: Vec<&str> = (0..2).map(|i| if plan.placement[u] == i { "1" } else { "0" }).collect();
+        println!("  l{u}: [{}]", row.join(" "));
+    }
+    println!("S matrix (strategy dictionary × layers), 1 = selected:");
+    for (k, st) in plan.strategies.iter().enumerate() {
+        let row: Vec<&str> = (0..toy.num_layers())
+            .map(|u| if plan.choice[u] == k { "1" } else { "0" })
+            .collect();
+        println!("  {:<14} [{}]", st.label(), row.join(" "));
+    }
+
+    // ---- full model × environment matrix -----------------------------
+    println!("\n# Optimal strategies across the paper's workloads\n");
+    let mut table = Table::new(&["env", "model", "B", "plan", "est samples/s", "opt time"]);
+    let cases: Vec<(ClusterEnv, &str, usize)> = vec![
+        (ClusterEnv::env_a(), "bert", 32),
+        (ClusterEnv::env_a(), "t5", 16),
+        (ClusterEnv::env_a(), "vit", 128),
+        (ClusterEnv::env_a(), "swin", 128),
+        (ClusterEnv::env_b(), "bert", 16),
+        (ClusterEnv::env_b(), "t5-16", 8),
+        (ClusterEnv::env_b(), "vit", 64),
+        (ClusterEnv::env_b(), "swin", 32),
+        (ClusterEnv::env_c(), "llama-7b", 8),
+        (ClusterEnv::env_e(), "llama-7b", 8),
+        (ClusterEnv::env_e(), "llama-13b", 4),
+    ];
+    for (env, name, batch) in cases {
+        let model = models::by_name(name).unwrap();
+        let profile = Profile::analytic(&env, &model);
+        let res = uop(&profile, &model, batch, &PlannerConfig::default());
+        match res.best {
+            Some(plan) => table.row(vec![
+                env.name.clone(),
+                model.name.clone(),
+                batch.to_string(),
+                format!("pp{} c{} {}", plan.pp_size, plan.num_micro, plan.strategy_of(1).label()),
+                format!("{:.2}", plan.est_throughput()),
+                uniap::util::fmt_secs(res.wall_secs),
+            ]),
+            None => table.row(vec![
+                env.name.clone(),
+                model.name.clone(),
+                batch.to_string(),
+                "SOL×".into(),
+                "—".into(),
+                uniap::util::fmt_secs(res.wall_secs),
+            ]),
+        };
+    }
+    print!("{}", table.to_markdown());
+}

@@ -1,0 +1,59 @@
+//! Quickstart: plan BERT-Huge on the paper's EnvB cluster, inspect the
+//! optimal joint inter-/intra-layer strategy, and validate it on the
+//! discrete-event simulator — the whole UniAP flow (Figure 1) in ~30 lines
+//! of library use.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use uniap::cluster::ClusterEnv;
+use uniap::graph::models;
+use uniap::planner::{uop, PlannerConfig};
+use uniap::profiling::Profile;
+use uniap::sim::{simulate_plan, SimConfig};
+
+fn main() {
+    // 1. Workload + environment (2 nodes × 4 TITAN Xp, 10 Gbps between).
+    let model = models::bert_huge();
+    let env = ClusterEnv::env_b();
+    println!("model: {} ({:.0}M params)", model.name, model.total_params() / 1e6);
+    println!("cluster: {} = {} × {}", env.name, env.total_devices(), env.device.name);
+
+    // 2. Profile (§3.1) — analytic backend over the cluster model.
+    let profile = Profile::analytic(&env, &model);
+
+    // 3. Unified Optimization Process (§3.4): enumerate (pp_size, c),
+    //    solve the joint MIQP per candidate, keep the best.
+    let result = uop(&profile, &model, /*mini-batch*/ 16, &PlannerConfig::default());
+    println!("\ncandidates examined: {}", result.log.len());
+    println!("strategy optimization time: {}", uniap::util::fmt_secs(result.wall_secs));
+
+    let plan = result.best.expect("BERT-Huge is plannable on EnvB");
+    println!("\noptimal plan: {}", plan.summary());
+    for (i, (a, b)) in plan.stage_ranges().into_iter().enumerate() {
+        println!(
+            "  stage {i}: layers {a}..={b} ({} layers), strategy {}",
+            b - a + 1,
+            plan.strategy_of(a).label()
+        );
+    }
+
+    // 4. Validate on the event-level simulator (the testbed substitute) —
+    //    Figure 2's time decomposition comes from the same machinery.
+    let sim = simulate_plan(&model, &profile, &plan, &SimConfig::default());
+    println!("\nsimulated throughput: {:.2} ± {:.2} samples/s", sim.throughput, sim.throughput_std);
+    println!("estimated throughput: {:.2} samples/s", plan.est_throughput());
+    println!(
+        "relative estimation error (§4.2): {:.2}%",
+        100.0 * uniap::metrics::ree(sim.throughput, plan.est_throughput())
+    );
+    println!("MFU: {:.1}%  bubble: {:.1}%", 100.0 * sim.mfu, 100.0 * sim.bubble_frac);
+
+    // GPipe time decomposition (Figure 2): per-micro-batch stage costs.
+    println!("\nGPipe decomposition (per micro-batch):");
+    for (i, (f, b)) in sim.stage_fwd.iter().zip(&sim.stage_bwd).enumerate() {
+        println!("  p{i}: fwd {} + bwd {}", uniap::util::fmt_secs(*f), uniap::util::fmt_secs(*b));
+    }
+    for (j, o) in sim.comm_fwd.iter().enumerate() {
+        println!("  o{j}: P2P {}", uniap::util::fmt_secs(*o));
+    }
+}

@@ -1,0 +1,108 @@
+"""AOT export: lower the Layer-2 stage programs to HLO text artifacts.
+
+HLO *text* is the interchange format — NOT `lowered.compile().serialize()`
+and NOT the serialized HloModuleProto: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which the Rust side's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Also writes:
+  meta.txt          — key=value export configuration (rust parses this)
+  init_stage<i>.bin — initial flat parameters, f32 little-endian
+
+Usage:  python -m compile.aot --out ../artifacts [--preset small|e2e]
+        [--stages N] [--micro-batch B] [--seq S] [--d D] [--layers L]
+"""
+
+import argparse
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import GPTConfig, init_stage, make_entry_points, spec_size, stage_roles, stage_spec
+
+PRESETS = {
+    # fast export + fast tests
+    "small": dict(vocab=512, d=128, layers=4, heads=4, seq=64, micro_batch=4, stages=2),
+    # the end-to-end example: ~26M parameters, 4 pipeline stages
+    "e2e": dict(vocab=4096, d=384, layers=12, heads=6, seq=64, micro_batch=4, stages=4),
+}
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(cfg: GPTConfig, out_dir: str, seed: int = 0, verbose: bool = True) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = make_entry_points(cfg)
+    for name, (fn, args) in entries.items():
+        text = to_hlo_text(fn, args)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        if verbose:
+            print(f"wrote {path} ({len(text)} chars)")
+
+    roles = stage_roles(cfg.stages)
+    key = jax.random.PRNGKey(seed)
+    sizes = []
+    for i, role in enumerate(roles):
+        key, sub = jax.random.split(key)
+        flat = np.asarray(init_stage(cfg, role, sub), dtype=np.float32)
+        sizes.append(flat.size)
+        flat.tofile(os.path.join(out_dir, f"init_stage{i}.bin"))
+        if verbose:
+            print(f"wrote init_stage{i}.bin ({flat.size} params, role={role})")
+
+    meta = [
+        f"vocab={cfg.vocab}",
+        f"d={cfg.d}",
+        f"layers={cfg.layers}",
+        f"heads={cfg.heads}",
+        f"seq={cfg.seq}",
+        f"micro_batch={cfg.micro_batch}",
+        f"stages={cfg.stages}",
+    ]
+    meta += [f"params_stage{i}={n}" for i, n in enumerate(sizes)]
+    with open(os.path.join(out_dir, "meta.txt"), "w") as f:
+        f.write("\n".join(meta) + "\n")
+    if verbose:
+        total = sum(sizes)
+        print(f"wrote meta.txt — {total/1e6:.2f}M params over {cfg.stages} stages")
+        for r in ("first", "mid", "last"):
+            print(f"  role {r}: {spec_size(stage_spec(cfg, r))} params")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--stages", type=int)
+    ap.add_argument("--micro-batch", type=int)
+    ap.add_argument("--seq", type=int)
+    ap.add_argument("--d", type=int)
+    ap.add_argument("--layers", type=int)
+    ap.add_argument("--vocab", type=int)
+    ap.add_argument("--heads", type=int)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    kw = dict(PRESETS[args.preset])
+    for field in ("stages", "micro_batch", "seq", "d", "layers", "vocab", "heads"):
+        v = getattr(args, field)
+        if v is not None:
+            kw[field] = v
+    cfg = GPTConfig(**kw)
+    export(cfg, args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

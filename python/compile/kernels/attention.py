@@ -1,0 +1,125 @@
+"""Layer-1: fused causal flash-attention as a Pallas kernel (TPU-style).
+
+Hardware adaptation of the paper's CUDA substrate (DESIGN.md
+§Hardware-Adaptation): instead of a threadblock decomposition, the
+HBM↔VMEM schedule is expressed with a Pallas grid over (batch·heads,
+query blocks) and `BlockSpec`s sized for VMEM residency; the contraction
+shapes are MXU-friendly (the query block × head-dim tiles), and the softmax
+is computed online (block-wise running max/sum rescaling) so no s×s score
+matrix ever materialises.
+
+Lowered with `interpret=True`: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO that any
+backend runs (see /opt/xla-example/README.md). Real-TPU VMEM/MXU estimates
+are recorded in DESIGN.md §Perf.
+
+The backward pass is the exact VJP of the pure-jnp oracle (`ref.attention`)
+via `jax.custom_vjp` — AD never differentiates through the Pallas call.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_NEG = -1e30  # finite "-inf" so fully-masked blocks stay NaN-free
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_q, block_k, seq):
+    """One (batch·head, q-block) grid cell: online-softmax attention."""
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale  # [bq, dh]
+    dh = q.shape[-1]
+    rows = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # global q index
+
+    num_k = seq // block_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k_blk = k_ref[pl.dslice(kb * block_k, block_k), :]
+        v_blk = v_ref[pl.dslice(kb * block_k, block_k), :]
+        k_blk = k_blk.astype(jnp.float32)
+        v_blk = v_blk.astype(jnp.float32)
+        cols = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        logits = q @ k_blk.T  # [bq, bk] — MXU contraction
+        logits = jnp.where(cols[None, :] <= rows[:, None], logits, _NEG)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v_blk
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), _NEG, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), dtype=jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_k, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(s, want):
+    """Largest divisor of `s` that is ≤ `want` (block shapes must tile s)."""
+    b = min(want, s)
+    while s % b != 0:
+        b -= 1
+    return b
+
+
+def flash_attention(q, k, v, *, block_q=64, block_k=64):
+    """Causal flash attention over [b, h, s, dh]; Pallas, interpret mode."""
+    b, h, s, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    bq = _pick_block(s, block_q)
+    bk = _pick_block(s, block_k)
+    q2 = q.reshape(b * h, s, dh)
+    k2 = k.reshape(b * h, s, dh)
+    v2 = v.reshape(b * h, s, dh)
+    kernel = functools.partial(_flash_kernel, scale=scale, block_q=bq, block_k=bk, seq=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, s // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, s, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), q.dtype),
+        interpret=True,
+    )(q2, k2, v2)
+    return out.reshape(b, h, s, dh)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Causal attention: Pallas forward, oracle-exact backward."""
+    return flash_attention(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    return flash_attention(q, k, v), (q, k, v)
+
+
+def _attn_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: _ref_causal(q, k, v), q, k, v)
+    return vjp(g)
+
+
+def _ref_causal(q, k, v):
+    return ref.attention(q, k, v)
+
+
+attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+def vmem_estimate_bytes(s, dh, block_q=64, block_k=64, dtype_bytes=4):
+    """Per-grid-cell VMEM footprint estimate for DESIGN.md §Perf: the q
+    tile, one k/v block pair, the logits tile and the accumulator."""
+    bq = _pick_block(s, block_q)
+    bk = _pick_block(s, block_k)
+    tiles = bq * dh + 2 * bk * dh + bq * bk + bq * dh + 2 * bq
+    return tiles * dtype_bytes

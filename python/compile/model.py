@@ -1,0 +1,260 @@
+"""Layer-2: the JAX transformer LM, staged for pipeline execution.
+
+Build-time only — `aot.py` lowers these functions once to HLO text; the
+Rust coordinator executes the artifacts through PJRT and Python never runs
+again.
+
+Parameters of a pipeline stage live in ONE flat f32 vector. The layout is
+spec-driven (`stage_spec`) so packing (init) and unpacking (forward) share
+a single source of truth, and the Rust side only ever sees opaque flat
+buffers plus their total length (`meta.txt`).
+
+Stage roles (see rust/src/exec/pipeline.rs for the artifact contract):
+  first : embedding + first `layers/stages` blocks
+  mid   : blocks only
+  last  : blocks + final layernorm + LM head + mean-token cross-entropy
+
+Backward stage programs recompute their forward internally
+(rematerialisation), so pipeline traffic is exactly activations forward /
+activation-gradients backward. Attention is the Layer-1 Pallas kernel
+(`kernels.attention`), wrapped in a custom VJP.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.attention import attention
+
+
+@dataclass(frozen=True)
+class GPTConfig:
+    vocab: int = 512
+    d: int = 128
+    layers: int = 4
+    heads: int = 4
+    seq: int = 64
+    micro_batch: int = 4
+    stages: int = 2
+
+    @property
+    def ff(self):
+        return 4 * self.d
+
+    @property
+    def layers_per_stage(self):
+        assert self.layers % self.stages == 0, "stages must divide layers"
+        return self.layers // self.stages
+
+
+# ---------------------------------------------------------------------------
+# spec-driven flat parameter layout
+# ---------------------------------------------------------------------------
+
+def block_spec(cfg, prefix):
+    d, ff = cfg.d, cfg.ff
+    return [
+        (f"{prefix}.ln1_g", (d,), "one"),
+        (f"{prefix}.ln1_b", (d,), "zero"),
+        (f"{prefix}.wqkv", (d, 3 * d), "w"),
+        (f"{prefix}.bqkv", (3 * d,), "zero"),
+        (f"{prefix}.wo", (d, d), "w"),
+        (f"{prefix}.bo", (d,), "zero"),
+        (f"{prefix}.ln2_g", (d,), "one"),
+        (f"{prefix}.ln2_b", (d,), "zero"),
+        (f"{prefix}.w1", (d, ff), "w"),
+        (f"{prefix}.b1", (ff,), "zero"),
+        (f"{prefix}.w2", (ff, d), "w"),
+        (f"{prefix}.b2", (d,), "zero"),
+    ]
+
+
+def stage_spec(cfg, role):
+    """Tensor spec [(name, shape, init)] for one stage's flat buffer."""
+    assert role in ("first", "mid", "last")
+    spec = []
+    if role == "first":
+        spec.append(("embed", (cfg.vocab, cfg.d), "w"))
+        spec.append(("pos", (cfg.seq, cfg.d), "w"))
+    for i in range(cfg.layers_per_stage):
+        spec.extend(block_spec(cfg, f"blk{i}"))
+    if role == "last":
+        spec.append(("lnf_g", (cfg.d,), "one"))
+        spec.append(("lnf_b", (cfg.d,), "zero"))
+        spec.append(("whead", (cfg.d, cfg.vocab), "w"))
+    return spec
+
+
+def spec_size(spec):
+    size = 0
+    for _, shape, _ in spec:
+        n = 1
+        for s in shape:
+            n *= s
+        size += n
+    return size
+
+
+def unpack(flat, spec):
+    """Slice a flat vector into named tensors (static shapes → static HLO)."""
+    out, at = {}, 0
+    for name, shape, _ in spec:
+        n = 1
+        for s in shape:
+            n *= s
+        out[name] = flat[at : at + n].reshape(shape)
+        at += n
+    return out
+
+
+def init_stage(cfg, role, key):
+    """Initial flat parameter vector for one stage."""
+    spec = stage_spec(cfg, role)
+    chunks = []
+    for name, shape, kind in spec:
+        n = 1
+        for s in shape:
+            n *= s
+        if kind == "w":
+            key, sub = jax.random.split(key)
+            chunks.append(0.02 * jax.random.normal(sub, (n,), jnp.float32))
+        elif kind == "one":
+            chunks.append(jnp.ones((n,), jnp.float32))
+        else:
+            chunks.append(jnp.zeros((n,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# forward math
+# ---------------------------------------------------------------------------
+
+def _block(x, p, prefix, cfg):
+    b, s, d = x.shape
+    h = ref.layernorm(x, p[f"{prefix}.ln1_g"], p[f"{prefix}.ln1_b"])
+    qkv = h @ p[f"{prefix}.wqkv"] + p[f"{prefix}.bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    dh = d // cfg.heads
+    to_heads = lambda t: t.reshape(b, s, cfg.heads, dh).transpose(0, 2, 1, 3)
+    a = attention(to_heads(q), to_heads(k), to_heads(v))
+    a = a.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + a @ p[f"{prefix}.wo"] + p[f"{prefix}.bo"]
+    h = ref.layernorm(x, p[f"{prefix}.ln2_g"], p[f"{prefix}.ln2_b"])
+    x = x + ref.ffn_gelu(h, p[f"{prefix}.w1"], p[f"{prefix}.b1"], p[f"{prefix}.w2"], p[f"{prefix}.b2"])
+    return x
+
+
+def _run_blocks(x, p, cfg):
+    for i in range(cfg.layers_per_stage):
+        x = _block(x, p, f"blk{i}", cfg)
+    return x
+
+
+def first_fwd(cfg, params, tokens):
+    """first stage: (flat params, tokens[b,s] i32) → h[b,s,d]."""
+    p = unpack(params, stage_spec(cfg, "first"))
+    x = p["embed"][tokens] + p["pos"][None, :, :]
+    return _run_blocks(x, p, cfg)
+
+
+def mid_fwd(cfg, params, h):
+    """mid stage: (flat params, h_in) → h_out."""
+    p = unpack(params, stage_spec(cfg, "mid"))
+    return _run_blocks(h, p, cfg)
+
+
+def last_loss(cfg, params, h, targets):
+    """last stage: (flat params, h_in, targets[b,s] i32) → mean CE loss."""
+    p = unpack(params, stage_spec(cfg, "last"))
+    h = _run_blocks(h, p, cfg)
+    h = ref.layernorm(h, p["lnf_g"], p["lnf_b"])
+    logits = h @ p["whead"]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+# ---------------------------------------------------------------------------
+# exported entry points (what aot.py lowers) — all tuple-returning
+# ---------------------------------------------------------------------------
+
+def make_entry_points(cfg):
+    """Return {artifact name: (fn, example_args)} for AOT lowering."""
+    b, s, d = cfg.micro_batch, cfg.seq, cfg.d
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    act = jax.ShapeDtypeStruct((b, s, d), jnp.float32)
+    roles = stage_roles(cfg.stages)
+    sizes = {r: spec_size(stage_spec(cfg, r)) for r in ("first", "mid", "last")}
+    pf = jax.ShapeDtypeStruct((sizes["first"],), jnp.float32)
+    pm = jax.ShapeDtypeStruct((sizes["mid"],), jnp.float32)
+    pl_ = jax.ShapeDtypeStruct((sizes["last"],), jnp.float32)
+
+    def first_fwd_e(params, tokens):
+        return (first_fwd(cfg, params, tokens),)
+
+    def first_bwd_e(params, tokens, g_h):
+        g = jax.vjp(lambda p: first_fwd(cfg, p, tokens), params)[1](g_h)[0]
+        return (g,)
+
+    def mid_fwd_e(params, h):
+        return (mid_fwd(cfg, params, h),)
+
+    def mid_bwd_e(params, h, g_out):
+        _, vjp = jax.vjp(lambda p, x: mid_fwd(cfg, p, x), params, h)
+        gp, gh = vjp(g_out)
+        return (gp, gh)
+
+    def last_bwd_e(params, h, targets):
+        loss, vjp = jax.value_and_grad(
+            lambda p, x: last_loss(cfg, p, x, targets), argnums=(0, 1)
+        )(params, h)
+        gp, gh = vjp
+        return (loss, gp, gh)
+
+    def full_step_e(*args):
+        stage_params = args[: cfg.stages]
+        tokens, targets = args[cfg.stages], args[cfg.stages + 1]
+
+        def loss_fn(ps):
+            h = first_fwd(cfg, ps[0], tokens)
+            for si in range(1, cfg.stages - 1):
+                h = mid_fwd(cfg, ps[si], h)
+            return last_loss(cfg, ps[-1], h, targets)
+
+        loss, grads = jax.value_and_grad(loss_fn)(list(stage_params))
+        return (loss, *grads)
+
+    entries = {
+        "stage_first_fwd": (first_fwd_e, (pf, tok)),
+        "stage_first_bwd": (first_bwd_e, (pf, tok, act)),
+        "stage_last_bwd": (last_bwd_e, (pl_, act, tok)),
+    }
+    if cfg.stages > 2:
+        entries["stage_mid_fwd"] = (mid_fwd_e, (pm, act))
+        entries["stage_mid_bwd"] = (mid_bwd_e, (pm, act, act))
+    full_args = tuple(
+        {"first": pf, "mid": pm, "last": pl_}[r] for r in roles
+    ) + (tok, tok)
+    entries["full_step"] = (full_step_e, full_args)
+    return entries
+
+
+def stage_roles(stages):
+    """Role of each pipeline stage index."""
+    assert stages >= 2, "pipeline needs ≥ 2 stages"
+    return ["first"] + ["mid"] * (stages - 2) + ["last"]
+
+
+# convenience for tests
+def reference_loss(cfg, stage_params, tokens, targets):
+    """Compose stages in pure JAX (no pipeline) — test oracle."""
+    h = first_fwd(cfg, stage_params[0], tokens)
+    for si in range(1, cfg.stages - 1):
+        h = mid_fwd(cfg, stage_params[si], h)
+    return last_loss(cfg, stage_params[-1], h, targets)
+
+
+partial  # re-exported convenience (silences linters about unused import)

@@ -1,0 +1,110 @@
+"""L1 correctness: Pallas flash-attention vs the pure-jnp oracle.
+
+The hypothesis sweep covers shapes (batch, heads, seq, head-dim), block
+sizes (including non-dividing requests that trigger the divisor fallback)
+and dtypes; equality is asserted against `ref.attention` — the CORE
+correctness signal for the kernel layer.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels.attention import attention, flash_attention, vmem_estimate_bytes
+
+hypothesis.settings.register_profile(
+    "kernel", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernel")
+
+
+def rand_qkv(key, b, h, s, dh, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return [jax.random.normal(k, (b, h, s, dh), dtype) for k in ks]
+
+
+@hypothesis.given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    s=st.sampled_from([8, 24, 64, 96]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**30),
+)
+def test_flash_matches_reference(b, h, s, dh, seed):
+    q, k, v = rand_qkv(jax.random.PRNGKey(seed), b, h, s, dh)
+    got = flash_attention(q, k, v)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@hypothesis.given(
+    bq=st.sampled_from([8, 16, 48, 64, 100]),
+    bk=st.sampled_from([8, 16, 48, 64, 100]),
+)
+def test_block_sizes_do_not_change_results(bq, bk):
+    q, k, v = rand_qkv(jax.random.PRNGKey(7), 2, 2, 48, 16)
+    got = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_bfloat16_inputs_supported():
+    q, k, v = rand_qkv(jax.random.PRNGKey(3), 1, 2, 32, 16, jnp.bfloat16)
+    got = flash_attention(q, k, v).astype(jnp.float32)
+    want = ref.attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+def test_causality():
+    """Future keys must not influence earlier queries."""
+    q, k, v = rand_qkv(jax.random.PRNGKey(5), 1, 1, 32, 8)
+    out1 = flash_attention(q, k, v)
+    k2 = k.at[:, :, 20:, :].set(99.0)
+    v2 = v.at[:, :, 20:, :].set(-99.0)
+    out2 = flash_attention(q, k2, v2)
+    np.testing.assert_allclose(out1[:, :, :20], out2[:, :, :20], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[:, :, 20:], out2[:, :, 20:])
+
+
+def test_rows_attend_to_self_first_row_is_v0():
+    """Causal row 0 can only attend to key 0 → output is exactly v[0]."""
+    q, k, v = rand_qkv(jax.random.PRNGKey(11), 1, 1, 16, 8)
+    out = flash_attention(q, k, v)
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], rtol=1e-6, atol=1e-6)
+
+
+def test_custom_vjp_grads_match_reference_grads():
+    q, k, v = rand_qkv(jax.random.PRNGKey(9), 2, 2, 32, 16)
+    f_pallas = lambda q, k, v: (attention(q, k, v) ** 2).sum()
+    f_ref = lambda q, k, v: (ref.attention(q, k, v) ** 2).sum()
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_jit_and_grad_compose():
+    q, k, v = rand_qkv(jax.random.PRNGKey(13), 1, 2, 24, 8)
+    loss = jax.jit(lambda q, k, v: attention(q, k, v).sum())
+    g = jax.jit(jax.grad(lambda q, k, v: attention(q, k, v).sum()))
+    assert np.isfinite(float(loss(q, k, v)))
+    assert np.isfinite(np.asarray(g(q, k, v)).sum())
+
+
+@pytest.mark.parametrize("s,dh", [(64, 32), (128, 64), (2048, 128)])
+def test_vmem_estimate_within_budget(s, dh):
+    """BlockSpec tiles must fit a 16 MiB VMEM budget (DESIGN.md §Perf)."""
+    assert vmem_estimate_bytes(s, dh) < 16 * 2**20
+
+
+def test_layernorm_reference_properties():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
+    y = ref.layernorm(x, jnp.ones(32), jnp.zeros(32))
+    np.testing.assert_allclose(np.asarray(y.mean(-1)), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y.std(-1)), 1.0, atol=1e-2)

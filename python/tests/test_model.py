@@ -1,0 +1,142 @@
+"""L2 correctness: staged transformer vs single-program composition."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    GPTConfig,
+    first_fwd,
+    init_stage,
+    last_loss,
+    make_entry_points,
+    mid_fwd,
+    reference_loss,
+    spec_size,
+    stage_roles,
+    stage_spec,
+    unpack,
+)
+
+CFG = GPTConfig(vocab=128, d=32, layers=4, heads=2, seq=16, micro_batch=2, stages=2)
+CFG4 = GPTConfig(vocab=128, d=32, layers=4, heads=2, seq=16, micro_batch=2, stages=4)
+
+
+def stage_params(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for role in stage_roles(cfg.stages):
+        key, sub = jax.random.split(key)
+        out.append(init_stage(cfg, role, sub))
+    return out
+
+
+def batch(cfg, seed=1):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    toks = jax.random.randint(k1, (cfg.micro_batch, cfg.seq), 0, cfg.vocab)
+    tgts = jax.random.randint(k2, (cfg.micro_batch, cfg.seq), 0, cfg.vocab)
+    return toks, tgts
+
+
+def test_spec_sizes_match_init():
+    for role in ("first", "mid", "last"):
+        flat = init_stage(CFG, role, jax.random.PRNGKey(0))
+        assert flat.shape == (spec_size(stage_spec(CFG, role)),)
+
+
+def test_unpack_layout_roundtrip():
+    spec = stage_spec(CFG, "last")
+    flat = init_stage(CFG, "last", jax.random.PRNGKey(2))
+    p = unpack(flat, spec)
+    assert p["whead"].shape == (CFG.d, CFG.vocab)
+    assert p["lnf_g"].shape == (CFG.d,)
+    # layernorm gains initialise to 1, biases to 0
+    np.testing.assert_allclose(p["lnf_g"], 1.0)
+    np.testing.assert_allclose(p["lnf_b"], 0.0)
+    # re-concatenation reproduces the flat buffer
+    rebuilt = jnp.concatenate([p[n].reshape(-1) for n, _, _ in spec])
+    np.testing.assert_array_equal(rebuilt, flat)
+
+
+def test_forward_shapes():
+    ps = stage_params(CFG)
+    toks, tgts = batch(CFG)
+    h = first_fwd(CFG, ps[0], toks)
+    assert h.shape == (CFG.micro_batch, CFG.seq, CFG.d)
+    loss = last_loss(CFG, ps[1], h, tgts)
+    assert loss.shape == ()
+    assert float(loss) == pytest.approx(np.log(CFG.vocab), rel=0.1)
+
+
+def test_mid_stage_composes():
+    ps = stage_params(CFG4)
+    toks, tgts = batch(CFG4)
+    h = first_fwd(CFG4, ps[0], toks)
+    h = mid_fwd(CFG4, ps[1], h)
+    h = mid_fwd(CFG4, ps[2], h)
+    loss = last_loss(CFG4, ps[3], h, tgts)
+    assert np.isfinite(float(loss))
+    assert float(loss) == pytest.approx(float(reference_loss(CFG4, ps, toks, tgts)), abs=1e-6)
+
+
+@pytest.mark.parametrize("cfg", [CFG, CFG4], ids=["2stage", "4stage"])
+def test_staged_grads_equal_full_grads(cfg):
+    """The decisive L2 invariant: composing per-stage VJPs (what the Rust
+    executor does) reproduces jax.grad of the whole model."""
+    ps = stage_params(cfg, seed=3)
+    toks, tgts = batch(cfg, seed=4)
+    entries = make_entry_points(cfg)
+
+    # full_step reference
+    full = entries["full_step"][0]
+    full_out = full(*ps, toks, tgts)
+    loss_full, grads_full = full_out[0], full_out[1:]
+
+    # manual stage composition, like the executor
+    roles = stage_roles(cfg.stages)
+    h = first_fwd(cfg, ps[0], toks)
+    acts = {0: None}
+    hs = [None, h]
+    for si in range(1, cfg.stages - 1):
+        h = mid_fwd(cfg, ps[si], h)
+        hs.append(h)
+    loss, (gp_last, gh) = jax.value_and_grad(
+        lambda p, x: last_loss(cfg, p, x, tgts), argnums=(0, 1)
+    )(ps[-1], hs[-1])
+    grads = {cfg.stages - 1: gp_last}
+    for si in range(cfg.stages - 2, 0, -1):
+        _, vjp = jax.vjp(lambda p, x: mid_fwd(cfg, p, x), ps[si], hs[si])
+        gp, gh = vjp(gh)
+        grads[si] = gp
+    gp0 = jax.vjp(lambda p: first_fwd(cfg, p, toks), ps[0])[1](gh)[0]
+    grads[0] = gp0
+
+    assert float(loss) == pytest.approx(float(loss_full), abs=1e-6)
+    for si in range(cfg.stages):
+        np.testing.assert_allclose(
+            grads[si], grads_full[si], rtol=1e-4, atol=1e-5,
+            err_msg=f"stage {si} ({roles[si]})",
+        )
+    del acts
+
+
+def test_entry_points_cover_contract():
+    e2 = make_entry_points(CFG)
+    assert set(e2) == {"stage_first_fwd", "stage_first_bwd", "stage_last_bwd", "full_step"}
+    e4 = make_entry_points(CFG4)
+    assert {"stage_mid_fwd", "stage_mid_bwd"} <= set(e4)
+
+
+def test_loss_decreases_under_sgd():
+    """Sanity: a few full-batch steps reduce the loss on fixed data."""
+    ps = stage_params(CFG, seed=5)
+    toks, tgts = batch(CFG, seed=6)
+    loss_fn = jax.jit(lambda ps: reference_loss(CFG, ps, toks, tgts))
+    grad_fn = jax.jit(jax.grad(lambda ps: reference_loss(CFG, ps, toks, tgts)))
+    l0 = float(loss_fn(ps))
+    for _ in range(10):
+        g = grad_fn(ps)
+        ps = [p - 0.5 * gi for p, gi in zip(ps, g)]
+    l1 = float(loss_fn(ps))
+    assert l1 < l0 - 0.05, f"{l0} → {l1}"

@@ -1,0 +1,181 @@
+//! Galvatron baseline (Miao et al., VLDB'22), as characterised in §2.2:
+//! "uses dynamic programming to determine DP, TP, and FSDP strategies in a
+//! single pipeline stage. As for PP, it partitions stages and determines
+//! micro-batch size using naive greedy algorithms."
+//!
+//! Restrictions vs UniAP, all of which this emulation keeps:
+//! * **hierarchical** — stage partition fixed *before* intra-layer
+//!   optimization: equal layer counts per stage (the homogeneous-cluster
+//!   greedy);
+//! * **greedy micro-batching** — picks the largest micro-batch (smallest
+//!   `c`) its memory model accepts rather than enumerating jointly;
+//! * **per-stage DP without boundary coupling** — each stage's DP ignores
+//!   the resharding interaction with neighbouring stages;
+//! * **coarser time model** — over-credits computation/communication
+//!   overlap (the source of its 11.17% REE in §4.2; memory is tracked
+//!   exactly, like the real system's per-layer profiling);
+//! * **byte-granularity memory DP** — Galvatron's published DP tracks
+//!   memory exactly; we emulate with a much finer bucket grid than
+//!   UniAP's, which is also why its optimization runs longer.
+
+use std::time::Instant;
+
+use crate::baselines::{BaselineKind, BaselineResult};
+use crate::cost::cost_modeling;
+use crate::graph::Graph;
+use crate::planner::{chain, Plan, PlannerConfig};
+use crate::profiling::Profile;
+
+/// Memory-DP granularity emulating Galvatron's exact tracking.
+const GALVATRON_BUCKETS: usize = 4096;
+
+/// Galvatron's internal cost model: optimistic-overlap profile; memory is
+/// the true model (its per-layer memory profiling is accurate — the
+/// paper's §4.2 locates its estimation error in *time*).
+pub fn galvatron_view(profile: &Profile, graph: &Graph) -> (Profile, Graph) {
+    let mut p = profile.clone();
+    // Optimistic overlap assumption: Galvatron applies its profiled CCOC
+    // uniformly, over-crediting overlap on slow links (the paper measures
+    // its REE at 11.17% vs UniAP's 3.59%).
+    p.ccoc = (p.ccoc + 0.35).min(0.95);
+    (p, graph.clone())
+}
+
+/// Equal-layer-count stage partition (`pp` contiguous intervals).
+pub fn equal_partition(v: usize, pp: usize) -> Vec<(usize, usize)> {
+    let base = v / pp;
+    let extra = v % pp;
+    let mut out = Vec::with_capacity(pp);
+    let mut start = 0;
+    for i in 0..pp {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len - 1));
+        start += len;
+    }
+    out
+}
+
+/// Run the Galvatron search. Returns its chosen plan with its *own* TPI
+/// estimate (the REE study compares this against the simulator).
+pub fn run(profile: &Profile, graph: &Graph, batch: usize, _cfg: &PlannerConfig) -> BaselineResult {
+    let t0 = Instant::now();
+    let (gp, gg) = galvatron_view(profile, graph);
+    let n = profile.env.total_devices();
+    let v = graph.num_layers();
+
+    let mut best: Option<Plan> = None;
+    for pp in crate::util::divisors(n) {
+        if pp > v {
+            continue;
+        }
+        // Greedy micro-batch: hill-climb c through the divisors of B and
+        // stop at the first local optimum of Galvatron's own estimate —
+        // naive greedy, not the joint enumeration UniAP performs.
+        let mut chosen: Option<Plan> = None;
+        for c in crate::util::divisors(batch) {
+            let costs = cost_modeling(&gp, &gg, pp, batch, c);
+            let parts = equal_partition(v, pp);
+            let mut placement = vec![0usize; v];
+            let mut choice = vec![0usize; v];
+            let mut ok = true;
+            for (stage, &(l, r)) in parts.iter().enumerate() {
+                match chain::solve_interval(&costs, l, r, GALVATRON_BUCKETS) {
+                    Some((_, assign)) => {
+                        for (off, &k) in assign.iter().enumerate() {
+                            placement[l + off] = stage;
+                            choice[l + off] = k;
+                        }
+                    }
+                    None => {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if !ok {
+                continue;
+            }
+            let tpi = crate::cost::objective_tpi(&gg, &costs, &placement, &choice);
+            if tpi.is_finite() {
+                match &chosen {
+                    Some(prev) if tpi >= prev.est_tpi => break, // local optimum found
+                    _ => {
+                        chosen = Some(Plan {
+                            pp_size: pp,
+                            num_micro: c,
+                            batch,
+                            placement,
+                            choice,
+                            strategies: costs.strategies.clone(),
+                            est_tpi: tpi,
+                        });
+                    }
+                }
+            }
+        }
+        if let Some(p) = chosen {
+            if best.as_ref().map_or(true, |b| p.est_tpi < b.est_tpi) {
+                best = Some(p);
+            }
+        }
+    }
+    BaselineResult {
+        kind: BaselineKind::Galvatron,
+        failure: if best.is_none() { Some("SOL×: no feasible hierarchical strategy".into()) } else { None },
+        plan: best,
+        opt_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterEnv;
+    use crate::graph::models;
+
+    #[test]
+    fn equal_partition_covers_all_layers() {
+        assert_eq!(equal_partition(10, 3), vec![(0, 3), (4, 6), (7, 9)]);
+        assert_eq!(equal_partition(8, 4), vec![(0, 1), (2, 3), (4, 5), (6, 7)]);
+        assert_eq!(equal_partition(5, 1), vec![(0, 4)]);
+    }
+
+    #[test]
+    fn galvatron_view_is_time_optimistic_memory_exact() {
+        let g = models::swin_huge();
+        let p = Profile::analytic(&ClusterEnv::env_a(), &g);
+        let (gp, gg) = galvatron_view(&p, &g);
+        assert!(gp.ccoc > p.ccoc, "overlap must be over-credited");
+        let blk = g.layers.iter().position(|l| l.type_key == "swin_s0").unwrap();
+        assert_eq!(gg.layers[blk].act_store_bytes, g.layers[blk].act_store_bytes);
+    }
+
+    #[test]
+    fn galvatron_finds_plan_for_bert_envb() {
+        let g = models::bert_huge();
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let r = run(&p, &g, 16, &PlannerConfig::default());
+        let plan = r.plan.expect("Galvatron should find a plan here");
+        assert!(plan.est_tpi > 0.0 && plan.est_tpi.is_finite());
+        // hierarchical equal partition: stage sizes differ by ≤ 1
+        let ranges = plan.stage_ranges();
+        let sizes: Vec<usize> = ranges.iter().map(|&(a, b)| b - a + 1).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn galvatron_never_beats_uniap_under_true_costs() {
+        // Evaluate both plans under the *true* cost model: hierarchical
+        // search cannot win (it explores a subset of UniAP's space, with a
+        // worse model).
+        let g = models::bert_huge();
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let cfg = PlannerConfig::default();
+        let uni = crate::planner::uop(&p, &g, 16, &cfg).best.expect("uniap feasible");
+        let gal = run(&p, &g, 16, &cfg).plan.expect("galvatron feasible");
+        let true_costs_g = cost_modeling(&p, &g, gal.pp_size, 16, gal.num_micro);
+        let gal_true = crate::cost::objective_tpi(&g, &true_costs_g, &gal.placement, &gal.choice);
+        assert!(uni.est_tpi <= gal_true * (1.0 + 1e-9), "uniap {} vs galvatron-true {}", uni.est_tpi, gal_true);
+    }
+}

@@ -1,0 +1,110 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `uniap <command> [--key value]... [--flag]...`. Commands and
+//! their options are defined by `main.rs`; this module provides the
+//! generic tokenizer + typed accessors with helpful errors.
+
+use std::collections::HashMap;
+
+/// Parsed command line: a command word plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style tokens (excluding argv[0]).
+    pub fn parse(tokens: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut i = 0;
+        if i < tokens.len() && !tokens[i].starts_with("--") {
+            args.command = tokens[i].clone();
+            i += 1;
+        }
+        while i < tokens.len() {
+            let t = &tokens[i];
+            let Some(key) = t.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument: {t}"));
+            };
+            if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                args.opts.insert(key.to_string(), tokens[i + 1].clone());
+                i += 2;
+            } else {
+                args.flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(args)
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string option.
+    pub fn require(&self, key: &str) -> Result<String, String> {
+        self.opts.get(key).cloned().ok_or_else(|| format!("missing required option --{key}"))
+    }
+
+    /// usize option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got {v}")),
+        }
+    }
+
+    /// f64 option with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects a number, got {v}")),
+        }
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_opts_flags() {
+        let a = Args::parse(&toks("plan --model bert --env EnvB --batch 16 --verbose")).unwrap();
+        assert_eq!(a.command, "plan");
+        assert_eq!(a.get("model", ""), "bert");
+        assert_eq!(a.get_usize("batch", 0).unwrap(), 16);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_requirements() {
+        let a = Args::parse(&toks("plan")).unwrap();
+        assert_eq!(a.get("env", "EnvA"), "EnvA");
+        assert!(a.require("model").is_err());
+        assert_eq!(a.get_f64("lr", 0.001).unwrap(), 0.001);
+    }
+
+    #[test]
+    fn rejects_stray_positionals() {
+        assert!(Args::parse(&toks("plan bert")).is_err());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = Args::parse(&toks("plan --batch ten")).unwrap();
+        assert!(a.get_usize("batch", 1).is_err());
+    }
+}

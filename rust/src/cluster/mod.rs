@@ -1,0 +1,380 @@
+//! Cluster model: devices, links, hierarchical topology, and the paper's
+//! five evaluation environments (EnvA–EnvE).
+//!
+//! The paper profiles real hardware (§3.1); this reproduction has no GPUs,
+//! so the cluster model is the *simulated substrate*: a parametric
+//! description of device peak FLOPs / memory and of the link hierarchy
+//! (intra-group PCIe/NVLink, inter-group QPI, inter-node network), from
+//! which the analytic profiler derives the same all-reduce / P2P efficiency
+//! tables the real profiler would measure. DESIGN.md documents this
+//! substitution.
+//!
+//! Rank layout: global rank = `node * gpus_per_node + local`, and local
+//! ranks are grouped in blocks of `group_size` connected by the fast link
+//! (Appendix F, Figure 8: TITAN Xp pairs behind a PCIe switch, QPI between
+//! the pairs).
+
+/// Peak capabilities of one accelerator.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// Marketing name (reporting only).
+    pub name: String,
+    /// Peak dense FP32 throughput (FLOP/s).
+    pub flops_f32: f64,
+    /// Peak dense FP16/mixed throughput (FLOP/s).
+    pub flops_f16: f64,
+    /// Device memory (bytes).
+    pub mem_bytes: f64,
+}
+
+/// A cluster: homogeneous devices in a two-level (group / node) hierarchy.
+#[derive(Debug, Clone)]
+pub struct ClusterEnv {
+    /// Environment name (EnvA…EnvE or custom).
+    pub name: String,
+    /// Number of machines.
+    pub nodes: usize,
+    /// Accelerators per machine.
+    pub gpus_per_node: usize,
+    /// Device spec (homogeneous — Appendix H scopes out heterogeneity).
+    pub device: DeviceSpec,
+    /// Devices per fast-link group within a node.
+    pub group_size: usize,
+    /// Per-direction bandwidth inside a group (PCIe switch / NVLink), B/s.
+    pub intra_group_bw: f64,
+    /// Bandwidth between groups of the same node (QPI / PCIe host), B/s.
+    pub inter_group_bw: f64,
+    /// Bandwidth between nodes (Ethernet / InfiniBand), B/s.
+    pub inter_node_bw: f64,
+    /// Per-hop latency for intra-node transfers (s).
+    pub link_latency: f64,
+    /// Per-hop latency for network transfers (s).
+    pub net_latency: f64,
+}
+
+/// Which link tier a device set spans (slowest link in the set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LinkTier {
+    IntraGroup,
+    InterGroup,
+    InterNode,
+}
+
+impl ClusterEnv {
+    /// Total accelerator count `n`.
+    pub fn total_devices(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Node index of a global rank.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.gpus_per_node
+    }
+
+    /// Fast-link group index of a global rank (global group id).
+    pub fn group_of(&self, rank: usize) -> usize {
+        rank / self.group_size
+    }
+
+    /// The slowest link tier spanned by a set of ranks.
+    pub fn tier_of(&self, ranks: &[usize]) -> LinkTier {
+        debug_assert!(!ranks.is_empty());
+        let n0 = self.node_of(ranks[0]);
+        let g0 = self.group_of(ranks[0]);
+        let mut tier = LinkTier::IntraGroup;
+        for &r in ranks {
+            if self.node_of(r) != n0 {
+                return LinkTier::InterNode;
+            }
+            if self.group_of(r) != g0 {
+                tier = LinkTier::InterGroup;
+            }
+        }
+        tier
+    }
+
+    /// Bandwidth of a tier (B/s, per direction).
+    pub fn tier_bw(&self, tier: LinkTier) -> f64 {
+        match tier {
+            LinkTier::IntraGroup => self.intra_group_bw,
+            LinkTier::InterGroup => self.inter_group_bw,
+            LinkTier::InterNode => self.inter_node_bw,
+        }
+    }
+
+    /// Latency of a tier (s).
+    pub fn tier_latency(&self, tier: LinkTier) -> f64 {
+        match tier {
+            LinkTier::InterNode => self.net_latency,
+            _ => self.link_latency,
+        }
+    }
+
+    /// Ring all-reduce time for `bytes` over `ranks` (§3.1 profiles this;
+    /// we use the standard ring model: `2(n−1)/n · V / bw + 2(n−1) · lat`).
+    pub fn allreduce_time(&self, bytes: f64, ranks: &[usize]) -> f64 {
+        let n = ranks.len() as f64;
+        if n <= 1.0 {
+            return 0.0;
+        }
+        let tier = self.tier_of(ranks);
+        2.0 * (n - 1.0) / n * bytes / self.tier_bw(tier) + 2.0 * (n - 1.0) * self.tier_latency(tier)
+    }
+
+    /// All-gather time (`(n−1)/n · V / bw` ring phase).
+    pub fn allgather_time(&self, bytes: f64, ranks: &[usize]) -> f64 {
+        let n = ranks.len() as f64;
+        if n <= 1.0 {
+            return 0.0;
+        }
+        let tier = self.tier_of(ranks);
+        (n - 1.0) / n * bytes / self.tier_bw(tier) + (n - 1.0) * self.tier_latency(tier)
+    }
+
+    /// Reduce-scatter time (same ring phase cost as all-gather).
+    pub fn reducescatter_time(&self, bytes: f64, ranks: &[usize]) -> f64 {
+        self.allgather_time(bytes, ranks)
+    }
+
+    /// Point-to-point transfer time between two ranks.
+    pub fn p2p_time(&self, bytes: f64, from: usize, to: usize) -> f64 {
+        if from == to {
+            return 0.0;
+        }
+        let tier = self.tier_of(&[from, to]);
+        bytes / self.tier_bw(tier) + self.tier_latency(tier)
+    }
+
+    /// Peak FLOP/s for a dtype.
+    pub fn peak_flops(&self, dtype: crate::graph::Dtype) -> f64 {
+        match dtype {
+            crate::graph::Dtype::Fp32 => self.device.flops_f32,
+            crate::graph::Dtype::Fp16Mixed => self.device.flops_f16,
+        }
+    }
+
+    /// Contiguous rank block assigned to pipeline stage `i` of `pp` stages.
+    ///
+    /// Stages are mapped to contiguous ranks so that P2P between
+    /// consecutive stages crosses the cheapest possible boundary and
+    /// intra-stage collectives stay within nodes whenever `n/pp` divides
+    /// the node size — the layout the paper's profiler evaluates.
+    pub fn stage_ranks(&self, pp: usize, stage: usize) -> Vec<usize> {
+        let n = self.total_devices();
+        assert!(pp >= 1 && n % pp == 0, "pp_size must divide device count");
+        assert!(stage < pp);
+        let per = n / pp;
+        (stage * per..(stage + 1) * per).collect()
+    }
+
+    /// Ranks of the `t`-th TP group inside a stage block for a `(dp, tp)`
+    /// factorisation: TP is innermost (consecutive ranks — fastest links),
+    /// DP strides by `tp` (Appendix F case study layout).
+    pub fn tp_group(&self, stage_ranks: &[usize], tp: usize, dp_index: usize) -> Vec<usize> {
+        stage_ranks[dp_index * tp..(dp_index + 1) * tp].to_vec()
+    }
+
+    /// Ranks of the `k`-th DP group (one member per TP group).
+    pub fn dp_group(&self, stage_ranks: &[usize], tp: usize, tp_index: usize) -> Vec<usize> {
+        let dp = stage_ranks.len() / tp;
+        (0..dp).map(|j| stage_ranks[j * tp + tp_index]).collect()
+    }
+
+    // ---- paper environments -------------------------------------------
+
+    /// EnvA: 1 node, 8 × V100-SXM2 32 GB (NVLink all-to-all).
+    pub fn env_a() -> ClusterEnv {
+        ClusterEnv {
+            name: "EnvA".to_string(),
+            nodes: 1,
+            gpus_per_node: 8,
+            device: DeviceSpec {
+                name: "V100-SXM2-32GB".to_string(),
+                flops_f32: 15.7e12,
+                flops_f16: 125e12,
+                mem_bytes: 32e9,
+            },
+            group_size: 8,
+            intra_group_bw: 130e9, // NVLink effective bus bandwidth
+            inter_group_bw: 130e9,
+            inter_node_bw: 130e9,
+            link_latency: 5e-6,
+            net_latency: 5e-6,
+        }
+    }
+
+    /// EnvB: 2 nodes × 4 TITAN Xp 12 GB; PCIe pairs, QPI between pairs,
+    /// 10 Gbps Ethernet between nodes (Appendix F, Figure 8).
+    pub fn env_b() -> ClusterEnv {
+        ClusterEnv {
+            name: "EnvB".to_string(),
+            nodes: 2,
+            gpus_per_node: 4,
+            device: DeviceSpec {
+                name: "TITAN-Xp-12GB".to_string(),
+                flops_f32: 12.15e12,
+                flops_f16: 12.15e12, // no tensor cores
+                mem_bytes: 12e9,
+            },
+            group_size: 2,
+            intra_group_bw: 11e9, // PCIe 3.0 x16 effective
+            inter_group_bw: 6e9,  // across QPI
+            inter_node_bw: 1.1e9, // 10 Gbps Ethernet, ~88% efficiency
+            link_latency: 10e-6,
+            net_latency: 50e-6,
+        }
+    }
+
+    /// EnvC: 1 node, 8 × A100 40 GB PCIe (no NVLink — PCIe 4.0 switch).
+    pub fn env_c() -> ClusterEnv {
+        ClusterEnv {
+            name: "EnvC".to_string(),
+            nodes: 1,
+            gpus_per_node: 8,
+            device: DeviceSpec {
+                name: "A100-40GB-PCIe".to_string(),
+                flops_f32: 19.5e12,
+                flops_f16: 280e12,
+                mem_bytes: 40e9,
+            },
+            group_size: 2, // PCIe pairs under one switch
+            intra_group_bw: 22e9, // PCIe 4.0 x16 effective
+            inter_group_bw: 14e9, // through host bridges
+            inter_node_bw: 14e9,
+            link_latency: 8e-6,
+            net_latency: 8e-6,
+        }
+    }
+
+    /// EnvD: 4 nodes, each configured like EnvB's nodes.
+    pub fn env_d() -> ClusterEnv {
+        let mut env = ClusterEnv::env_b();
+        env.name = "EnvD".to_string();
+        env.nodes = 4;
+        env
+    }
+
+    /// EnvD truncated to `nodes` machines — the Figure 4 scalability sweep.
+    pub fn env_d_nodes(nodes: usize) -> ClusterEnv {
+        let mut env = ClusterEnv::env_d();
+        env.name = format!("EnvD-{nodes}n");
+        env.nodes = nodes;
+        env
+    }
+
+    /// EnvE: 8 nodes × 4 DCU 16 GB, 200 Gb InfiniBand (Appendix G).
+    pub fn env_e() -> ClusterEnv {
+        ClusterEnv {
+            name: "EnvE".to_string(),
+            nodes: 8,
+            gpus_per_node: 4,
+            device: DeviceSpec {
+                name: "DCU-16GB".to_string(),
+                flops_f32: 11.5e12,
+                flops_f16: 24.5e12,
+                mem_bytes: 16e9,
+            },
+            group_size: 4,
+            intra_group_bw: 12e9,  // PCIe
+            inter_group_bw: 12e9,
+            inter_node_bw: 23e9,   // 200 Gb IB, ~92% efficiency
+            link_latency: 8e-6,
+            net_latency: 12e-6,
+        }
+    }
+
+    /// Environment by CLI name.
+    pub fn by_name(name: &str) -> Option<ClusterEnv> {
+        match name.to_ascii_lowercase().as_str() {
+            "enva" | "a" => Some(Self::env_a()),
+            "envb" | "b" => Some(Self::env_b()),
+            "envc" | "c" => Some(Self::env_c()),
+            "envd" | "d" => Some(Self::env_d()),
+            "enve" | "e" => Some(Self::env_e()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_shapes_match_paper() {
+        assert_eq!(ClusterEnv::env_a().total_devices(), 8);
+        assert_eq!(ClusterEnv::env_b().total_devices(), 8);
+        assert_eq!(ClusterEnv::env_c().total_devices(), 8);
+        assert_eq!(ClusterEnv::env_d().total_devices(), 16);
+        assert_eq!(ClusterEnv::env_e().total_devices(), 32);
+    }
+
+    #[test]
+    fn envb_tiers_follow_topology() {
+        let e = ClusterEnv::env_b();
+        assert_eq!(e.tier_of(&[0, 1]), LinkTier::IntraGroup); // PCIe pair
+        assert_eq!(e.tier_of(&[0, 2]), LinkTier::InterGroup); // across QPI
+        assert_eq!(e.tier_of(&[0, 4]), LinkTier::InterNode); // across Ethernet
+        assert!(e.tier_bw(LinkTier::IntraGroup) > e.tier_bw(LinkTier::InterGroup));
+        assert!(e.tier_bw(LinkTier::InterGroup) > e.tier_bw(LinkTier::InterNode));
+    }
+
+    #[test]
+    fn allreduce_scales_with_group_and_tier() {
+        let e = ClusterEnv::env_b();
+        let v = 1e9;
+        let fast = e.allreduce_time(v, &[0, 1]);
+        let slow = e.allreduce_time(v, &[0, 4]);
+        assert!(slow > 5.0 * fast, "cross-node all-reduce must be much slower");
+        // single-member groups are free
+        assert_eq!(e.allreduce_time(v, &[3]), 0.0);
+    }
+
+    #[test]
+    fn ring_allreduce_volume_factor() {
+        let e = ClusterEnv::env_a();
+        let v = 8e9;
+        let t4 = e.allreduce_time(v, &[0, 1, 2, 3]);
+        // 2(n-1)/n V/bw with n=4 → 1.5 V/bw (+latency)
+        let expect = 1.5 * v / e.intra_group_bw;
+        assert!((t4 - expect).abs() / expect < 0.01);
+    }
+
+    #[test]
+    fn stage_ranks_are_contiguous_partitions() {
+        let e = ClusterEnv::env_b();
+        let s0 = e.stage_ranks(2, 0);
+        let s1 = e.stage_ranks(2, 1);
+        assert_eq!(s0, vec![0, 1, 2, 3]);
+        assert_eq!(s1, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn tp_inner_dp_outer_layout() {
+        let e = ClusterEnv::env_b();
+        let stage = e.stage_ranks(2, 0); // [0,1,2,3]
+        // (dp=2, tp=2): TP groups {0,1} and {2,3}; DP groups {0,2}, {1,3}
+        assert_eq!(e.tp_group(&stage, 2, 0), vec![0, 1]);
+        assert_eq!(e.tp_group(&stage, 2, 1), vec![2, 3]);
+        assert_eq!(e.dp_group(&stage, 2, 0), vec![0, 2]);
+        assert_eq!(e.dp_group(&stage, 2, 1), vec![1, 3]);
+        // matches Appendix F: TP inside PCIe pairs, DP across QPI
+        assert_eq!(e.tier_of(&e.tp_group(&stage, 2, 0)), LinkTier::IntraGroup);
+        assert_eq!(e.tier_of(&e.dp_group(&stage, 2, 0)), LinkTier::InterGroup);
+    }
+
+    #[test]
+    fn p2p_zero_for_self() {
+        let e = ClusterEnv::env_a();
+        assert_eq!(e.p2p_time(1e6, 3, 3), 0.0);
+        assert!(e.p2p_time(1e6, 0, 1) > 0.0);
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        for n in ["EnvA", "envb", "c", "EnvD", "enve"] {
+            assert!(ClusterEnv::by_name(n).is_some());
+        }
+        assert!(ClusterEnv::by_name("envz").is_none());
+    }
+}

@@ -1,0 +1,455 @@
+//! Cost models (§3.2): time and memory, producing the constant matrices of
+//! the MIQP — intra-layer execution cost `A`, intra-stage resharding `R`,
+//! cross-stage resharding `R'`, and per-device memory `M`.
+//!
+//! Conventions:
+//! * `A[u][k]` — per-**micro-batch** forward+backward seconds for layer `u`
+//!   under strategy `k`, including TP collectives, FSDP gathers, and the
+//!   per-iteration DP gradient synchronisation amortised over the `c`
+//!   micro-batches with CCOC overlap applied.
+//! * `M[u][k]` — bytes per device: model states (eq. 1) + stored
+//!   activations for the full per-replica mini-batch (GPipe holds all
+//!   in-flight micro-batch activations).
+//! * `R[e][k][l]`, `Rp[e][k][l]` — seconds on edge `e = (u,v)` when `u`
+//!   uses `k` and `v` uses `l`, within a stage / across consecutive stages.
+
+use crate::graph::Graph;
+use crate::profiling::Profile;
+use crate::strategy::{cross_stage_cost, reshard_cost, strategies_for, IntraStrategy};
+
+/// Allocator-fragmentation reserve: the memory constraint (5) plans
+/// against `mem_limit / MEM_SAFETY` so that real-allocator overhead (the
+/// simulator charges ~4%) never turns a "feasible" plan into a CUDA OOM.
+/// Every production planner keeps a comparable reserve.
+pub const MEM_SAFETY: f64 = 1.06;
+
+/// Pipeline schedule variant. The paper's footnote 2: UniAP supports other
+/// PP strategies — "users need to modify only the memory constraint in
+/// Section 3.3.2 to adapt to synchronous 1F1B". GPipe keeps all `c`
+/// micro-batch activations in flight; synchronous 1F1B caps the in-flight
+/// count at the pipeline depth, shrinking the activation term of `M` by
+/// `min(c, pp)/c` while the time objective (2) is unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Schedule {
+    /// GPipe flush schedule (the paper's illustration choice).
+    #[default]
+    GPipe,
+    /// Synchronous 1F1B (PipeDream-Flush / DAPPLE).
+    OneF1B,
+}
+
+impl Schedule {
+    /// Fraction of the mini-batch's activations resident per device.
+    pub fn inflight_fraction(self, pp_size: usize, num_micro: usize) -> f64 {
+        match self {
+            Schedule::GPipe => 1.0,
+            Schedule::OneF1B => pp_size.min(num_micro) as f64 / num_micro as f64,
+        }
+    }
+}
+
+/// The matrices consumed by every planner engine, plus the split
+/// forward/backward views the discrete-event simulator needs.
+#[derive(Debug, Clone)]
+pub struct CostMatrices {
+    /// Strategy dictionary for this stage size (identical across layers).
+    pub strategies: Vec<IntraStrategy>,
+    /// `A[u][k]`: per-micro-batch fwd+bwd seconds (incl. amortised comm).
+    pub a: Vec<Vec<f64>>,
+    /// Forward-only share of `A` (per micro-batch, incl. fwd collectives).
+    pub a_fwd: Vec<Vec<f64>>,
+    /// Backward-only share of `A` (per micro-batch, incl. bwd collectives).
+    pub a_bwd: Vec<Vec<f64>>,
+    /// Once-per-iteration cost (DP grad sync after overlap), NOT in `a`;
+    /// `a` carries it as `per_iter/c`. The simulator replays it exactly.
+    pub per_iter: Vec<Vec<f64>>,
+    /// `M[u][k]`: bytes per device.
+    pub m: Vec<Vec<f64>>,
+    /// `R[edge][k][l]`: intra-stage resharding seconds.
+    pub r: Vec<Vec<Vec<f64>>>,
+    /// `R'[edge][k][l]`: cross-stage P2P seconds.
+    pub rp: Vec<Vec<Vec<f64>>>,
+    /// Pipeline-parallel size these costs were built for.
+    pub pp_size: usize,
+    /// Number of micro-batches `c`.
+    pub num_micro: usize,
+    /// Global mini-batch size `B`.
+    pub batch: usize,
+    /// Per-device memory limit `m` (bytes).
+    pub mem_limit: f64,
+}
+
+impl CostMatrices {
+    /// Number of layers.
+    pub fn num_layers(&self) -> usize {
+        self.a.len()
+    }
+
+    /// Number of strategies.
+    pub fn num_strategies(&self) -> usize {
+        self.strategies.len()
+    }
+
+    /// Restrict the strategy dictionary to the given indices (baselines
+    /// with smaller strategy spaces — e.g. Alpa has no FSDP). Matrix
+    /// columns are remapped; `keep` must be non-empty.
+    pub fn restrict(&self, keep: &[usize]) -> CostMatrices {
+        assert!(!keep.is_empty());
+        let pick_row = |row: &Vec<f64>| keep.iter().map(|&k| row[k]).collect::<Vec<f64>>();
+        let pick_mat = |m: &Vec<Vec<f64>>| {
+            keep.iter()
+                .map(|&k| keep.iter().map(|&l| m[k][l]).collect::<Vec<f64>>())
+                .collect::<Vec<Vec<f64>>>()
+        };
+        CostMatrices {
+            strategies: keep.iter().map(|&k| self.strategies[k]).collect(),
+            a: self.a.iter().map(pick_row).collect(),
+            a_fwd: self.a_fwd.iter().map(pick_row).collect(),
+            a_bwd: self.a_bwd.iter().map(pick_row).collect(),
+            per_iter: self.per_iter.iter().map(pick_row).collect(),
+            m: self.m.iter().map(pick_row).collect(),
+            r: self.r.iter().map(pick_mat).collect(),
+            rp: self.rp.iter().map(pick_mat).collect(),
+            pp_size: self.pp_size,
+            num_micro: self.num_micro,
+            batch: self.batch,
+            mem_limit: self.mem_limit,
+        }
+    }
+}
+
+/// Build the cost matrices for one `(pp_size, c)` candidate of the UOP
+/// (the `CostModeling` step of Algorithm 1).
+///
+/// `batch` is the global mini-batch size `B`; each stage holds `n/pp_size`
+/// devices; each DP replica processes `B/dp` samples split into `c`
+/// micro-batches.
+pub fn cost_modeling(
+    profile: &Profile,
+    graph: &Graph,
+    pp_size: usize,
+    batch: usize,
+    num_micro: usize,
+) -> CostMatrices {
+    cost_modeling_sched(profile, graph, pp_size, batch, num_micro, Schedule::GPipe)
+}
+
+/// [`cost_modeling`] with an explicit pipeline schedule (footnote 2).
+pub fn cost_modeling_sched(
+    profile: &Profile,
+    graph: &Graph,
+    pp_size: usize,
+    batch: usize,
+    num_micro: usize,
+    schedule: Schedule,
+) -> CostMatrices {
+    let env = &profile.env;
+    let n = env.total_devices();
+    assert!(n % pp_size == 0, "pp_size {pp_size} must divide {n}");
+    let stage_devices = n / pp_size;
+    let strategies = strategies_for(stage_devices);
+    let s_count = strategies.len();
+    let v = graph.num_layers();
+
+    // Representative stage rank blocks (devices are homogeneous, so stage 0
+    // and 1 stand in for every pair of consecutive stages).
+    let stage0 = env.stage_ranks(pp_size, 0);
+    let stage1 = if pp_size > 1 { env.stage_ranks(pp_size, 1) } else { stage0.clone() };
+
+    let elem = graph.dtype.elem_bytes();
+    let c_dtype = graph.dtype.c_dtype();
+    let ccoc = profile.ccoc;
+
+    let mut a = vec![vec![0.0; s_count]; v];
+    let mut a_fwd = vec![vec![0.0; s_count]; v];
+    let mut a_bwd = vec![vec![0.0; s_count]; v];
+    let mut per_iter = vec![vec![0.0; s_count]; v];
+    let mut m = vec![vec![0.0; s_count]; v];
+
+    for (u, layer) in graph.layers.iter().enumerate() {
+        for (k, st) in strategies.iter().enumerate() {
+            let dp = st.dp as f64;
+            // Per-replica micro-batch in samples. The paper's UOP divides
+            // B by c; DP further divides each micro-batch across replicas.
+            let b_loc = batch as f64 / dp / num_micro as f64;
+
+            // --- time -------------------------------------------------
+            let fwd_comp = profile.fwd_time_per_sample(&layer.type_key, st.tp) * b_loc;
+            let bwd_comp = 2.0 * fwd_comp; // §3.2: BP ≈ 2× FP for MatMul layers
+
+            // TP collectives: 2 all-reduces of the layer output per
+            // direction (attention out + MLP out), Megatron-style.
+            let mut fwd_comm = 0.0;
+            let mut bwd_comm = 0.0;
+            if st.tp > 1 {
+                let group = env.tp_group(&stage0, st.tp, 0);
+                let vol = layer.act_out_bytes * b_loc;
+                fwd_comm += 2.0 * env.allreduce_time(vol, &group);
+                bwd_comm += 2.0 * env.allreduce_time(vol, &group);
+            }
+            // FSDP: all-gather the layer's parameter shard before use in
+            // FP and BP, reduce-scatter gradients after BP.
+            let param_bytes = layer.params * elem / st.tp as f64;
+            if st.fsdp && st.dp > 1 {
+                let group = env.dp_group(&stage0, st.tp, 0);
+                let ag = env.allgather_time(param_bytes, &group);
+                let rs = env.reducescatter_time(param_bytes, &group);
+                // gathers overlap with compute of neighbouring layers
+                fwd_comm += ag * (1.0 - ccoc);
+                bwd_comm += (ag + rs) * (1.0 - ccoc);
+            }
+
+            // DP gradient all-reduce: once per iteration, overlapped with
+            // backward compute by CCOC (§3.2 overlapping model).
+            let mut iter_cost = 0.0;
+            if st.dp > 1 && !st.fsdp {
+                let group = env.dp_group(&stage0, st.tp, 0);
+                let grad_bytes = layer.params * elem / st.tp as f64;
+                iter_cost = env.allreduce_time(grad_bytes, &group) * (1.0 - ccoc);
+            }
+
+            a_fwd[u][k] = fwd_comp + fwd_comm;
+            a_bwd[u][k] = bwd_comp + bwd_comm;
+            per_iter[u][k] = iter_cost;
+            a[u][k] = a_fwd[u][k] + a_bwd[u][k] + iter_cost / num_micro as f64;
+
+            // --- memory (eq. 1 + activation + context handled in limit) --
+            let ps = layer.params * elem; // parameter storage size
+            let m_s = c_dtype * ps / (st.tp as f64 * st.fsdp_factor());
+            // Activations resident per device: the whole per-replica
+            // mini-batch under GPipe, capped at pipeline depth under 1F1B.
+            let m_a = layer.act_store_bytes * (batch as f64 / dp) / st.tp as f64
+                * schedule.inflight_fraction(pp_size, num_micro);
+            m[u][k] = m_s + m_a;
+        }
+    }
+
+    // --- resharding matrices -------------------------------------------
+    let mut r = Vec::with_capacity(graph.edges.len());
+    let mut rp = Vec::with_capacity(graph.edges.len());
+    for &(u, _vtx) in &graph.edges {
+        let bytes_full = graph.layers[u].act_out_bytes * batch as f64 / num_micro as f64;
+        let mut re = vec![vec![0.0; s_count]; s_count];
+        let mut rpe = vec![vec![0.0; s_count]; s_count];
+        for (k, sk) in strategies.iter().enumerate() {
+            for (l, sl) in strategies.iter().enumerate() {
+                re[k][l] = reshard_cost(env, &stage0, *sk, *sl, bytes_full);
+                rpe[k][l] = if pp_size > 1 {
+                    cross_stage_cost(env, &stage0, &stage1, *sk, *sl, bytes_full)
+                } else {
+                    0.0
+                };
+            }
+        }
+        r.push(re);
+        rp.push(rpe);
+    }
+
+    CostMatrices {
+        strategies,
+        a,
+        a_fwd,
+        a_bwd,
+        per_iter,
+        m,
+        r,
+        rp,
+        pp_size,
+        num_micro,
+        batch,
+        mem_limit: profile.mem_limit() / MEM_SAFETY,
+    }
+}
+
+/// Estimated TPI for an explicit assignment, evaluating objective (2)
+/// directly: `Σ p_i + Σ o_j + (c−1)·max(P ∪ O)`. Used by planners to score
+/// candidate solutions and by tests as the reference objective.
+///
+/// `placement[u]` = stage of layer `u`; `choice[u]` = strategy index.
+pub fn objective_tpi(
+    graph: &Graph,
+    costs: &CostMatrices,
+    placement: &[usize],
+    choice: &[usize],
+) -> f64 {
+    let pp = costs.pp_size;
+    let mut p = vec![0.0; pp];
+    let mut o = vec![0.0; pp.saturating_sub(1)];
+    for u in 0..graph.num_layers() {
+        p[placement[u]] += costs.a[u][choice[u]];
+    }
+    for (e, &(u, vtx)) in graph.edges.iter().enumerate() {
+        let (su, sv) = (placement[u], placement[vtx]);
+        if su == sv {
+            p[su] += costs.r[e][choice[u]][choice[vtx]];
+        } else if sv == su + 1 {
+            o[su] += costs.rp[e][choice[u]][choice[vtx]];
+        } else {
+            // non-consecutive stage edge: heavily penalised (the MIQP's
+            // order-preserving constraint forbids it on chains).
+            return f64::INFINITY;
+        }
+    }
+    let sum: f64 = p.iter().chain(o.iter()).sum();
+    let bottleneck = p.iter().chain(o.iter()).cloned().fold(0.0, f64::max);
+    sum + (costs.num_micro as f64 - 1.0) * bottleneck
+}
+
+/// Peak per-device memory by stage for an assignment (constraint (5) LHS).
+pub fn stage_memory(
+    graph: &Graph,
+    costs: &CostMatrices,
+    placement: &[usize],
+    choice: &[usize],
+) -> Vec<f64> {
+    let mut mem = vec![0.0; costs.pp_size];
+    for u in 0..graph.num_layers() {
+        mem[placement[u]] += costs.m[u][choice[u]];
+    }
+    mem
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterEnv;
+    use crate::graph::models;
+
+    fn setup(pp: usize, b: usize, c: usize) -> (Graph, CostMatrices) {
+        let g = models::bert_huge();
+        let env = ClusterEnv::env_b();
+        let p = Profile::analytic(&env, &g);
+        let costs = cost_modeling(&p, &g, pp, b, c);
+        (g, costs)
+    }
+
+    #[test]
+    fn matrices_have_consistent_shapes() {
+        let (g, c) = setup(2, 16, 4);
+        assert_eq!(c.a.len(), g.num_layers());
+        assert_eq!(c.m.len(), g.num_layers());
+        assert_eq!(c.r.len(), g.edges.len());
+        assert_eq!(c.rp.len(), g.edges.len());
+        assert_eq!(c.a[0].len(), c.strategies.len());
+        assert!(c.a.iter().flatten().all(|&x| x.is_finite() && x >= 0.0));
+        assert!(c.m.iter().flatten().all(|&x| x.is_finite() && x > 0.0));
+    }
+
+    #[test]
+    fn a_splits_sum_to_total() {
+        let (g, c) = setup(2, 16, 4);
+        for u in 0..g.num_layers() {
+            for k in 0..c.num_strategies() {
+                let want = c.a_fwd[u][k] + c.a_bwd[u][k] + c.per_iter[u][k] / c.num_micro as f64;
+                assert!((c.a[u][k] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fsdp_reduces_state_memory() {
+        let (_, c) = setup(1, 16, 4);
+        let plain = c.strategies.iter().position(|s| s.dp == 8 && !s.fsdp).unwrap();
+        let fsdp = c.strategies.iter().position(|s| s.dp == 8 && s.fsdp).unwrap();
+        // compare a mid-stack block layer (index 5)
+        assert!(c.m[5][fsdp] < c.m[5][plain]);
+    }
+
+    #[test]
+    fn tp_reduces_memory_dp_reduces_time_tradeoffs() {
+        let (_, c) = setup(1, 16, 4);
+        let dp8 = c.strategies.iter().position(|s| s.dp == 8 && s.tp == 1 && !s.fsdp).unwrap();
+        let tp8 = c.strategies.iter().position(|s| s.tp == 8).unwrap();
+        // TP-8 shards states 8×; DP-8 replicates them.
+        assert!(c.m[5][tp8] < c.m[5][dp8]);
+        // On EnvB's weak links, TP-8 spans nodes → much slower than DP-8.
+        assert!(c.a[5][tp8] > c.a[5][dp8]);
+    }
+
+    #[test]
+    fn more_microbatches_shrink_per_microbatch_cost() {
+        let g = models::bert_huge();
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let c2 = cost_modeling(&p, &g, 2, 16, 2);
+        let c8 = cost_modeling(&p, &g, 2, 16, 8);
+        // same strategy index space (same stage size)
+        assert!(c8.a[5][0] < c2.a[5][0]);
+    }
+
+    #[test]
+    fn objective_matches_hand_computation_on_uniform_chain() {
+        let g = models::synthetic_chain(4, 1e12, 1e6, 1e6);
+        let env = ClusterEnv::env_a();
+        let p = Profile::analytic(&env, &g);
+        let c = cost_modeling(&p, &g, 2, 8, 4);
+        let k = 0; // first strategy
+        let placement = vec![0, 0, 1, 1];
+        let choice = vec![k; 4];
+        let tpi = objective_tpi(&g, &c, &placement, &choice);
+        // hand-compute: p0 = a0+a1+r(0,1); p1 = a2+a3+r(2,3); o0 = rp(1,2)
+        let p0 = c.a[0][k] + c.a[1][k] + c.r[0][k][k];
+        let p1 = c.a[2][k] + c.a[3][k] + c.r[2][k][k];
+        let o0 = c.rp[1][k][k];
+        let expect = p0 + p1 + o0 + 3.0 * p0.max(p1).max(o0);
+        assert!((tpi - expect).abs() < 1e-9, "tpi={tpi} expect={expect}");
+    }
+
+    #[test]
+    fn objective_rejects_non_consecutive_placement() {
+        let (g, c) = setup(4, 16, 4);
+        let mut placement = vec![0usize; g.num_layers()];
+        placement[10] = 2; // layer 10 on stage 2 while 9,11 on stage 0 → skip
+        let choice = vec![0usize; g.num_layers()];
+        assert!(objective_tpi(&g, &c, &placement, &choice).is_infinite());
+    }
+
+    #[test]
+    fn one_f1b_caps_inflight_activations() {
+        // footnote 2: 1F1B changes only the memory constraint — activation
+        // residency shrinks by min(c, pp)/c, model states are unchanged.
+        let g = models::bert_huge();
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let gp = cost_modeling_sched(&p, &g, 2, 16, 8, Schedule::GPipe);
+        let f1b = cost_modeling_sched(&p, &g, 2, 16, 8, Schedule::OneF1B);
+        for k in 0..gp.num_strategies() {
+            assert!(f1b.m[5][k] < gp.m[5][k], "1F1B must use less memory");
+            assert!((f1b.a[5][k] - gp.a[5][k]).abs() < 1e-15, "time model unchanged");
+        }
+        // fraction matches min(c, pp)/c = 2/8 on the activation share
+        assert!((Schedule::OneF1B.inflight_fraction(2, 8) - 0.25).abs() < 1e-12);
+        assert_eq!(Schedule::GPipe.inflight_fraction(2, 8), 1.0);
+        // with c ≤ pp the schedules coincide
+        assert_eq!(Schedule::OneF1B.inflight_fraction(4, 2), 1.0);
+    }
+
+    #[test]
+    fn one_f1b_unlocks_memory_infeasible_gpipe_plans() {
+        use crate::planner::{uop, PlannerConfig};
+        // A model sized so that GPipe's full-batch activation residency
+        // breaks the 12 GB budget but 1F1B's capped residency fits.
+        let g = models::synthetic_chain(16, 5e11, 2e7, 3.2e8);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let gpipe = uop(&p, &g, 64, &PlannerConfig::default());
+        let f1b = uop(
+            &p,
+            &g,
+            64,
+            &PlannerConfig { schedule: Schedule::OneF1B, ..Default::default() },
+        );
+        let t_g = gpipe.best.map(|b| b.est_tpi).unwrap_or(f64::INFINITY);
+        let t_f = f1b.best.map(|b| b.est_tpi).expect("1F1B must be feasible");
+        assert!(t_f <= t_g, "larger feasible space can only help: {t_f} vs {t_g}");
+    }
+
+    #[test]
+    fn memory_constraint_detects_oom_for_replicated_bert_on_titan() {
+        // BERT-Huge fully replicated (dp=8) on 12 GB cards must exceed the
+        // limit — the Table 2 intra-only OOM pattern.
+        let (g, c) = setup(1, 16, 1);
+        let dp8 = c.strategies.iter().position(|s| s.dp == 8 && s.tp == 1 && !s.fsdp).unwrap();
+        let placement = vec![0usize; g.num_layers()];
+        let choice = vec![dp8; g.num_layers()];
+        let mem = stage_memory(&g, &c, &placement, &choice);
+        assert!(mem[0] > c.mem_limit, "replicated 672M-param FP32 must OOM 12GB");
+    }
+}

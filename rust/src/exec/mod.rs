@@ -1,0 +1,15 @@
+//! Plan execution: a real GPipe pipeline over AOT-compiled stage programs.
+//!
+//! This is the "interpreting the parallel strategies into the execution
+//! plan" end of the flowchart, made concrete: the planner's [`Plan`]
+//! chooses `pp_size` and the micro-batch count; [`pipeline`] drives the
+//! compiled stage programs (`artifacts/stage_*.hlo.txt`, produced by
+//! `python/compile/aot.py` from the JAX/Pallas model) through the GPipe
+//! schedule with gradient accumulation; [`optimizer`] applies Adam in
+//! Rust; [`data`] feeds a synthetic corpus. Python is never involved.
+//!
+//! [`Plan`]: crate::planner::Plan
+
+pub mod data;
+pub mod optimizer;
+pub mod pipeline;

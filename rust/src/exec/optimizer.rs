@@ -1,0 +1,111 @@
+//! Adam optimizer over flat parameter buffers (Kingma & Ba, 2015).
+//!
+//! Stage programs exchange parameters and gradients as single flat `f32`
+//! vectors (the L2 exporter packs/unpacks them), so the optimizer is a
+//! simple element-wise update — deliberately in Rust: the update is part
+//! of the coordinator's request path and must not involve Python.
+
+/// Adam state for one flat parameter buffer.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    step: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    /// Fresh state for `n` parameters.
+    pub fn new(n: usize, lr: f32) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            step: 0,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    /// Steps taken so far.
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// Apply one update in place. `params` and `grads` must match the
+    /// state's length.
+    pub fn update(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        for i in 0..params.len() {
+            let g = grads[i] + self.weight_decay * params[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+/// Average gradient buffers from data-parallel replicas in place into the
+/// first buffer (the coordinator's all-reduce for simulated DP workers).
+pub fn average_grads(replicas: &mut [Vec<f32>]) {
+    assert!(!replicas.is_empty());
+    let n = replicas[0].len();
+    let k = replicas.len() as f32;
+    for i in 0..n {
+        let mut s = 0.0f32;
+        for r in replicas.iter() {
+            s += r[i];
+        }
+        replicas[0][i] = s / k;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimises_quadratic() {
+        // f(x) = Σ (x_i - c_i)², gradient 2(x - c)
+        let target = [3.0f32, -1.5, 0.5];
+        let mut x = vec![0.0f32; 3];
+        let mut opt = Adam::new(3, 0.05);
+        for _ in 0..2000 {
+            let g: Vec<f32> = x.iter().zip(&target).map(|(xi, ci)| 2.0 * (xi - ci)).collect();
+            opt.update(&mut x, &g);
+        }
+        for (xi, ci) in x.iter().zip(&target) {
+            assert!((xi - ci).abs() < 1e-2, "{xi} vs {ci}");
+        }
+        assert_eq!(opt.step_count(), 2000);
+    }
+
+    #[test]
+    fn first_step_moves_by_about_lr() {
+        // Bias correction makes the first Adam step ≈ lr · sign(g).
+        let mut x = vec![0.0f32];
+        let mut opt = Adam::new(1, 0.1);
+        opt.update(&mut x, &[0.3]);
+        assert!((x[0] + 0.1).abs() < 1e-3, "{}", x[0]);
+    }
+
+    #[test]
+    fn average_grads_averages() {
+        let mut reps = vec![vec![1.0f32, 2.0], vec![3.0, 6.0]];
+        average_grads(&mut reps);
+        assert_eq!(reps[0], vec![2.0, 4.0]);
+    }
+}

@@ -1,0 +1,314 @@
+//! GPipe pipeline executor over AOT-compiled stage programs.
+//!
+//! Artifact contract with `python/compile/aot.py` (all HLO text,
+//! tuple-rooted, f32 activations, i64 tokens):
+//!
+//! | artifact | signature |
+//! |---|---|
+//! | `stage_first_fwd` | `(params, tokens[b,s]) → (h[b,s,d])` |
+//! | `stage_first_bwd` | `(params, tokens, g_h) → (g_params)` |
+//! | `stage_mid_fwd` | `(params, h_in) → (h_out)` |
+//! | `stage_mid_bwd` | `(params, h_in, g_out) → (g_params, g_in)` |
+//! | `stage_last_bwd` | `(params, h_in, targets[b,s]) → (loss[], g_params, g_in)` |
+//! | `full_step` | `(p_first, p_mid…, p_last, tokens, targets) → (loss, g_first, g_mid…, g_last)` |
+//!
+//! Backward stage programs *recompute* their forward internally
+//! (rematerialisation), so the executor only ships activations forward and
+//! activation-gradients backward — exactly the PP traffic of §2.1. Each
+//! stage's parameters live in one flat `f32` buffer; Adam runs in Rust.
+//!
+//! `meta.txt` (key=value lines) carries the export configuration, and
+//! `init_stage<i>.bin` the initial parameters (f32 little-endian).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::exec::optimizer::Adam;
+use crate::runtime::Runtime;
+
+/// Export configuration read from `artifacts/meta.txt`.
+#[derive(Debug, Clone)]
+pub struct PipelineMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub micro_batch: usize,
+    pub stages: usize,
+    /// flat parameter count per stage
+    pub param_counts: Vec<usize>,
+}
+
+impl PipelineMeta {
+    /// Parse the simple `key=value` metadata file.
+    pub fn load(dir: impl AsRef<Path>) -> Result<PipelineMeta> {
+        let path = dir.as_ref().join("meta.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("{path:?} missing — run `make artifacts`"))?;
+        let mut kv = std::collections::HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| anyhow!("bad meta line: {line}"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .ok_or_else(|| anyhow!("meta.txt missing key {k}"))?
+                .parse::<usize>()
+                .with_context(|| format!("meta key {k}"))
+        };
+        let stages = get("stages")?;
+        let param_counts = (0..stages)
+            .map(|i| get(&format!("params_stage{i}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PipelineMeta {
+            vocab: get("vocab")?,
+            d_model: get("d")?,
+            layers: get("layers")?,
+            heads: get("heads")?,
+            seq: get("seq")?,
+            micro_batch: get("micro_batch")?,
+            stages,
+            param_counts,
+        })
+    }
+}
+
+/// Read an f32 little-endian binary blob.
+pub fn read_f32_bin(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path.as_ref())
+        .with_context(|| format!("{:?} missing — run `make artifacts`", path.as_ref()))?;
+    if bytes.len() % 4 != 0 {
+        return Err(anyhow!("truncated f32 file"));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+/// One training-step report.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub loss: f32,
+    pub step_secs: f64,
+}
+
+/// The executor: owns compiled stage programs, parameters, optimizer state.
+pub struct PipelineExecutor {
+    pub meta: PipelineMeta,
+    runtime: Runtime,
+    /// flat parameters per stage
+    pub params: Vec<Vec<f32>>,
+    opts: Vec<Adam>,
+    act_len: usize, // b*s*d
+}
+
+impl PipelineExecutor {
+    /// Load artifacts from `dir` and initial parameters from the exported
+    /// `init_stage<i>.bin` files.
+    pub fn load(dir: impl AsRef<Path>, lr: f32) -> Result<PipelineExecutor> {
+        let dir = dir.as_ref();
+        let meta = PipelineMeta::load(dir)?;
+        let mut runtime = Runtime::cpu(dir)?;
+        // pre-compile everything used on the hot path
+        runtime.load("stage_first_fwd")?;
+        runtime.load("stage_first_bwd")?;
+        runtime.load("stage_last_bwd")?;
+        if meta.stages > 2 {
+            runtime.load("stage_mid_fwd")?;
+            runtime.load("stage_mid_bwd")?;
+        }
+        let mut params = Vec::with_capacity(meta.stages);
+        let mut opts = Vec::with_capacity(meta.stages);
+        for (i, &n) in meta.param_counts.iter().enumerate() {
+            let p = read_f32_bin(dir.join(format!("init_stage{i}.bin")))?;
+            if p.len() != n {
+                return Err(anyhow!("init_stage{i}.bin has {} params, meta says {n}", p.len()));
+            }
+            params.push(p);
+            opts.push(Adam::new(n, lr));
+        }
+        let act_len = meta.micro_batch * meta.seq * meta.d_model;
+        Ok(PipelineExecutor { meta, runtime, params, opts, act_len })
+    }
+
+    fn act_shape(&self) -> [i64; 3] {
+        [self.meta.micro_batch as i64, self.meta.seq as i64, self.meta.d_model as i64]
+    }
+
+    fn tok_shape(&self) -> [i64; 2] {
+        [self.meta.micro_batch as i64, self.meta.seq as i64]
+    }
+
+    fn param_lit(&self, stage: usize) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&self.params[stage]))
+    }
+
+    fn tok_lit(&self, toks: &[i64]) -> Result<xla::Literal> {
+        // the exported programs take s32 token ids (jax x64 is off)
+        let toks32: Vec<i32> = toks.iter().map(|&t| t as i32).collect();
+        Ok(xla::Literal::vec1(&toks32).reshape(&self.tok_shape())?)
+    }
+
+    /// Compute the mean loss and micro-batch-averaged gradients for one
+    /// mini-batch via the GPipe schedule, without touching the optimizer.
+    ///
+    /// Forward wave first (stashing each stage's input activation per
+    /// micro-batch), then the backward wave accumulates flat gradients per
+    /// stage; backward programs recompute their forward internally.
+    pub fn loss_and_grads(
+        &mut self,
+        tokens: &[i64],
+        targets: &[i64],
+        num_micro: usize,
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let m = self.meta.clone();
+        let per_micro = m.micro_batch * m.seq;
+        assert_eq!(tokens.len(), per_micro * num_micro, "token count mismatch");
+        assert_eq!(targets.len(), tokens.len());
+        let stages = m.stages;
+
+        // ---- forward wave ----
+        let mut stage_inputs: Vec<Vec<Vec<f32>>> = vec![Vec::with_capacity(num_micro); stages];
+        for mb in 0..num_micro {
+            let toks = &tokens[mb * per_micro..(mb + 1) * per_micro];
+            let first = self.runtime.load("stage_first_fwd")?;
+            let mut h = first
+                .run_literals(vec![self.param_lit(0)?, self.tok_lit(toks)?])?
+                .remove(0);
+            for s in 1..stages {
+                stage_inputs[s].push(h.clone());
+                if s + 1 == stages {
+                    break; // last stage consumes h in the backward wave
+                }
+                let mid = self.runtime.load("stage_mid_fwd")?;
+                let h_lit = xla::Literal::vec1(&h).reshape(&self.act_shape())?;
+                h = mid.run_literals(vec![self.param_lit(s)?, h_lit])?.remove(0);
+            }
+            debug_assert_eq!(stage_inputs[stages - 1][mb].len(), self.act_len);
+        }
+
+        // ---- backward wave with gradient accumulation ----
+        let mut grad_acc: Vec<Vec<f32>> =
+            m.param_counts.iter().map(|&n| vec![0.0f32; n]).collect();
+        let mut loss_sum = 0.0f32;
+        for mb in 0..num_micro {
+            let toks = &tokens[mb * per_micro..(mb + 1) * per_micro];
+            let tgts = &targets[mb * per_micro..(mb + 1) * per_micro];
+            let last = self.runtime.load("stage_last_bwd")?;
+            let h_in =
+                xla::Literal::vec1(&stage_inputs[stages - 1][mb]).reshape(&self.act_shape())?;
+            let mut outs = last.run_literals(vec![
+                self.param_lit(stages - 1)?,
+                h_in,
+                self.tok_lit(tgts)?,
+            ])?;
+            let mut g_in = outs.pop().ok_or_else(|| anyhow!("bad last_bwd arity"))?;
+            let g_params = outs.pop().ok_or_else(|| anyhow!("bad last_bwd arity"))?;
+            loss_sum += outs.pop().ok_or_else(|| anyhow!("bad last_bwd arity"))?[0];
+            axpy(&mut grad_acc[stages - 1], &g_params);
+            for s in (1..stages - 1).rev() {
+                let mid = self.runtime.load("stage_mid_bwd")?;
+                let h_in = xla::Literal::vec1(&stage_inputs[s][mb]).reshape(&self.act_shape())?;
+                let g_out = xla::Literal::vec1(&g_in).reshape(&self.act_shape())?;
+                let mut outs = mid.run_literals(vec![self.param_lit(s)?, h_in, g_out])?;
+                g_in = outs.pop().ok_or_else(|| anyhow!("bad mid_bwd arity"))?;
+                let g_params = outs.pop().ok_or_else(|| anyhow!("bad mid_bwd arity"))?;
+                axpy(&mut grad_acc[s], &g_params);
+            }
+            let first_bwd = self.runtime.load("stage_first_bwd")?;
+            let g_h = xla::Literal::vec1(&g_in).reshape(&self.act_shape())?;
+            let outs =
+                first_bwd.run_literals(vec![self.param_lit(0)?, self.tok_lit(toks)?, g_h])?;
+            axpy(&mut grad_acc[0], &outs[0]);
+        }
+
+        let scale = 1.0 / num_micro as f32;
+        for g in grad_acc.iter_mut().flat_map(|v| v.iter_mut()) {
+            *g *= scale;
+        }
+        Ok((loss_sum * scale, grad_acc))
+    }
+
+    /// One GPipe training step: [`Self::loss_and_grads`] followed by a Rust
+    /// Adam update per stage.
+    pub fn train_step(
+        &mut self,
+        tokens: &[i64],
+        targets: &[i64],
+        num_micro: usize,
+    ) -> Result<StepStats> {
+        let t0 = std::time::Instant::now();
+        let (loss, grads) = self.loss_and_grads(tokens, targets, num_micro)?;
+        for s in 0..self.meta.stages {
+            self.opts[s].update(&mut self.params[s], &grads[s]);
+        }
+        Ok(StepStats { loss, step_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Run the single-program `full_step` reference on the same data
+    /// (numerical-equivalence oracle for the pipeline schedule).
+    pub fn full_step_reference(&mut self, tokens: &[i64], targets: &[i64]) -> Result<(f32, Vec<Vec<f32>>)> {
+        let exe = self.runtime.load("full_step")?;
+        let mut lits = Vec::with_capacity(self.meta.stages + 2);
+        for s in 0..self.meta.stages {
+            lits.push(self.param_lit(s)?);
+        }
+        lits.push(self.tok_lit(tokens)?);
+        lits.push(self.tok_lit(targets)?);
+        let mut outs = exe.run_literals(lits)?;
+        let loss = outs.remove(0)[0];
+        Ok((loss, outs))
+    }
+}
+
+fn axpy(acc: &mut [f32], g: &[f32]) {
+    assert_eq!(acc.len(), g.len());
+    for (a, b) in acc.iter_mut().zip(g) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses_key_values() {
+        let dir = std::env::temp_dir().join(format!("uniap_meta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.txt"),
+            "# comment\nvocab=512\nd=128\nlayers=4\nheads=4\nseq=64\nmicro_batch=4\nstages=2\nparams_stage0=100\nparams_stage1=200\n",
+        )
+        .unwrap();
+        let m = PipelineMeta::load(&dir).unwrap();
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.param_counts, vec![100, 200]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn f32_bin_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("uniap_bin_{}.bin", std::process::id()));
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(read_f32_bin(&path).unwrap(), data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut a = vec![1.0f32, 2.0];
+        axpy(&mut a, &[0.5, -1.0]);
+        assert_eq!(a, vec![1.5, 1.0]);
+    }
+}

@@ -1,0 +1,431 @@
+//! Model zoo: layer-graph builders for the paper's evaluated models
+//! (Table 3) plus small synthetic models for tests and the end-to-end
+//! training example.
+//!
+//! FLOP / parameter / activation formulas follow the standard Transformer
+//! accounting (Megatron-LM; Korthikanti et al.): multiply-adds count as two
+//! FLOPs, backward ≈ 2× forward, and stored-activation bytes per block are
+//! `c_lin·s·h + c_attn·a·s_attn` element-halves (the Megatron fp16 formula,
+//! scaled by the element size).
+
+use super::{Dtype, Graph, Layer, LayerKind};
+
+/// Configuration of a homogeneous transformer encoder stack.
+#[derive(Debug, Clone)]
+pub struct TransformerConfig {
+    pub name: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub ffn: usize,
+    pub dtype: Dtype,
+}
+
+/// Activation bytes stored for backward, per sample, for one attention
+/// block: the Megatron formula `s·h·34 + 5·a·s·s_kv` (bytes at fp16),
+/// rescaled by element width. `s_kv` is the key/value extent each query
+/// attends to (= `s` for full attention, window size for Swin).
+fn act_store_bytes(s: usize, h: usize, heads: usize, s_kv: usize, dtype: Dtype) -> f64 {
+    let scale = dtype.elem_bytes() / 2.0; // formula is calibrated at fp16
+    (34.0 * s as f64 * h as f64 + 5.0 * heads as f64 * s as f64 * s_kv as f64) * scale
+}
+
+/// One encoder block layer (self-attention + MLP).
+fn encoder_block(
+    name: String,
+    type_key: String,
+    s: usize,
+    h: usize,
+    heads: usize,
+    ffn: usize,
+    s_kv: usize,
+    dtype: Dtype,
+) -> Layer {
+    let (sf, hf, ff) = (s as f64, h as f64, ffn as f64);
+    // MACs: QKVO projections 4·s·h² + scores/context 2·s·s_kv·h + MLP 2·s·h·ffn
+    let macs = 4.0 * sf * hf * hf + 2.0 * sf * s_kv as f64 * hf + 2.0 * sf * hf * ff;
+    Layer {
+        name,
+        type_key,
+        kind: if s_kv == s { LayerKind::EncoderBlock } else { LayerKind::WindowBlock },
+        flops_fwd: 2.0 * macs,
+        params: 4.0 * hf * hf + 2.0 * hf * ff + 9.0 * hf,
+        act_out_bytes: sf * hf * dtype.elem_bytes(),
+        act_store_bytes: act_store_bytes(s, h, heads, s_kv, dtype),
+    }
+}
+
+/// One decoder block layer (self-attention + cross-attention + MLP).
+fn decoder_block(
+    name: String,
+    type_key: String,
+    s: usize,
+    s_enc: usize,
+    h: usize,
+    heads: usize,
+    ffn: usize,
+    dtype: Dtype,
+) -> Layer {
+    let (sf, hf, ff) = (s as f64, h as f64, ffn as f64);
+    let macs = 4.0 * sf * hf * hf + 2.0 * sf * sf * hf           // self-attention
+        + 4.0 * sf * hf * hf + 2.0 * sf * s_enc as f64 * hf      // cross-attention
+        + 2.0 * sf * hf * ff; // MLP
+    Layer {
+        name,
+        type_key,
+        kind: LayerKind::DecoderBlock,
+        flops_fwd: 2.0 * macs,
+        params: 8.0 * hf * hf + 2.0 * hf * ff + 13.0 * hf,
+        act_out_bytes: sf * hf * dtype.elem_bytes(),
+        act_store_bytes: 1.6 * act_store_bytes(s, h, heads, s, dtype),
+    }
+}
+
+/// Gated-MLP (SwiGLU) decoder-only block, Llama-style.
+fn llama_block(
+    name: String,
+    type_key: String,
+    s: usize,
+    h: usize,
+    heads: usize,
+    ffn: usize,
+    dtype: Dtype,
+) -> Layer {
+    let (sf, hf, ff) = (s as f64, h as f64, ffn as f64);
+    // gate+up+down = 3 matmuls of h×ffn
+    let macs = 4.0 * sf * hf * hf + 2.0 * sf * sf * hf + 3.0 * sf * hf * ff;
+    // Llama trains with flash attention: the s² score matrix is never
+    // materialised, so stored activations are the linear terms only
+    // (vs `act_store_bytes` for the standard-attention 2021-era models).
+    let _ = heads;
+    let flash_act = 34.0 * sf * hf * (dtype.elem_bytes() / 2.0);
+    Layer {
+        name,
+        type_key,
+        kind: LayerKind::EncoderBlock,
+        flops_fwd: 2.0 * macs,
+        params: 4.0 * hf * hf + 3.0 * hf * ff + 2.0 * hf,
+        act_out_bytes: sf * hf * dtype.elem_bytes(),
+        act_store_bytes: flash_act,
+    }
+}
+
+fn embedding(name: &str, s: usize, h: usize, vocab: usize, dtype: Dtype) -> Layer {
+    let (sf, hf, vf) = (s as f64, h as f64, vocab as f64);
+    Layer {
+        name: name.to_string(),
+        type_key: "embed".to_string(),
+        kind: LayerKind::Embedding,
+        flops_fwd: 2.0 * sf * hf, // gather + scale; negligible vs blocks
+        params: vf * hf + sf * hf, // token + position table
+        act_out_bytes: sf * hf * dtype.elem_bytes(),
+        act_store_bytes: 2.0 * sf * hf * dtype.elem_bytes(),
+    }
+}
+
+fn lm_head(name: &str, s: usize, h: usize, vocab: usize, dtype: Dtype) -> Layer {
+    let (sf, hf, vf) = (s as f64, h as f64, vocab as f64);
+    Layer {
+        name: name.to_string(),
+        type_key: "head".to_string(),
+        kind: LayerKind::Head,
+        flops_fwd: 2.0 * sf * hf * vf,
+        params: vf * hf,
+        act_out_bytes: sf * vf * dtype.elem_bytes() / 16.0, // loss scalar path; keep small
+        act_store_bytes: sf * vf * dtype.elem_bytes(),
+    }
+}
+
+/// Generic GPT/BERT-style homogeneous stack: embed + N blocks + head.
+pub fn transformer_lm(cfg: &TransformerConfig) -> Graph {
+    let mut layers = vec![embedding("embed", cfg.seq, cfg.hidden, cfg.vocab, cfg.dtype)];
+    for i in 0..cfg.layers {
+        layers.push(encoder_block(
+            format!("enc.{i}"),
+            "enc_block".to_string(),
+            cfg.seq,
+            cfg.hidden,
+            cfg.heads,
+            cfg.ffn,
+            cfg.seq,
+            cfg.dtype,
+        ));
+    }
+    layers.push(lm_head("head", cfg.seq, cfg.hidden, cfg.vocab, cfg.dtype));
+    Graph::chain(&cfg.name, layers, cfg.dtype, cfg.seq)
+}
+
+/// BERT-Huge: 32 layers, hidden 1280, seq 512, ~672M params, FP32 (Table 3).
+pub fn bert_huge() -> Graph {
+    transformer_lm(&TransformerConfig {
+        name: "BERT-Huge".to_string(),
+        hidden: 1280,
+        layers: 32,
+        heads: 16,
+        seq: 512,
+        vocab: 30522,
+        ffn: 5120,
+        dtype: Dtype::Fp32,
+    })
+}
+
+/// T5-Large: 24 encoder + 24 decoder layers, hidden 1024, seq 512, ~737M, FP32.
+///
+/// `enc_layers`/`dec_layers` are configurable because the paper restricts
+/// T5 to 16/16 layers on EnvB to avoid OOM (Table 1 note 1).
+pub fn t5_large_with(enc_layers: usize, dec_layers: usize) -> Graph {
+    let (h, s, heads, ffn, vocab) = (1024usize, 512usize, 16usize, 4096usize, 32128usize);
+    let dtype = Dtype::Fp32;
+    let mut layers = vec![embedding("embed", s, h, vocab, dtype)];
+    for i in 0..enc_layers {
+        layers.push(encoder_block(
+            format!("enc.{i}"),
+            "t5_enc".to_string(),
+            s,
+            h,
+            heads,
+            ffn,
+            s,
+            dtype,
+        ));
+    }
+    for i in 0..dec_layers {
+        layers.push(decoder_block(format!("dec.{i}"), "t5_dec".to_string(), s, s, h, heads, ffn, dtype));
+    }
+    layers.push(lm_head("head", s, h, vocab, dtype));
+    let name = if (enc_layers, dec_layers) == (24, 24) {
+        "T5-Large".to_string()
+    } else {
+        format!("T5-Large-{enc_layers}/{dec_layers}")
+    };
+    Graph::chain(&name, layers, dtype, s)
+}
+
+/// T5-Large at full 24/24 depth.
+pub fn t5_large() -> Graph {
+    t5_large_with(24, 24)
+}
+
+/// ViT-Huge: 32 layers, hidden 1280, seq 196(+cls), ~632M, FP32.
+pub fn vit_huge() -> Graph {
+    let (h, s, heads, ffn) = (1280usize, 197usize, 16usize, 5120usize);
+    let dtype = Dtype::Fp32;
+    let mut layers = vec![{
+        // Patch embedding: conv 16×16×3 → hidden.
+        let mut l = embedding("patch_embed", s, h, 0, dtype);
+        l.params = (16 * 16 * 3 * h + s * h) as f64;
+        l.flops_fwd = 2.0 * (s * 16 * 16 * 3 * h) as f64;
+        l
+    }];
+    for i in 0..32 {
+        layers.push(encoder_block(
+            format!("blk.{i}"),
+            "vit_block".to_string(),
+            s,
+            h,
+            heads,
+            ffn,
+            s,
+            dtype,
+        ));
+    }
+    layers.push({
+        let mut l = lm_head("cls_head", 1, h, 1000, dtype);
+        l.type_key = "vit_head".to_string();
+        l
+    });
+    Graph::chain("ViT-Huge", layers, dtype, s)
+}
+
+/// Swin-Huge: 4 stages of depths 2/2/42/2, base channels 320, tokens
+/// 3136/784/196/49, window 49, ~1.02B params, FP32 (Table 3: seq 49×64).
+pub fn swin_huge() -> Graph {
+    let dtype = Dtype::Fp32;
+    let base_c = 320usize;
+    let depths = [2usize, 2, 42, 2];
+    let tokens = [3136usize, 784, 196, 49];
+    let heads = [10usize, 20, 40, 80];
+    let window = 49usize;
+    let mut layers = vec![{
+        let mut l = embedding("patch_embed", tokens[0], base_c, 0, dtype);
+        l.params = (4 * 4 * 3 * base_c) as f64;
+        l.flops_fwd = 2.0 * (tokens[0] * 4 * 4 * 3 * base_c) as f64;
+        l
+    }];
+    for (stage, &d) in depths.iter().enumerate() {
+        let c = base_c << stage;
+        let s = tokens[stage];
+        for i in 0..d {
+            layers.push(encoder_block(
+                format!("s{stage}.blk.{i}"),
+                format!("swin_s{stage}"),
+                s,
+                c,
+                heads[stage],
+                4 * c,
+                window.min(s),
+                dtype,
+            ));
+        }
+        if stage + 1 < depths.len() {
+            // Patch-merging layer: 4C → 2C linear over the downsampled map.
+            let (sf, cf) = (tokens[stage + 1] as f64, c as f64);
+            layers.push(Layer {
+                name: format!("s{stage}.merge"),
+                type_key: format!("swin_merge{stage}"),
+                kind: LayerKind::Other,
+                flops_fwd: 2.0 * sf * (4.0 * cf) * (2.0 * cf),
+                params: 4.0 * cf * 2.0 * cf,
+                act_out_bytes: sf * 2.0 * cf * dtype.elem_bytes(),
+                act_store_bytes: 4.0 * sf * cf * dtype.elem_bytes(),
+            });
+        }
+    }
+    layers.push({
+        let mut l = lm_head("cls_head", 1, base_c * 8, 1000, dtype);
+        l.type_key = "swin_head".to_string();
+        l
+    });
+    Graph::chain("Swin-Huge", layers, dtype, tokens[0])
+}
+
+/// Llama-7B: 32 layers, hidden 4096, seq 2048, FFN 11008, FP16 mixed.
+pub fn llama_7b() -> Graph {
+    llama(32, 4096, 32, 11008, 2048, "Llama-7B")
+}
+
+/// Llama-13B: 40 layers, hidden 5120, seq 2048, FFN 13824, FP16 mixed.
+pub fn llama_13b() -> Graph {
+    llama(40, 5120, 40, 13824, 2048, "Llama-13B")
+}
+
+fn llama(n_layers: usize, h: usize, heads: usize, ffn: usize, s: usize, name: &str) -> Graph {
+    let dtype = Dtype::Fp16Mixed;
+    let vocab = 32000usize;
+    let mut layers = vec![{
+        let mut l = embedding("embed", s, h, vocab, dtype);
+        l.params = (vocab * h) as f64; // RoPE: no position table
+        l
+    }];
+    for i in 0..n_layers {
+        layers.push(llama_block(format!("blk.{i}"), "llama_block".to_string(), s, h, heads, ffn, dtype));
+    }
+    layers.push(lm_head("head", s, h, vocab, dtype));
+    Graph::chain(name, layers, dtype, s)
+}
+
+/// Small GPT-style LM used by the end-to-end training example; must match
+/// the architecture exported by `python/compile/model.py`.
+pub fn gpt_small(hidden: usize, n_layers: usize, heads: usize, seq: usize, vocab: usize) -> Graph {
+    transformer_lm(&TransformerConfig {
+        name: format!("gpt-d{hidden}-l{n_layers}"),
+        hidden,
+        layers: n_layers,
+        heads,
+        seq,
+        vocab,
+        ffn: 4 * hidden,
+        dtype: Dtype::Fp32,
+    })
+}
+
+/// Uniform synthetic chain for tests: `n` identical blocks.
+pub fn synthetic_chain(n: usize, flops: f64, params: f64, act: f64) -> Graph {
+    let layers = (0..n)
+        .map(|i| Layer {
+            name: format!("l{i}"),
+            type_key: "synth".to_string(),
+            kind: LayerKind::Other,
+            flops_fwd: flops,
+            params,
+            act_out_bytes: act,
+            act_store_bytes: 4.0 * act,
+        })
+        .collect();
+    Graph::chain("synthetic", layers, Dtype::Fp32, 128)
+}
+
+/// Look a model up by its CLI name.
+pub fn by_name(name: &str) -> Option<Graph> {
+    match name.to_ascii_lowercase().as_str() {
+        "bert" | "bert-huge" => Some(bert_huge()),
+        "t5" | "t5-large" => Some(t5_large()),
+        "t5-16" | "t5-large-16" => Some(t5_large_with(16, 16)),
+        "vit" | "vit-huge" => Some(vit_huge()),
+        "swin" | "swin-huge" => Some(swin_huge()),
+        "llama-7b" | "llama7b" => Some(llama_7b()),
+        "llama-13b" | "llama13b" => Some(llama_13b()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 3 parameter counts, within 6% (formulas omit small biases).
+    #[test]
+    fn param_counts_match_table3() {
+        let cases: Vec<(Graph, f64)> = vec![
+            (bert_huge(), 672e6),
+            (t5_large(), 737e6),
+            (vit_huge(), 632e6),
+            (swin_huge(), 1.02e9),
+            (llama_7b(), 7e9),
+            (llama_13b(), 13e9),
+        ];
+        for (g, want) in cases {
+            let got = g.total_params();
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.06, "{}: got {:.3e}, want {:.3e} (rel {:.3})", g.name, got, want, rel);
+        }
+    }
+
+    #[test]
+    fn all_zoo_models_are_valid_chains() {
+        for g in [bert_huge(), t5_large(), vit_huge(), swin_huge(), llama_7b(), llama_13b()] {
+            assert!(g.validate().is_ok(), "{}", g.name);
+            assert!(g.is_chain(), "{} should be a chain", g.name);
+        }
+    }
+
+    #[test]
+    fn layer_counts_match_table3() {
+        // hidden blocks only (excluding embed/head/merge layers)
+        assert_eq!(bert_huge().layers.iter().filter(|l| l.type_key == "enc_block").count(), 32);
+        assert_eq!(t5_large().layers.iter().filter(|l| l.type_key == "t5_enc").count(), 24);
+        assert_eq!(t5_large().layers.iter().filter(|l| l.type_key == "t5_dec").count(), 24);
+        assert_eq!(vit_huge().layers.iter().filter(|l| l.type_key == "vit_block").count(), 32);
+        let swin = swin_huge();
+        assert_eq!(swin.layers.iter().filter(|l| l.type_key == "swin_s2").count(), 42);
+        assert_eq!(llama_13b().layers.iter().filter(|l| l.type_key == "llama_block").count(), 40);
+    }
+
+    #[test]
+    fn llama_uses_fp16_others_fp32() {
+        assert_eq!(llama_7b().dtype, Dtype::Fp16Mixed);
+        assert_eq!(bert_huge().dtype, Dtype::Fp32);
+    }
+
+    #[test]
+    fn flops_scale_with_hidden_size() {
+        let small = gpt_small(256, 4, 4, 128, 1000);
+        let big = gpt_small(512, 4, 4, 128, 1000);
+        assert!(big.total_flops_fwd() > 3.0 * small.total_flops_fwd());
+    }
+
+    #[test]
+    fn t5_restricted_depth_is_smaller() {
+        assert!(t5_large_with(16, 16).total_params() < t5_large().total_params());
+    }
+
+    #[test]
+    fn by_name_resolves_all() {
+        for n in ["bert", "t5", "vit", "swin", "llama-7b", "llama-13b"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,68 @@
+//! # UniAP — Unifying Inter- and Intra-Layer Automatic Parallelism by MIQP
+//!
+//! A full-system reproduction of the UniAP paper (Lin et al., 2023) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the paper's contribution: profiling, cost
+//!   models, the joint inter-/intra-layer MIQP planner, the Unified
+//!   Optimization Process (UOP), baseline planners, a discrete-event cluster
+//!   simulator, and a real GPipe pipeline executor over AOT-compiled
+//!   JAX/Pallas programs.
+//! - **Layer 2 (python/compile/model.py)** — JAX transformer stage programs
+//!   lowered once to HLO text (`artifacts/*.hlo.txt`).
+//! - **Layer 1 (python/compile/kernels/)** — Pallas fused-attention kernel,
+//!   validated against a pure-jnp oracle.
+//!
+//! Python never runs on the request path; the `uniap` binary loads the HLO
+//! artifacts through PJRT (the `xla` crate) and owns everything else.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`graph`] | layer-graph IR + model zoo (BERT/T5/ViT/Swin/Llama) |
+//! | [`cluster`] | device/link/topology model, EnvA–EnvE presets |
+//! | [`profiling`] | analytic + PJRT-measured profilers (§3.1) |
+//! | [`strategy`] | intra-layer strategy space (DP/TP/FSDP) + resharding |
+//! | [`cost`] | time + memory cost models → A, R, R′, M matrices (§3.2) |
+//! | [`miqp`] | general MIQP solver: linearisation, simplex, branch & bound (§3.3) |
+//! | [`planner`] | chain-exact solver, QIP intra-only, UOP (Alg. 1) |
+//! | [`baselines`] | Galvatron, Alpa-like, Megatron grid, DeepSpeed, inter-/intra-only |
+//! | [`sim`] | discrete-event GPipe pipeline simulator (ground truth) |
+//! | [`runtime`] | PJRT artifact loading + execution |
+//! | [`exec`] | real pipeline executor: microbatch schedule, Adam, data |
+//! | [`metrics`] | TPI, throughput, REE, MFU, speedups |
+//! | [`report`] | markdown tables + hand-rolled bench harness |
+//! | [`testing`] | deterministic PRNG + mini property-testing harness |
+
+pub mod baselines;
+pub mod cli;
+pub mod cluster;
+pub mod cost;
+pub mod exec;
+pub mod graph;
+pub mod metrics;
+pub mod miqp;
+pub mod planner;
+pub mod profiling;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod strategy;
+pub mod testing;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Convenience prelude with the types most downstream users need.
+pub mod prelude {
+    pub use crate::baselines::{Baseline, BaselineKind};
+    pub use crate::cluster::ClusterEnv;
+    pub use crate::cost::{cost_modeling, CostMatrices};
+    pub use crate::graph::{Graph, Layer, LayerKind};
+    pub use crate::planner::{Plan, PlannerConfig, UopResult};
+    pub use crate::profiling::Profile;
+    pub use crate::sim::{simulate_plan, SimConfig, SimResult};
+    pub use crate::strategy::IntraStrategy;
+}

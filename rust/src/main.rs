@@ -1,0 +1,216 @@
+//! `uniap` — the UniAP coordinator CLI.
+//!
+//! Commands:
+//! * `plan` — run the UOP planner (or a baseline) for a model × environment
+//!   × mini-batch, print the plan, the estimate and the simulated outcome.
+//! * `sweep` — print the full UOP candidate log (Figure 4b style).
+//! * `profile` — show the analytic profile of an environment for a model.
+//! * `train` — execute a real GPipe training run over the AOT artifacts
+//!   (see `examples/train_pipeline.rs` for the scripted version).
+//! * `calibrate` — measure local PJRT matmul throughput.
+
+use uniap::baselines::{Baseline, BaselineKind};
+use uniap::cli::Args;
+use uniap::cluster::ClusterEnv;
+use uniap::graph::models;
+use uniap::planner::PlannerConfig;
+use uniap::profiling::Profile;
+use uniap::sim::{simulate_plan, SimConfig};
+
+const USAGE: &str = "\
+uniap — UniAP automatic-parallelism planner (paper reproduction)
+
+USAGE: uniap <command> [options]
+
+COMMANDS:
+  plan       --model <bert|t5|t5-16|vit|swin|llama-7b|llama-13b>
+             --env <EnvA|EnvB|EnvC|EnvD|EnvE> --batch <B>
+             [--method <uniap|galvatron|alpa|inter|intra|megatron|deepspeed>]
+             [--engine <auto|chain|miqp>] [--schedule <gpipe|1f1b>]
+             [--threads N] [--quiet]
+  sweep      same selectors as plan; prints every (pp_size, c) candidate
+  profile    --model <name> --env <name>
+  train      --artifacts <dir> --steps N [--micro N] [--lr F]
+  calibrate  [--size N] [--iters N]
+  version
+";
+
+fn env_and_model(args: &Args) -> Result<(ClusterEnv, uniap::graph::Graph), String> {
+    let env_name = args.get("env", "EnvA");
+    let model_name = args.get("model", "bert");
+    let env = ClusterEnv::by_name(&env_name).ok_or(format!("unknown env {env_name}"))?;
+    let model = models::by_name(&model_name).ok_or(format!("unknown model {model_name}"))?;
+    Ok((env, model))
+}
+
+fn planner_cfg(args: &Args) -> Result<PlannerConfig, String> {
+    let mut cfg = PlannerConfig::default();
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    cfg.mem_buckets = args.get_usize("mem-buckets", cfg.mem_buckets)?;
+    cfg.time_limit = args.get_f64("time-limit", cfg.time_limit)?;
+    cfg.schedule = match args.get("schedule", "gpipe").as_str() {
+        "gpipe" => uniap::cost::Schedule::GPipe,
+        "1f1b" => uniap::cost::Schedule::OneF1B,
+        other => return Err(format!("unknown schedule {other}")),
+    };
+    cfg.engine = match args.get("engine", "auto").as_str() {
+        "auto" => uniap::planner::Engine::Auto,
+        "chain" => uniap::planner::Engine::Chain,
+        "miqp" => uniap::planner::Engine::Miqp,
+        other => return Err(format!("unknown engine {other}")),
+    };
+    Ok(cfg)
+}
+
+fn cmd_plan(args: &Args) -> Result<(), String> {
+    let (env, graph) = env_and_model(args)?;
+    let batch = args.get_usize("batch", 16)?;
+    let cfg = planner_cfg(args)?;
+    let profile = Profile::analytic(&env, &graph);
+    let kind = match args.get("method", "uniap").as_str() {
+        "uniap" => BaselineKind::UniAP,
+        "galvatron" => BaselineKind::Galvatron,
+        "alpa" => BaselineKind::Alpa,
+        "inter" => BaselineKind::InterOnly,
+        "intra" => BaselineKind::IntraOnly,
+        "megatron" => BaselineKind::MegatronGrid,
+        "deepspeed" => BaselineKind::DeepSpeedZero3,
+        other => return Err(format!("unknown method {other}")),
+    };
+    println!("# {} · {} · B={} · {}", kind.label(), graph.name, batch, env.name);
+    let res = Baseline::run(kind, &profile, &graph, batch, &cfg);
+    println!("strategy optimization time: {}", uniap::util::fmt_secs(res.opt_secs));
+    match &res.plan {
+        None => println!("result: {}", res.failure.as_deref().unwrap_or("SOL×")),
+        Some(plan) => {
+            println!("plan: {}", plan.summary());
+            if !args.flag("quiet") {
+                for (i, &(a, b)) in plan.stage_ranges().iter().enumerate() {
+                    let labels: Vec<String> =
+                        (a..=b).map(|u| format!("{}:{}", graph.layers[u].name, plan.strategy_of(u).label())).collect();
+                    println!("  stage {i}: {}", labels.join(" "));
+                }
+            }
+            let sim = simulate_plan(&graph, &profile, plan, &SimConfig::default());
+            println!(
+                "simulated: {:.2} ± {:.2} samples/s (tpi {:.4}s, MFU {:.1}%, bubble {:.1}%{})",
+                sim.throughput,
+                sim.throughput_std,
+                sim.tpi,
+                100.0 * sim.mfu,
+                100.0 * sim.bubble_frac,
+                if sim.oom { ", CUDA× OOM" } else { "" },
+            );
+            let ree = uniap::metrics::ree(sim.throughput, plan.est_throughput());
+            println!("estimate: {:.2} samples/s (REE {:.2}%)", plan.est_throughput(), 100.0 * ree);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let (env, graph) = env_and_model(args)?;
+    let batch = args.get_usize("batch", 16)?;
+    let cfg = planner_cfg(args)?;
+    let profile = Profile::analytic(&env, &graph);
+    let res = uniap::planner::uop(&profile, &graph, batch, &cfg);
+    let mut table = uniap::report::Table::new(&["pp_size", "c", "est TPI (s)", "solve (s)"]);
+    for l in &res.log {
+        table.row(vec![
+            l.pp_size.to_string(),
+            l.num_micro.to_string(),
+            l.tpi.map(|t| format!("{t:.4}")).unwrap_or_else(|| "SOL×".to_string()),
+            format!("{:.3}", l.solve_secs),
+        ]);
+    }
+    print!("{}", table.to_markdown());
+    println!("total: {}", uniap::util::fmt_secs(res.wall_secs));
+    if let Some(best) = res.best {
+        println!("best: {}", best.summary());
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<(), String> {
+    let (env, graph) = env_and_model(args)?;
+    let profile = Profile::analytic(&env, &graph);
+    println!("# profile of {} on {}", graph.name, env.name);
+    println!("devices: {} × {} ({} GiB)", env.total_devices(), env.device.name, env.device.mem_bytes / 1e9);
+    let mut seen = std::collections::BTreeSet::new();
+    let mut table = uniap::report::Table::new(&["layer type", "tp=1 (ms/sample)", "tp=2", "tp=4"]);
+    for l in &graph.layers {
+        if seen.insert(l.type_key.clone()) {
+            table.row(vec![
+                l.type_key.clone(),
+                format!("{:.3}", 1e3 * profile.fwd_time_per_sample(&l.type_key, 1)),
+                format!("{:.3}", 1e3 * profile.fwd_time_per_sample(&l.type_key, 2)),
+                format!("{:.3}", 1e3 * profile.fwd_time_per_sample(&l.type_key, 4)),
+            ]);
+        }
+    }
+    print!("{}", table.to_markdown());
+    println!("CCOC: {:.2}, memory limit: {}", profile.ccoc, uniap::util::gib(profile.mem_limit()));
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let dir = args.get("artifacts", "artifacts");
+    let steps = args.get_usize("steps", 50)?;
+    let micro = args.get_usize("micro", 4)?;
+    let lr = args.get_f64("lr", 3e-3)? as f32;
+    let mut exec = uniap::exec::pipeline::PipelineExecutor::load(&dir, lr)
+        .map_err(|e| format!("{e:#}"))?;
+    let m = exec.meta.clone();
+    println!(
+        "# training gpt(d={}, layers={}, vocab={}) — {} stages, micro-batch {}, {} micro-batches/step",
+        m.d_model, m.layers, m.vocab, m.stages, m.micro_batch, micro
+    );
+    let mut corpus = uniap::exec::data::Corpus::new(m.vocab, 42);
+    for step in 0..steps {
+        let (toks, tgts) = corpus.next_batch(m.micro_batch * micro, m.seq);
+        let stats = exec.train_step(&toks, &tgts, micro).map_err(|e| format!("{e:#}"))?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:>4}  loss {:.4}  ({:.2}s)", stats.loss, stats.step_secs);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<(), String> {
+    let size = args.get_usize("size", 512)?;
+    let iters = args.get_usize("iters", 8)?;
+    let c = uniap::profiling::measured::calibrate_matmul(size, iters).map_err(|e| format!("{e:#}"))?;
+    println!("achieved f32 matmul: {:.2} GFLOP/s ({} over {} iters)", c.achieved_f32 / 1e9, uniap::util::fmt_secs(c.bench_secs), iters);
+    Ok(())
+}
+
+fn main() {
+    let tokens: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&tokens) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "plan" => cmd_plan(&args),
+        "sweep" => cmd_sweep(&args),
+        "profile" => cmd_profile(&args),
+        "train" => cmd_train(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "version" => {
+            println!("uniap {}", uniap::VERSION);
+            Ok(())
+        }
+        "" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

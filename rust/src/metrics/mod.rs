@@ -1,0 +1,53 @@
+//! Evaluation metrics: relative estimation error (§4.2, eq. 9), MFU
+//! (Appendix F), and speedup helpers used by the table generators.
+
+/// Relative estimation error `e(T, T̂) = |T − T̂| / T × 100%` (eq. 9),
+/// returned as a fraction (multiply by 100 for percent).
+pub fn ree(actual: f64, estimated: f64) -> f64 {
+    assert!(actual > 0.0, "actual throughput must be positive");
+    (actual - estimated).abs() / actual
+}
+
+/// Speedup of `ours` over `baseline` (throughput ratio).
+pub fn speedup(ours: f64, baseline: f64) -> f64 {
+    ours / baseline
+}
+
+/// Model FLOPs utilisation: `model_flops_per_iter / (tpi · peak · devices)`.
+/// Forward+backward counts as 3× the forward FLOPs (Appendix F / PaLM).
+pub fn mfu(fwd_flops_per_sample: f64, batch: usize, tpi: f64, cluster_peak: f64) -> f64 {
+    3.0 * fwd_flops_per_sample * batch as f64 / (tpi * cluster_peak)
+}
+
+/// Format `mean ± std` the way the paper's tables do.
+pub fn pm(mean: f64, std: f64, decimals: usize) -> String {
+    format!("{:.d$} ± {:.d$}", mean, std, d = decimals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ree_matches_eq9() {
+        assert!((ree(10.0, 9.0) - 0.1).abs() < 1e-12);
+        assert!((ree(10.0, 11.0) - 0.1).abs() < 1e-12);
+        assert_eq!(ree(5.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        assert_eq!(speedup(8.0, 2.0), 4.0);
+    }
+
+    #[test]
+    fn mfu_formula() {
+        // 1 GFLOP fwd/sample, B=10, tpi=1s, peak 100 GFLOP/s → 3·10/100 = 0.3
+        assert!((mfu(1e9, 10, 1.0, 100e9) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pm_formats() {
+        assert_eq!(pm(33.456, 0.28, 2), "33.46 ± 0.28");
+    }
+}

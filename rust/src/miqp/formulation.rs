@@ -1,0 +1,223 @@
+//! The MIQP constraint system, materialised (§3.3.1–3.3.2).
+//!
+//! This module evaluates the paper's algebra directly — objective (2) from
+//! the stage aggregates of constraints (3)/(4), memory (5), the linearised
+//! order-preserving system (6a–6c), placement (7a–7c) and selection
+//! (8a/8b) — independently of the planner code paths, so property tests
+//! can confirm that what the solvers return satisfies *the formulation*
+//! and that the linearisation of Theorem B.1 is exactly Definition 3.1.
+
+use crate::cost::CostMatrices;
+use crate::graph::Graph;
+
+/// Does a 0/1 `Z` exist satisfying (6a–6c) for this placement?
+///
+/// Constructive check following the "only if" direction of the Appendix B
+/// proof: set `Z_vi = 1` iff some node placed on stage `i` is reachable
+/// from `v`, then verify all three inequality families. Theorem B.1 says
+/// this succeeds iff every stage set is contiguous.
+pub fn order_preserving_feasible(graph: &Graph, placement: &[usize], pp: usize) -> bool {
+    let n = graph.num_layers();
+    for i in 0..pp {
+        // z[v] = 1 iff some w with placement[w] == i is reachable from v
+        let mut z = vec![false; n];
+        for v in (0..n).rev() {
+            if placement[v] == i {
+                z[v] = true;
+            } else {
+                for s in graph.successors(v) {
+                    if z[s] {
+                        z[v] = true;
+                        break;
+                    }
+                }
+            }
+        }
+        let p = |v: usize| if placement[v] == i { 1i32 } else { 0 };
+        let zi = |v: usize| if z[v] { 1i32 } else { 0 };
+        // (6a) Z_vi ≥ P_vi
+        for v in 0..n {
+            if zi(v) < p(v) {
+                return false;
+            }
+        }
+        for &(u, v) in &graph.edges {
+            // (6b) Z_vi ≤ Z_ui
+            if zi(v) > zi(u) {
+                return false;
+            }
+            // (6c) Z_vi ≤ P_vi − P_ui + 1
+            if zi(v) > p(v) - p(u) + 1 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Violations of the full constraint system for an explicit assignment
+/// (empty = feasible). Mirrors the MIQP's constraints one by one.
+pub fn constraint_violations(
+    graph: &Graph,
+    costs: &CostMatrices,
+    placement: &[usize],
+    choice: &[usize],
+) -> Vec<String> {
+    let mut out = Vec::new();
+    let v = graph.num_layers();
+    let pp = costs.pp_size;
+
+    // (7a/7c): each layer on exactly one valid stage — encoded by the
+    // representation, but range-check it.
+    for u in 0..v {
+        if placement[u] >= pp {
+            out.push(format!("(7c) layer {u} stage {} out of range", placement[u]));
+        }
+        if choice[u] >= costs.num_strategies() {
+            out.push(format!("(8b) layer {u} strategy {} out of range", choice[u]));
+        }
+    }
+    // (7b): every stage hosts ≥ 1 layer.
+    for i in 0..pp {
+        if !placement.iter().any(|&s| s == i) {
+            out.push(format!("(7b) stage {i} empty"));
+        }
+    }
+    // (6): order preserving.
+    if !order_preserving_feasible(graph, placement, pp) {
+        out.push("(6) order-preserving constraint infeasible".to_string());
+    }
+    // (5): memory.
+    let mem = crate::cost::stage_memory(graph, costs, placement, choice);
+    for (i, m) in mem.iter().enumerate() {
+        if *m > costs.mem_limit {
+            out.push(format!("(5) stage {i} memory {m:.3e} > {:.3e}", costs.mem_limit));
+        }
+    }
+    // edges must land on same or consecutive stages (else (3)/(4) leave
+    // the resharding cost unaccounted).
+    for &(a, b) in &graph.edges {
+        let (sa, sb) = (placement[a], placement[b]);
+        if !(sb == sa || sb == sa + 1) {
+            out.push(format!("edge ({a},{b}) spans stages {sa}→{sb}"));
+        }
+    }
+    out
+}
+
+/// Evaluate objective (2) through the stage aggregates of constraints
+/// (3) and (4): returns `(tpi, p, o)`.
+pub fn objective_from_constraints(
+    graph: &Graph,
+    costs: &CostMatrices,
+    placement: &[usize],
+    choice: &[usize],
+) -> (f64, Vec<f64>, Vec<f64>) {
+    let pp = costs.pp_size;
+    let mut p = vec![0.0; pp];
+    let mut o = vec![0.0; pp.saturating_sub(1)];
+    // (3): Σ_u P_ui · S_u'A_u + Σ_e P_ui P_vi · S_u'R_uv S_v = p_i
+    for u in 0..graph.num_layers() {
+        p[placement[u]] += costs.a[u][choice[u]];
+    }
+    for (e, &(u, w)) in graph.edges.iter().enumerate() {
+        if placement[u] == placement[w] {
+            p[placement[u]] += costs.r[e][choice[u]][choice[w]];
+        }
+    }
+    // (4): Σ_e P_uj P_v(j+1) · S_u'R'_uv S_v = o_j
+    for (e, &(u, w)) in graph.edges.iter().enumerate() {
+        if placement[w] == placement[u] + 1 {
+            o[placement[u]] += costs.rp[e][choice[u]][choice[w]];
+        }
+    }
+    let sum: f64 = p.iter().chain(o.iter()).sum();
+    let mx = p.iter().chain(o.iter()).cloned().fold(0.0, f64::max);
+    (sum + (costs.num_micro as f64 - 1.0) * mx, p, o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterEnv;
+    use crate::cost::cost_modeling;
+    use crate::graph::models;
+    use crate::profiling::Profile;
+    use crate::testing;
+
+    /// Theorem B.1, property-tested: Z-feasibility ⇔ Definition 3.1
+    /// contiguity, on random DAGs and random placements.
+    #[test]
+    fn linearisation_equals_contiguity_on_random_dags() {
+        testing::check(
+            "thm_b1",
+            300,
+            |rng| {
+                let n = rng.usize_in(3, 9);
+                let mut edges = Vec::new();
+                for v in 1..n {
+                    // ensure connectivity: at least one pred
+                    let u = rng.usize_in(0, v);
+                    edges.push((u, v));
+                    if rng.bool(0.3) && v >= 2 {
+                        let u2 = rng.usize_in(0, v);
+                        if u2 != u {
+                            edges.push((u2.min(v - 1), v));
+                        }
+                    }
+                }
+                edges.sort_unstable();
+                edges.dedup();
+                let pp = rng.usize_in(1, 4.min(n));
+                let placement: Vec<usize> = (0..n).map(|_| rng.usize_in(0, pp)).collect();
+                (n, edges, pp, placement)
+            },
+            |(n, edges, pp, placement)| {
+                let g = Graph {
+                    name: "rand".into(),
+                    layers: models::synthetic_chain(*n, 1.0, 1.0, 1.0).layers,
+                    edges: edges.clone(),
+                    dtype: crate::graph::Dtype::Fp32,
+                    seq_len: 1,
+                };
+                let lin = order_preserving_feasible(&g, placement, *pp);
+                let def = (0..*pp).all(|i| {
+                    let subset: Vec<bool> = placement.iter().map(|&s| s == i).collect();
+                    g.is_contiguous(&subset)
+                });
+                if lin == def {
+                    Ok(())
+                } else {
+                    Err(format!("linearised={lin} definition={def}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn objective_matches_planner_reference() {
+        let g = models::synthetic_chain(6, 5e11, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let costs = cost_modeling(&p, &g, 2, 8, 4);
+        let placement = vec![0, 0, 0, 1, 1, 1];
+        let choice = vec![1, 1, 0, 0, 2, 2];
+        let (tpi, _, _) = objective_from_constraints(&g, &costs, &placement, &choice);
+        let reference = crate::cost::objective_tpi(&g, &costs, &placement, &choice);
+        assert!((tpi - reference).abs() < 1e-12);
+    }
+
+    #[test]
+    fn violations_detect_each_constraint() {
+        let g = models::synthetic_chain(4, 5e11, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let costs = cost_modeling(&p, &g, 2, 8, 2);
+        // good assignment
+        assert!(constraint_violations(&g, &costs, &[0, 0, 1, 1], &[0, 0, 0, 0]).is_empty());
+        // (7b): stage 1 empty
+        let v = constraint_violations(&g, &costs, &[0, 0, 0, 0], &[0, 0, 0, 0]);
+        assert!(v.iter().any(|s| s.contains("(7b)")), "{v:?}");
+        // (6): non-contiguous stage 0
+        let v = constraint_violations(&g, &costs, &[0, 1, 0, 1], &[0, 0, 0, 0]);
+        assert!(v.iter().any(|s| s.contains("(6)")), "{v:?}");
+    }
+}

@@ -1,0 +1,309 @@
+//! The general MIQP engine (§3.3) — our Gurobi substitute.
+//!
+//! The formulation is the paper's, verbatim: binaries `S_uk` (strategy
+//! selection), `P_ui` (layer placement), auxiliaries `Z_vi` for the
+//! order-preserving constraint (6a–6c), continuous stage costs `p_i`, `o_j`
+//! and the bottleneck `T ≥ max(P ∪ O)`, minimising objective (2)
+//! `Σp + Σo + (c−1)·T` under the computation-stage (3), communication-
+//! stage (4), memory (5), placement (7) and selection (8) constraints.
+//!
+//! [`formulation`] materialises that constraint system so tests can check
+//! candidate assignments against the *paper's algebra* rather than our
+//! planner's code paths. [`solve_miqp`] is an exact branch-and-bound over
+//! the binary variables: layers are assigned `(stage, strategy)` in
+//! topological order; partial assignments are pruned by constraint
+//! propagation (placement monotonicity, per-stage memory) and by an
+//! admissible lower bound (assigned cost + Σ per-layer minima +
+//! `(c−1)·max-so-far`). It returns a provably optimal solution — the same
+//! optimum the chain solver finds on chain graphs (property-tested) — and
+//! honours the Appendix E time limit.
+//!
+//! Branch-and-bound explores stage assignments in increasing-cost order,
+//! which makes the first incumbent good and pruning effective; like
+//! Gurobi, the wall-clock is bounded (`PlannerConfig::time_limit`), after
+//! which the best incumbent is returned with optimality no longer
+//! guaranteed (the paper runs Gurobi the same way, with a 60 s limit and
+//! an early-stop gap).
+
+pub mod formulation;
+
+use std::time::Instant;
+
+use crate::cost::CostMatrices;
+use crate::graph::Graph;
+use crate::planner::{Plan, PlannerConfig};
+
+struct Search<'a> {
+    graph: &'a Graph,
+    costs: &'a CostMatrices,
+    /// suffix sums of per-layer minimum `A` (admissible remaining bound)
+    suffix_min: Vec<f64>,
+    deadline: Instant,
+    timed_out: bool,
+    best_obj: f64,
+    best: Option<(Vec<usize>, Vec<usize>)>,
+    /// preds[v] = edges (index, u) with target v among already-assigned u
+    preds: Vec<Vec<(usize, usize)>>,
+    nodes: u64,
+}
+
+impl<'a> Search<'a> {
+    fn lower_bound(&self, depth: usize, sum: f64, mx: f64) -> f64 {
+        sum + self.suffix_min[depth] + (self.costs.num_micro as f64 - 1.0) * mx
+    }
+
+    /// DFS over layers in topological order.
+    ///
+    /// State: placement/choice prefixes, per-stage memory, per-stage p_i
+    /// accumulators and per-boundary o_j accumulators (so `sum` and `mx`
+    /// are exact for the assigned prefix).
+    #[allow(clippy::too_many_arguments)]
+    fn dfs(
+        &mut self,
+        depth: usize,
+        placement: &mut Vec<usize>,
+        choice: &mut Vec<usize>,
+        stage_mem: &mut Vec<f64>,
+        p_acc: &mut Vec<f64>,
+        o_acc: &mut Vec<f64>,
+    ) {
+        self.nodes += 1;
+        if self.nodes % 4096 == 0 && Instant::now() > self.deadline {
+            self.timed_out = true;
+        }
+        if self.timed_out {
+            return;
+        }
+        let v = self.graph.num_layers();
+        let pp = self.costs.pp_size;
+        if depth == v {
+            // placement constraint (7b): every stage non-empty
+            for i in 0..pp {
+                if !placement.iter().any(|&s| s == i) {
+                    return;
+                }
+            }
+            // contiguity (6) for general DAGs
+            for i in 0..pp {
+                let subset: Vec<bool> = placement.iter().map(|&s| s == i).collect();
+                if !self.graph.is_contiguous(&subset) {
+                    return;
+                }
+            }
+            let obj = crate::cost::objective_tpi(self.graph, self.costs, placement, choice);
+            if obj < self.best_obj {
+                self.best_obj = obj;
+                self.best = Some((placement.clone(), choice.clone()));
+            }
+            return;
+        }
+
+        // Candidate stages for layer `depth`: every in-edge must connect
+        // the same or adjacent stages (eq. 3/4 only define those hops, and
+        // order preservation forbids going backwards), which bounds the
+        // stage to [max preds, min preds + 1].
+        let mut lo = 0usize;
+        let mut hi = pp - 1;
+        for &(_, u) in &self.preds[depth] {
+            lo = lo.max(placement[u]);
+            hi = hi.min(placement[u] + 1);
+        }
+        if hi < lo {
+            return;
+        }
+
+        for stage in lo..=hi {
+            for k in 0..self.costs.num_strategies() {
+                let mem = self.costs.m[depth][k];
+                if stage_mem[stage] + mem > self.costs.mem_limit {
+                    continue;
+                }
+                // accumulate p_i / o_j deltas from edges into `depth`
+                let mut p_delta = self.costs.a[depth][k];
+                let mut o_deltas: Vec<(usize, f64)> = Vec::new();
+                let mut valid = true;
+                for &(e, u) in &self.preds[depth] {
+                    let (su, ku) = (placement[u], choice[u]);
+                    if su == stage {
+                        p_delta += self.costs.r[e][ku][k];
+                    } else if stage == su + 1 {
+                        o_deltas.push((su, self.costs.rp[e][ku][k]));
+                    } else {
+                        valid = false;
+                        break;
+                    }
+                }
+                if !valid {
+                    continue;
+                }
+
+                placement.push(stage);
+                choice.push(k);
+                stage_mem[stage] += mem;
+                p_acc[stage] += p_delta;
+                for &(j, d) in &o_deltas {
+                    o_acc[j] += d;
+                }
+
+                let sum: f64 = p_acc.iter().sum::<f64>() + o_acc.iter().sum::<f64>();
+                let mx = p_acc
+                    .iter()
+                    .chain(o_acc.iter())
+                    .cloned()
+                    .fold(0.0f64, f64::max);
+                if self.lower_bound(depth + 1, sum, mx) < self.best_obj {
+                    self.dfs(depth + 1, placement, choice, stage_mem, p_acc, o_acc);
+                }
+
+                for &(j, d) in &o_deltas {
+                    o_acc[j] -= d;
+                }
+                p_acc[stage] -= p_delta;
+                stage_mem[stage] -= mem;
+                choice.pop();
+                placement.pop();
+            }
+        }
+    }
+}
+
+/// Solve the MIQP for one `(pp_size, c)` candidate. Exact within the time
+/// limit; returns the best incumbent afterwards; `None` = infeasible.
+pub fn solve_miqp(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> Option<Plan> {
+    let v = graph.num_layers();
+    if costs.pp_size > v {
+        return None;
+    }
+    let min_a: Vec<f64> = costs
+        .a
+        .iter()
+        .map(|row| row.iter().cloned().fold(f64::INFINITY, f64::min))
+        .collect();
+    let mut suffix_min = vec![0.0; v + 1];
+    for u in (0..v).rev() {
+        suffix_min[u] = suffix_min[u + 1] + min_a[u];
+    }
+    let mut preds = vec![Vec::new(); v];
+    for (e, &(u, w)) in graph.edges.iter().enumerate() {
+        preds[w].push((e, u));
+    }
+    let mut search = Search {
+        graph,
+        costs,
+        suffix_min,
+        deadline: Instant::now() + std::time::Duration::from_secs_f64(cfg.time_limit),
+        timed_out: false,
+        best_obj: f64::INFINITY,
+        best: None,
+        preds,
+        nodes: 0,
+    };
+    let mut placement = Vec::with_capacity(v);
+    let mut choice = Vec::with_capacity(v);
+    let mut stage_mem = vec![0.0; costs.pp_size];
+    let mut p_acc = vec![0.0; costs.pp_size];
+    let mut o_acc = vec![0.0; costs.pp_size.saturating_sub(1)];
+    search.dfs(0, &mut placement, &mut choice, &mut stage_mem, &mut p_acc, &mut o_acc);
+
+    let (placement, choice) = search.best?;
+    let tpi = crate::cost::objective_tpi(graph, costs, &placement, &choice);
+    Some(Plan {
+        pp_size: costs.pp_size,
+        num_micro: costs.num_micro,
+        batch: costs.batch,
+        placement,
+        choice,
+        strategies: costs.strategies.clone(),
+        est_tpi: tpi,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterEnv;
+    use crate::cost::cost_modeling;
+    use crate::graph::models;
+    use crate::planner::chain;
+    use crate::profiling::Profile;
+
+    fn costs_for(nl: usize, pp: usize, b: usize, c: usize) -> (Graph, CostMatrices) {
+        let g = models::synthetic_chain(nl, 5e11, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let costs = cost_modeling(&p, &g, pp, b, c);
+        (g, costs)
+    }
+
+    #[test]
+    fn miqp_matches_brute_force() {
+        for (nl, pp, c) in [(4usize, 2usize, 2usize), (5, 2, 4), (4, 4, 2)] {
+            let (g, costs) = costs_for(nl, pp, 8, c);
+            let got = solve_miqp(&g, &costs, &PlannerConfig::default());
+            let want = chain::brute_force(&g, &costs);
+            match (got, want) {
+                (Some(p), Some((tpi, _, _))) => {
+                    assert!(
+                        (p.est_tpi - tpi).abs() < 1e-9 * tpi,
+                        "nl={nl} pp={pp}: miqp {} vs bf {tpi}",
+                        p.est_tpi
+                    );
+                }
+                (None, None) => {}
+                (a, b) => panic!("feasibility mismatch: {:?} vs {:?}", a.is_some(), b.is_some()),
+            }
+        }
+    }
+
+    #[test]
+    fn miqp_matches_chain_engine() {
+        for (nl, pp, c) in [(6usize, 2usize, 4usize), (6, 4, 2), (8, 4, 4)] {
+            let (g, costs) = costs_for(nl, pp, 8, c);
+            let cfg = PlannerConfig { mem_buckets: 2048, ..Default::default() };
+            let a = solve_miqp(&g, &costs, &cfg).expect("miqp feasible");
+            let b = chain::solve_chain(&g, &costs, &cfg).expect("chain feasible");
+            let rel = (a.est_tpi - b.est_tpi).abs() / b.est_tpi;
+            assert!(rel < 1e-4, "nl={nl} pp={pp}: miqp {} vs chain {}", a.est_tpi, b.est_tpi);
+        }
+    }
+
+    #[test]
+    fn miqp_handles_dag_with_branch() {
+        // diamond DAG: 0 → {1,2} → 3 — the chain solver can't take this.
+        let base = models::synthetic_chain(4, 5e11, 2e7, 2e6);
+        let g = Graph {
+            name: "diamond".into(),
+            layers: base.layers.clone(),
+            edges: vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+            dtype: base.dtype,
+            seq_len: base.seq_len,
+        };
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let costs = cost_modeling(&p, &g, 2, 8, 2);
+        let plan = solve_miqp(&g, &costs, &PlannerConfig::default()).expect("feasible");
+        assert!(plan.check(&g, &costs).is_empty(), "{:?}", plan.check(&g, &costs));
+        // every stage set must be contiguous per Definition 3.1
+        for i in 0..2 {
+            let subset: Vec<bool> = plan.placement.iter().map(|&s| s == i).collect();
+            assert!(g.is_contiguous(&subset), "stage {i} not contiguous: {:?}", plan.placement);
+        }
+    }
+
+    #[test]
+    fn miqp_infeasible_when_memory_impossible() {
+        let g = models::synthetic_chain(4, 1e12, 5e10, 1e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let costs = cost_modeling(&p, &g, 2, 8, 2);
+        assert!(solve_miqp(&g, &costs, &PlannerConfig::default()).is_none());
+    }
+
+    #[test]
+    fn miqp_respects_time_limit() {
+        let g = models::bert_huge(); // 34 layers: exhaustive would never end
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let costs = cost_modeling(&p, &g, 2, 16, 4);
+        let cfg = PlannerConfig { time_limit: 0.5, ..Default::default() };
+        let t0 = Instant::now();
+        let _ = solve_miqp(&g, &costs, &cfg);
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "time limit not honoured");
+    }
+}

@@ -1,0 +1,616 @@
+//! Structure-exploiting exact solver for chain graphs.
+//!
+//! On a chain, the order-preserving constraint (6a–6c) makes every pipeline
+//! stage a contiguous layer interval, so the joint problem factorises:
+//!
+//! 1. **Interval DP** — for every interval `[l, r]` and boundary-strategy
+//!    pair `(k_in, k_out)`, the cheapest strategy assignment of the
+//!    interior, subject to the memory constraint (5) tracked in quantised
+//!    buckets (rounded up, so quantisation never admits an infeasible
+//!    stage). For a fixed interval and boundary pair, the stage cost `p_i`
+//!    is both the "sum" and the "max" contribution of the stage, so
+//!    minimising it is optimal for the whole objective — this makes the
+//!    two-level decomposition *exact*, not a heuristic (see DESIGN.md).
+//! 2. **Pipeline Pareto DP** — compose intervals left to right keeping the
+//!    Pareto frontier over `(Σ costs so far, max stage/comm cost so far)`;
+//!    the `(c−1)·max(P∪O)` term of objective (2) is resolved exactly at
+//!    the end.
+//!
+//! The result is provably the same optimum the MIQP formulation yields
+//! (property-tested against brute force and the MIQP engine).
+
+use crate::cost::CostMatrices;
+use crate::graph::Graph;
+use crate::planner::{Plan, PlannerConfig};
+
+const INF: f64 = f64::INFINITY;
+
+/// Interval cost table: `cost[(l, r)][k_in][k_out]` = min stage cost.
+struct IntervalCosts {
+    v: usize,
+    s: usize,
+    /// flattened `[l * v + r][k_in * s + k_out]`
+    table: Vec<Vec<f64>>,
+}
+
+impl IntervalCosts {
+    fn get(&self, l: usize, r: usize, kin: usize, kout: usize) -> f64 {
+        self.table[l * self.v + r][kin * self.s + kout]
+    }
+}
+
+/// Context shared by the solve.
+struct ChainCtx<'a> {
+    costs: &'a CostMatrices,
+    /// memory bucket count per layer/strategy (rounded up)
+    mb: Vec<Vec<usize>>,
+    buckets: usize,
+}
+
+impl<'a> ChainCtx<'a> {
+    fn new(costs: &'a CostMatrices, buckets: usize) -> ChainCtx<'a> {
+        let bucket_size = costs.mem_limit / buckets as f64;
+        let mb = costs
+            .m
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|&m| {
+                        if m <= 0.0 {
+                            0
+                        } else {
+                            ((m / bucket_size).ceil() as usize).max(1)
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        ChainCtx { costs, mb, buckets }
+    }
+
+    /// Run the interval DP for every `l`, producing the boundary-pair cost
+    /// table. `O(V² · S² · buckets · S)` worst case.
+    ///
+    /// §Perf optimisations (EXPERIMENTS.md §Perf logs the deltas):
+    /// * **prefix-band memory scan** — after processing layers `l..=r`,
+    ///   every reachable memory state lies in
+    ///   `[Σ min_k mb, Σ max_k mb]`; the scan is clamped to that band
+    ///   instead of all `buckets+1` cells (big win on the O(V²) short
+    ///   intervals, where the band is a handful of buckets).
+    /// * **hoisted transition costs** — `A[r][knew] + R[edge][kcur][knew]`
+    ///   is computed once per `(kcur, knew)` pair, not per memory cell.
+    /// * **early stage-infeasibility cut** — once the minimal prefix
+    ///   exceeds the budget, no longer interval starting at `l` fits, so
+    ///   the `r` loop stops.
+    fn interval_costs(&self) -> IntervalCosts {
+        let v = self.costs.num_layers();
+        let s = self.costs.num_strategies();
+        let nb = self.buckets + 1;
+        let mut table = vec![vec![INF; s * s]; v * v];
+
+        // per-layer min/max bucket increments for the band bounds
+        let min_mb: Vec<usize> = self.mb.iter().map(|row| *row.iter().min().unwrap()).collect();
+        let max_mb: Vec<usize> = self.mb.iter().map(|row| *row.iter().max().unwrap()).collect();
+
+        // dp[kin][kcur][mem] flattened: (kin * s + kcur) * nb + mem
+        let mut dp = vec![INF; s * s * nb];
+        let mut ndp = vec![INF; s * s * nb];
+        let mut trans = vec![0.0f64; s * s]; // hoisted A + R per (kcur, knew)
+        for l in 0..v {
+            let mut band_lo = min_mb[l];
+            let mut band_hi = max_mb[l].min(self.buckets);
+            dp.iter_mut().for_each(|x| *x = INF);
+            for k in 0..s {
+                let need = self.mb[l][k];
+                if need <= self.buckets {
+                    let idx = (k * s + k) * nb + need;
+                    let cost = self.costs.a[l][k];
+                    if cost < dp[idx] {
+                        dp[idx] = cost;
+                    }
+                }
+            }
+            // record [l, l]
+            for k in 0..s {
+                let mut best = INF;
+                for mem in band_lo..=band_hi {
+                    best = best.min(dp[(k * s + k) * nb + mem]);
+                }
+                table[l * v + l][k * s + k] = best;
+            }
+            for r in l + 1..v {
+                let next_lo = band_lo + min_mb[r];
+                if next_lo > self.buckets {
+                    break; // even the cheapest strategies no longer fit
+                }
+                let next_hi = (band_hi + max_mb[r]).min(self.buckets);
+                let edge = r - 1; // chain edge (r-1) → r
+                for kcur in 0..s {
+                    for knew in 0..s {
+                        trans[kcur * s + knew] =
+                            self.costs.a[r][knew] + self.costs.r[edge][kcur][knew];
+                    }
+                }
+                // clear only the writable band of ndp
+                for kk in 0..s * s {
+                    let base = kk * nb;
+                    ndp[base + next_lo..=base + next_hi].iter_mut().for_each(|x| *x = INF);
+                }
+                for kin in 0..s {
+                    for kcur in 0..s {
+                        let base = (kin * s + kcur) * nb;
+                        for mem in band_lo..=band_hi {
+                            let cur = dp[base + mem];
+                            if !cur.is_finite() {
+                                continue;
+                            }
+                            for knew in 0..s {
+                                let nm = mem + self.mb[r][knew];
+                                if nm > self.buckets {
+                                    continue;
+                                }
+                                let cost = cur + trans[kcur * s + knew];
+                                let nidx = (kin * s + knew) * nb + nm;
+                                if cost < ndp[nidx] {
+                                    ndp[nidx] = cost;
+                                }
+                            }
+                        }
+                    }
+                }
+                std::mem::swap(&mut dp, &mut ndp);
+                band_lo = next_lo;
+                band_hi = next_hi;
+                let cell = &mut table[l * v + r];
+                for kin in 0..s {
+                    for kout in 0..s {
+                        let mut best = INF;
+                        let base = (kin * s + kout) * nb;
+                        for mem in band_lo..=band_hi {
+                            best = best.min(dp[base + mem]);
+                        }
+                        cell[kin * s + kout] = best;
+                    }
+                }
+            }
+        }
+        IntervalCosts { v, s, table }
+    }
+
+    /// Recover the per-layer strategy assignment achieving
+    /// `interval_costs()[l..=r][kin][kout]` by re-running the DP with
+    /// parent pointers (cheap: one interval).
+    fn interval_assignment(&self, l: usize, r: usize, kin: usize, kout: usize) -> Option<Vec<usize>> {
+        let s = self.costs.num_strategies();
+        let nb = self.buckets + 1;
+        if self.mb[l][kin] > self.buckets {
+            return None;
+        }
+        // dp[layer][kcur * nb + mem]
+        let len = r - l + 1;
+        let mut dp = vec![vec![INF; s * nb]; len];
+        let mut parent = vec![vec![(usize::MAX, usize::MAX); s * nb]; len];
+        dp[0][kin * nb + self.mb[l][kin]] = self.costs.a[l][kin];
+        for (step, u) in (l + 1..=r).enumerate() {
+            let edge = u - 1;
+            for kcur in 0..s {
+                for mem in 0..nb {
+                    let cur = dp[step][kcur * nb + mem];
+                    if !cur.is_finite() {
+                        continue;
+                    }
+                    for knew in 0..s {
+                        let nm = mem + self.mb[u][knew];
+                        if nm > self.buckets {
+                            continue;
+                        }
+                        let cost = cur + self.costs.a[u][knew] + self.costs.r[edge][kcur][knew];
+                        let nidx = knew * nb + nm;
+                        if cost < dp[step + 1][nidx] {
+                            dp[step + 1][nidx] = cost;
+                            parent[step + 1][nidx] = (kcur, mem);
+                        }
+                    }
+                }
+            }
+        }
+        // best end state with kcur = kout
+        let mut best = INF;
+        let mut best_mem = usize::MAX;
+        for mem in 0..nb {
+            let val = dp[len - 1][kout * nb + mem];
+            if val < best {
+                best = val;
+                best_mem = mem;
+            }
+        }
+        if !best.is_finite() {
+            return None;
+        }
+        let mut out = vec![0usize; len];
+        let (mut k, mut mem) = (kout, best_mem);
+        for step in (0..len).rev() {
+            out[step] = k;
+            if step > 0 {
+                let (pk, pm) = parent[step][k * nb + mem];
+                k = pk;
+                mem = pm;
+            }
+        }
+        Some(out)
+    }
+}
+
+/// A Pareto point in the pipeline DP with backtracking info.
+#[derive(Debug, Clone, Copy)]
+struct Point {
+    sum: f64,
+    mx: f64,
+    /// previous stage end layer (usize::MAX for the first stage)
+    prev_r: usize,
+    /// previous stage exit strategy
+    prev_kout: usize,
+    /// index of the predecessor point in `front[prev_r][prev_kout]`
+    prev_idx: usize,
+    /// entry strategy of THIS stage
+    kin: usize,
+}
+
+/// Insert into a Pareto frontier over (sum, mx) — smaller is better on both.
+fn pareto_insert(front: &mut Vec<Point>, p: Point) {
+    for q in front.iter() {
+        if q.sum <= p.sum && q.mx <= p.mx {
+            return; // dominated
+        }
+    }
+    front.retain(|q| !(p.sum <= q.sum && p.mx <= q.mx));
+    front.push(p);
+}
+
+/// Solve the joint problem for one `(pp_size, c)` candidate on a chain.
+/// Returns `None` when no feasible assignment exists (the paper's `SOL×`).
+pub fn solve_chain(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> Option<Plan> {
+    assert!(graph.is_chain(), "chain solver requires a chain graph");
+    let v = graph.num_layers();
+    let s = costs.num_strategies();
+    let pp = costs.pp_size;
+    let c = costs.num_micro as f64;
+    if pp > v {
+        return None; // (7b): at least one layer per stage
+    }
+
+    let ctx = ChainCtx::new(costs, cfg.mem_buckets);
+    let ic = ctx.interval_costs();
+
+    // fronts[stage][r][kout] — Pareto sets; we keep two stage levels and a
+    // full history for backtracking.
+    let mut history: Vec<Vec<Vec<Vec<Point>>>> = Vec::with_capacity(pp);
+
+    // Stage 0: intervals [0, r].
+    let mut front0 = vec![vec![Vec::<Point>::new(); s]; v];
+    for r in 0..v {
+        // leave at least one layer for each remaining stage
+        if v - 1 - r < pp - 1 {
+            continue;
+        }
+        for kout in 0..s {
+            let mut best = INF;
+            let mut best_kin = 0;
+            for kin in 0..s {
+                let cost = ic.get(0, r, kin, kout);
+                if cost < best {
+                    best = cost;
+                    best_kin = kin;
+                }
+            }
+            if best.is_finite() {
+                pareto_insert(
+                    &mut front0[r][kout],
+                    Point { sum: best, mx: best, prev_r: usize::MAX, prev_kout: 0, prev_idx: 0, kin: best_kin },
+                );
+            }
+        }
+    }
+    history.push(front0);
+
+    for stage in 1..pp {
+        let prev = &history[stage - 1];
+        let mut next = vec![vec![Vec::<Point>::new(); s]; v];
+        for r in stage - 1..v {
+            for kout in 0..s {
+                for (pidx, pt) in prev[r][kout].iter().enumerate() {
+                    // next stage spans [r+1, r2]
+                    let max_r2 = v - 1 - (pp - 1 - stage); // leave layers for later stages
+                    for r2 in r + 1..=max_r2 {
+                        for kin2 in 0..s {
+                            let o = costs.rp[r][kout][kin2]; // edge r → r+1
+                            for kout2 in 0..s {
+                                let p_cost = ic.get(r + 1, r2, kin2, kout2);
+                                if !p_cost.is_finite() {
+                                    continue;
+                                }
+                                let sum = pt.sum + o + p_cost;
+                                let mx = pt.mx.max(o).max(p_cost);
+                                pareto_insert(
+                                    &mut next[r2][kout2],
+                                    Point { sum, mx, prev_r: r, prev_kout: kout, prev_idx: pidx, kin: kin2 },
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        history.push(next);
+    }
+
+    // Best complete solution: last stage ends at v-1.
+    let last = &history[pp - 1];
+    let mut best_obj = INF;
+    let mut best_end: Option<(usize, usize)> = None; // (kout, point idx)
+    for kout in 0..s {
+        for (idx, pt) in last[v - 1][kout].iter().enumerate() {
+            let obj = pt.sum + (c - 1.0) * pt.mx;
+            if obj < best_obj {
+                best_obj = obj;
+                best_end = Some((kout, idx));
+            }
+        }
+    }
+    let (mut kout, mut idx) = best_end?;
+
+    // Backtrack stage boundaries and boundary strategies.
+    let mut bounds: Vec<(usize, usize, usize, usize)> = Vec::new(); // (l, r, kin, kout)
+    let mut r = v - 1;
+    for stage in (0..pp).rev() {
+        let pt = history[stage][r][kout][idx];
+        let l = if stage == 0 { 0 } else { pt.prev_r + 1 };
+        bounds.push((l, r, pt.kin, kout));
+        if stage > 0 {
+            r = pt.prev_r;
+            kout = pt.prev_kout;
+            idx = pt.prev_idx;
+        }
+    }
+    bounds.reverse();
+
+    // Recover interior assignments per stage.
+    let mut placement = vec![0usize; v];
+    let mut choice = vec![0usize; v];
+    for (stage, &(l, r, kin, kout)) in bounds.iter().enumerate() {
+        let assign = ctx.interval_assignment(l, r, kin, kout)?;
+        for (off, &k) in assign.iter().enumerate() {
+            placement[l + off] = stage;
+            choice[l + off] = k;
+        }
+    }
+
+    let tpi = crate::cost::objective_tpi(graph, costs, &placement, &choice);
+    debug_assert!(
+        (tpi - best_obj).abs() <= 1e-6 * best_obj.max(1e-12),
+        "backtracked objective {tpi} != DP objective {best_obj}"
+    );
+    Some(Plan {
+        pp_size: pp,
+        num_micro: costs.num_micro,
+        batch: costs.batch,
+        placement,
+        choice,
+        strategies: costs.strategies.clone(),
+        est_tpi: tpi,
+    })
+}
+
+/// Cheapest strategy assignment for the layer interval `[l, r]` treated as
+/// one stage, *without* boundary-strategy conditioning: minimise
+/// `Σ A + Σ R` under memory (5). Hierarchical baselines (Galvatron's
+/// per-stage DP, Alpa's per-interval intra-op solve) use this — ignoring
+/// the cross-stage boundary coupling is precisely one of the
+/// suboptimalities UniAP's joint formulation removes.
+pub fn solve_interval(costs: &CostMatrices, l: usize, r: usize, buckets: usize) -> Option<(f64, Vec<usize>)> {
+    let s = costs.num_strategies();
+    let ctx = ChainCtx::new(costs, buckets);
+    let nb = buckets + 1;
+    let len = r - l + 1;
+    let mut dp = vec![INF; s * nb];
+    let mut parent: Vec<Vec<(usize, usize)>> = vec![vec![(usize::MAX, usize::MAX); s * nb]; len];
+    for k in 0..s {
+        let need = ctx.mb[l][k];
+        if need <= buckets {
+            dp[k * nb + need] = dp[k * nb + need].min(costs.a[l][k]);
+        }
+    }
+    let mut ndp = vec![INF; s * nb];
+    for (step, u) in (l + 1..=r).enumerate() {
+        ndp.iter_mut().for_each(|x| *x = INF);
+        let edge = u - 1;
+        for kcur in 0..s {
+            for mem in 0..nb {
+                let cur = dp[kcur * nb + mem];
+                if !cur.is_finite() {
+                    continue;
+                }
+                for knew in 0..s {
+                    let nm = mem + ctx.mb[u][knew];
+                    if nm > buckets {
+                        continue;
+                    }
+                    let cost = cur + costs.a[u][knew] + costs.r[edge][kcur][knew];
+                    if cost < ndp[knew * nb + nm] {
+                        ndp[knew * nb + nm] = cost;
+                        parent[step + 1][knew * nb + nm] = (kcur, mem);
+                    }
+                }
+            }
+        }
+        std::mem::swap(&mut dp, &mut ndp);
+    }
+    // best terminal state
+    let (mut best, mut bk, mut bm) = (INF, usize::MAX, usize::MAX);
+    for k in 0..s {
+        for mem in 0..nb {
+            let v = dp[k * nb + mem];
+            if v < best {
+                best = v;
+                bk = k;
+                bm = mem;
+            }
+        }
+    }
+    if !best.is_finite() {
+        return None;
+    }
+    let mut out = vec![0usize; len];
+    let (mut k, mut mem) = (bk, bm);
+    for step in (0..len).rev() {
+        out[step] = k;
+        if step > 0 {
+            let (pk, pm) = parent[step][k * nb + mem];
+            k = pk;
+            mem = pm;
+        }
+    }
+    Some((best, out))
+}
+
+/// Brute-force reference solver (exponential; tests only): enumerate every
+/// contiguous placement (composition of `V` into `pp` non-empty parts) and
+/// every strategy assignment.
+pub fn brute_force(graph: &Graph, costs: &CostMatrices) -> Option<(f64, Vec<usize>, Vec<usize>)> {
+    let v = graph.num_layers();
+    let s = costs.num_strategies();
+    let pp = costs.pp_size;
+    if pp > v {
+        return None;
+    }
+    let mut best: Option<(f64, Vec<usize>, Vec<usize>)> = None;
+
+    // enumerate compositions recursively
+    fn compositions(v: usize, parts: usize, prefix: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if parts == 1 {
+            prefix.push(v);
+            out.push(prefix.clone());
+            prefix.pop();
+            return;
+        }
+        for first in 1..=v - (parts - 1) {
+            prefix.push(first);
+            compositions(v - first, parts - 1, prefix, out);
+            prefix.pop();
+        }
+    }
+    let mut comps = Vec::new();
+    compositions(v, pp, &mut Vec::new(), &mut comps);
+
+    for comp in comps {
+        let mut placement = Vec::with_capacity(v);
+        for (stage, &len) in comp.iter().enumerate() {
+            placement.extend(std::iter::repeat(stage).take(len));
+        }
+        // enumerate strategy vectors via odometer
+        let mut choice = vec![0usize; v];
+        'outer: loop {
+            let mem = crate::cost::stage_memory(graph, costs, &placement, &choice);
+            if mem.iter().all(|&m| m <= costs.mem_limit) {
+                let tpi = crate::cost::objective_tpi(graph, costs, &placement, &choice);
+                if best.as_ref().map_or(true, |(b, _, _)| tpi < *b) {
+                    best = Some((tpi, placement.clone(), choice.clone()));
+                }
+            }
+            for i in 0..=v {
+                if i == v {
+                    break 'outer;
+                }
+                choice[i] += 1;
+                if choice[i] < s {
+                    break;
+                }
+                choice[i] = 0;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterEnv;
+    use crate::cost::cost_modeling;
+    use crate::graph::models;
+    use crate::profiling::Profile;
+
+    fn costs_for(n_layers: usize, pp: usize, b: usize, c: usize) -> (Graph, CostMatrices) {
+        let g = models::synthetic_chain(n_layers, 5e11, 2e7, 2e6);
+        let env = ClusterEnv::env_b();
+        let p = Profile::analytic(&env, &g);
+        let costs = cost_modeling(&p, &g, pp, b, c);
+        (g, costs)
+    }
+
+    #[test]
+    fn chain_matches_brute_force_small() {
+        for (nl, pp, c) in [(4usize, 2usize, 2usize), (5, 2, 4), (4, 4, 2), (6, 2, 2)] {
+            let (g, costs) = costs_for(nl, pp, 8, c);
+            let cfg = PlannerConfig { mem_buckets: 512, ..Default::default() };
+            let plan = solve_chain(&g, &costs, &cfg);
+            let bf = brute_force(&g, &costs);
+            match (plan, bf) {
+                (Some(p), Some((tpi_bf, _, _))) => {
+                    let rel = (p.est_tpi - tpi_bf).abs() / tpi_bf;
+                    assert!(rel < 1e-6, "nl={nl} pp={pp} c={c}: chain {} vs bf {tpi_bf}", p.est_tpi);
+                }
+                (None, None) => {}
+                (a, b) => panic!("feasibility mismatch nl={nl} pp={pp}: {:?} vs {:?}", a.is_some(), b.is_some()),
+            }
+        }
+    }
+
+    #[test]
+    fn plans_satisfy_all_constraints() {
+        let (g, costs) = costs_for(8, 4, 16, 4);
+        let plan = solve_chain(&g, &costs, &PlannerConfig::default()).expect("feasible");
+        assert!(plan.check(&g, &costs).is_empty(), "{:?}", plan.check(&g, &costs));
+    }
+
+    #[test]
+    fn infeasible_when_pp_exceeds_layers() {
+        let (g, costs) = costs_for(3, 4, 8, 2);
+        assert!(solve_chain(&g, &costs, &PlannerConfig::default()).is_none());
+    }
+
+    #[test]
+    fn infeasible_when_memory_impossible() {
+        // gigantic params so nothing fits on 12 GB
+        let g = models::synthetic_chain(4, 1e12, 2e10, 1e6);
+        let env = ClusterEnv::env_b();
+        let p = Profile::analytic(&env, &g);
+        let costs = cost_modeling(&p, &g, 2, 8, 2);
+        assert!(solve_chain(&g, &costs, &PlannerConfig::default()).is_none());
+    }
+
+    #[test]
+    fn pareto_insert_keeps_non_dominated() {
+        let mk = |sum, mx| Point { sum, mx, prev_r: 0, prev_kout: 0, prev_idx: 0, kin: 0 };
+        let mut f = vec![];
+        pareto_insert(&mut f, mk(1.0, 3.0));
+        pareto_insert(&mut f, mk(3.0, 1.0));
+        pareto_insert(&mut f, mk(2.0, 2.0));
+        assert_eq!(f.len(), 3);
+        pareto_insert(&mut f, mk(2.5, 2.5)); // dominated by (2,2)
+        assert_eq!(f.len(), 3);
+        pareto_insert(&mut f, mk(0.5, 0.5)); // dominates everything
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn bert_envb_plan_is_feasible_and_multistage() {
+        let g = models::bert_huge();
+        let env = ClusterEnv::env_b();
+        let p = Profile::analytic(&env, &g);
+        let costs = cost_modeling(&p, &g, 2, 16, 4);
+        let plan = solve_chain(&g, &costs, &PlannerConfig::default()).expect("feasible");
+        assert!(plan.check(&g, &costs).is_empty());
+        assert!(plan.est_tpi > 0.0 && plan.est_tpi.is_finite());
+    }
+}

@@ -1,0 +1,208 @@
+//! The UniAP planner: exact joint optimization of inter-layer (PP) and
+//! intra-layer (DP/TP/FSDP) parallelism (§3.3–3.4).
+//!
+//! Two exact engines solve the same optimization problem:
+//!
+//! * [`chain`] — a structure-exploiting solver for chain graphs (every
+//!   model in the paper's evaluation): the order-preserving constraint
+//!   makes stages contiguous intervals, so it enumerates interval DPs with
+//!   a quantised-memory dimension and composes them with a Pareto
+//!   (sum, max) pipeline DP that handles the `(c−1)·max` term exactly.
+//! * [`crate::miqp`] — the general MIQP formulation solved by our own
+//!   branch-and-bound (the Gurobi substitute), for arbitrary DAGs and for
+//!   cross-validating the chain engine.
+//!
+//! [`uop`] implements Algorithm 1: enumerate `pp_size | n` and `c | B`,
+//! build cost matrices for each candidate, solve, keep the best.
+
+pub mod chain;
+pub mod qip;
+pub mod uop;
+
+pub use uop::{uop, UopResult};
+
+use crate::cost::CostMatrices;
+use crate::strategy::IntraStrategy;
+
+/// Which solving engine the UOP dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Chain solver when the graph is a chain, MIQP otherwise.
+    Auto,
+    /// Force the structured chain solver.
+    Chain,
+    /// Force the general MIQP branch-and-bound.
+    Miqp,
+}
+
+/// Planner knobs (Appendix E's Gurobi configuration, reinterpreted for our
+/// solvers).
+#[derive(Debug, Clone)]
+pub struct PlannerConfig {
+    pub engine: Engine,
+    /// Pipeline schedule (footnote 2): affects only the memory constraint.
+    pub schedule: crate::cost::Schedule,
+    /// Memory-quantisation buckets for the chain solver (feasibility-safe:
+    /// bucket counts are rounded *up*).
+    pub mem_buckets: usize,
+    /// Wall-clock limit per MIQP solve (the paper sets 60 s).
+    pub time_limit: f64,
+    /// Worker threads for the UOP sweep (the paper exploits Gurobi's
+    /// multi-threaded search; our sweep parallelises across candidates).
+    pub threads: usize,
+    /// Restrict `pp_size` candidates (None = all factors of `n`).
+    pub max_pp: Option<usize>,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            engine: Engine::Auto,
+            schedule: crate::cost::Schedule::GPipe,
+            // Feasibility-safe quantisation rounds every layer UP, so the
+            // grid must be fine relative to the layer count: 1024 buckets
+            // keeps the worst-case phantom memory below ~9% for the
+            // deepest model (Swin-Huge, 91 intervals).
+            mem_buckets: 1024,
+            time_limit: 60.0,
+            threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            max_pp: None,
+        }
+    }
+}
+
+/// A complete parallel execution plan: the planner's output and the
+/// interpreter's input (§3 flowchart, "interprets the parallel strategies
+/// into the execution plan").
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Pipeline-parallel size (`pp_size`, 1 = no PP).
+    pub pp_size: usize,
+    /// Number of micro-batches `c`.
+    pub num_micro: usize,
+    /// Global mini-batch size `B`.
+    pub batch: usize,
+    /// `placement[u]` = pipeline stage of layer `u` (matrix `P`).
+    pub placement: Vec<usize>,
+    /// `choice[u]` = index into `strategies` (matrix `S`).
+    pub choice: Vec<usize>,
+    /// Strategy dictionary the indices refer to.
+    pub strategies: Vec<IntraStrategy>,
+    /// Estimated time per iteration (objective (2)), seconds.
+    pub est_tpi: f64,
+}
+
+impl Plan {
+    /// Estimated training throughput (samples/s).
+    pub fn est_throughput(&self) -> f64 {
+        self.batch as f64 / self.est_tpi
+    }
+
+    /// Strategy chosen for layer `u`.
+    pub fn strategy_of(&self, u: usize) -> IntraStrategy {
+        self.strategies[self.choice[u]]
+    }
+
+    /// Layer index ranges per stage (stages are contiguous for chains).
+    pub fn stage_ranges(&self) -> Vec<(usize, usize)> {
+        let mut out = vec![(usize::MAX, 0usize); self.pp_size];
+        for (u, &s) in self.placement.iter().enumerate() {
+            out[s].0 = out[s].0.min(u);
+            out[s].1 = out[s].1.max(u);
+        }
+        out
+    }
+
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        let ranges = self.stage_ranges();
+        let stages: Vec<String> = ranges
+            .iter()
+            .enumerate()
+            .map(|(i, &(a, b))| {
+                let st = self.strategy_of(a);
+                format!("s{i}[{a}..={b}]{}", st.label())
+            })
+            .collect();
+        format!(
+            "pp{} c{} tpi {:.4}s ({:.2} samp/s): {}",
+            self.pp_size,
+            self.num_micro,
+            self.est_tpi,
+            self.est_throughput(),
+            stages.join(" | ")
+        )
+    }
+
+    /// Validate the plan against the structural MIQP constraints
+    /// (placement (7), selection (8), order-preservation on the graph) and
+    /// memory (5). Returns a list of violated constraints.
+    pub fn check(&self, graph: &crate::graph::Graph, costs: &CostMatrices) -> Vec<String> {
+        let mut bad = Vec::new();
+        if self.placement.len() != graph.num_layers() {
+            bad.push("placement size mismatch".to_string());
+            return bad;
+        }
+        for i in 0..self.pp_size {
+            if !self.placement.iter().any(|&s| s == i) {
+                bad.push(format!("stage {i} has no layers (7b)"));
+            }
+        }
+        for (u, &s) in self.placement.iter().enumerate() {
+            if s >= self.pp_size {
+                bad.push(format!("layer {u} on invalid stage {s}"));
+            }
+        }
+        for i in 0..self.pp_size {
+            let subset: Vec<bool> = self.placement.iter().map(|&s| s == i).collect();
+            if !graph.is_contiguous(&subset) {
+                bad.push(format!("stage {i} is not contiguous (6)"));
+            }
+        }
+        let mem = crate::cost::stage_memory(graph, costs, &self.placement, &self.choice);
+        for (i, m) in mem.iter().enumerate() {
+            if *m > costs.mem_limit {
+                bad.push(format!(
+                    "stage {i} exceeds memory: {} > {} (5)",
+                    crate::util::gib(*m),
+                    crate::util::gib(costs.mem_limit)
+                ));
+            }
+        }
+        bad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_fixture() -> Plan {
+        Plan {
+            pp_size: 2,
+            num_micro: 4,
+            batch: 16,
+            placement: vec![0, 0, 1, 1],
+            choice: vec![0, 0, 0, 0],
+            strategies: vec![IntraStrategy { dp: 4, tp: 1, fsdp: false }],
+            est_tpi: 0.5,
+        }
+    }
+
+    #[test]
+    fn throughput_is_batch_over_tpi() {
+        assert_eq!(plan_fixture().est_throughput(), 32.0);
+    }
+
+    #[test]
+    fn stage_ranges_partition_layers() {
+        let p = plan_fixture();
+        assert_eq!(p.stage_ranges(), vec![(0, 1), (2, 3)]);
+    }
+
+    #[test]
+    fn summary_mentions_stages() {
+        let s = plan_fixture().summary();
+        assert!(s.contains("pp2") && s.contains("s0[0..=1]"));
+    }
+}

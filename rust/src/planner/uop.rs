@@ -1,0 +1,194 @@
+//! The Unified Optimization Process (Algorithm 1).
+//!
+//! UOP enumerates every pipeline-parallel size `pp_size` dividing the
+//! device count `n` (except 1 — that case is the initial QIP solve) and,
+//! for each, every micro-batch count `c` dividing the mini-batch `B`
+//! (except 1), builds the cost matrices, solves the joint problem, and
+//! keeps the minimum-TPI solution. Candidates are independent, so the
+//! sweep fans out across worker threads — the analogue of the paper's
+//! multi-threaded Gurobi search that underlies its 17–107× strategy-
+//! optimization speedups.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::cost::cost_modeling_sched;
+use crate::graph::Graph;
+use crate::planner::{chain, qip, Engine, Plan, PlannerConfig};
+use crate::profiling::Profile;
+
+/// One enumerated `(pp_size, c)` candidate and its outcome (for reporting
+/// and the Figure 4b scalability study).
+#[derive(Debug, Clone)]
+pub struct CandidateLog {
+    pub pp_size: usize,
+    pub num_micro: usize,
+    pub tpi: Option<f64>,
+    pub solve_secs: f64,
+}
+
+/// UOP output: the optimal plan plus diagnostics.
+#[derive(Debug, Clone)]
+pub struct UopResult {
+    /// The optimal plan, or `None` for `SOL×` (no feasible strategy).
+    pub best: Option<Plan>,
+    /// Every candidate examined.
+    pub log: Vec<CandidateLog>,
+    /// Total strategy-optimization wall time (the paper's second metric).
+    pub wall_secs: f64,
+}
+
+impl UopResult {
+    /// Strategy optimization time in minutes (Table 1 reports minutes).
+    pub fn opt_minutes(&self) -> f64 {
+        self.wall_secs / 60.0
+    }
+}
+
+fn solve_candidate(
+    graph: &Graph,
+    profile: &Profile,
+    batch: usize,
+    pp: usize,
+    c: usize,
+    cfg: &PlannerConfig,
+) -> (Option<Plan>, f64) {
+    let t0 = Instant::now();
+    let costs = cost_modeling_sched(profile, graph, pp, batch, c, cfg.schedule);
+    let plan = if pp == 1 {
+        qip::solve_qip(graph, &costs, cfg)
+    } else {
+        match cfg.engine {
+            Engine::Miqp => crate::miqp::solve_miqp(graph, &costs, cfg),
+            Engine::Chain => chain::solve_chain(graph, &costs, cfg),
+            Engine::Auto => {
+                if graph.is_chain() {
+                    chain::solve_chain(graph, &costs, cfg)
+                } else {
+                    crate::miqp::solve_miqp(graph, &costs, cfg)
+                }
+            }
+        }
+    };
+    (plan, t0.elapsed().as_secs_f64())
+}
+
+/// Run the Unified Optimization Process for mini-batch size `batch` on the
+/// profiled environment.
+pub fn uop(profile: &Profile, graph: &Graph, batch: usize, cfg: &PlannerConfig) -> UopResult {
+    let t0 = Instant::now();
+    let n = profile.env.total_devices();
+
+    // Candidate list: Algorithm 1 — (1, B) first (intra-only QIP), then
+    // every pp_size | n except 1 crossed with every c | B except 1.
+    let mut cands: Vec<(usize, usize)> = vec![(1, batch)];
+    for pp in crate::util::divisors_except_one(n) {
+        if let Some(max_pp) = cfg.max_pp {
+            if pp > max_pp {
+                continue;
+            }
+        }
+        if pp > graph.num_layers() {
+            continue; // layer-placement constraint (7b) can't hold
+        }
+        for c in crate::util::divisors_except_one(batch) {
+            cands.push((pp, c));
+        }
+    }
+
+    let results: Mutex<Vec<(usize, CandidateLog, Option<Plan>)>> = Mutex::new(Vec::new());
+    let next: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let workers = cfg.threads.max(1).min(cands.len().max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= cands.len() {
+                    break;
+                }
+                let (pp, c) = cands[i];
+                let (plan, secs) = solve_candidate(graph, profile, batch, pp, c, cfg);
+                let log = CandidateLog {
+                    pp_size: pp,
+                    num_micro: c,
+                    tpi: plan.as_ref().map(|p| p.est_tpi),
+                    solve_secs: secs,
+                };
+                results.lock().unwrap().push((i, log, plan));
+            });
+        }
+    });
+
+    let mut rows = results.into_inner().unwrap();
+    rows.sort_by_key(|(i, _, _)| *i);
+    let mut best: Option<Plan> = None;
+    let mut log = Vec::with_capacity(rows.len());
+    for (_, entry, plan) in rows {
+        if let Some(p) = plan {
+            if best.as_ref().map_or(true, |b| p.est_tpi < b.est_tpi) {
+                best = Some(p);
+            }
+        }
+        log.push(entry);
+    }
+    UopResult { best, log, wall_secs: t0.elapsed().as_secs_f64() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterEnv;
+    use crate::graph::models;
+
+    #[test]
+    fn uop_enumerates_paper_candidates() {
+        let g = models::synthetic_chain(8, 5e11, 2e7, 2e6);
+        let env = ClusterEnv::env_b(); // n = 8
+        let p = Profile::analytic(&env, &g);
+        let res = uop(&p, &g, 8, &PlannerConfig::default());
+        // pp ∈ {1}∪{2,4,8}, c | 8 \ {1} = {2,4,8} → 1 + 3·3 = 10 candidates
+        assert_eq!(res.log.len(), 10);
+        assert!(res.best.is_some());
+        assert!(res.wall_secs > 0.0);
+    }
+
+    #[test]
+    fn uop_best_is_min_over_candidates() {
+        let g = models::synthetic_chain(8, 5e11, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let res = uop(&p, &g, 8, &PlannerConfig::default());
+        let min_logged = res
+            .log
+            .iter()
+            .filter_map(|l| l.tpi)
+            .fold(f64::INFINITY, f64::min);
+        let best = res.best.unwrap();
+        assert!((best.est_tpi - min_logged).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uop_respects_max_pp() {
+        let g = models::synthetic_chain(8, 5e11, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let cfg = PlannerConfig { max_pp: Some(2), ..Default::default() };
+        let res = uop(&p, &g, 8, &cfg);
+        assert!(res.log.iter().all(|l| l.pp_size <= 2));
+    }
+
+    #[test]
+    fn uop_skips_pp_larger_than_layer_count() {
+        let g = models::synthetic_chain(3, 5e11, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let res = uop(&p, &g, 8, &PlannerConfig::default());
+        assert!(res.log.iter().all(|l| l.pp_size <= 3));
+    }
+
+    #[test]
+    fn uop_sol_cross_when_nothing_fits() {
+        let g = models::synthetic_chain(4, 1e12, 5e10, 1e6); // 200 GB of params
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let res = uop(&p, &g, 8, &PlannerConfig::default());
+        assert!(res.best.is_none(), "must report SOL×");
+        assert!(res.log.iter().all(|l| l.tpi.is_none()));
+    }
+}

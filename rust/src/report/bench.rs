@@ -1,0 +1,53 @@
+//! Micro-bench harness with criterion-style output (criterion itself is
+//! not available offline). Used by the `benches/` targets, which are
+//! declared with `harness = false`.
+
+use std::time::Instant;
+
+/// Run `f` with warmup, collect `samples` timed runs, print a summary line
+/// and return (mean, std, min) in seconds.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = crate::util::mean(&times);
+    let std = crate::util::stddev(&times);
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "{:<44} time: [{} {} {}]  ({} samples)",
+        name,
+        crate::util::fmt_secs(min),
+        crate::util::fmt_secs(mean),
+        crate::util::fmt_secs(mean + std),
+        samples
+    );
+    (mean, std, min)
+}
+
+/// Print a section banner for a bench group.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_stats() {
+        let (mean, _std, min) = bench("noop-spin", 1, 3, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(mean >= min && min > 0.0);
+    }
+}

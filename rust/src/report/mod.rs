@@ -1,0 +1,84 @@
+//! Reporting: markdown table emission and the hand-rolled bench harness
+//! used by `benches/*.rs` (criterion is unavailable in the offline
+//! registry; this harness reproduces its essential behaviour — warmup,
+//! repeated timed samples, mean/std/min reporting).
+
+pub mod bench;
+
+/// A simple markdown table builder with alignment-free pipes.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Start a table with the given column headers.
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as GitHub-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let widths: Vec<usize> = (0..self.header.len())
+            .map(|i| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].chars().count())
+                    .chain(std::iter::once(self.header[i].chars().count()))
+                    .max()
+                    .unwrap_or(1)
+            })
+            .collect();
+        let fmt_row = |cells: &[String]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{:<w$}", c, w = w))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|", sep.join("-|-")));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new(&["model", "thr"]);
+        t.row(vec!["BERT-Huge".into(), "10.77".into()]);
+        t.row(vec!["T5".into(), "7.98".into()]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("| model"));
+        assert_eq!(md.lines().count(), 4);
+        for line in md.lines() {
+            assert!(line.starts_with('|') && line.ends_with('|'));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn rejects_bad_arity() {
+        Table::new(&["a", "b"]).row(vec!["x".into()]);
+    }
+}

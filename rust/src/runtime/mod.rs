@@ -1,0 +1,152 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The interchange format is HLO *text* (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md and
+//! `python/compile/aot.py`).
+//!
+//! Python never runs here — `make artifacts` produced the `.hlo.txt`
+//! files once; this module compiles them on the PJRT CPU client and owns
+//! execution on the request path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled executable plus metadata.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute on f32 host buffers with shapes; returns the flattened f32
+    /// outputs of the result tuple (programs are lowered with
+    /// `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, shape)| {
+                xla::Literal::vec1(data)
+                    .reshape(shape)
+                    .with_context(|| format!("reshape input for {}", self.name))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.run_literals(lits)
+    }
+
+    /// Execute with pre-built literals (callers mixing dtypes build their
+    /// own — e.g. i64 token ids + f32 parameters).
+    pub fn run_literals(&self, lits: Vec<xla::Literal>) -> Result<Vec<Vec<f32>>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("execute {}", self.name))?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        tuple
+            .into_iter()
+            .map(|lit| {
+                let lit = lit.convert(xla::PrimitiveType::F32)?;
+                Ok(lit.to_vec::<f32>()?)
+            })
+            .collect()
+    }
+}
+
+/// Loads, compiles and caches HLO-text artifacts on one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Runtime {
+    /// Create a CPU-backed runtime rooted at the artifact directory.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            dir: artifact_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load-or-get the compiled executable for `artifacts/<name>.hlo.txt`.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(anyhow!(
+                "artifact {path:?} missing — run `make artifacts` first"
+            ));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let entry = std::rc::Rc::new(Executable { name: name.to_string(), exe });
+        self.cache.insert(name.to_string(), entry.clone());
+        Ok(entry)
+    }
+
+    /// Compile HLO text directly (tests / calibration).
+    pub fn compile_text(&self, name: &str, hlo_text: &str) -> Result<Executable> {
+        let tmp = std::env::temp_dir().join(format!("uniap_{}_{}.hlo.txt", name, std::process::id()));
+        std::fs::write(&tmp, hlo_text)?;
+        let proto = xla::HloModuleProto::from_text_file(tmp.to_str().unwrap())?;
+        let _ = std::fs::remove_file(&tmp);
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(Executable { name: name.to_string(), exe: self.client.compile(&comp)? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal HLO module: f32[2,2] matmul + 2, tuple-rooted (mirrors the
+    /// xla-example smoke test without needing python at test time).
+    const HLO: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main.7 {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  constant.4 = f32[] constant(2)
+  broadcast.5 = f32[2,2]{1,0} broadcast(constant.4), dimensions={}
+  add.6 = f32[2,2]{1,0} add(dot.3, broadcast.5)
+  ROOT tuple.8 = (f32[2,2]{1,0}) tuple(add.6)
+}
+"#;
+
+    #[test]
+    fn compile_and_execute_hlo_text() {
+        let rt = Runtime::cpu("/tmp").expect("cpu client");
+        let exe = rt.compile_text("smoke", HLO).expect("compile");
+        let x = [1f32, 2.0, 3.0, 4.0];
+        let y = [1f32, 1.0, 1.0, 1.0];
+        let out = exe.run_f32(&[(&x, &[2, 2]), (&y, &[2, 2])]).expect("run");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn missing_artifact_reports_make_hint() {
+        let mut rt = Runtime::cpu("/tmp/definitely-missing-dir").unwrap();
+        let err = match rt.load("nope") {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("load should fail"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

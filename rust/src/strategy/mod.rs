@@ -1,0 +1,213 @@
+//! Intra-layer parallel strategy space (§2.1, §3.3): per-layer choices of
+//! DP / TP / FSDP over the devices of one pipeline stage, plus the
+//! resharding cost model between strategies of adjacent layers.
+//!
+//! A strategy is a factorisation `dp × tp = d` (stage device count) with an
+//! optional FSDP flag that shards model states across the DP dimension
+//! (§2.1: FSDP partitions optimizer states/parameters/gradients over the
+//! data-parallel workers). TP groups occupy consecutive ranks (fast links),
+//! DP strides across groups — the layout of the Appendix F case study.
+
+use crate::cluster::ClusterEnv;
+
+/// One intra-layer parallel strategy for a layer on a `dp*tp`-device stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct IntraStrategy {
+    /// Data-parallel degree.
+    pub dp: usize,
+    /// Tensor-parallel degree.
+    pub tp: usize,
+    /// Shard model states over the DP dimension (ZeRO-3 style).
+    pub fsdp: bool,
+}
+
+impl IntraStrategy {
+    /// Devices this strategy spans.
+    pub fn devices(&self) -> usize {
+        self.dp * self.tp
+    }
+
+    /// FSDP sharding factor `fs` of eq. (1): the DP degree when FSDP is on.
+    pub fn fsdp_factor(&self) -> f64 {
+        if self.fsdp {
+            self.dp as f64
+        } else {
+            1.0
+        }
+    }
+
+    /// Compact display form, e.g. `dp4·tp2·fsdp`.
+    pub fn label(&self) -> String {
+        let mut s = format!("dp{}·tp{}", self.dp, self.tp);
+        if self.fsdp {
+            s.push_str("·fsdp");
+        }
+        s
+    }
+}
+
+/// Enumerate the strategy set `S` for a stage of `devices` accelerators:
+/// every divisor pair `dp·tp = devices`, with an FSDP variant whenever
+/// `dp > 1`. The set is identical for every layer of a stage (the paper's
+/// `S_u` with a shared dictionary `SD[pp_size]`), ordered deterministically.
+pub fn strategies_for(devices: usize) -> Vec<IntraStrategy> {
+    let mut out = Vec::new();
+    for tp in crate::util::divisors(devices) {
+        let dp = devices / tp;
+        out.push(IntraStrategy { dp, tp, fsdp: false });
+        if dp > 1 {
+            out.push(IntraStrategy { dp, tp, fsdp: true });
+        }
+    }
+    out
+}
+
+/// Resharding cost (seconds) on edge `u → v` when `u` uses `from` and `v`
+/// uses `to`, for a tensor of `bytes_per_sample × micro_batch` bytes living
+/// on the stage ranks `stage`.
+///
+/// Model: if the output layout already matches the input layout
+/// (same `dp`/`tp` split) the cost is zero; otherwise the activation must
+/// be redistributed. A TP-degree change moves the hidden-dim shards via an
+/// all-gather at the source degree followed by re-slicing (communication ≈
+/// one all-gather of the full tensor over the merged group); a DP-degree
+/// change moves batch shards point-to-point. FSDP does not reshard
+/// activations (it shards *states*), so it never contributes here.
+pub fn reshard_cost(
+    env: &ClusterEnv,
+    stage: &[usize],
+    from: IntraStrategy,
+    to: IntraStrategy,
+    tensor_bytes: f64,
+) -> f64 {
+    if from.dp == to.dp && from.tp == to.tp {
+        return 0.0;
+    }
+    let mut cost = 0.0;
+    if from.tp != to.tp {
+        // All-gather the TP shards over the union group (per DP replica the
+        // tensor is `tensor_bytes / dp` large and spread over max(tp) ranks).
+        let merged_tp = from.tp.max(to.tp);
+        let per_replica = tensor_bytes / from.dp as f64;
+        let group = env.tp_group(stage, merged_tp, 0);
+        cost += env.allgather_time(per_replica, &group);
+    }
+    if from.dp != to.dp {
+        // Redistribute batch shards: each device sends/receives the delta of
+        // its batch slice; bounded by one transfer of the slice difference
+        // across the DP group's slowest link.
+        let hi = from.dp.max(to.dp);
+        let lo = from.dp.min(to.dp);
+        let moved = tensor_bytes * (1.0 / lo as f64 - 1.0 / hi as f64);
+        let group = env.dp_group(stage, stage.len() / hi, 0);
+        let tier = env.tier_of(&group);
+        cost += moved / env.tier_bw(tier) + env.tier_latency(tier);
+    }
+    cost
+}
+
+/// Cross-stage transfer cost (seconds): activation of `tensor_bytes` moves
+/// from the ranks holding `from` in stage `i` to those holding `to` in
+/// stage `i+1` via P2P (§3.2 "cross-stage cost by the summation of P2P
+/// costs"). Each DP replica's slice moves independently; the slowest pair
+/// (usually the stage-boundary link) dominates.
+pub fn cross_stage_cost(
+    env: &ClusterEnv,
+    stage_from: &[usize],
+    stage_to: &[usize],
+    from: IntraStrategy,
+    to: IntraStrategy,
+    tensor_bytes: f64,
+) -> f64 {
+    // Bytes one boundary pair must carry: the tensor is split over the
+    // sender's dp replicas; the receiver wants `to`'s layout. The pair
+    // moving the most data moves the max of the two slice sizes.
+    let slice = tensor_bytes / (from.dp.min(to.dp) as f64);
+    let t_pair = env.p2p_time(slice, *stage_from.last().unwrap(), stage_to[0]);
+    // A TP-layout mismatch additionally reshards on the receiving stage.
+    let fix = if from.tp != to.tp {
+        reshard_cost(env, stage_to, IntraStrategy { dp: to.dp, tp: from.tp.min(to.tp), fsdp: false }, to, tensor_bytes)
+    } else {
+        0.0
+    };
+    t_pair + fix
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_space_for_4_devices() {
+        let s = strategies_for(4);
+        // tp ∈ {1,2,4}: (dp4,tp1)+fsdp, (dp2,tp2)+fsdp, (dp1,tp4)
+        assert_eq!(s.len(), 5);
+        assert!(s.iter().all(|x| x.devices() == 4));
+        assert!(s.iter().any(|x| x.dp == 4 && x.tp == 1 && x.fsdp));
+        assert!(s.iter().any(|x| x.dp == 1 && x.tp == 4 && !x.fsdp));
+        assert!(!s.iter().any(|x| x.dp == 1 && x.fsdp), "fsdp needs dp>1");
+    }
+
+    #[test]
+    fn strategy_space_single_device_is_trivial() {
+        let s = strategies_for(1);
+        assert_eq!(s, vec![IntraStrategy { dp: 1, tp: 1, fsdp: false }]);
+    }
+
+    #[test]
+    fn fsdp_factor_follows_eq1() {
+        let a = IntraStrategy { dp: 4, tp: 2, fsdp: true };
+        let b = IntraStrategy { dp: 4, tp: 2, fsdp: false };
+        assert_eq!(a.fsdp_factor(), 4.0);
+        assert_eq!(b.fsdp_factor(), 1.0);
+    }
+
+    #[test]
+    fn reshard_zero_for_same_layout() {
+        let env = ClusterEnv::env_b();
+        let stage: Vec<usize> = (0..4).collect();
+        let s = IntraStrategy { dp: 2, tp: 2, fsdp: false };
+        let s_fsdp = IntraStrategy { dp: 2, tp: 2, fsdp: true };
+        assert_eq!(reshard_cost(&env, &stage, s, s, 1e8), 0.0);
+        // FSDP flag alone never reshards activations.
+        assert_eq!(reshard_cost(&env, &stage, s, s_fsdp, 1e8), 0.0);
+    }
+
+    #[test]
+    fn reshard_positive_for_layout_change() {
+        let env = ClusterEnv::env_b();
+        let stage: Vec<usize> = (0..4).collect();
+        let a = IntraStrategy { dp: 4, tp: 1, fsdp: false };
+        let b = IntraStrategy { dp: 1, tp: 4, fsdp: false };
+        let c = reshard_cost(&env, &stage, a, b, 1e8);
+        assert!(c > 0.0);
+    }
+
+    #[test]
+    fn reshard_monotone_in_bytes() {
+        let env = ClusterEnv::env_b();
+        let stage: Vec<usize> = (0..4).collect();
+        let a = IntraStrategy { dp: 2, tp: 2, fsdp: false };
+        let b = IntraStrategy { dp: 4, tp: 1, fsdp: false };
+        let small = reshard_cost(&env, &stage, a, b, 1e6);
+        let big = reshard_cost(&env, &stage, a, b, 1e9);
+        assert!(big > small);
+    }
+
+    #[test]
+    fn cross_stage_positive_and_monotone() {
+        let env = ClusterEnv::env_b();
+        let s0: Vec<usize> = (0..4).collect();
+        let s1: Vec<usize> = (4..8).collect();
+        let s = IntraStrategy { dp: 2, tp: 2, fsdp: false };
+        let c1 = cross_stage_cost(&env, &s0, &s1, s, s, 1e6);
+        let c2 = cross_stage_cost(&env, &s0, &s1, s, s, 1e8);
+        assert!(c1 > 0.0 && c2 > c1);
+    }
+
+    #[test]
+    fn labels_render() {
+        assert_eq!(IntraStrategy { dp: 4, tp: 2, fsdp: true }.label(), "dp4·tp2·fsdp");
+        assert_eq!(IntraStrategy { dp: 1, tp: 8, fsdp: false }.label(), "dp1·tp8");
+    }
+}

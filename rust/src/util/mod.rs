@@ -1,0 +1,152 @@
+//! Small shared utilities: math helpers, factorisation, JSON emission.
+//!
+//! The environment's crate registry is offline, so we avoid serde and emit
+//! JSON by hand where machine-readable output is needed.
+
+pub mod json;
+
+/// All divisors of `n` in ascending order (including 1 and `n`).
+pub fn divisors(n: usize) -> Vec<usize> {
+    assert!(n > 0, "divisors of 0 undefined");
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1usize;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Divisors of `n` excluding 1 (the paper's UOP enumerates "all factors of n
+/// except 1" for `pp_size` and for the number of micro-batches).
+pub fn divisors_except_one(n: usize) -> Vec<usize> {
+    divisors(n).into_iter().filter(|&d| d != 1).collect()
+}
+
+/// `true` if `n` is a power of two.
+pub fn is_pow2(n: usize) -> bool {
+    n > 0 && n & (n - 1) == 0
+}
+
+/// Integer log2, panics unless `n` is a power of two.
+pub fn log2(n: usize) -> u32 {
+    assert!(is_pow2(n));
+    n.trailing_zeros()
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation of a slice (0 for <2 samples).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Median of a slice (averages the middle pair for even lengths).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Bytes → human string (GiB with 2 decimals).
+pub fn gib(bytes: f64) -> String {
+    format!("{:.2} GiB", bytes / (1u64 << 30) as f64)
+}
+
+/// Pretty seconds (µs/ms/s/min autoscale).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else {
+        format!("{:.2} min", s / 60.0)
+    }
+}
+
+/// Ceil division for usize.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(8), vec![1, 2, 4, 8]);
+        assert_eq!(divisors(7), vec![1, 7]);
+    }
+
+    #[test]
+    fn divisors_except_one_matches_paper_enumeration() {
+        assert_eq!(divisors_except_one(8), vec![2, 4, 8]);
+        assert_eq!(divisors_except_one(1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn divisors_are_sorted_and_divide() {
+        for n in 1..200 {
+            let ds = divisors(n);
+            for w in ds.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            for d in ds {
+                assert_eq!(n % d, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn pow2_helpers() {
+        assert!(is_pow2(1) && is_pow2(64));
+        assert!(!is_pow2(0) && !is_pow2(12));
+        assert_eq!(log2(32), 5);
+    }
+
+    #[test]
+    fn stats_helpers() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(7, 2), 4);
+        assert_eq!(ceil_div(8, 2), 4);
+    }
+}

@@ -1,0 +1,167 @@
+//! Reproduction-shape tests: the qualitative claims of the paper's tables
+//! must hold on our testbed (the simulator) — who wins, what fails, and
+//! roughly by how much. Absolute numbers differ (different substrate);
+//! shapes must not.
+
+use uniap::baselines::{megatron, Baseline, BaselineKind};
+use uniap::cluster::ClusterEnv;
+use uniap::graph::models;
+use uniap::planner::PlannerConfig;
+use uniap::profiling::Profile;
+use uniap::sim::{simulate_plan, SimConfig};
+
+fn sim_throughput(
+    graph: &uniap::graph::Graph,
+    profile: &Profile,
+    plan: &uniap::planner::Plan,
+) -> Option<f64> {
+    let sim = simulate_plan(graph, profile, plan, &SimConfig::default());
+    (!sim.oom).then_some(sim.throughput)
+}
+
+/// Table 1, EnvB rows: UniAP ≥ Galvatron and ≥ Alpa in simulated
+/// throughput on BERT-Huge (paper: 10.77 vs 6.27 vs 8.95).
+#[test]
+fn table1_envb_bert_uniap_wins() {
+    let g = models::bert_huge();
+    let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+    let cfg = PlannerConfig::default();
+    let uni = Baseline::run(BaselineKind::UniAP, &profile, &g, 16, &cfg);
+    let gal = Baseline::run(BaselineKind::Galvatron, &profile, &g, 16, &cfg);
+    let alp = Baseline::run(BaselineKind::Alpa, &profile, &g, 16, &cfg);
+    let t_uni = sim_throughput(&g, &profile, &uni.plan.unwrap()).expect("uniap runs");
+    let t_gal = sim_throughput(&g, &profile, &gal.plan.unwrap()).unwrap_or(0.0);
+    let t_alp = sim_throughput(&g, &profile, &alp.plan.unwrap()).unwrap_or(0.0);
+    assert!(t_uni >= t_gal * 0.999, "UniAP {t_uni} < Galvatron {t_gal}");
+    assert!(t_uni >= t_alp * 0.999, "UniAP {t_uni} < Alpa {t_alp}");
+}
+
+/// Table 1, EnvC row: UniAP beats Galvatron clearly on Llama-7B (paper:
+/// 3.80×) because Galvatron's greedy micro-batching/hierarchy picks a
+/// shallower pipeline on the PCIe-only box.
+#[test]
+fn table1_envc_llama_uniap_speedup() {
+    let g = models::llama_7b();
+    let profile = Profile::analytic(&ClusterEnv::env_c(), &g);
+    let cfg = PlannerConfig::default();
+    let uni = Baseline::run(BaselineKind::UniAP, &profile, &g, 8, &cfg);
+    let gal = Baseline::run(BaselineKind::Galvatron, &profile, &g, 8, &cfg);
+    let t_uni = sim_throughput(&g, &profile, &uni.plan.expect("uniap plan")).expect("runs");
+    let t_gal = gal
+        .plan
+        .and_then(|p| sim_throughput(&g, &profile, &p))
+        .unwrap_or(f64::EPSILON);
+    assert!(
+        t_uni > 1.15 * t_gal,
+        "expected a clear UniAP win on EnvC Llama: {t_uni} vs {t_gal}"
+    );
+}
+
+/// Table 2 ablation shape on EnvB: restricting the space can only hurt;
+/// intra-only is drastically slower for BERT (paper: 2.48 vs 10.77).
+#[test]
+fn table2_ablation_restrictions_hurt() {
+    let g = models::bert_huge();
+    let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+    let cfg = PlannerConfig::default();
+    let uni = Baseline::run(BaselineKind::UniAP, &profile, &g, 16, &cfg);
+    let intra = Baseline::run(BaselineKind::IntraOnly, &profile, &g, 16, &cfg);
+    let t_uni = sim_throughput(&g, &profile, &uni.plan.unwrap()).unwrap();
+    let t_intra = intra
+        .plan
+        .and_then(|p| sim_throughput(&g, &profile, &p))
+        .unwrap_or(0.0);
+    assert!(
+        t_uni > 1.5 * t_intra,
+        "intra-only should be much slower on EnvB BERT: {t_uni} vs {t_intra}"
+    );
+}
+
+/// Appendix F case-study shape: on EnvB the optimal BERT plan uses
+/// pipelining so that the slow 10 Gbps inter-node link carries only P2P
+/// traffic (never per-layer collectives), and TP never crosses a node.
+/// (The paper's testbed lands on pp=2; our cluster model's exact optimum
+/// is a deeper pipeline with the same topology alignment — see
+/// EXPERIMENTS.md for the discussion.)
+#[test]
+fn appendix_f_bert_envb_topology_aligned_pipeline() {
+    let g = models::bert_huge();
+    let env = ClusterEnv::env_b();
+    let profile = Profile::analytic(&env, &g);
+    let res = uniap::planner::uop(&profile, &g, 16, &PlannerConfig::default());
+    let plan = res.best.expect("feasible");
+    assert!(plan.pp_size >= 2, "pipelining must be used: {}", plan.summary());
+    // the inter-node boundary must coincide with a stage boundary: some
+    // stage owns exactly the first node's GPUs up to rank 3.
+    let per_stage = env.total_devices() / plan.pp_size;
+    assert!(env.gpus_per_node % per_stage == 0 || per_stage % env.gpus_per_node == 0,
+        "stages must tile nodes: pp={} on {}", plan.pp_size, plan.summary());
+    // TP degree never exceeds a node (4 GPUs): cross-node TP would cross
+    // the 10 Gbps link twice per layer per pass.
+    for u in 0..g.num_layers() {
+        assert!(plan.strategy_of(u).tp <= 4, "layer {u}: {:?}", plan.strategy_of(u));
+    }
+}
+
+/// Table 4/5 shape: DeepSpeed cannot launch on EnvE (B=8, 32 DCUs), and
+/// the Megatron exhaustive search takes orders of magnitude longer than
+/// UniAP while not beating it.
+#[test]
+fn table4_enve_shapes() {
+    let g = models::llama_7b();
+    let profile = Profile::analytic(&ClusterEnv::env_e(), &g);
+    let cfg = PlannerConfig::default();
+    let ds = Baseline::run(BaselineKind::DeepSpeedZero3, &profile, &g, 8, &cfg);
+    assert!(ds.plan.is_none(), "DeepSpeed must SOL× (8 % 32 != 0)");
+
+    let uni = Baseline::run(BaselineKind::UniAP, &profile, &g, 8, &cfg);
+    let uni_plan = uni.plan.expect("uniap feasible on EnvE");
+    let t_uni = sim_throughput(&g, &profile, &uni_plan).expect("runs");
+
+    let grid = megatron::run(&profile, &g, 8, &cfg);
+    let stats = megatron::stats(&grid).expect("some feasible candidates");
+    assert!(stats.infeasible > 0, "some Megatron candidates must OOM (Table 5)");
+    assert!(
+        t_uni >= stats.top1 * 0.95,
+        "UniAP should match the exhaustive best: {t_uni} vs {}",
+        stats.top1
+    );
+    assert!(
+        grid.simulated_search_secs > 100.0 * uni.opt_secs,
+        "exhaustive protocol must dwarf UniAP optimization: {} vs {}",
+        grid.simulated_search_secs,
+        uni.opt_secs
+    );
+}
+
+/// §4.2 estimation accuracy: UniAP's own-throughput estimate REE stays
+/// small; Galvatron's coarser model mis-estimates more (paper: 3.59% vs
+/// 11.17% on average).
+#[test]
+fn ree_uniap_estimates_better_than_galvatron() {
+    let cases = vec![
+        (models::bert_huge(), ClusterEnv::env_b(), 16usize),
+        (models::vit_huge(), ClusterEnv::env_b(), 64),
+    ];
+    let cfg = PlannerConfig::default();
+    let quiet = SimConfig { jitter: 0.0, iters: 1, ..Default::default() };
+    let mut ree_uni = Vec::new();
+    let mut ree_gal = Vec::new();
+    for (g, env, batch) in cases {
+        let profile = Profile::analytic(&env, &g);
+        for kind in [BaselineKind::UniAP, BaselineKind::Galvatron] {
+            let r = Baseline::run(kind, &profile, &g, batch, &cfg);
+            let plan = r.plan.expect("feasible");
+            let sim = simulate_plan(&g, &profile, &plan, &quiet);
+            let e = uniap::metrics::ree(sim.throughput, plan.est_throughput());
+            match kind {
+                BaselineKind::UniAP => ree_uni.push(e),
+                _ => ree_gal.push(e),
+            }
+        }
+    }
+    let mu = uniap::util::mean(&ree_uni);
+    let mg = uniap::util::mean(&ree_gal);
+    assert!(mu < 0.10, "UniAP avg REE too high: {mu}");
+    assert!(mu < mg, "UniAP must estimate better: {mu} vs {mg}");
+}

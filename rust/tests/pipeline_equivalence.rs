@@ -1,0 +1,94 @@
+//! Integration: the Rust GPipe executor over AOT artifacts is numerically
+//! equivalent to the single-program `full_step` reference, and training
+//! actually learns.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use uniap::exec::data::Corpus;
+use uniap::exec::pipeline::PipelineExecutor;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("meta.txt").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    dir
+}
+
+#[test]
+fn pipeline_grads_match_full_step() {
+    let mut exec = PipelineExecutor::load(artifacts_dir(), 1e-3).expect("load artifacts");
+    let m = exec.meta.clone();
+    let mut corpus = Corpus::new(m.vocab, 99);
+    // one micro-batch: pipeline path must equal the fused program exactly
+    let (toks, tgts) = corpus.next_batch(m.micro_batch, m.seq);
+    let (loss_pipe, grads_pipe) = exec.loss_and_grads(&toks, &tgts, 1).expect("pipeline");
+    let (loss_full, grads_full) = exec.full_step_reference(&toks, &tgts).expect("full");
+    let rel = (loss_pipe - loss_full).abs() / loss_full.abs().max(1e-6);
+    assert!(rel < 1e-4, "loss mismatch: pipeline {loss_pipe} vs full {loss_full}");
+    assert_eq!(grads_pipe.len(), grads_full.len());
+    for (s, (gp, gf)) in grads_pipe.iter().zip(&grads_full).enumerate() {
+        assert_eq!(gp.len(), gf.len(), "stage {s} grad length");
+        let mut max_abs = 0f32;
+        let mut max_err = 0f32;
+        for (a, b) in gp.iter().zip(gf) {
+            max_abs = max_abs.max(b.abs());
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err <= 1e-4 * max_abs.max(1e-3),
+            "stage {s}: max grad err {max_err} (scale {max_abs})"
+        );
+    }
+}
+
+#[test]
+fn gradient_accumulation_is_microbatch_mean() {
+    // Accumulating over c micro-batches must equal the mean of per-micro
+    // gradients (GPipe semantics for a uniformly split mini-batch).
+    let mut exec = PipelineExecutor::load(artifacts_dir(), 1e-3).expect("load artifacts");
+    let m = exec.meta.clone();
+    let mut corpus = Corpus::new(m.vocab, 123);
+    let (toks, tgts) = corpus.next_batch(m.micro_batch * 2, m.seq);
+    let per = m.micro_batch * m.seq;
+    let (loss_acc, grads_acc) = exec.loss_and_grads(&toks, &tgts, 2).expect("acc");
+    let (l1, g1) = exec.loss_and_grads(&toks[..per], &tgts[..per], 1).expect("mb1");
+    let (l2, g2) = exec.loss_and_grads(&toks[per..], &tgts[per..], 1).expect("mb2");
+    assert!((loss_acc - 0.5 * (l1 + l2)).abs() < 1e-5);
+    for s in 0..grads_acc.len() {
+        for i in (0..grads_acc[s].len()).step_by(97) {
+            let want = 0.5 * (g1[s][i] + g2[s][i]);
+            assert!(
+                (grads_acc[s][i] - want).abs() < 1e-5 + 1e-4 * want.abs(),
+                "stage {s} index {i}: {} vs {}",
+                grads_acc[s][i],
+                want
+            );
+        }
+    }
+}
+
+#[test]
+fn training_reduces_loss_on_structured_corpus() {
+    let mut exec = PipelineExecutor::load(artifacts_dir(), 3e-3).expect("load artifacts");
+    let m = exec.meta.clone();
+    let mut corpus = Corpus::new(m.vocab, 42);
+    let uniform = (m.vocab as f32).ln();
+    let mut first = 0.0f32;
+    let mut last = 0.0f32;
+    let steps = 30;
+    for step in 0..steps {
+        let (toks, tgts) = corpus.next_batch(m.micro_batch * 2, m.seq);
+        let stats = exec.train_step(&toks, &tgts, 2).expect("step");
+        if step == 0 {
+            first = stats.loss;
+        }
+        last = stats.loss;
+    }
+    assert!(first < uniform * 1.05, "initial loss should start near ln(V)={uniform}: {first}");
+    assert!(
+        last < first - 0.08,
+        "loss must decrease over {steps} steps: {first} → {last}"
+    );
+}

@@ -1,0 +1,212 @@
+//! Integration + property tests across planner engines, cost models, and
+//! the simulator — on the paper's actual models and environments.
+
+use uniap::baselines::{Baseline, BaselineKind};
+use uniap::cluster::ClusterEnv;
+use uniap::cost::cost_modeling;
+use uniap::graph::models;
+use uniap::planner::{chain, uop, PlannerConfig};
+use uniap::profiling::Profile;
+use uniap::sim::{simulate_plan, SimConfig};
+use uniap::testing;
+
+#[test]
+fn uniap_plans_all_paper_workloads() {
+    // Table 1 rows (EnvA, EnvB, EnvC): every workload must be plannable.
+    let cases = vec![
+        (models::bert_huge(), ClusterEnv::env_a(), 32usize),
+        (models::t5_large(), ClusterEnv::env_a(), 16),
+        (models::vit_huge(), ClusterEnv::env_a(), 128),
+        (models::swin_huge(), ClusterEnv::env_a(), 128),
+        (models::bert_huge(), ClusterEnv::env_b(), 16),
+        (models::t5_large_with(16, 16), ClusterEnv::env_b(), 8),
+        (models::vit_huge(), ClusterEnv::env_b(), 64),
+        (models::swin_huge(), ClusterEnv::env_b(), 32),
+        (models::llama_7b(), ClusterEnv::env_c(), 8),
+    ];
+    for (graph, env, batch) in cases {
+        let profile = Profile::analytic(&env, &graph);
+        let res = uop(&profile, &graph, batch, &PlannerConfig::default());
+        let plan = res
+            .best
+            .unwrap_or_else(|| panic!("{} on {} B={batch}: SOL×", graph.name, env.name));
+        let costs = cost_modeling(&profile, &graph, plan.pp_size, batch, plan.num_micro);
+        let violations = plan.check(&graph, &costs);
+        assert!(violations.is_empty(), "{} on {}: {violations:?}", graph.name, env.name);
+        let sim = simulate_plan(&graph, &profile, &plan, &SimConfig::default());
+        assert!(!sim.oom, "{} on {}: plan OOMs in simulation", graph.name, env.name);
+        assert!(sim.throughput > 0.0);
+    }
+}
+
+#[test]
+fn miqp_engine_agrees_with_chain_engine_on_random_chains() {
+    testing::check(
+        "miqp_vs_chain",
+        12,
+        |rng| {
+            let nl = rng.usize_in(4, 8);
+            let flops = rng.f64_in(1e11, 2e12);
+            let params = rng.f64_in(5e6, 5e7);
+            let pp = *rng.pick(&[2usize, 4]);
+            let c = *rng.pick(&[2usize, 4]);
+            (nl, flops, params, pp, c)
+        },
+        |&(nl, flops, params, pp, c)| {
+            let g = models::synthetic_chain(nl, flops, params, 2e6);
+            let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+            let costs = cost_modeling(&profile, &g, pp, 8, c);
+            let cfg = PlannerConfig { mem_buckets: 4096, ..Default::default() };
+            let a = uniap::miqp::solve_miqp(&g, &costs, &cfg);
+            let b = chain::solve_chain(&g, &costs, &cfg);
+            match (a, b) {
+                (Some(x), Some(y)) => {
+                    let rel = (x.est_tpi - y.est_tpi).abs() / y.est_tpi;
+                    if rel < 1e-4 {
+                        Ok(())
+                    } else {
+                        Err(format!("tpi mismatch: miqp {} chain {}", x.est_tpi, y.est_tpi))
+                    }
+                }
+                (None, None) => Ok(()),
+                (x, y) => Err(format!("feasibility mismatch {:?} {:?}", x.is_some(), y.is_some())),
+            }
+        },
+    );
+}
+
+#[test]
+fn plans_always_satisfy_formulation_constraints() {
+    testing::check(
+        "plan_constraints",
+        10,
+        |rng| {
+            let nl = rng.usize_in(6, 14);
+            let pp = *rng.pick(&[1usize, 2, 4]);
+            let c = *rng.pick(&[2usize, 4, 8]);
+            let flops = rng.f64_in(1e11, 3e12);
+            (nl, pp, c, flops)
+        },
+        |&(nl, pp, c, flops)| {
+            let g = models::synthetic_chain(nl, flops, 2e7, 2e6);
+            let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+            let costs = cost_modeling(&profile, &g, pp, 8, c);
+            match chain::solve_chain(&g, &costs, &PlannerConfig::default()) {
+                None => Ok(()),
+                Some(plan) => {
+                    let v = uniap::miqp::formulation::constraint_violations(
+                        &g,
+                        &costs,
+                        &plan.placement,
+                        &plan.choice,
+                    );
+                    if v.is_empty() {
+                        // formulation objective must equal the plan's
+                        let (tpi, _, _) = uniap::miqp::formulation::objective_from_constraints(
+                            &g,
+                            &costs,
+                            &plan.placement,
+                            &plan.choice,
+                        );
+                        if (tpi - plan.est_tpi).abs() < 1e-9 * tpi.max(1.0) {
+                            Ok(())
+                        } else {
+                            Err(format!("objective mismatch {tpi} vs {}", plan.est_tpi))
+                        }
+                    } else {
+                        Err(format!("{v:?}"))
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn uop_optimum_dominates_random_feasible_assignments() {
+    // The optimality property, checked empirically: no random feasible
+    // assignment beats the UOP plan for the same (pp, c).
+    let g = models::synthetic_chain(10, 8e11, 2e7, 2e6);
+    let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+    let res = uop(&profile, &g, 8, &PlannerConfig::default());
+    let best = res.best.expect("feasible");
+    testing::check(
+        "uop_dominates",
+        200,
+        |rng| {
+            let pp = best.pp_size;
+            // random contiguous placement with pp stages
+            let mut cuts: Vec<usize> = (0..pp - 1)
+                .map(|_| rng.usize_in(1, g.num_layers()))
+                .collect();
+            cuts.sort_unstable();
+            cuts.dedup();
+            let mut placement = vec![0usize; g.num_layers()];
+            for (si, &cut) in cuts.iter().enumerate() {
+                for u in cut..g.num_layers() {
+                    placement[u] = si + 1;
+                }
+            }
+            let costs = cost_modeling(&profile, &g, pp, 8, best.num_micro);
+            let choice: Vec<usize> = (0..g.num_layers())
+                .map(|_| rng.usize_in(0, costs.num_strategies()))
+                .collect();
+            (placement, choice)
+        },
+        |(placement, choice)| {
+            let pp = best.pp_size;
+            if placement.iter().max().unwrap() + 1 != pp {
+                return Ok(()); // dedup collapsed stages — not comparable
+            }
+            let costs = cost_modeling(&profile, &g, pp, 8, best.num_micro);
+            let mem = uniap::cost::stage_memory(&g, &costs, placement, choice);
+            if mem.iter().any(|&m| m > costs.mem_limit) {
+                return Ok(()); // infeasible sample
+            }
+            let tpi = uniap::cost::objective_tpi(&g, &costs, placement, choice);
+            if tpi >= best.est_tpi * (1.0 - 1e-9) {
+                Ok(())
+            } else {
+                Err(format!("random assignment beat UOP: {tpi} < {}", best.est_tpi))
+            }
+        },
+    );
+}
+
+#[test]
+fn baselines_produce_simulatable_plans_on_bert_envb() {
+    let g = models::bert_huge();
+    let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+    let cfg = PlannerConfig::default();
+    for kind in [
+        BaselineKind::UniAP,
+        BaselineKind::Galvatron,
+        BaselineKind::Alpa,
+        BaselineKind::IntraOnly,
+    ] {
+        let r = Baseline::run(kind, &profile, &g, 16, &cfg);
+        let plan = r.plan.unwrap_or_else(|| panic!("{:?} SOL× unexpectedly", kind));
+        let sim = simulate_plan(&g, &profile, &plan, &SimConfig::default());
+        assert!(sim.throughput.is_finite() && sim.throughput > 0.0, "{kind:?}");
+    }
+}
+
+#[test]
+fn scalability_throughput_grows_with_nodes() {
+    // Figure 4a shape: more nodes + proportional batch → higher throughput.
+    let g = models::bert_huge();
+    let mut last = 0.0;
+    for nodes in [1usize, 2, 4] {
+        let env = ClusterEnv::env_d_nodes(nodes);
+        let profile = Profile::analytic(&env, &g);
+        let res = uop(&profile, &g, 8 * nodes, &PlannerConfig::default());
+        let plan = res.best.expect("feasible");
+        let sim = simulate_plan(&g, &profile, &plan, &SimConfig { jitter: 0.0, iters: 1, ..Default::default() });
+        assert!(
+            sim.throughput > last,
+            "throughput must grow: {nodes} nodes → {}",
+            sim.throughput
+        );
+        last = sim.throughput;
+    }
+}
