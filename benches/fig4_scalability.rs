@@ -2,17 +2,24 @@
 //! strategy and (b) strategy optimization time, as nodes grow 1 → 4 with
 //! proportionally growing mini-batches (8/4/32/16 × #nodes).
 //!
+//! Per-model strategy-optimization wall times are also written to
+//! `BENCH_fig4_scalability.json` so the Figure 4b trend is tracked across
+//! PRs (EXPERIMENTS.md §Perf).
+//!
 //! Run: `cargo bench --bench fig4_scalability`
 
 use uniap::cluster::ClusterEnv;
 use uniap::graph::models;
 use uniap::planner::{uop, PlannerConfig};
 use uniap::profiling::Profile;
+use uniap::report::bench::BenchReport;
 use uniap::report::Table;
 use uniap::sim::{simulate_plan, SimConfig};
 
 fn main() {
     let cfg = PlannerConfig::default();
+    let mut rep = BenchReport::new("fig4_scalability");
+    rep.note("env", "EnvD");
     let specs: Vec<(&str, usize)> = vec![("bert", 8), ("t5-16", 4), ("vit", 32), ("swin", 16)];
     println!("# Figure 4a — throughput (samples/s) vs #nodes (EnvD)\n");
     let mut thr = Table::new(&["model", "1 node", "2 nodes", "4 nodes", "4n/1n ratio"]);
@@ -28,6 +35,7 @@ fn main() {
             let profile = Profile::analytic(&env, &graph);
             let res = uop(&profile, &graph, b_per_node * nodes, &cfg);
             opt_cells.push(uniap::util::fmt_secs(res.wall_secs));
+            rep.note(&format!("opt_secs/{name}/{nodes}n"), res.wall_secs);
             match res.best {
                 Some(plan) => {
                     let sim = simulate_plan(&graph, &profile, &plan, &SimConfig::default());
@@ -59,4 +67,8 @@ fn main() {
     print!("{}", opt.to_markdown());
     println!("\npaper shape: near-linear throughput scaling; optimization time grows");
     println!("with the candidate count O(√(B·d)) per the §3.5 complexity analysis.");
+    match rep.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
 }

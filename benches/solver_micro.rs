@@ -3,62 +3,136 @@
 //! MIQP branch-and-bound, cost-matrix construction, simulator iterations,
 //! and end-to-end UOP wall time.
 //!
+//! Every measurement is also written to `BENCH_solver_micro.json`
+//! (schema `uniap-bench-v1`) so the sparse-vs-dense speedup is a tracked
+//! regression artifact, not a one-off console line. The "before" side is
+//! the frozen legacy engine (`planner::chain_dense` + per-candidate cost
+//! rebuild, no incumbent sharing); the "after" side is the production
+//! sweep. Both headline rows run single-threaded so the ratio isolates
+//! the algorithmic change from thread fan-out.
+//!
 //! Run: `cargo bench --bench solver_micro`
 
 use uniap::cluster::ClusterEnv;
-use uniap::cost::cost_modeling;
+use uniap::cost::{cost_modeling, CostBase, Schedule};
 use uniap::graph::models;
-use uniap::planner::{chain, uop, PlannerConfig};
+use uniap::planner::{chain, chain_dense, uop, PlannerConfig};
 use uniap::profiling::Profile;
-use uniap::report::bench::{bench, section};
+use uniap::report::bench::{section, BenchReport};
 use uniap::sim::{simulate_plan, SimConfig};
+
+/// The pre-refactor UOP: per-candidate cost matrices built from scratch,
+/// dense bucket-grid interval DP, no cross-candidate bound sharing, one
+/// candidate at a time.
+fn uop_dense_reference(
+    profile: &Profile,
+    graph: &uniap::graph::Graph,
+    batch: usize,
+    cfg: &PlannerConfig,
+) -> Option<f64> {
+    let n = profile.env.total_devices();
+    let mut cands: Vec<(usize, usize)> = vec![(1, batch)];
+    for pp in uniap::util::divisors_except_one(n) {
+        if pp > graph.num_layers() {
+            continue;
+        }
+        for c in uniap::util::divisors_except_one(batch) {
+            cands.push((pp, c));
+        }
+    }
+    let mut best: Option<f64> = None;
+    for (pp, c) in cands {
+        let costs = cost_modeling(profile, graph, pp, batch, c);
+        if let Some(p) = chain_dense::solve_chain_dense(graph, &costs, cfg) {
+            best = Some(best.map_or(p.est_tpi, |b: f64| b.min(p.est_tpi)));
+        }
+    }
+    best
+}
 
 fn main() {
     let cfg = PlannerConfig::default();
+    let one_thread = PlannerConfig { threads: 1, ..PlannerConfig::default() };
     let bert = models::bert_huge();
     let env = ClusterEnv::env_b();
     let profile = Profile::analytic(&env, &bert);
+    let mut rep = BenchReport::new("solver_micro");
+    rep.note("model", "BERT-Huge");
+    rep.note("env", "EnvB");
+    rep.note("batch", 16usize);
 
     section("cost model");
-    bench("cost_modeling(BERT-Huge, pp=2, c=4)", 1, 10, || {
+    rep.bench("cost_modeling(BERT-Huge, pp=2, c=4)", 1, 10, || {
         std::hint::black_box(cost_modeling(&profile, &bert, 2, 16, 4));
     });
+    let base2 = CostBase::new(&profile, &bert, 2, 16);
+    rep.bench("CostBase::new(BERT-Huge, pp=2)", 1, 10, || {
+        std::hint::black_box(CostBase::new(&profile, &bert, 2, 16));
+    });
+    rep.bench("CostBase::materialize(c=4)", 1, 10, || {
+        std::hint::black_box(base2.materialize(4, Schedule::GPipe));
+    });
 
-    section("chain solver");
+    section("chain solver: sparse vs dense grid");
     let costs = cost_modeling(&profile, &bert, 2, 16, 4);
-    bench("solve_chain(BERT-Huge, pp=2, c=4)", 1, 5, || {
+    rep.bench("solve_chain sparse(BERT-Huge, pp=2, c=4)", 1, 5, || {
         std::hint::black_box(chain::solve_chain(&bert, &costs, &cfg));
     });
+    rep.bench("solve_chain dense (BERT-Huge, pp=2, c=4)", 1, 5, || {
+        std::hint::black_box(chain_dense::solve_chain_dense(&bert, &costs, &cfg));
+    });
     let costs8 = cost_modeling(&profile, &bert, 8, 16, 4);
-    bench("solve_chain(BERT-Huge, pp=8, c=4)", 1, 5, || {
+    rep.bench("solve_chain sparse(BERT-Huge, pp=8, c=4)", 1, 5, || {
         std::hint::black_box(chain::solve_chain(&bert, &costs8, &cfg));
     });
-    bench("solve_interval(BERT-Huge, 0..33)", 1, 10, || {
-        std::hint::black_box(chain::solve_interval(&costs, 0, 33, 128));
+    rep.bench("solve_chain dense (BERT-Huge, pp=8, c=4)", 1, 5, || {
+        std::hint::black_box(chain_dense::solve_chain_dense(&bert, &costs8, &cfg));
+    });
+    rep.bench("solve_interval(BERT-Huge, 0..33)", 1, 10, || {
+        std::hint::black_box(chain::solve_interval(&costs, 0, 33));
     });
 
     section("MIQP branch & bound");
     let toy = models::synthetic_chain(8, 5e11, 2e7, 2e6);
     let ptoy = Profile::analytic(&env, &toy);
     let ctoy = cost_modeling(&ptoy, &toy, 4, 8, 4);
-    bench("solve_miqp(8 layers, pp=4)", 1, 10, || {
+    rep.bench("solve_miqp(8 layers, pp=4)", 1, 10, || {
         std::hint::black_box(uniap::miqp::solve_miqp(&toy, &ctoy, &cfg));
     });
 
     section("simulator");
     let plan = chain::solve_chain(&bert, &costs, &cfg).unwrap();
     let sim_cfg = SimConfig::default();
-    bench("simulate_plan(BERT-Huge, 5 iters)", 1, 20, || {
+    rep.bench("simulate_plan(BERT-Huge, 5 iters)", 1, 20, || {
         std::hint::black_box(simulate_plan(&bert, &profile, &plan, &sim_cfg));
     });
 
-    section("end-to-end UOP");
-    bench("uop(BERT-Huge, EnvB, B=16)", 0, 3, || {
+    section("end-to-end UOP: before vs after");
+    rep.bench("uop BEFORE dense+rebuild (BERT-Huge, EnvB, B=16, 1 thread)", 0, 3, || {
+        std::hint::black_box(uop_dense_reference(&profile, &bert, 16, &one_thread));
+    });
+    rep.bench("uop AFTER sparse+reuse (BERT-Huge, EnvB, B=16, 1 thread)", 0, 3, || {
+        std::hint::black_box(uop(&profile, &bert, 16, &one_thread));
+    });
+    rep.bench("uop AFTER sparse+reuse (BERT-Huge, EnvB, B=16, threads)", 0, 3, || {
         std::hint::black_box(uop(&profile, &bert, 16, &cfg));
     });
     let swin = models::swin_huge();
     let pswin = Profile::analytic(&ClusterEnv::env_a(), &swin);
-    bench("uop(Swin-Huge, EnvA, B=128)", 0, 1, || {
+    rep.bench("uop(Swin-Huge, EnvA, B=128)", 0, 1, || {
         std::hint::black_box(uop(&pswin, &swin, 128, &cfg));
     });
+
+    if let Some(speedup) = rep.speedup(
+        "uop BEFORE dense+rebuild (BERT-Huge, EnvB, B=16, 1 thread)",
+        "uop AFTER sparse+reuse (BERT-Huge, EnvB, B=16, 1 thread)",
+    ) {
+        println!("\nend-to-end UOP speedup (1 thread, BERT-Huge/EnvB): {speedup:.1}×");
+        rep.note("uop_speedup_bert_envb_1thread", speedup);
+        rep.note("acceptance_target_speedup", 5.0);
+    }
+    match rep.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
 }

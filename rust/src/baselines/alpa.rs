@@ -22,8 +22,6 @@ use crate::graph::Graph;
 use crate::planner::{chain, Plan, PlannerConfig};
 use crate::profiling::Profile;
 
-const ALPA_BUCKETS: usize = 512;
-
 /// Drop FSDP strategies (not in Alpa's space).
 fn no_fsdp(costs: &CostMatrices) -> (CostMatrices, Vec<usize>) {
     let keep: Vec<usize> = costs
@@ -134,7 +132,7 @@ pub fn run(profile: &Profile, graph: &Graph, batch: usize, _cfg: &PlannerConfig)
             let mut assigns: Vec<Vec<Option<Vec<usize>>>> = vec![vec![None; v]; v];
             for l in 0..v {
                 for r in l..v {
-                    if let Some((cost, a)) = chain::solve_interval(&costs, l, r, ALPA_BUCKETS) {
+                    if let Some((cost, a)) = chain::solve_interval(&costs, l, r) {
                         q[l][r] = cost;
                         assigns[l][r] = Some(a);
                     }

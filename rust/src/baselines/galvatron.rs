@@ -15,8 +15,8 @@
 //!   overlap (the source of its 11.17% REE in §4.2; memory is tracked
 //!   exactly, like the real system's per-layer profiling);
 //! * **byte-granularity memory DP** — Galvatron's published DP tracks
-//!   memory exactly; we emulate with a much finer bucket grid than
-//!   UniAP's, which is also why its optimization runs longer.
+//!   memory exactly, which the sparse Pareto interval DP
+//!   ([`chain::solve_interval`]) now does natively.
 
 use std::time::Instant;
 
@@ -25,9 +25,6 @@ use crate::cost::cost_modeling;
 use crate::graph::Graph;
 use crate::planner::{chain, Plan, PlannerConfig};
 use crate::profiling::Profile;
-
-/// Memory-DP granularity emulating Galvatron's exact tracking.
-const GALVATRON_BUCKETS: usize = 4096;
 
 /// Galvatron's internal cost model: optimistic-overlap profile; memory is
 /// the true model (its per-layer memory profiling is accurate — the
@@ -79,7 +76,7 @@ pub fn run(profile: &Profile, graph: &Graph, batch: usize, _cfg: &PlannerConfig)
             let mut choice = vec![0usize; v];
             let mut ok = true;
             for (stage, &(l, r)) in parts.iter().enumerate() {
-                match chain::solve_interval(&costs, l, r, GALVATRON_BUCKETS) {
+                match chain::solve_interval(&costs, l, r) {
                     Some((_, assign)) => {
                         for (off, &k) in assign.iter().enumerate() {
                             placement[l + off] = stage;

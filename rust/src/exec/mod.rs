@@ -2,14 +2,16 @@
 //!
 //! This is the "interpreting the parallel strategies into the execution
 //! plan" end of the flowchart, made concrete: the planner's [`Plan`]
-//! chooses `pp_size` and the micro-batch count; [`pipeline`] drives the
-//! compiled stage programs (`artifacts/stage_*.hlo.txt`, produced by
-//! `python/compile/aot.py` from the JAX/Pallas model) through the GPipe
-//! schedule with gradient accumulation; [`optimizer`] applies Adam in
-//! Rust; [`data`] feeds a synthetic corpus. Python is never involved.
+//! chooses `pp_size` and the micro-batch count; `pipeline` (feature
+//! `pjrt` — it drives PJRT executables) runs the compiled stage programs
+//! (`artifacts/stage_*.hlo.txt`, produced by `python/compile/aot.py` from
+//! the JAX/Pallas model) through the GPipe schedule with gradient
+//! accumulation; [`optimizer`] applies Adam in Rust; [`data`] feeds a
+//! synthetic corpus. Python is never involved.
 //!
 //! [`Plan`]: crate::planner::Plan
 
 pub mod data;
 pub mod optimizer;
+#[cfg(feature = "pjrt")]
 pub mod pipeline;

@@ -29,7 +29,7 @@
 //! | [`planner`] | chain-exact solver, QIP intra-only, UOP (Alg. 1) |
 //! | [`baselines`] | Galvatron, Alpa-like, Megatron grid, DeepSpeed, inter-/intra-only |
 //! | [`sim`] | discrete-event GPipe pipeline simulator (ground truth) |
-//! | [`runtime`] | PJRT artifact loading + execution |
+//! | `runtime` | PJRT artifact loading + execution (feature `pjrt`) |
 //! | [`exec`] | real pipeline executor: microbatch schedule, Adam, data |
 //! | [`metrics`] | TPI, throughput, REE, MFU, speedups |
 //! | [`report`] | markdown tables + hand-rolled bench harness |
@@ -46,6 +46,7 @@ pub mod miqp;
 pub mod planner;
 pub mod profiling;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod strategy;

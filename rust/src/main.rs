@@ -153,6 +153,17 @@ fn cmd_profile(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<(), String> {
+    Err("the `train` command needs the `pjrt` feature (PJRT runtime / xla crate)".to_string())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_calibrate(_args: &Args) -> Result<(), String> {
+    Err("the `calibrate` command needs the `pjrt` feature (PJRT runtime / xla crate)".to_string())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<(), String> {
     let dir = args.get("artifacts", "artifacts");
     let steps = args.get_usize("steps", 50)?;
@@ -176,6 +187,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_calibrate(args: &Args) -> Result<(), String> {
     let size = args.get_usize("size", 512)?;
     let iters = args.get_usize("iters", 8)?;

@@ -27,6 +27,7 @@
 
 pub mod formulation;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use crate::cost::CostMatrices;
@@ -45,6 +46,19 @@ struct Search<'a> {
     /// preds[v] = edges (index, u) with target v among already-assigned u
     preds: Vec<Vec<(usize, usize)>>,
     nodes: u64,
+    /// Sweep-wide incumbent published by the UOP (best TPI bits); branches
+    /// that cannot strictly beat it are cut even before this solve finds
+    /// its own first leaf.
+    incumbent: Option<&'a AtomicU64>,
+}
+
+/// Pruning threshold from a sweep incumbent: a 1e-9 relative slack keeps
+/// solutions that tie the incumbent reachable (determinism; see
+/// `chain::solve_chain_bounded`).
+fn incumbent_cutoff(incumbent: Option<&AtomicU64>) -> f64 {
+    incumbent.map_or(f64::INFINITY, |a| {
+        f64::from_bits(a.load(Ordering::Relaxed)) * (1.0 + 1e-9)
+    })
 }
 
 impl<'a> Search<'a> {
@@ -68,8 +82,16 @@ impl<'a> Search<'a> {
         o_acc: &mut Vec<f64>,
     ) {
         self.nodes += 1;
-        if self.nodes % 4096 == 0 && Instant::now() > self.deadline {
-            self.timed_out = true;
+        if self.nodes % 4096 == 0 {
+            if Instant::now() > self.deadline {
+                self.timed_out = true;
+            }
+            // refresh the sweep-wide incumbent: another candidate may have
+            // published a better bound since this solve started
+            let cut = incumbent_cutoff(self.incumbent);
+            if cut < self.best_obj {
+                self.best_obj = cut;
+            }
         }
         if self.timed_out {
             return;
@@ -170,6 +192,20 @@ impl<'a> Search<'a> {
 /// Solve the MIQP for one `(pp_size, c)` candidate. Exact within the time
 /// limit; returns the best incumbent afterwards; `None` = infeasible.
 pub fn solve_miqp(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> Option<Plan> {
+    solve_miqp_bounded(graph, costs, cfg, None)
+}
+
+/// [`solve_miqp`] seeded with the UOP sweep's shared incumbent: the
+/// branch-and-bound starts with `best_obj` at (slightly above) the global
+/// best TPI, so branches that cannot strictly beat another candidate's
+/// solution are pruned immediately. A candidate whose optimum ties the
+/// incumbent still returns it.
+pub fn solve_miqp_bounded(
+    graph: &Graph,
+    costs: &CostMatrices,
+    cfg: &PlannerConfig,
+    incumbent: Option<&AtomicU64>,
+) -> Option<Plan> {
     let v = graph.num_layers();
     if costs.pp_size > v {
         return None;
@@ -193,10 +229,11 @@ pub fn solve_miqp(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> O
         suffix_min,
         deadline: Instant::now() + std::time::Duration::from_secs_f64(cfg.time_limit),
         timed_out: false,
-        best_obj: f64::INFINITY,
+        best_obj: incumbent_cutoff(incumbent),
         best: None,
         preds,
         nodes: 0,
+        incumbent,
     };
     let mut placement = Vec::with_capacity(v);
     let mut choice = Vec::with_capacity(v);

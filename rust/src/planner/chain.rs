@@ -3,21 +3,36 @@
 //! On a chain, the order-preserving constraint (6a–6c) makes every pipeline
 //! stage a contiguous layer interval, so the joint problem factorises:
 //!
-//! 1. **Interval DP** — for every interval `[l, r]` and boundary-strategy
-//!    pair `(k_in, k_out)`, the cheapest strategy assignment of the
-//!    interior, subject to the memory constraint (5) tracked in quantised
-//!    buckets (rounded up, so quantisation never admits an infeasible
-//!    stage). For a fixed interval and boundary pair, the stage cost `p_i`
-//!    is both the "sum" and the "max" contribution of the stage, so
-//!    minimising it is optimal for the whole objective — this makes the
-//!    two-level decomposition *exact*, not a heuristic (see DESIGN.md).
+//! 1. **Pareto-sparse interval DP** — for every interval `[l, r]` and
+//!    boundary-strategy pair `(k_in, k_out)`, the cheapest strategy
+//!    assignment of the interior, subject to the memory constraint (5).
+//!    Memory is tracked *exactly*: instead of the dense quantised bucket
+//!    grid of the original engine (kept as [`crate::planner::chain_dense`]
+//!    for cross-validation), each `(k_in, k_cur)` state holds a sparse
+//!    Pareto frontier of `(mem, cost)` points — memory ascending, cost
+//!    strictly descending — so only states where extra memory actually
+//!    buys a cheaper stage survive. This removes both the
+//!    `O(buckets)`-wide grid scan (overwhelmingly `INF` cells) and the
+//!    quantisation-induced phantom memory of the rounded-up buckets
+//!    (DESIGN.md §Pareto-sparse interval DP; EXPERIMENTS.md §Perf logs
+//!    the measured deltas). For a fixed interval and boundary pair, the
+//!    stage cost `p_i` is both the "sum" and the "max" contribution of
+//!    the stage, so minimising it is optimal for the whole objective —
+//!    this makes the two-level decomposition *exact*, not a heuristic
+//!    (see DESIGN.md).
 //! 2. **Pipeline Pareto DP** — compose intervals left to right keeping the
 //!    Pareto frontier over `(Σ costs so far, max stage/comm cost so far)`;
 //!    the `(c−1)·max(P∪O)` term of objective (2) is resolved exactly at
-//!    the end.
+//!    the end. When the UOP sweep publishes a global incumbent TPI, points
+//!    whose admissible completion bound cannot *strictly* beat it are cut
+//!    (equal-objective solutions are kept, so the returned optimum is
+//!    unchanged and candidate selection stays deterministic).
 //!
 //! The result is provably the same optimum the MIQP formulation yields
-//! (property-tested against brute force and the MIQP engine).
+//! (property-tested against brute force and the MIQP engine, including
+//! bit-identical plans on randomized chains — `rust/tests/chain_equivalence.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::cost::CostMatrices;
 use crate::graph::Graph;
@@ -39,206 +54,239 @@ impl IntervalCosts {
     }
 }
 
-/// Context shared by the solve.
-struct ChainCtx<'a> {
-    costs: &'a CostMatrices,
-    /// memory bucket count per layer/strategy (rounded up)
-    mb: Vec<Vec<usize>>,
-    buckets: usize,
+/// One point of a memory/cost Pareto frontier: exact accumulated stage
+/// memory and the cheapest interior cost achieving it.
+#[derive(Debug, Clone, Copy)]
+struct MemCost {
+    mem: f64,
+    cost: f64,
 }
 
-impl<'a> ChainCtx<'a> {
-    fn new(costs: &'a CostMatrices, buckets: usize) -> ChainCtx<'a> {
-        let bucket_size = costs.mem_limit / buckets as f64;
-        let mb = costs
-            .m
-            .iter()
-            .map(|row| {
-                row.iter()
-                    .map(|&m| {
-                        if m <= 0.0 {
-                            0
-                        } else {
-                            ((m / bucket_size).ceil() as usize).max(1)
-                        }
-                    })
-                    .collect()
-            })
-            .collect();
-        ChainCtx { costs, mb, buckets }
+/// Compact `src` into a Pareto frontier in `dst`: memory strictly
+/// ascending, cost strictly descending (so `dst.last()` is the cheapest
+/// feasible point). `src` is consumed as scratch.
+fn pareto_compact_into(src: &mut Vec<MemCost>, dst: &mut Vec<MemCost>) {
+    dst.clear();
+    if src.is_empty() {
+        return;
     }
+    src.sort_unstable_by(|a, b| {
+        a.mem
+            .partial_cmp(&b.mem)
+            .unwrap()
+            .then(a.cost.partial_cmp(&b.cost).unwrap())
+    });
+    let mut best = INF;
+    for &p in src.iter() {
+        if p.cost < best {
+            best = p.cost;
+            dst.push(p);
+        }
+    }
+    src.clear();
+}
 
-    /// Run the interval DP for every `l`, producing the boundary-pair cost
-    /// table. `O(V² · S² · buckets · S)` worst case.
-    ///
-    /// §Perf optimisations (EXPERIMENTS.md §Perf logs the deltas):
-    /// * **prefix-band memory scan** — after processing layers `l..=r`,
-    ///   every reachable memory state lies in
-    ///   `[Σ min_k mb, Σ max_k mb]`; the scan is clamped to that band
-    ///   instead of all `buckets+1` cells (big win on the O(V²) short
-    ///   intervals, where the band is a handful of buckets).
-    /// * **hoisted transition costs** — `A[r][knew] + R[edge][kcur][knew]`
-    ///   is computed once per `(kcur, knew)` pair, not per memory cell.
-    /// * **early stage-infeasibility cut** — once the minimal prefix
-    ///   exceeds the budget, no longer interval starting at `l` fits, so
-    ///   the `r` loop stops.
-    fn interval_costs(&self) -> IntervalCosts {
-        let v = self.costs.num_layers();
-        let s = self.costs.num_strategies();
-        let nb = self.buckets + 1;
-        let mut table = vec![vec![INF; s * s]; v * v];
+/// Run the sparse interval DP for every `l`, producing the boundary-pair
+/// cost table. `O(V² · S³ · F)` where `F` is the typical frontier length —
+/// tens in practice vs. the dense engine's 1024-cell bucket grid.
+///
+/// §Perf structure (EXPERIMENTS.md §Perf logs the deltas):
+/// * **sparse frontiers** — only `(mem, cost)` points where extra memory
+///   buys a strictly cheaper stage survive; the dense grid's `INF` cells
+///   are never touched.
+/// * **hoisted transition costs** — `A[r][knew] + R[edge][kcur][knew]` is
+///   computed once per `(kcur, knew)` pair, not per frontier point.
+/// * **early stage-infeasibility cut** — frontier points whose memory
+///   exceeds the budget are dropped at insertion (frontiers are memory-
+///   ascending, so the scan breaks at the first overflow), and the `r`
+///   loop stops once even the cheapest-memory prefix no longer fits.
+/// * **incumbent stage cut** — objective (2) satisfies
+///   `TPI ≥ c · pᵢ` for every stage `i` (the stage appears in both the
+///   `Σ` and the `max` terms), so when the UOP sweep has published an
+///   incumbent, prefixes costing more than `incumbent/c` (`stage_cut`)
+///   are dropped: they cannot appear in any strictly improving plan.
+///   Interval costs are monotone in the interval, so this empties the
+///   frontiers (and stops the `r` loop) for dominated candidates early.
+///   Pass `INF` for the unbounded (plan-identical) solve.
+fn interval_costs(costs: &CostMatrices, stage_cut: f64) -> IntervalCosts {
+    let v = costs.num_layers();
+    let s = costs.num_strategies();
+    let limit = costs.mem_limit;
+    let mut table = vec![vec![INF; s * s]; v * v];
 
-        // per-layer min/max bucket increments for the band bounds
-        let min_mb: Vec<usize> = self.mb.iter().map(|row| *row.iter().min().unwrap()).collect();
-        let max_mb: Vec<usize> = self.mb.iter().map(|row| *row.iter().max().unwrap()).collect();
+    // per-layer minimum memory for the early infeasibility cut
+    let min_m: Vec<f64> = costs
+        .m
+        .iter()
+        .map(|row| row.iter().cloned().fold(INF, f64::min))
+        .collect();
 
-        // dp[kin][kcur][mem] flattened: (kin * s + kcur) * nb + mem
-        let mut dp = vec![INF; s * s * nb];
-        let mut ndp = vec![INF; s * s * nb];
-        let mut trans = vec![0.0f64; s * s]; // hoisted A + R per (kcur, knew)
-        for l in 0..v {
-            let mut band_lo = min_mb[l];
-            let mut band_hi = max_mb[l].min(self.buckets);
-            dp.iter_mut().for_each(|x| *x = INF);
-            for k in 0..s {
-                let need = self.mb[l][k];
-                if need <= self.buckets {
-                    let idx = (k * s + k) * nb + need;
-                    let cost = self.costs.a[l][k];
-                    if cost < dp[idx] {
-                        dp[idx] = cost;
-                    }
-                }
+    // fronts[kin * s + kcur] = Pareto frontier of interval prefixes
+    let mut fronts: Vec<Vec<MemCost>> = vec![Vec::new(); s * s];
+    let mut next: Vec<Vec<MemCost>> = vec![Vec::new(); s * s];
+    let mut scratch: Vec<MemCost> = Vec::new();
+    for l in 0..v {
+        for f in fronts.iter_mut() {
+            f.clear();
+        }
+        for k in 0..s {
+            let mem = costs.m[l][k];
+            if mem <= limit && costs.a[l][k] <= stage_cut {
+                fronts[k * s + k].push(MemCost { mem, cost: costs.a[l][k] });
+                table[l * v + l][k * s + k] = costs.a[l][k];
             }
-            // record [l, l]
-            for k in 0..s {
-                let mut best = INF;
-                for mem in band_lo..=band_hi {
-                    best = best.min(dp[(k * s + k) * nb + mem]);
-                }
-                table[l * v + l][k * s + k] = best;
+        }
+        let mut min_prefix = min_m[l];
+        if min_prefix > limit {
+            continue; // layer l alone cannot fit anywhere
+        }
+        for r in l + 1..v {
+            min_prefix += min_m[r];
+            if min_prefix > limit {
+                break; // even the cheapest strategies no longer fit
             }
-            for r in l + 1..v {
-                let next_lo = band_lo + min_mb[r];
-                if next_lo > self.buckets {
-                    break; // even the cheapest strategies no longer fit
-                }
-                let next_hi = (band_hi + max_mb[r]).min(self.buckets);
-                let edge = r - 1; // chain edge (r-1) → r
-                for kcur in 0..s {
-                    for knew in 0..s {
-                        trans[kcur * s + knew] =
-                            self.costs.a[r][knew] + self.costs.r[edge][kcur][knew];
-                    }
-                }
-                // clear only the writable band of ndp
-                for kk in 0..s * s {
-                    let base = kk * nb;
-                    ndp[base + next_lo..=base + next_hi].iter_mut().for_each(|x| *x = INF);
-                }
-                for kin in 0..s {
+            let edge = r - 1; // chain edge (r-1) → r
+            let cell = &mut table[l * v + r];
+            for kin in 0..s {
+                for knew in 0..s {
+                    let madd = costs.m[r][knew];
                     for kcur in 0..s {
-                        let base = (kin * s + kcur) * nb;
-                        for mem in band_lo..=band_hi {
-                            let cur = dp[base + mem];
-                            if !cur.is_finite() {
-                                continue;
-                            }
-                            for knew in 0..s {
-                                let nm = mem + self.mb[r][knew];
-                                if nm > self.buckets {
-                                    continue;
-                                }
-                                let cost = cur + trans[kcur * s + knew];
-                                let nidx = (kin * s + knew) * nb + nm;
-                                if cost < ndp[nidx] {
-                                    ndp[nidx] = cost;
-                                }
-                            }
-                        }
-                    }
-                }
-                std::mem::swap(&mut dp, &mut ndp);
-                band_lo = next_lo;
-                band_hi = next_hi;
-                let cell = &mut table[l * v + r];
-                for kin in 0..s {
-                    for kout in 0..s {
-                        let mut best = INF;
-                        let base = (kin * s + kout) * nb;
-                        for mem in band_lo..=band_hi {
-                            best = best.min(dp[base + mem]);
-                        }
-                        cell[kin * s + kout] = best;
-                    }
-                }
-            }
-        }
-        IntervalCosts { v, s, table }
-    }
-
-    /// Recover the per-layer strategy assignment achieving
-    /// `interval_costs()[l..=r][kin][kout]` by re-running the DP with
-    /// parent pointers (cheap: one interval).
-    fn interval_assignment(&self, l: usize, r: usize, kin: usize, kout: usize) -> Option<Vec<usize>> {
-        let s = self.costs.num_strategies();
-        let nb = self.buckets + 1;
-        if self.mb[l][kin] > self.buckets {
-            return None;
-        }
-        // dp[layer][kcur * nb + mem]
-        let len = r - l + 1;
-        let mut dp = vec![vec![INF; s * nb]; len];
-        let mut parent = vec![vec![(usize::MAX, usize::MAX); s * nb]; len];
-        dp[0][kin * nb + self.mb[l][kin]] = self.costs.a[l][kin];
-        for (step, u) in (l + 1..=r).enumerate() {
-            let edge = u - 1;
-            for kcur in 0..s {
-                for mem in 0..nb {
-                    let cur = dp[step][kcur * nb + mem];
-                    if !cur.is_finite() {
-                        continue;
-                    }
-                    for knew in 0..s {
-                        let nm = mem + self.mb[u][knew];
-                        if nm > self.buckets {
+                        let cur = &fronts[kin * s + kcur];
+                        if cur.is_empty() {
                             continue;
                         }
-                        let cost = cur + self.costs.a[u][knew] + self.costs.r[edge][kcur][knew];
-                        let nidx = knew * nb + nm;
-                        if cost < dp[step + 1][nidx] {
-                            dp[step + 1][nidx] = cost;
-                            parent[step + 1][nidx] = (kcur, mem);
+                        let trans = costs.a[r][knew] + costs.r[edge][kcur][knew];
+                        for p in cur {
+                            let nm = p.mem + madd;
+                            if nm > limit {
+                                break; // memory ascending — the rest overflow too
+                            }
+                            let nc = p.cost + trans;
+                            if nc <= stage_cut {
+                                scratch.push(MemCost { mem: nm, cost: nc });
+                            }
                         }
+                    }
+                    let dst = &mut next[kin * s + knew];
+                    pareto_compact_into(&mut scratch, dst);
+                    if let Some(last) = dst.last() {
+                        cell[kin * s + knew] = last.cost;
                     }
                 }
             }
-        }
-        // best end state with kcur = kout
-        let mut best = INF;
-        let mut best_mem = usize::MAX;
-        for mem in 0..nb {
-            let val = dp[len - 1][kout * nb + mem];
-            if val < best {
-                best = val;
-                best_mem = mem;
+            std::mem::swap(&mut fronts, &mut next);
+            if fronts.iter().all(|f| f.is_empty()) {
+                break; // no feasible prefix survives for any boundary pair
             }
         }
-        if !best.is_finite() {
-            return None;
-        }
-        let mut out = vec![0usize; len];
-        let (mut k, mut mem) = (kout, best_mem);
-        for step in (0..len).rev() {
-            out[step] = k;
-            if step > 0 {
-                let (pk, pm) = parent[step][k * nb + mem];
-                k = pk;
-                mem = pm;
-            }
-        }
-        Some(out)
     }
+    IntervalCosts { v, s, table }
+}
+
+/// A frontier point with parent pointers, for assignment recovery.
+#[derive(Debug, Clone, Copy)]
+struct Node {
+    mem: f64,
+    cost: f64,
+    prev_k: usize,
+    prev_idx: usize,
+}
+
+/// Sparse forward DP over one layer interval `[l, r]`, keeping per-strategy
+/// `(mem, cost)` Pareto frontiers with parent pointers. `start` restricts
+/// the entry strategy of layer `l` (boundary-conditioned recovery); `None`
+/// allows any entry strategy (the hierarchical-baseline stage solve).
+fn interval_dp_nodes(
+    costs: &CostMatrices,
+    l: usize,
+    r: usize,
+    start: Option<usize>,
+) -> Vec<Vec<Vec<Node>>> {
+    let s = costs.num_strategies();
+    let limit = costs.mem_limit;
+    let len = r - l + 1;
+    let mut layers: Vec<Vec<Vec<Node>>> = Vec::with_capacity(len);
+    let mut first: Vec<Vec<Node>> = vec![Vec::new(); s];
+    for (k, slot) in first.iter_mut().enumerate() {
+        if start.is_some_and(|kin| k != kin) {
+            continue;
+        }
+        let mem = costs.m[l][k];
+        if mem <= limit {
+            slot.push(Node { mem, cost: costs.a[l][k], prev_k: usize::MAX, prev_idx: usize::MAX });
+        }
+    }
+    layers.push(first);
+    for (step, u) in (l + 1..=r).enumerate() {
+        let edge = u - 1;
+        let mut cur: Vec<Vec<Node>> = vec![Vec::new(); s];
+        for (knew, dst) in cur.iter_mut().enumerate() {
+            let madd = costs.m[u][knew];
+            let mut cand: Vec<Node> = Vec::new();
+            for kcur in 0..s {
+                let prev = &layers[step][kcur];
+                if prev.is_empty() {
+                    continue;
+                }
+                let trans = costs.a[u][knew] + costs.r[edge][kcur][knew];
+                for (idx, n) in prev.iter().enumerate() {
+                    let nm = n.mem + madd;
+                    if nm > limit {
+                        break; // frontier memory ascending — the rest overflow
+                    }
+                    cand.push(Node { mem: nm, cost: n.cost + trans, prev_k: kcur, prev_idx: idx });
+                }
+            }
+            cand.sort_unstable_by(|a, b| {
+                a.mem
+                    .partial_cmp(&b.mem)
+                    .unwrap()
+                    .then(a.cost.partial_cmp(&b.cost).unwrap())
+            });
+            let mut best = INF;
+            for n in cand {
+                if n.cost < best {
+                    best = n.cost;
+                    dst.push(n);
+                }
+            }
+        }
+        layers.push(cur);
+    }
+    layers
+}
+
+/// Walk parent pointers from the end node back to layer `l`.
+fn backtrack_nodes(layers: &[Vec<Vec<Node>>], end_k: usize, end_idx: usize) -> Vec<usize> {
+    let len = layers.len();
+    let mut out = vec![0usize; len];
+    let (mut k, mut idx) = (end_k, end_idx);
+    for step in (0..len).rev() {
+        out[step] = k;
+        if step > 0 {
+            let n = layers[step][k][idx];
+            k = n.prev_k;
+            idx = n.prev_idx;
+        }
+    }
+    out
+}
+
+/// Recover the per-layer strategy assignment achieving
+/// `interval_costs()[l..=r][kin][kout]` by re-running the sparse DP with
+/// parent pointers (cheap: one interval).
+fn interval_assignment(
+    costs: &CostMatrices,
+    l: usize,
+    r: usize,
+    kin: usize,
+    kout: usize,
+) -> Option<Vec<usize>> {
+    let layers = interval_dp_nodes(costs, l, r, Some(kin));
+    let front = &layers.last().unwrap()[kout];
+    // frontiers are cost-descending: the last point is the cheapest
+    let idx = front.len().checked_sub(1)?;
+    Some(backtrack_nodes(&layers, kout, idx))
 }
 
 /// A Pareto point in the pipeline DP with backtracking info.
@@ -270,6 +318,21 @@ fn pareto_insert(front: &mut Vec<Point>, p: Point) {
 /// Solve the joint problem for one `(pp_size, c)` candidate on a chain.
 /// Returns `None` when no feasible assignment exists (the paper's `SOL×`).
 pub fn solve_chain(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> Option<Plan> {
+    solve_chain_bounded(graph, costs, cfg, None)
+}
+
+/// [`solve_chain`] with an optional sweep-wide incumbent bound: the bits of
+/// the best TPI found so far across all UOP candidates (positive `f64`s
+/// compare monotonically as `u64` bits). Branches whose admissible
+/// completion bound cannot *strictly* beat the incumbent are cut; a
+/// candidate whose optimum ties or beats the incumbent still returns that
+/// optimum, so the sweep's returned plan is unchanged.
+pub fn solve_chain_bounded(
+    graph: &Graph,
+    costs: &CostMatrices,
+    _cfg: &PlannerConfig,
+    incumbent: Option<&AtomicU64>,
+) -> Option<Plan> {
     assert!(graph.is_chain(), "chain solver requires a chain graph");
     let v = graph.num_layers();
     let s = costs.num_strategies();
@@ -279,21 +342,42 @@ pub fn solve_chain(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> 
         return None; // (7b): at least one layer per stage
     }
 
-    let ctx = ChainCtx::new(costs, cfg.mem_buckets);
-    let ic = ctx.interval_costs();
+    // The cut carries a 1e-9 relative slack so that floating-point noise in
+    // the admissible bound can never prune a path whose true objective ties
+    // the incumbent — the returned optimum is provably unchanged.
+    let cut = || {
+        incumbent.map_or(INF, |a| {
+            let inc = f64::from_bits(a.load(Ordering::Relaxed));
+            inc * (1.0 + 1e-9)
+        })
+    };
 
-    // fronts[stage][r][kout] — Pareto sets; we keep two stage levels and a
-    // full history for backtracking.
+    // Objective (2) ≥ c · pᵢ for any stage, so interval prefixes costing
+    // more than incumbent/c can never improve on the incumbent.
+    let ic = interval_costs(costs, cut() / c);
+
+    // Admissible completion bound for incumbent pruning: every layer after
+    // the current stage end contributes at least its cheapest per-micro
+    // cost to some p_i, and the bottleneck term never shrinks.
+    let mut suffix_min = vec![0.0; v + 1];
+    for u in (0..v).rev() {
+        let row_min = costs.a[u].iter().cloned().fold(INF, f64::min);
+        suffix_min[u] = suffix_min[u + 1] + row_min;
+    }
+
+    // fronts[stage][r][kout] — Pareto sets; we keep a full history for
+    // backtracking.
     let mut history: Vec<Vec<Vec<Vec<Point>>>> = Vec::with_capacity(pp);
 
     // Stage 0: intervals [0, r].
     let mut front0 = vec![vec![Vec::<Point>::new(); s]; v];
-    for r in 0..v {
+    let cut0 = cut();
+    for (r, row) in front0.iter_mut().enumerate() {
         // leave at least one layer for each remaining stage
         if v - 1 - r < pp - 1 {
             continue;
         }
-        for kout in 0..s {
+        for (kout, front) in row.iter_mut().enumerate() {
             let mut best = INF;
             let mut best_kin = 0;
             for kin in 0..s {
@@ -303,10 +387,17 @@ pub fn solve_chain(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> 
                     best_kin = kin;
                 }
             }
-            if best.is_finite() {
+            if best.is_finite() && best + suffix_min[r + 1] + (c - 1.0) * best <= cut0 {
                 pareto_insert(
-                    &mut front0[r][kout],
-                    Point { sum: best, mx: best, prev_r: usize::MAX, prev_kout: 0, prev_idx: 0, kin: best_kin },
+                    front,
+                    Point {
+                        sum: best,
+                        mx: best,
+                        prev_r: usize::MAX,
+                        prev_kout: 0,
+                        prev_idx: 0,
+                        kin: best_kin,
+                    },
                 );
             }
         }
@@ -316,6 +407,7 @@ pub fn solve_chain(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> 
     for stage in 1..pp {
         let prev = &history[stage - 1];
         let mut next = vec![vec![Vec::<Point>::new(); s]; v];
+        let cut_s = cut();
         for r in stage - 1..v {
             for kout in 0..s {
                 for (pidx, pt) in prev[r][kout].iter().enumerate() {
@@ -331,9 +423,19 @@ pub fn solve_chain(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> 
                                 }
                                 let sum = pt.sum + o + p_cost;
                                 let mx = pt.mx.max(o).max(p_cost);
+                                if sum + suffix_min[r2 + 1] + (c - 1.0) * mx > cut_s {
+                                    continue; // cannot strictly beat the incumbent
+                                }
                                 pareto_insert(
                                     &mut next[r2][kout2],
-                                    Point { sum, mx, prev_r: r, prev_kout: kout, prev_idx: pidx, kin: kin2 },
+                                    Point {
+                                        sum,
+                                        mx,
+                                        prev_r: r,
+                                        prev_kout: kout,
+                                        prev_idx: pidx,
+                                        kin: kin2,
+                                    },
                                 );
                             }
                         }
@@ -378,7 +480,7 @@ pub fn solve_chain(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> 
     let mut placement = vec![0usize; v];
     let mut choice = vec![0usize; v];
     for (stage, &(l, r, kin, kout)) in bounds.iter().enumerate() {
-        let assign = ctx.interval_assignment(l, r, kin, kout)?;
+        let assign = interval_assignment(costs, l, r, kin, kout)?;
         for (off, &k) in assign.iter().enumerate() {
             placement[l + off] = stage;
             choice[l + off] = k;
@@ -403,74 +505,26 @@ pub fn solve_chain(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> 
 
 /// Cheapest strategy assignment for the layer interval `[l, r]` treated as
 /// one stage, *without* boundary-strategy conditioning: minimise
-/// `Σ A + Σ R` under memory (5). Hierarchical baselines (Galvatron's
-/// per-stage DP, Alpa's per-interval intra-op solve) use this — ignoring
-/// the cross-stage boundary coupling is precisely one of the
-/// suboptimalities UniAP's joint formulation removes.
-pub fn solve_interval(costs: &CostMatrices, l: usize, r: usize, buckets: usize) -> Option<(f64, Vec<usize>)> {
-    let s = costs.num_strategies();
-    let ctx = ChainCtx::new(costs, buckets);
-    let nb = buckets + 1;
-    let len = r - l + 1;
-    let mut dp = vec![INF; s * nb];
-    let mut parent: Vec<Vec<(usize, usize)>> = vec![vec![(usize::MAX, usize::MAX); s * nb]; len];
-    for k in 0..s {
-        let need = ctx.mb[l][k];
-        if need <= buckets {
-            dp[k * nb + need] = dp[k * nb + need].min(costs.a[l][k]);
-        }
-    }
-    let mut ndp = vec![INF; s * nb];
-    for (step, u) in (l + 1..=r).enumerate() {
-        ndp.iter_mut().for_each(|x| *x = INF);
-        let edge = u - 1;
-        for kcur in 0..s {
-            for mem in 0..nb {
-                let cur = dp[kcur * nb + mem];
-                if !cur.is_finite() {
-                    continue;
-                }
-                for knew in 0..s {
-                    let nm = mem + ctx.mb[u][knew];
-                    if nm > buckets {
-                        continue;
-                    }
-                    let cost = cur + costs.a[u][knew] + costs.r[edge][kcur][knew];
-                    if cost < ndp[knew * nb + nm] {
-                        ndp[knew * nb + nm] = cost;
-                        parent[step + 1][knew * nb + nm] = (kcur, mem);
-                    }
-                }
-            }
-        }
-        std::mem::swap(&mut dp, &mut ndp);
-    }
-    // best terminal state
-    let (mut best, mut bk, mut bm) = (INF, usize::MAX, usize::MAX);
-    for k in 0..s {
-        for mem in 0..nb {
-            let v = dp[k * nb + mem];
-            if v < best {
-                best = v;
-                bk = k;
-                bm = mem;
+/// `Σ A + Σ R` under memory (5), with memory tracked exactly by the sparse
+/// Pareto DP. Hierarchical baselines (Galvatron's per-stage DP, Alpa's
+/// per-interval intra-op solve) use this — ignoring the cross-stage
+/// boundary coupling is precisely one of the suboptimalities UniAP's joint
+/// formulation removes.
+pub fn solve_interval(costs: &CostMatrices, l: usize, r: usize) -> Option<(f64, Vec<usize>)> {
+    let layers = interval_dp_nodes(costs, l, r, None);
+    let end = layers.last().unwrap();
+    let mut best = INF;
+    let mut at: Option<(usize, usize)> = None;
+    for (k, front) in end.iter().enumerate() {
+        if let Some(n) = front.last() {
+            if n.cost < best {
+                best = n.cost;
+                at = Some((k, front.len() - 1));
             }
         }
     }
-    if !best.is_finite() {
-        return None;
-    }
-    let mut out = vec![0usize; len];
-    let (mut k, mut mem) = (bk, bm);
-    for step in (0..len).rev() {
-        out[step] = k;
-        if step > 0 {
-            let (pk, pm) = parent[step][k * nb + mem];
-            k = pk;
-            mem = pm;
-        }
-    }
-    Some((best, out))
+    let (k, idx) = at?;
+    Some((best, backtrack_nodes(&layers, k, idx)))
 }
 
 /// Brute-force reference solver (exponential; tests only): enumerate every
@@ -552,13 +606,13 @@ mod tests {
     fn chain_matches_brute_force_small() {
         for (nl, pp, c) in [(4usize, 2usize, 2usize), (5, 2, 4), (4, 4, 2), (6, 2, 2)] {
             let (g, costs) = costs_for(nl, pp, 8, c);
-            let cfg = PlannerConfig { mem_buckets: 512, ..Default::default() };
+            let cfg = PlannerConfig::default();
             let plan = solve_chain(&g, &costs, &cfg);
             let bf = brute_force(&g, &costs);
             match (plan, bf) {
                 (Some(p), Some((tpi_bf, _, _))) => {
                     let rel = (p.est_tpi - tpi_bf).abs() / tpi_bf;
-                    assert!(rel < 1e-6, "nl={nl} pp={pp} c={c}: chain {} vs bf {tpi_bf}", p.est_tpi);
+                    assert!(rel < 1e-9, "nl={nl} pp={pp} c={c}: chain {} vs bf {tpi_bf}", p.est_tpi);
                 }
                 (None, None) => {}
                 (a, b) => panic!("feasibility mismatch nl={nl} pp={pp}: {:?} vs {:?}", a.is_some(), b.is_some()),
@@ -601,6 +655,61 @@ mod tests {
         assert_eq!(f.len(), 3);
         pareto_insert(&mut f, mk(0.5, 0.5)); // dominates everything
         assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn mem_cost_frontiers_are_sorted_and_thin() {
+        let mut src = vec![
+            MemCost { mem: 3.0, cost: 5.0 },
+            MemCost { mem: 1.0, cost: 9.0 },
+            MemCost { mem: 2.0, cost: 9.5 }, // dominated by (1.0, 9.0)
+            MemCost { mem: 3.0, cost: 4.0 }, // beats the other mem=3 point
+            MemCost { mem: 4.0, cost: 4.0 }, // dominated (same cost, more mem)
+        ];
+        let mut dst = Vec::new();
+        pareto_compact_into(&mut src, &mut dst);
+        let mems: Vec<f64> = dst.iter().map(|p| p.mem).collect();
+        let cost: Vec<f64> = dst.iter().map(|p| p.cost).collect();
+        assert_eq!(mems, vec![1.0, 3.0]);
+        assert_eq!(cost, vec![9.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_interval_matches_boundary_free_minimum() {
+        // On a memory-slack interval, the stage solve must equal the min
+        // over boundary pairs of the conditioned interval DP.
+        let (_, costs) = costs_for(6, 2, 8, 4);
+        let ic = interval_costs(&costs, INF);
+        let s = costs.num_strategies();
+        for (l, r) in [(0usize, 2usize), (1, 4), (0, 5)] {
+            let (got, assign) = solve_interval(&costs, l, r).expect("feasible");
+            let mut want = INF;
+            for kin in 0..s {
+                for kout in 0..s {
+                    want = want.min(ic.get(l, r, kin, kout));
+                }
+            }
+            assert!((got - want).abs() <= 1e-12 * want.max(1e-12), "[{l},{r}]: {got} vs {want}");
+            assert_eq!(assign.len(), r - l + 1);
+        }
+    }
+
+    #[test]
+    fn incumbent_bound_preserves_the_optimum() {
+        // Publishing the candidate's own optimum as the incumbent must not
+        // change the result (equal objectives survive the strict cut).
+        let (g, costs) = costs_for(8, 2, 16, 4);
+        let cfg = PlannerConfig::default();
+        let free = solve_chain(&g, &costs, &cfg).expect("feasible");
+        let inc = AtomicU64::new(free.est_tpi.to_bits());
+        let bounded = solve_chain_bounded(&g, &costs, &cfg, Some(&inc)).expect("still feasible");
+        assert_eq!(free.placement, bounded.placement);
+        assert_eq!(free.choice, bounded.choice);
+        assert_eq!(free.est_tpi.to_bits(), bounded.est_tpi.to_bits());
+        // a strictly better incumbent may legitimately prune everything
+        let tighter = AtomicU64::new((free.est_tpi * 0.5).to_bits());
+        let cutout = solve_chain_bounded(&g, &costs, &cfg, Some(&tighter));
+        assert!(cutout.is_none() || cutout.unwrap().est_tpi >= free.est_tpi);
     }
 
     #[test]

@@ -1,0 +1,445 @@
+//! Legacy dense-grid chain engine — the pre-Pareto-sparse implementation,
+//! kept verbatim as a cross-validation reference and as the "before" side
+//! of the perf benches (EXPERIMENTS.md §Perf, `benches/solver_micro.rs`).
+//!
+//! The memory constraint (5) is tracked in `PlannerConfig::mem_buckets`
+//! quantised buckets rounded *up*, so quantisation never admits an
+//! infeasible stage but can reject feasible ones near the budget
+//! ("phantom memory"). Because its feasible set is a subset of the exact
+//! sparse engine's, `solve_chain_dense` can never return a strictly
+//! better objective than [`crate::planner::chain::solve_chain`] — a
+//! relation the regression tests in `rust/tests/paper_shapes.rs` pin.
+//!
+//! Do not extend this module: new planner work belongs in
+//! [`crate::planner::chain`].
+
+use crate::cost::CostMatrices;
+use crate::graph::Graph;
+use crate::planner::{Plan, PlannerConfig};
+
+const INF: f64 = f64::INFINITY;
+
+/// Interval cost table: `cost[(l, r)][k_in][k_out]` = min stage cost.
+struct IntervalCosts {
+    v: usize,
+    s: usize,
+    /// flattened `[l * v + r][k_in * s + k_out]`
+    table: Vec<Vec<f64>>,
+}
+
+impl IntervalCosts {
+    fn get(&self, l: usize, r: usize, kin: usize, kout: usize) -> f64 {
+        self.table[l * self.v + r][kin * self.s + kout]
+    }
+}
+
+/// Context shared by the solve.
+struct ChainCtx<'a> {
+    costs: &'a CostMatrices,
+    /// memory bucket count per layer/strategy (rounded up)
+    mb: Vec<Vec<usize>>,
+    buckets: usize,
+}
+
+impl<'a> ChainCtx<'a> {
+    fn new(costs: &'a CostMatrices, buckets: usize) -> ChainCtx<'a> {
+        let bucket_size = costs.mem_limit / buckets as f64;
+        let mb = costs
+            .m
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|&m| {
+                        if m <= 0.0 {
+                            0
+                        } else {
+                            ((m / bucket_size).ceil() as usize).max(1)
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        ChainCtx { costs, mb, buckets }
+    }
+
+    /// Run the interval DP for every `l`, producing the boundary-pair cost
+    /// table. `O(V² · S² · buckets · S)` worst case — the dense grid the
+    /// sparse engine replaces.
+    fn interval_costs(&self) -> IntervalCosts {
+        let v = self.costs.num_layers();
+        let s = self.costs.num_strategies();
+        let nb = self.buckets + 1;
+        let mut table = vec![vec![INF; s * s]; v * v];
+
+        // per-layer min/max bucket increments for the band bounds
+        let min_mb: Vec<usize> = self.mb.iter().map(|row| *row.iter().min().unwrap()).collect();
+        let max_mb: Vec<usize> = self.mb.iter().map(|row| *row.iter().max().unwrap()).collect();
+
+        // dp[kin][kcur][mem] flattened: (kin * s + kcur) * nb + mem
+        let mut dp = vec![INF; s * s * nb];
+        let mut ndp = vec![INF; s * s * nb];
+        let mut trans = vec![0.0f64; s * s]; // hoisted A + R per (kcur, knew)
+        for l in 0..v {
+            let mut band_lo = min_mb[l];
+            let mut band_hi = max_mb[l].min(self.buckets);
+            dp.iter_mut().for_each(|x| *x = INF);
+            for k in 0..s {
+                let need = self.mb[l][k];
+                if need <= self.buckets {
+                    let idx = (k * s + k) * nb + need;
+                    let cost = self.costs.a[l][k];
+                    if cost < dp[idx] {
+                        dp[idx] = cost;
+                    }
+                }
+            }
+            // record [l, l]
+            for k in 0..s {
+                let mut best = INF;
+                for mem in band_lo..=band_hi {
+                    best = best.min(dp[(k * s + k) * nb + mem]);
+                }
+                table[l * v + l][k * s + k] = best;
+            }
+            for r in l + 1..v {
+                let next_lo = band_lo + min_mb[r];
+                if next_lo > self.buckets {
+                    break; // even the cheapest strategies no longer fit
+                }
+                let next_hi = (band_hi + max_mb[r]).min(self.buckets);
+                let edge = r - 1; // chain edge (r-1) → r
+                for kcur in 0..s {
+                    for knew in 0..s {
+                        trans[kcur * s + knew] =
+                            self.costs.a[r][knew] + self.costs.r[edge][kcur][knew];
+                    }
+                }
+                // clear only the writable band of ndp
+                for kk in 0..s * s {
+                    let base = kk * nb;
+                    ndp[base + next_lo..=base + next_hi].iter_mut().for_each(|x| *x = INF);
+                }
+                for kin in 0..s {
+                    for kcur in 0..s {
+                        let base = (kin * s + kcur) * nb;
+                        for mem in band_lo..=band_hi {
+                            let cur = dp[base + mem];
+                            if !cur.is_finite() {
+                                continue;
+                            }
+                            for knew in 0..s {
+                                let nm = mem + self.mb[r][knew];
+                                if nm > self.buckets {
+                                    continue;
+                                }
+                                let cost = cur + trans[kcur * s + knew];
+                                let nidx = (kin * s + knew) * nb + nm;
+                                if cost < ndp[nidx] {
+                                    ndp[nidx] = cost;
+                                }
+                            }
+                        }
+                    }
+                }
+                std::mem::swap(&mut dp, &mut ndp);
+                band_lo = next_lo;
+                band_hi = next_hi;
+                let cell = &mut table[l * v + r];
+                for kin in 0..s {
+                    for kout in 0..s {
+                        let mut best = INF;
+                        let base = (kin * s + kout) * nb;
+                        for mem in band_lo..=band_hi {
+                            best = best.min(dp[base + mem]);
+                        }
+                        cell[kin * s + kout] = best;
+                    }
+                }
+            }
+        }
+        IntervalCosts { v, s, table }
+    }
+
+    /// Recover the per-layer strategy assignment achieving
+    /// `interval_costs()[l..=r][kin][kout]` by re-running the DP with
+    /// parent pointers (cheap: one interval).
+    fn interval_assignment(&self, l: usize, r: usize, kin: usize, kout: usize) -> Option<Vec<usize>> {
+        let s = self.costs.num_strategies();
+        let nb = self.buckets + 1;
+        if self.mb[l][kin] > self.buckets {
+            return None;
+        }
+        // dp[layer][kcur * nb + mem]
+        let len = r - l + 1;
+        let mut dp = vec![vec![INF; s * nb]; len];
+        let mut parent = vec![vec![(usize::MAX, usize::MAX); s * nb]; len];
+        dp[0][kin * nb + self.mb[l][kin]] = self.costs.a[l][kin];
+        for (step, u) in (l + 1..=r).enumerate() {
+            let edge = u - 1;
+            for kcur in 0..s {
+                for mem in 0..nb {
+                    let cur = dp[step][kcur * nb + mem];
+                    if !cur.is_finite() {
+                        continue;
+                    }
+                    for knew in 0..s {
+                        let nm = mem + self.mb[u][knew];
+                        if nm > self.buckets {
+                            continue;
+                        }
+                        let cost = cur + self.costs.a[u][knew] + self.costs.r[edge][kcur][knew];
+                        let nidx = knew * nb + nm;
+                        if cost < dp[step + 1][nidx] {
+                            dp[step + 1][nidx] = cost;
+                            parent[step + 1][nidx] = (kcur, mem);
+                        }
+                    }
+                }
+            }
+        }
+        // best end state with kcur = kout
+        let mut best = INF;
+        let mut best_mem = usize::MAX;
+        for mem in 0..nb {
+            let val = dp[len - 1][kout * nb + mem];
+            if val < best {
+                best = val;
+                best_mem = mem;
+            }
+        }
+        if !best.is_finite() {
+            return None;
+        }
+        let mut out = vec![0usize; len];
+        let (mut k, mut mem) = (kout, best_mem);
+        for step in (0..len).rev() {
+            out[step] = k;
+            if step > 0 {
+                let (pk, pm) = parent[step][k * nb + mem];
+                k = pk;
+                mem = pm;
+            }
+        }
+        Some(out)
+    }
+}
+
+/// A Pareto point in the pipeline DP with backtracking info.
+#[derive(Debug, Clone, Copy)]
+struct Point {
+    sum: f64,
+    mx: f64,
+    /// previous stage end layer (usize::MAX for the first stage)
+    prev_r: usize,
+    /// previous stage exit strategy
+    prev_kout: usize,
+    /// index of the predecessor point in `front[prev_r][prev_kout]`
+    prev_idx: usize,
+    /// entry strategy of THIS stage
+    kin: usize,
+}
+
+/// Insert into a Pareto frontier over (sum, mx) — smaller is better on both.
+fn pareto_insert(front: &mut Vec<Point>, p: Point) {
+    for q in front.iter() {
+        if q.sum <= p.sum && q.mx <= p.mx {
+            return; // dominated
+        }
+    }
+    front.retain(|q| !(p.sum <= q.sum && p.mx <= q.mx));
+    front.push(p);
+}
+
+/// Solve one `(pp_size, c)` candidate with the legacy dense-grid interval
+/// DP (quantised memory, `cfg.mem_buckets` cells). Reference only.
+pub fn solve_chain_dense(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> Option<Plan> {
+    assert!(graph.is_chain(), "chain solver requires a chain graph");
+    let v = graph.num_layers();
+    let s = costs.num_strategies();
+    let pp = costs.pp_size;
+    let c = costs.num_micro as f64;
+    if pp > v {
+        return None; // (7b): at least one layer per stage
+    }
+
+    let ctx = ChainCtx::new(costs, cfg.mem_buckets);
+    let ic = ctx.interval_costs();
+
+    // fronts[stage][r][kout] — Pareto sets; we keep a full history for
+    // backtracking.
+    let mut history: Vec<Vec<Vec<Vec<Point>>>> = Vec::with_capacity(pp);
+
+    // Stage 0: intervals [0, r].
+    let mut front0 = vec![vec![Vec::<Point>::new(); s]; v];
+    for (r, row) in front0.iter_mut().enumerate() {
+        // leave at least one layer for each remaining stage
+        if v - 1 - r < pp - 1 {
+            continue;
+        }
+        for (kout, front) in row.iter_mut().enumerate() {
+            let mut best = INF;
+            let mut best_kin = 0;
+            for kin in 0..s {
+                let cost = ic.get(0, r, kin, kout);
+                if cost < best {
+                    best = cost;
+                    best_kin = kin;
+                }
+            }
+            if best.is_finite() {
+                pareto_insert(
+                    front,
+                    Point {
+                        sum: best,
+                        mx: best,
+                        prev_r: usize::MAX,
+                        prev_kout: 0,
+                        prev_idx: 0,
+                        kin: best_kin,
+                    },
+                );
+            }
+        }
+    }
+    history.push(front0);
+
+    for stage in 1..pp {
+        let prev = &history[stage - 1];
+        let mut next = vec![vec![Vec::<Point>::new(); s]; v];
+        for r in stage - 1..v {
+            for kout in 0..s {
+                for (pidx, pt) in prev[r][kout].iter().enumerate() {
+                    // next stage spans [r+1, r2]
+                    let max_r2 = v - 1 - (pp - 1 - stage); // leave layers for later stages
+                    for r2 in r + 1..=max_r2 {
+                        for kin2 in 0..s {
+                            let o = costs.rp[r][kout][kin2]; // edge r → r+1
+                            for kout2 in 0..s {
+                                let p_cost = ic.get(r + 1, r2, kin2, kout2);
+                                if !p_cost.is_finite() {
+                                    continue;
+                                }
+                                let sum = pt.sum + o + p_cost;
+                                let mx = pt.mx.max(o).max(p_cost);
+                                pareto_insert(
+                                    &mut next[r2][kout2],
+                                    Point {
+                                        sum,
+                                        mx,
+                                        prev_r: r,
+                                        prev_kout: kout,
+                                        prev_idx: pidx,
+                                        kin: kin2,
+                                    },
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        history.push(next);
+    }
+
+    // Best complete solution: last stage ends at v-1.
+    let last = &history[pp - 1];
+    let mut best_obj = INF;
+    let mut best_end: Option<(usize, usize)> = None; // (kout, point idx)
+    for kout in 0..s {
+        for (idx, pt) in last[v - 1][kout].iter().enumerate() {
+            let obj = pt.sum + (c - 1.0) * pt.mx;
+            if obj < best_obj {
+                best_obj = obj;
+                best_end = Some((kout, idx));
+            }
+        }
+    }
+    let (mut kout, mut idx) = best_end?;
+
+    // Backtrack stage boundaries and boundary strategies.
+    let mut bounds: Vec<(usize, usize, usize, usize)> = Vec::new(); // (l, r, kin, kout)
+    let mut r = v - 1;
+    for stage in (0..pp).rev() {
+        let pt = history[stage][r][kout][idx];
+        let l = if stage == 0 { 0 } else { pt.prev_r + 1 };
+        bounds.push((l, r, pt.kin, kout));
+        if stage > 0 {
+            r = pt.prev_r;
+            kout = pt.prev_kout;
+            idx = pt.prev_idx;
+        }
+    }
+    bounds.reverse();
+
+    // Recover interior assignments per stage.
+    let mut placement = vec![0usize; v];
+    let mut choice = vec![0usize; v];
+    for (stage, &(l, r, kin, kout)) in bounds.iter().enumerate() {
+        let assign = ctx.interval_assignment(l, r, kin, kout)?;
+        for (off, &k) in assign.iter().enumerate() {
+            placement[l + off] = stage;
+            choice[l + off] = k;
+        }
+    }
+
+    let tpi = crate::cost::objective_tpi(graph, costs, &placement, &choice);
+    Some(Plan {
+        pp_size: pp,
+        num_micro: costs.num_micro,
+        batch: costs.batch,
+        placement,
+        choice,
+        strategies: costs.strategies.clone(),
+        est_tpi: tpi,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterEnv;
+    use crate::cost::cost_modeling;
+    use crate::graph::models;
+    use crate::planner::chain;
+    use crate::profiling::Profile;
+
+    #[test]
+    fn dense_reference_agrees_with_sparse_when_memory_is_slack() {
+        // Tiny layers: every assignment fits, so quantisation cannot bite
+        // and the two engines must find the same optimum.
+        let g = models::synthetic_chain(6, 5e11, 1e6, 1e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let cfg = PlannerConfig::default();
+        for (pp, c) in [(2usize, 2usize), (2, 4), (4, 2)] {
+            let costs = cost_modeling(&p, &g, pp, 8, c);
+            let dense = solve_chain_dense(&g, &costs, &cfg).expect("dense feasible");
+            let sparse = chain::solve_chain(&g, &costs, &cfg).expect("sparse feasible");
+            let rel = (dense.est_tpi - sparse.est_tpi).abs() / sparse.est_tpi;
+            assert!(rel < 1e-9, "pp={pp} c={c}: dense {} sparse {}", dense.est_tpi, sparse.est_tpi);
+        }
+    }
+
+    #[test]
+    fn sparse_never_worse_than_dense() {
+        // Rounded-up buckets only shrink the feasible set, so the exact
+        // engine's optimum is a lower bound on the dense one's.
+        let g = models::bert_huge();
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let cfg = PlannerConfig::default();
+        for (pp, c) in [(2usize, 4usize), (4, 4), (8, 2)] {
+            let costs = cost_modeling(&p, &g, pp, 16, c);
+            let sparse = chain::solve_chain(&g, &costs, &cfg);
+            // dense-only infeasibility is possible (phantom memory), so a
+            // dense `None` proves nothing either way
+            if let Some(dense) = solve_chain_dense(&g, &costs, &cfg) {
+                let sparse = sparse.expect("dense feasible ⇒ sparse feasible");
+                assert!(
+                    sparse.est_tpi <= dense.est_tpi * (1.0 + 1e-9),
+                    "pp={pp} c={c}: sparse {} vs dense {}",
+                    sparse.est_tpi,
+                    dense.est_tpi
+                );
+            }
+        }
+    }
+}

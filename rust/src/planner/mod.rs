@@ -6,16 +6,21 @@
 //! * [`chain`] — a structure-exploiting solver for chain graphs (every
 //!   model in the paper's evaluation): the order-preserving constraint
 //!   makes stages contiguous intervals, so it enumerates interval DPs with
-//!   a quantised-memory dimension and composes them with a Pareto
+//!   sparse per-boundary-pair `(mem, cost)` Pareto frontiers (exact
+//!   memory, no quantisation — DESIGN.md) and composes them with a Pareto
 //!   (sum, max) pipeline DP that handles the `(c−1)·max` term exactly.
+//! * [`chain_dense`] — the legacy dense-bucket-grid engine, frozen as a
+//!   cross-validation reference and the "before" side of the perf benches.
 //! * [`crate::miqp`] — the general MIQP formulation solved by our own
 //!   branch-and-bound (the Gurobi substitute), for arbitrary DAGs and for
 //!   cross-validating the chain engine.
 //!
 //! [`uop`] implements Algorithm 1: enumerate `pp_size | n` and `c | B`,
-//! build cost matrices for each candidate, solve, keep the best.
+//! build one factored cost base per `pp_size`, materialise matrices per
+//! candidate, solve with a shared incumbent bound, keep the best.
 
 pub mod chain;
+pub mod chain_dense;
 pub mod qip;
 pub mod uop;
 
@@ -42,8 +47,10 @@ pub struct PlannerConfig {
     pub engine: Engine,
     /// Pipeline schedule (footnote 2): affects only the memory constraint.
     pub schedule: crate::cost::Schedule,
-    /// Memory-quantisation buckets for the chain solver (feasibility-safe:
-    /// bucket counts are rounded *up*).
+    /// Memory-quantisation buckets for the *legacy* dense chain engine
+    /// ([`chain_dense`]; feasibility-safe: bucket counts are rounded
+    /// *up*). The production sparse engine tracks memory exactly and
+    /// ignores this knob.
     pub mem_buckets: usize,
     /// Wall-clock limit per MIQP solve (the paper sets 60 s).
     pub time_limit: f64,
@@ -59,10 +66,10 @@ impl Default for PlannerConfig {
         PlannerConfig {
             engine: Engine::Auto,
             schedule: crate::cost::Schedule::GPipe,
-            // Feasibility-safe quantisation rounds every layer UP, so the
-            // grid must be fine relative to the layer count: 1024 buckets
-            // keeps the worst-case phantom memory below ~9% for the
-            // deepest model (Swin-Huge, 91 intervals).
+            // Legacy dense engine only. Feasibility-safe quantisation
+            // rounds every layer UP, so the grid must be fine relative to
+            // the layer count: 1024 buckets keeps the worst-case phantom
+            // memory below ~9% for the deepest model (Swin-Huge).
             mem_buckets: 1024,
             time_limit: 60.0,
             threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),

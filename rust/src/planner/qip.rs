@@ -6,6 +6,8 @@
 //! of the chain solver with `pp_size = 1`; for general DAGs the UOP
 //! delegates to the MIQP engine with `pp_size = 1`.
 
+use std::sync::atomic::AtomicU64;
+
 use crate::cost::CostMatrices;
 use crate::graph::Graph;
 use crate::planner::{chain, Plan, PlannerConfig};
@@ -14,11 +16,22 @@ use crate::planner::{chain, Plan, PlannerConfig};
 /// `pp_size* = 1`, `c* = B`). Returns `None` when no strategy assignment
 /// fits in memory (`SOL×`).
 pub fn solve_qip(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> Option<Plan> {
+    solve_qip_bounded(graph, costs, cfg, None)
+}
+
+/// [`solve_qip`] with the UOP sweep's shared incumbent bound (see
+/// [`chain::solve_chain_bounded`]).
+pub fn solve_qip_bounded(
+    graph: &Graph,
+    costs: &CostMatrices,
+    cfg: &PlannerConfig,
+    incumbent: Option<&AtomicU64>,
+) -> Option<Plan> {
     assert_eq!(costs.pp_size, 1, "QIP is the single-stage formulation");
     if graph.is_chain() {
-        chain::solve_chain(graph, costs, cfg)
+        chain::solve_chain_bounded(graph, costs, cfg, incumbent)
     } else {
-        crate::miqp::solve_miqp(graph, costs, cfg)
+        crate::miqp::solve_miqp_bounded(graph, costs, cfg, incumbent)
     }
 }
 

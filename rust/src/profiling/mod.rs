@@ -9,10 +9,12 @@
 //! * [`Profile::analytic`] — derives all tables from the [`ClusterEnv`]
 //!   link model and a roofline-style efficiency curve. This is the backend
 //!   every paper experiment uses (the cluster model *is* the testbed).
-//! * [`measured`] — calibrates the achievable matmul FLOP/s of the local
-//!   CPU through the PJRT runtime; used by the end-to-end training example
-//!   so its plan reflects the machine it actually runs on.
+//! * `measured` (feature `pjrt`) — calibrates the achievable matmul
+//!   FLOP/s of the local CPU through the PJRT runtime; used by the
+//!   end-to-end training example so its plan reflects the machine it
+//!   actually runs on.
 
+#[cfg(feature = "pjrt")]
 pub mod measured;
 
 use std::collections::HashMap;

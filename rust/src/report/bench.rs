@@ -1,8 +1,15 @@
 //! Micro-bench harness with criterion-style output (criterion itself is
 //! not available offline). Used by the `benches/` targets, which are
 //! declared with `harness = false`.
+//!
+//! [`BenchReport`] additionally collects every measurement into a
+//! machine-readable `BENCH_<tag>.json` (schema v1) so before/after
+//! speedups are tracked across PRs — EXPERIMENTS.md §Perf describes the
+//! workflow.
 
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// Run `f` with warmup, collect `samples` timed runs, print a summary line
 /// and return (mean, std, min) in seconds.
@@ -35,6 +42,93 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// One recorded measurement (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub samples: usize,
+}
+
+/// Collects [`bench`] measurements plus free-form notes and writes them as
+/// `BENCH_<tag>.json` in the working directory. The JSON is the regression
+/// artifact the perf log in EXPERIMENTS.md §Perf tracks across PRs.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    tag: String,
+    records: Vec<BenchRecord>,
+    notes: Vec<(String, Json)>,
+}
+
+impl BenchReport {
+    /// Start a report; `tag` names the output file (`BENCH_<tag>.json`).
+    pub fn new(tag: &str) -> BenchReport {
+        BenchReport { tag: tag.to_string(), records: Vec::new(), notes: Vec::new() }
+    }
+
+    /// [`bench`] + record the result under `name`.
+    pub fn bench<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        samples: usize,
+        f: F,
+    ) -> (f64, f64, f64) {
+        let (mean, std, min) = bench(name, warmup, samples, f);
+        self.records.push(BenchRecord { name: name.to_string(), mean, std, min, samples });
+        (mean, std, min)
+    }
+
+    /// Attach a derived quantity (a speedup ratio, an environment note…).
+    pub fn note(&mut self, key: &str, value: impl Into<Json>) {
+        self.notes.push((key.to_string(), value.into()));
+    }
+
+    /// Mean-time ratio `a / b` between two recorded benches, if both exist.
+    pub fn speedup(&self, slow: &str, fast: &str) -> Option<f64> {
+        let find = |n: &str| self.records.iter().find(|r| r.name == n).map(|r| r.mean);
+        match (find(slow), find(fast)) {
+            (Some(s), Some(f)) if f > 0.0 => Some(s / f),
+            _ => None,
+        }
+    }
+
+    /// Render the report as JSON (schema v1, deterministic field order).
+    pub fn to_json(&self) -> Json {
+        let records = Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj()
+                        .field("name", r.name.as_str())
+                        .field("mean_s", r.mean)
+                        .field("std_s", r.std)
+                        .field("min_s", r.min)
+                        .field("samples", r.samples)
+                })
+                .collect(),
+        );
+        let mut notes = Json::obj();
+        for (k, v) in &self.notes {
+            notes = notes.field(k, v.clone());
+        }
+        Json::obj()
+            .field("schema", "uniap-bench-v1")
+            .field("tag", self.tag.as_str())
+            .field("records", records)
+            .field("notes", notes)
+    }
+
+    /// Write `BENCH_<tag>.json`; returns the path written.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let path = std::path::PathBuf::from(format!("BENCH_{}.json", self.tag));
+        std::fs::write(&path, self.to_json().to_pretty() + "\n")?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -49,5 +143,25 @@ mod tests {
             std::hint::black_box(x);
         });
         assert!(mean >= min && min > 0.0);
+    }
+
+    #[test]
+    fn report_records_and_serialises() {
+        let mut rep = BenchReport::new("unit");
+        rep.bench("spin-a", 0, 2, || {
+            std::hint::black_box((0..50_000u64).sum::<u64>());
+        });
+        rep.bench("spin-b", 0, 2, || {
+            std::hint::black_box((0..50_000u64).sum::<u64>());
+        });
+        rep.note("env", "unit-test");
+        let ratio = rep.speedup("spin-a", "spin-b").expect("both recorded");
+        assert!(ratio > 0.0);
+        let json = rep.to_json().to_string();
+        assert!(json.contains("\"schema\":\"uniap-bench-v1\""));
+        assert!(json.contains("\"tag\":\"unit\""));
+        assert!(json.contains("spin-a") && json.contains("spin-b"));
+        assert!(json.contains("\"env\":\"unit-test\""));
+        assert!(rep.speedup("spin-a", "missing").is_none());
     }
 }

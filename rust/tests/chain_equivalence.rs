@@ -1,0 +1,169 @@
+//! Equivalence property tests for the Pareto-sparse chain engine
+//! (the ISSUE-1 rewrite): the sparse interval DP must return *bit-identical*
+//! plans to the MIQP branch-and-bound on randomized chains, agree with the
+//! frozen dense-grid reference wherever quantisation cannot bite, and keep
+//! its optimum under incumbent-bounded solves.
+
+use std::sync::atomic::AtomicU64;
+
+use uniap::cluster::ClusterEnv;
+use uniap::cost::cost_modeling;
+use uniap::graph::{Dtype, Graph, Layer, LayerKind};
+use uniap::planner::{chain, chain_dense, PlannerConfig};
+use uniap::profiling::Profile;
+use uniap::testing;
+
+/// A heterogeneous random chain: every layer gets its own type key and
+/// randomized FLOPs/params/activations, so objective ties (which would
+/// make "bit-identical plan" ill-posed across tie-breaking orders) have
+/// probability zero.
+fn random_chain(rng: &mut testing::Rng, n: usize) -> Graph {
+    let layers = (0..n)
+        .map(|i| Layer {
+            name: format!("l{i}"),
+            type_key: format!("t{i}"),
+            kind: LayerKind::Other,
+            flops_fwd: rng.f64_in(5e10, 3e12),
+            params: rng.f64_in(5e6, 6e7),
+            act_out_bytes: rng.f64_in(5e5, 8e6),
+            act_store_bytes: rng.f64_in(1e6, 2e7),
+        })
+        .collect();
+    Graph::chain("rand", layers, Dtype::Fp32, 128)
+}
+
+#[test]
+fn sparse_chain_is_bit_identical_to_miqp_on_random_chains() {
+    testing::check(
+        "sparse_vs_miqp_bit_identical",
+        10,
+        |rng| {
+            let n = rng.usize_in(4, 8);
+            let pp = *rng.pick(&[2usize, 4]);
+            let c = *rng.pick(&[2usize, 4]);
+            let seed = rng.next_u64();
+            (n, pp, c, seed)
+        },
+        |&(n, pp, c, seed)| {
+            let mut grng = testing::Rng::new(seed);
+            let g = random_chain(&mut grng, n);
+            let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+            let costs = cost_modeling(&profile, &g, pp, 8, c);
+            let cfg = PlannerConfig::default();
+            let sparse = chain::solve_chain(&g, &costs, &cfg);
+            let miqp = uniap::miqp::solve_miqp(&g, &costs, &cfg);
+            match (sparse, miqp) {
+                (Some(a), Some(b)) => {
+                    if a.placement != b.placement {
+                        return Err(format!(
+                            "placement mismatch: chain {:?} vs miqp {:?}",
+                            a.placement, b.placement
+                        ));
+                    }
+                    if a.choice != b.choice {
+                        return Err(format!(
+                            "choice mismatch: chain {:?} vs miqp {:?}",
+                            a.choice, b.choice
+                        ));
+                    }
+                    if a.est_tpi.to_bits() != b.est_tpi.to_bits() {
+                        return Err(format!(
+                            "est_tpi not bit-identical: {} vs {}",
+                            a.est_tpi, b.est_tpi
+                        ));
+                    }
+                    Ok(())
+                }
+                (None, None) => Ok(()),
+                (a, b) => Err(format!(
+                    "feasibility mismatch: chain {:?} vs miqp {:?}",
+                    a.is_some(),
+                    b.is_some()
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn sparse_agrees_with_dense_reference_when_memory_is_slack() {
+    // With tiny tensors every assignment fits even after the dense grid's
+    // round-up, so the frozen legacy engine must find the same optimum.
+    testing::check(
+        "sparse_vs_dense_slack",
+        10,
+        |rng| {
+            let n = rng.usize_in(4, 9);
+            let pp = *rng.pick(&[2usize, 4]);
+            let c = *rng.pick(&[2usize, 4]);
+            let flops = rng.f64_in(1e11, 2e12);
+            (n, pp, c, flops)
+        },
+        |&(n, pp, c, flops)| {
+            let g = uniap::graph::models::synthetic_chain(n, flops, 1e6, 1e6);
+            let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+            let costs = cost_modeling(&profile, &g, pp, 8, c);
+            let cfg = PlannerConfig::default();
+            let sparse = chain::solve_chain(&g, &costs, &cfg);
+            let dense = chain_dense::solve_chain_dense(&g, &costs, &cfg);
+            match (sparse, dense) {
+                (Some(a), Some(b)) => {
+                    let rel = (a.est_tpi - b.est_tpi).abs() / b.est_tpi;
+                    if rel < 1e-9 {
+                        Ok(())
+                    } else {
+                        Err(format!("tpi mismatch: sparse {} dense {}", a.est_tpi, b.est_tpi))
+                    }
+                }
+                (None, None) => Ok(()),
+                (a, b) => Err(format!(
+                    "feasibility mismatch: sparse {:?} dense {:?}",
+                    a.is_some(),
+                    b.is_some()
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn incumbent_bounded_solves_keep_their_optimum() {
+    // Seeding either engine with its own optimum as the sweep incumbent
+    // must not change the returned plan (the strict-cut + slack contract
+    // behind cross-candidate sharing in the UOP).
+    testing::check(
+        "incumbent_keeps_optimum",
+        8,
+        |rng| {
+            let n = rng.usize_in(4, 8);
+            let pp = *rng.pick(&[2usize, 4]);
+            let seed = rng.next_u64();
+            (n, pp, seed)
+        },
+        |&(n, pp, seed)| {
+            let mut grng = testing::Rng::new(seed);
+            let g = random_chain(&mut grng, n);
+            let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+            let costs = cost_modeling(&profile, &g, pp, 8, 4);
+            let cfg = PlannerConfig::default();
+            let Some(free) = chain::solve_chain(&g, &costs, &cfg) else {
+                return Ok(()); // infeasible case — nothing to bound
+            };
+            let inc = AtomicU64::new(free.est_tpi.to_bits());
+            let chain_bounded = chain::solve_chain_bounded(&g, &costs, &cfg, Some(&inc))
+                .ok_or("chain lost its optimum under its own incumbent")?;
+            if chain_bounded.placement != free.placement || chain_bounded.choice != free.choice {
+                return Err("bounded chain plan differs from the free plan".into());
+            }
+            let miqp_bounded = uniap::miqp::solve_miqp_bounded(&g, &costs, &cfg, Some(&inc))
+                .ok_or("miqp lost its optimum under the incumbent")?;
+            if (miqp_bounded.est_tpi - free.est_tpi).abs() > 1e-12 * free.est_tpi {
+                return Err(format!(
+                    "bounded miqp {} vs free {}",
+                    miqp_bounded.est_tpi, free.est_tpi
+                ));
+            }
+            Ok(())
+        },
+    );
+}
