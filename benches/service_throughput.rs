@@ -1,0 +1,103 @@
+//! Planner-service throughput: cold-cache vs warm-cache request latency.
+//!
+//! Three rows on BERT-Huge/EnvB/B=16 (the Table 1 workload the other
+//! benches use):
+//!
+//! 1. **cold** — a fresh `PlannerService` per request: builds the profile,
+//!    every factored `CostBase`, and solves the full sweep (the old
+//!    one-shot `planner::uop` cost, plus negligible service overhead);
+//! 2. **warm, schedule variant** — same service, same `(env, model,
+//!    batch)`, different pipeline schedule: the outcome cache misses but
+//!    every `CostBase` is reused, so only the solves run;
+//! 3. **warm, strict repeat** — the completed-outcome cache replays the
+//!    stored plan without solving.
+//!
+//! The acceptance gate for the service PR is the cold/warm ratio on the
+//! repeated request: **≥ 5×** (note `service_warm_speedup`). The bench
+//! also asserts the byte-identity guarantee: warm responses carry plans
+//! whose canonical JSON equals the cold solve's.
+//!
+//! Run: `cargo bench --bench service_throughput`
+//! Writes `BENCH_service_throughput.json` (schema `uniap-bench-v1`).
+
+use uniap::cost::Schedule;
+use uniap::report::bench::{section, BenchReport};
+use uniap::service::{plan_to_json, PlanRequest, PlannerService, Status};
+
+fn main() {
+    let mut rep = BenchReport::new("service_throughput");
+    rep.note("model", "BERT-Huge");
+    rep.note("env", "EnvB");
+    rep.note("batch", 16usize);
+
+    let req = PlanRequest::new("bench", "bert", "EnvB", 16);
+    let mut variant = req.clone();
+    variant.schedule = Schedule::OneF1B;
+
+    section("planner service: cold vs warm requests");
+    rep.bench("service cold (fresh caches per request)", 1, 5, || {
+        let svc = PlannerService::new();
+        std::hint::black_box(svc.plan(&req));
+    });
+
+    let svc = PlannerService::new();
+    let cold = svc.plan(&req);
+    assert_eq!(cold.status, Status::Ok, "workload must be plannable");
+    let cold_variant = PlannerService::new().plan(&variant);
+
+    rep.bench("service warm (same batch, different schedule)", 1, 5, || {
+        std::hint::black_box(svc.plan(&variant));
+    });
+    rep.bench("service warm (strict repeat)", 1, 10, || {
+        std::hint::black_box(svc.plan(&req));
+    });
+
+    // byte-identity guarantee (the other half of the acceptance gate)
+    let warm = svc.plan(&req);
+    let warm_variant = svc.plan(&variant);
+    let identical_repeat = plan_to_json(warm.plan.as_ref().unwrap()).to_string()
+        == plan_to_json(cold.plan.as_ref().unwrap()).to_string();
+    let identical_variant = plan_to_json(warm_variant.plan.as_ref().unwrap()).to_string()
+        == plan_to_json(cold_variant.plan.as_ref().unwrap()).to_string();
+    assert!(identical_repeat, "warm repeat plan differs from cold solve");
+    assert!(identical_variant, "warm schedule-variant plan differs from cold solve");
+    rep.note("warm_repeat_plan_byte_identical", identical_repeat);
+    rep.note("warm_variant_plan_byte_identical", identical_variant);
+
+    let stats = svc.stats();
+    rep.note("base_cache_hits", stats.base_hits);
+    rep.note("plan_cache_hits", stats.plan_hits);
+
+    if let Some(speedup) = rep.speedup(
+        "service cold (fresh caches per request)",
+        "service warm (strict repeat)",
+    ) {
+        println!("\nwarm-repeat speedup (BERT-Huge/EnvB/B=16): {speedup:.1}×");
+        rep.note("service_warm_speedup", speedup);
+        rep.note("acceptance_target_speedup", 5.0);
+    }
+    if let Some(speedup) = rep.speedup(
+        "service cold (fresh caches per request)",
+        "service warm (same batch, different schedule)",
+    ) {
+        println!("warm schedule-variant speedup: {speedup:.2}×");
+        rep.note("service_warm_variant_speedup", speedup);
+    }
+
+    section("batch drain (uniap serve)");
+    let file: Vec<PlanRequest> = (0..6)
+        .map(|i| {
+            let mut r = if i % 2 == 0 { req.clone() } else { variant.clone() };
+            r.id = format!("batch-{i}");
+            r
+        })
+        .collect();
+    rep.bench("serve 6 requests, concurrency 2 (warm service)", 0, 3, || {
+        std::hint::black_box(svc.serve(&file, 2));
+    });
+
+    match rep.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
+}

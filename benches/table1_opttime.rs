@@ -9,41 +9,43 @@
 //! stays in seconds.
 //!
 //! Run: `cargo bench --bench table1_opttime`
+//!
+//! Runs through one shared [`PlannerService`] — the three methods of each
+//! workload reuse the cached profile, exactly like repeated production
+//! requests would.
 
-use uniap::baselines::{Baseline, BaselineKind};
-use uniap::cluster::ClusterEnv;
-use uniap::graph::models;
-use uniap::planner::PlannerConfig;
-use uniap::profiling::Profile;
+use uniap::baselines::BaselineKind;
 use uniap::report::Table;
+use uniap::service::{PlanRequest, PlannerService};
 
 fn main() {
-    let cfg = PlannerConfig::default();
-    let workloads: Vec<(ClusterEnv, &str, usize)> = vec![
-        (ClusterEnv::env_a(), "bert", 32),
-        (ClusterEnv::env_a(), "t5", 16),
-        (ClusterEnv::env_a(), "vit", 128),
-        (ClusterEnv::env_a(), "swin", 128),
-        (ClusterEnv::env_b(), "bert", 16),
-        (ClusterEnv::env_b(), "t5-16", 8),
-        (ClusterEnv::env_b(), "vit", 64),
-        (ClusterEnv::env_b(), "swin", 32),
-        (ClusterEnv::env_c(), "llama-7b", 8),
+    let workloads: Vec<(&str, &str, usize)> = vec![
+        ("EnvA", "bert", 32),
+        ("EnvA", "t5", 16),
+        ("EnvA", "vit", 128),
+        ("EnvA", "swin", 128),
+        ("EnvB", "bert", 16),
+        ("EnvB", "t5-16", 8),
+        ("EnvB", "vit", 64),
+        ("EnvB", "swin", 32),
+        ("EnvC", "llama-7b", 8),
     ];
+    let service = PlannerService::new();
     println!("# Table 1 — strategy optimization time\n");
     let mut table = Table::new(&["env", "model", "Galvatron", "Alpa", "UniAP", "speedup vs worst"]);
-    for (env, name, batch) in workloads {
-        let graph = models::by_name(name).unwrap();
-        let profile = Profile::analytic(&env, &graph);
+    for (env, model, batch) in workloads {
         let mut secs = Vec::new();
         for kind in [BaselineKind::Galvatron, BaselineKind::Alpa, BaselineKind::UniAP] {
-            let r = Baseline::run(kind, &profile, &graph, batch, &cfg);
-            secs.push(r.opt_secs);
+            let mut req =
+                PlanRequest::new(&format!("{env}/{model}/{}", kind.key()), model, env, batch);
+            req.method = kind;
+            let resp = service.plan(&req);
+            secs.push(resp.timings.solve_secs);
         }
         let worst = secs[0].max(secs[1]);
         table.row(vec![
-            env.name.clone(),
-            graph.name.clone(),
+            env.to_string(),
+            model.to_string(),
             uniap::util::fmt_secs(secs[0]),
             uniap::util::fmt_secs(secs[1]),
             uniap::util::fmt_secs(secs[2]),
@@ -51,4 +53,9 @@ fn main() {
         ]);
     }
     print!("{}", table.to_markdown());
+    let stats = service.stats();
+    println!(
+        "\nservice caches: {} profile hits / {} misses, {} cost-base hits / {} misses",
+        stats.profile_hits, stats.profile_misses, stats.base_hits, stats.base_misses
+    );
 }

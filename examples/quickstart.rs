@@ -29,7 +29,7 @@ fn main() {
 
     let plan = result.best.expect("BERT-Huge is plannable on EnvB");
     println!("\noptimal plan: {}", plan.summary());
-    for (i, (a, b)) in plan.stage_ranges().into_iter().enumerate() {
+    for (i, (a, b)) in plan.stage_ranges().into_iter().flatten().enumerate() {
         println!(
             "  stage {i}: layers {a}..={b} ({} layers), strategy {}",
             b - a + 1,

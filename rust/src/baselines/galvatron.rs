@@ -156,7 +156,13 @@ mod tests {
         assert!(plan.est_tpi > 0.0 && plan.est_tpi.is_finite());
         // hierarchical equal partition: stage sizes differ by ≤ 1
         let ranges = plan.stage_ranges();
-        let sizes: Vec<usize> = ranges.iter().map(|&(a, b)| b - a + 1).collect();
+        let sizes: Vec<usize> = ranges
+            .iter()
+            .map(|r| {
+                let (a, b) = r.expect("every stage holds layers");
+                b - a + 1
+            })
+            .collect();
         let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
         assert!(mx - mn <= 1, "{sizes:?}");
     }

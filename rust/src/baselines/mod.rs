@@ -19,11 +19,11 @@ use std::time::Instant;
 
 use crate::cost::cost_modeling;
 use crate::graph::Graph;
-use crate::planner::{chain, qip, Plan, PlannerConfig};
+use crate::planner::{chain, qip, Plan, PlannerConfig, SolveHooks};
 use crate::profiling::Profile;
 
 /// Identifies a baseline method.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum BaselineKind {
     Galvatron,
     Alpa,
@@ -36,6 +36,34 @@ pub enum BaselineKind {
 }
 
 impl BaselineKind {
+    /// Canonical lowercase key used by the CLI `--method` option and the
+    /// service's `PlanRequest` JSON.
+    pub fn key(self) -> &'static str {
+        match self {
+            BaselineKind::Galvatron => "galvatron",
+            BaselineKind::Alpa => "alpa",
+            BaselineKind::InterOnly => "inter",
+            BaselineKind::IntraOnly => "intra",
+            BaselineKind::MegatronGrid => "megatron",
+            BaselineKind::DeepSpeedZero3 => "deepspeed",
+            BaselineKind::UniAP => "uniap",
+        }
+    }
+
+    /// Inverse of [`BaselineKind::key`].
+    pub fn by_key(key: &str) -> Option<BaselineKind> {
+        match key.to_ascii_lowercase().as_str() {
+            "uniap" => Some(BaselineKind::UniAP),
+            "galvatron" => Some(BaselineKind::Galvatron),
+            "alpa" => Some(BaselineKind::Alpa),
+            "inter" => Some(BaselineKind::InterOnly),
+            "intra" => Some(BaselineKind::IntraOnly),
+            "megatron" => Some(BaselineKind::MegatronGrid),
+            "deepspeed" => Some(BaselineKind::DeepSpeedZero3),
+            _ => None,
+        }
+    }
+
     pub fn label(self) -> &'static str {
         match self {
             BaselineKind::Galvatron => "Galvatron",
@@ -75,10 +103,27 @@ impl Baseline {
         batch: usize,
         cfg: &PlannerConfig,
     ) -> BaselineResult {
+        Self::run_with(kind, profile, graph, batch, cfg, &SolveHooks::default())
+    }
+
+    /// [`Baseline::run`] with the service's [`SolveHooks`] — this is the
+    /// dispatcher `PlannerService` calls. The UniAP method threads all
+    /// three hooks (cancellation, events, the cross-request `CostBase`
+    /// cache) into its sweep; the baseline heuristics are single-candidate
+    /// searches orders of magnitude cheaper than the sweep, so they run to
+    /// completion and ignore the hooks (documented service behaviour).
+    pub fn run_with(
+        kind: BaselineKind,
+        profile: &Profile,
+        graph: &Graph,
+        batch: usize,
+        cfg: &PlannerConfig,
+        hooks: &SolveHooks,
+    ) -> BaselineResult {
         match kind {
             BaselineKind::UniAP => {
                 let t0 = Instant::now();
-                let res = crate::planner::uop(profile, graph, batch, cfg);
+                let res = crate::planner::uop_with(profile, graph, batch, cfg, hooks);
                 BaselineResult {
                     kind,
                     failure: if res.best.is_none() { Some("SOL×".into()) } else { None },

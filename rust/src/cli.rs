@@ -69,6 +69,12 @@ impl Args {
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// `true` if `--key` appeared at all (as an option or a bare flag) —
+    /// lets commands reject removed options instead of ignoring them.
+    pub fn has(&self, key: &str) -> bool {
+        self.opts.contains_key(key) || self.flag(key)
+    }
 }
 
 #[cfg(test)]
@@ -87,6 +93,7 @@ mod tests {
         assert_eq!(a.get_usize("batch", 0).unwrap(), 16);
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
+        assert!(a.has("model") && a.has("verbose") && !a.has("engine"));
     }
 
     #[test]

@@ -44,7 +44,7 @@ pub const MEM_SAFETY: f64 = 1.06;
 /// micro-batch activations in flight; synchronous 1F1B caps the in-flight
 /// count at the pipeline depth, shrinking the activation term of `M` by
 /// `min(c, pp)/c` while the time objective (2) is unchanged.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
 pub enum Schedule {
     /// GPipe flush schedule (the paper's illustration choice).
     #[default]
@@ -54,6 +54,23 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// Canonical lowercase key (CLI `--schedule`, service JSON).
+    pub fn key(self) -> &'static str {
+        match self {
+            Schedule::GPipe => "gpipe",
+            Schedule::OneF1B => "1f1b",
+        }
+    }
+
+    /// Inverse of [`Schedule::key`].
+    pub fn by_key(key: &str) -> Option<Schedule> {
+        match key.to_ascii_lowercase().as_str() {
+            "gpipe" => Some(Schedule::GPipe),
+            "1f1b" => Some(Schedule::OneF1B),
+            _ => None,
+        }
+    }
+
     /// Fraction of the mini-batch's activations resident per device.
     pub fn inflight_fraction(self, pp_size: usize, num_micro: usize) -> f64 {
         match self {

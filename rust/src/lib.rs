@@ -27,6 +27,7 @@
 //! | [`cost`] | time + memory cost models → A, R, R′, M matrices (§3.2) |
 //! | [`miqp`] | general MIQP solver: linearisation, simplex, branch & bound (§3.3) |
 //! | [`planner`] | chain-exact solver, QIP intra-only, UOP (Alg. 1) |
+//! | [`service`] | planner-as-a-service: typed PlanRequest/PlanResponse, cross-request profile + cost-base caches, cancellation/deadlines, batch drain |
 //! | [`baselines`] | Galvatron, Alpa-like, Megatron grid, DeepSpeed, inter-/intra-only |
 //! | [`sim`] | discrete-event GPipe pipeline simulator (ground truth) |
 //! | `runtime` | PJRT artifact loading + execution (feature `pjrt`) |
@@ -48,6 +49,7 @@ pub mod profiling;
 pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod strategy;
 pub mod testing;
@@ -64,6 +66,7 @@ pub mod prelude {
     pub use crate::graph::{Graph, Layer, LayerKind};
     pub use crate::planner::{Plan, PlannerConfig, UopResult};
     pub use crate::profiling::Profile;
+    pub use crate::service::{CancelToken, PlanRequest, PlanResponse, PlannerService};
     pub use crate::sim::{simulate_plan, SimConfig, SimResult};
     pub use crate::strategy::IntraStrategy;
 }

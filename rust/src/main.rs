@@ -2,20 +2,30 @@
 //!
 //! Commands:
 //! * `plan` — run the UOP planner (or a baseline) for a model × environment
-//!   × mini-batch, print the plan, the estimate and the simulated outcome.
+//!   × mini-batch, print the plan, the estimate and the simulated outcome
+//!   (or the machine-readable `PlanResponse` with `--json`).
 //! * `sweep` — print the full UOP candidate log (Figure 4b style).
+//! * `serve` — drain a JSON file of `PlanRequest`s concurrently through
+//!   one `PlannerService` (shared caches, per-request deadlines) and print
+//!   the `PlanResponse` array.
 //! * `profile` — show the analytic profile of an environment for a model.
 //! * `train` — execute a real GPipe training run over the AOT artifacts
 //!   (see `examples/train_pipeline.rs` for the scripted version).
 //! * `calibrate` — measure local PJRT matmul throughput.
+//!
+//! `plan` and `sweep` are thin front ends over [`PlannerService`] — the
+//! CLI builds a `PlanRequest` from the flags and prints the response.
 
-use uniap::baselines::{Baseline, BaselineKind};
+use uniap::baselines::BaselineKind;
 use uniap::cli::Args;
 use uniap::cluster::ClusterEnv;
+use uniap::cost::Schedule;
 use uniap::graph::models;
-use uniap::planner::PlannerConfig;
+use uniap::planner::Engine;
 use uniap::profiling::Profile;
+use uniap::service::{PlanRequest, PlanResponse, PlannerService, Status};
 use uniap::sim::{simulate_plan, SimConfig};
+use uniap::util::json::Json;
 
 const USAGE: &str = "\
 uniap — UniAP automatic-parallelism planner (paper reproduction)
@@ -27,70 +37,99 @@ COMMANDS:
              --env <EnvA|EnvB|EnvC|EnvD|EnvE> --batch <B>
              [--method <uniap|galvatron|alpa|inter|intra|megatron|deepspeed>]
              [--engine <auto|chain|miqp>] [--schedule <gpipe|1f1b>]
-             [--threads N] [--quiet]
+             [--deadline SECS] [--max-pp N] [--threads N] [--json] [--quiet]
   sweep      same selectors as plan; prints every (pp_size, c) candidate
+             [--json]
+  serve      --requests <file.json> [--concurrency N] [--pretty] [--validate]
+             drains the request file through one shared PlannerService
   profile    --model <name> --env <name>
   train      --artifacts <dir> --steps N [--micro N] [--lr F]
   calibrate  [--size N] [--iters N]
   version
 ";
 
-fn env_and_model(args: &Args) -> Result<(ClusterEnv, uniap::graph::Graph), String> {
-    let env_name = args.get("env", "EnvA");
-    let model_name = args.get("model", "bert");
-    let env = ClusterEnv::by_name(&env_name).ok_or(format!("unknown env {env_name}"))?;
-    let model = models::by_name(&model_name).ok_or(format!("unknown model {model_name}"))?;
-    Ok((env, model))
+/// Build a `PlanRequest` from the shared `plan`/`sweep` selector flags.
+fn plan_request(args: &Args) -> Result<PlanRequest, String> {
+    // Removed options fail loudly instead of being silently ignored.
+    if args.has("time-limit") {
+        return Err(
+            "--time-limit was replaced by --deadline SECS: one wall-clock budget for the \
+             whole request, threaded into every solve (DESIGN.md §Cancellation)"
+                .to_string(),
+        );
+    }
+    if args.has("mem-buckets") {
+        return Err(
+            "--mem-buckets only tuned the legacy dense chain engine, which the planner \
+             service never uses (the production engine tracks memory exactly)"
+                .to_string(),
+        );
+    }
+    let batch = args.get_usize("batch", 16)?;
+    let mut req =
+        PlanRequest::new(&args.get("id", ""), &args.get("model", "bert"), &args.get("env", "EnvA"), batch);
+    let method = args.get("method", "uniap");
+    req.method = BaselineKind::by_key(&method).ok_or(format!("unknown method {method}"))?;
+    let engine = args.get("engine", "auto");
+    req.engine = Engine::by_key(&engine).ok_or(format!("unknown engine {engine}"))?;
+    let schedule = args.get("schedule", "gpipe");
+    req.schedule = Schedule::by_key(&schedule).ok_or(format!("unknown schedule {schedule}"))?;
+    let deadline = args.get_f64("deadline", 0.0)?;
+    if deadline > 0.0 {
+        req.deadline_secs = Some(deadline);
+    }
+    let max_pp = args.get_usize("max-pp", 0)?;
+    if max_pp > 0 {
+        req.max_pp = Some(max_pp);
+    }
+    let threads = args.get_usize("threads", 0)?;
+    if threads > 0 {
+        req.threads = Some(threads);
+    }
+    Ok(req)
 }
 
-fn planner_cfg(args: &Args) -> Result<PlannerConfig, String> {
-    let mut cfg = PlannerConfig::default();
-    cfg.threads = args.get_usize("threads", cfg.threads)?;
-    cfg.mem_buckets = args.get_usize("mem-buckets", cfg.mem_buckets)?;
-    cfg.time_limit = args.get_f64("time-limit", cfg.time_limit)?;
-    cfg.schedule = match args.get("schedule", "gpipe").as_str() {
-        "gpipe" => uniap::cost::Schedule::GPipe,
-        "1f1b" => uniap::cost::Schedule::OneF1B,
-        other => return Err(format!("unknown schedule {other}")),
-    };
-    cfg.engine = match args.get("engine", "auto").as_str() {
-        "auto" => uniap::planner::Engine::Auto,
-        "chain" => uniap::planner::Engine::Chain,
-        "miqp" => uniap::planner::Engine::Miqp,
-        other => return Err(format!("unknown engine {other}")),
-    };
-    Ok(cfg)
+/// Surface an `error`-status response as a CLI error.
+fn ok_or_cli_error(resp: &PlanResponse) -> Result<(), String> {
+    if resp.status == Status::Error {
+        Err(resp.error.clone().unwrap_or_else(|| "request failed".to_string()))
+    } else {
+        Ok(())
+    }
 }
 
 fn cmd_plan(args: &Args) -> Result<(), String> {
-    let (env, graph) = env_and_model(args)?;
-    let batch = args.get_usize("batch", 16)?;
-    let cfg = planner_cfg(args)?;
-    let profile = Profile::analytic(&env, &graph);
-    let kind = match args.get("method", "uniap").as_str() {
-        "uniap" => BaselineKind::UniAP,
-        "galvatron" => BaselineKind::Galvatron,
-        "alpa" => BaselineKind::Alpa,
-        "inter" => BaselineKind::InterOnly,
-        "intra" => BaselineKind::IntraOnly,
-        "megatron" => BaselineKind::MegatronGrid,
-        "deepspeed" => BaselineKind::DeepSpeedZero3,
-        other => return Err(format!("unknown method {other}")),
-    };
-    println!("# {} · {} · B={} · {}", kind.label(), graph.name, batch, env.name);
-    let res = Baseline::run(kind, &profile, &graph, batch, &cfg);
-    println!("strategy optimization time: {}", uniap::util::fmt_secs(res.opt_secs));
-    match &res.plan {
-        None => println!("result: {}", res.failure.as_deref().unwrap_or("SOL×")),
+    let req = plan_request(args)?;
+    let service = PlannerService::new();
+    let resp = service.plan(&req);
+    if args.flag("json") {
+        ok_or_cli_error(&resp)?;
+        println!("{}", resp.to_json().to_pretty());
+        return Ok(());
+    }
+    ok_or_cli_error(&resp)?;
+    // names resolved successfully above, so these lookups cannot fail
+    let env = ClusterEnv::by_name(&req.env).unwrap();
+    let graph = models::by_name(&req.model).unwrap();
+    println!("# {} · {} · B={} · {}", req.method.label(), graph.name, req.batch, env.name);
+    println!("strategy optimization time: {}", uniap::util::fmt_secs(resp.timings.solve_secs));
+    match &resp.plan {
+        None => {
+            let why = resp.error.as_deref().unwrap_or("SOL×");
+            println!("result: {} ({})", why, resp.status.key());
+        }
         Some(plan) => {
             println!("plan: {}", plan.summary());
             if !args.flag("quiet") {
-                for (i, &(a, b)) in plan.stage_ranges().iter().enumerate() {
-                    let labels: Vec<String> =
-                        (a..=b).map(|u| format!("{}:{}", graph.layers[u].name, plan.strategy_of(u).label())).collect();
+                for (i, range) in plan.stage_ranges().iter().enumerate() {
+                    let Some((a, b)) = range else { continue };
+                    let labels: Vec<String> = (*a..=*b)
+                        .map(|u| format!("{}:{}", graph.layers[u].name, plan.strategy_of(u).label()))
+                        .collect();
                     println!("  stage {i}: {}", labels.join(" "));
                 }
             }
+            let profile = service.profile(&env, &graph); // cached by the plan() call
             let sim = simulate_plan(&graph, &profile, plan, &SimConfig::default());
             println!(
                 "simulated: {:.2} ± {:.2} samples/s (tpi {:.4}s, MFU {:.1}%, bubble {:.1}%{})",
@@ -109,13 +148,16 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<(), String> {
-    let (env, graph) = env_and_model(args)?;
-    let batch = args.get_usize("batch", 16)?;
-    let cfg = planner_cfg(args)?;
-    let profile = Profile::analytic(&env, &graph);
-    let res = uniap::planner::uop(&profile, &graph, batch, &cfg);
+    let req = plan_request(args)?;
+    let service = PlannerService::new();
+    let resp = service.plan(&req);
+    ok_or_cli_error(&resp)?;
+    if args.flag("json") {
+        println!("{}", resp.to_json().to_pretty());
+        return Ok(());
+    }
     let mut table = uniap::report::Table::new(&["pp_size", "c", "est TPI (s)", "solve (s)"]);
-    for l in &res.log {
+    for l in &resp.log {
         table.row(vec![
             l.pp_size.to_string(),
             l.num_micro.to_string(),
@@ -124,15 +166,92 @@ fn cmd_sweep(args: &Args) -> Result<(), String> {
         ]);
     }
     print!("{}", table.to_markdown());
-    println!("total: {}", uniap::util::fmt_secs(res.wall_secs));
-    if let Some(best) = res.best {
+    println!("total: {}", uniap::util::fmt_secs(resp.timings.solve_secs));
+    if let Some(best) = &resp.plan {
         println!("best: {}", best.summary());
     }
     Ok(())
 }
 
+/// Re-parse the emitted response text and check every plan against the
+/// paper's constraints — the smoke gate `serve --validate` runs in CI.
+/// Profiles come from the serving service's cache (already warm).
+fn validate_responses(
+    text: &str,
+    reqs: &[PlanRequest],
+    service: &PlannerService,
+) -> Result<usize, String> {
+    let arr = Json::parse(text)?;
+    let items = arr.as_arr().ok_or("response text is not a JSON array")?;
+    if items.len() != reqs.len() {
+        return Err(format!("{} responses for {} requests", items.len(), reqs.len()));
+    }
+    let mut plans = 0usize;
+    for (i, item) in items.iter().enumerate() {
+        let resp = PlanResponse::from_json(item).map_err(|e| format!("response [{i}]: {e}"))?;
+        if resp.status == Status::Error {
+            return Err(format!(
+                "response [{i}] errored: {}",
+                resp.error.as_deref().unwrap_or("unknown")
+            ));
+        }
+        let Some(plan) = &resp.plan else { continue };
+        let req = &reqs[i];
+        let env = ClusterEnv::by_name(&req.env).ok_or(format!("unknown env {:?}", req.env))?;
+        let graph =
+            models::by_name(&req.model).ok_or(format!("unknown model {:?}", req.model))?;
+        let profile = service.profile(&env, &graph);
+        let costs = uniap::cost::cost_modeling_sched(
+            &profile,
+            &graph,
+            plan.pp_size,
+            plan.batch,
+            plan.num_micro,
+            req.schedule,
+        );
+        let violations = plan.check(&graph, &costs);
+        if !violations.is_empty() {
+            return Err(format!("response [{i}] plan violates constraints: {violations:?}"));
+        }
+        plans += 1;
+    }
+    Ok(plans)
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let path = args.require("requests")?;
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    let reqs = PlanRequest::parse_batch(&text)?;
+    let service = PlannerService::new();
+    let default_conc = reqs.len().clamp(1, 4);
+    let concurrency = args.get_usize("concurrency", default_conc)?;
+    let responses = service.serve(&reqs, concurrency);
+    let arr = Json::Arr(responses.iter().map(PlanResponse::to_json).collect());
+    let out = if args.flag("pretty") { arr.to_pretty() } else { arr.to_string() };
+    println!("{out}");
+    let stats = service.stats();
+    eprintln!(
+        "served {} requests (concurrency {concurrency}, {} sweep threads each): \
+         profile cache {}/{} hit, cost-base cache {}/{} hit",
+        reqs.len(),
+        service.threads_per_request(concurrency.min(reqs.len().max(1))),
+        stats.profile_hits,
+        stats.profile_hits + stats.profile_misses,
+        stats.base_hits,
+        stats.base_hits + stats.base_misses,
+    );
+    if args.flag("validate") {
+        let plans = validate_responses(&out, &reqs, &service)?;
+        eprintln!("validated: all responses parse, {plans} plans pass Plan::check");
+    }
+    Ok(())
+}
+
 fn cmd_profile(args: &Args) -> Result<(), String> {
-    let (env, graph) = env_and_model(args)?;
+    let env_name = args.get("env", "EnvA");
+    let model_name = args.get("model", "bert");
+    let env = ClusterEnv::by_name(&env_name).ok_or(format!("unknown env {env_name}"))?;
+    let graph = models::by_name(&model_name).ok_or(format!("unknown model {model_name}"))?;
     let profile = Profile::analytic(&env, &graph);
     println!("# profile of {} on {}", graph.name, env.name);
     println!("devices: {} × {} ({} GiB)", env.total_devices(), env.device.name, env.device.mem_bytes / 1e9);
@@ -208,6 +327,7 @@ fn main() {
     let result = match args.command.as_str() {
         "plan" => cmd_plan(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "profile" => cmd_profile(&args),
         "train" => cmd_train(&args),
         "calibrate" => cmd_calibrate(&args),

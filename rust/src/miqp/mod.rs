@@ -33,6 +33,7 @@ use std::time::Instant;
 use crate::cost::CostMatrices;
 use crate::graph::Graph;
 use crate::planner::{Plan, PlannerConfig};
+use crate::util::cancel::CancelToken;
 
 struct Search<'a> {
     graph: &'a Graph,
@@ -50,6 +51,10 @@ struct Search<'a> {
     /// that cannot strictly beat it are cut even before this solve finds
     /// its own first leaf.
     incumbent: Option<&'a AtomicU64>,
+    /// Service cancel token; polled with the deadline every 4096 nodes. A
+    /// stopped search returns its best incumbent (Gurobi's time-limit
+    /// behaviour), not `None`.
+    cancel: Option<&'a CancelToken>,
 }
 
 /// Pruning threshold from a sweep incumbent: a 1e-9 relative slack keeps
@@ -83,7 +88,9 @@ impl<'a> Search<'a> {
     ) {
         self.nodes += 1;
         if self.nodes % 4096 == 0 {
-            if Instant::now() > self.deadline {
+            if Instant::now() > self.deadline
+                || self.cancel.is_some_and(|t| t.should_stop())
+            {
                 self.timed_out = true;
             }
             // refresh the sweep-wide incumbent: another candidate may have
@@ -192,7 +199,7 @@ impl<'a> Search<'a> {
 /// Solve the MIQP for one `(pp_size, c)` candidate. Exact within the time
 /// limit; returns the best incumbent afterwards; `None` = infeasible.
 pub fn solve_miqp(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> Option<Plan> {
-    solve_miqp_bounded(graph, costs, cfg, None)
+    solve_miqp_bounded(graph, costs, cfg, None, None)
 }
 
 /// [`solve_miqp`] seeded with the UOP sweep's shared incumbent: the
@@ -200,11 +207,16 @@ pub fn solve_miqp(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> O
 /// best TPI, so branches that cannot strictly beat another candidate's
 /// solution are pruned immediately. A candidate whose optimum ties the
 /// incumbent still returns it.
+///
+/// `cancel` joins `cfg.time_limit` as a stop condition (the service's
+/// per-request deadline / explicit cancellation); a stopped search
+/// returns its best incumbent so far, like Gurobi at its time limit.
 pub fn solve_miqp_bounded(
     graph: &Graph,
     costs: &CostMatrices,
     cfg: &PlannerConfig,
     incumbent: Option<&AtomicU64>,
+    cancel: Option<&CancelToken>,
 ) -> Option<Plan> {
     let v = graph.num_layers();
     if costs.pp_size > v {
@@ -227,13 +239,16 @@ pub fn solve_miqp_bounded(
         graph,
         costs,
         suffix_min,
-        deadline: Instant::now() + std::time::Duration::from_secs_f64(cfg.time_limit),
+        // clamp: Duration::from_secs_f64 panics on infinity, and callers
+        // (the service) use "huge" to mean "solve to proven optimality"
+        deadline: Instant::now() + std::time::Duration::from_secs_f64(cfg.time_limit.min(1.0e9)),
         timed_out: false,
         best_obj: incumbent_cutoff(incumbent),
         best: None,
         preds,
         nodes: 0,
         incumbent,
+        cancel,
     };
     let mut placement = Vec::with_capacity(v);
     let mut choice = Vec::with_capacity(v);
@@ -331,6 +346,19 @@ mod tests {
         let p = Profile::analytic(&ClusterEnv::env_b(), &g);
         let costs = cost_modeling(&p, &g, 2, 8, 2);
         assert!(solve_miqp(&g, &costs, &PlannerConfig::default()).is_none());
+    }
+
+    #[test]
+    fn cancelled_token_stops_the_search_quickly() {
+        let g = models::bert_huge();
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let costs = cost_modeling(&p, &g, 2, 16, 4);
+        let cfg = PlannerConfig::default(); // 60 s time limit — token must win
+        let token = CancelToken::new();
+        token.cancel();
+        let t0 = Instant::now();
+        let _ = solve_miqp_bounded(&g, &costs, &cfg, None, Some(&token));
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "cancel not honoured");
     }
 
     #[test]

@@ -37,6 +37,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::cost::CostMatrices;
 use crate::graph::Graph;
 use crate::planner::{Plan, PlannerConfig};
+use crate::util::cancel::CancelToken;
 
 const INF: f64 = f64::INFINITY;
 
@@ -108,7 +109,15 @@ fn pareto_compact_into(src: &mut Vec<MemCost>, dst: &mut Vec<MemCost>) {
 ///   Interval costs are monotone in the interval, so this empties the
 ///   frontiers (and stops the `r` loop) for dominated candidates early.
 ///   Pass `INF` for the unbounded (plan-identical) solve.
-fn interval_costs(costs: &CostMatrices, stage_cut: f64) -> IntervalCosts {
+///
+/// The cancel token is polled once per `(l, r)` interval step; on stop the
+/// partially-filled table is returned immediately and the caller must
+/// treat the solve as abandoned (DESIGN.md §Cancellation).
+fn interval_costs(
+    costs: &CostMatrices,
+    stage_cut: f64,
+    cancel: Option<&CancelToken>,
+) -> IntervalCosts {
     let v = costs.num_layers();
     let s = costs.num_strategies();
     let limit = costs.mem_limit;
@@ -141,6 +150,9 @@ fn interval_costs(costs: &CostMatrices, stage_cut: f64) -> IntervalCosts {
             continue; // layer l alone cannot fit anywhere
         }
         for r in l + 1..v {
+            if cancel.is_some_and(|t| t.should_stop()) {
+                return IntervalCosts { v, s, table }; // abandoned mid-build
+            }
             min_prefix += min_m[r];
             if min_prefix > limit {
                 break; // even the cheapest strategies no longer fit
@@ -318,7 +330,7 @@ fn pareto_insert(front: &mut Vec<Point>, p: Point) {
 /// Solve the joint problem for one `(pp_size, c)` candidate on a chain.
 /// Returns `None` when no feasible assignment exists (the paper's `SOL×`).
 pub fn solve_chain(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> Option<Plan> {
-    solve_chain_bounded(graph, costs, cfg, None)
+    solve_chain_bounded(graph, costs, cfg, None, None)
 }
 
 /// [`solve_chain`] with an optional sweep-wide incumbent bound: the bits of
@@ -327,11 +339,17 @@ pub fn solve_chain(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> 
 /// completion bound cannot *strictly* beat the incumbent are cut; a
 /// candidate whose optimum ties or beats the incumbent still returns that
 /// optimum, so the sweep's returned plan is unchanged.
+///
+/// `cancel` is the service's cooperative stop token, polled once per
+/// interval-DP row and once per pipeline-DP `(stage, r)` cell; a stopped
+/// solve returns `None` (indistinguishable from infeasible here — the
+/// caller recovers the cause from the token).
 pub fn solve_chain_bounded(
     graph: &Graph,
     costs: &CostMatrices,
     _cfg: &PlannerConfig,
     incumbent: Option<&AtomicU64>,
+    cancel: Option<&CancelToken>,
 ) -> Option<Plan> {
     assert!(graph.is_chain(), "chain solver requires a chain graph");
     let v = graph.num_layers();
@@ -352,9 +370,14 @@ pub fn solve_chain_bounded(
         })
     };
 
+    let stopped = || cancel.is_some_and(|t| t.should_stop());
+
     // Objective (2) ≥ c · pᵢ for any stage, so interval prefixes costing
     // more than incumbent/c can never improve on the incumbent.
-    let ic = interval_costs(costs, cut() / c);
+    let ic = interval_costs(costs, cut() / c, cancel);
+    if stopped() {
+        return None; // the table above may be partial — abandon the solve
+    }
 
     // Admissible completion bound for incumbent pruning: every layer after
     // the current stage end contributes at least its cheapest per-micro
@@ -409,6 +432,9 @@ pub fn solve_chain_bounded(
         let mut next = vec![vec![Vec::<Point>::new(); s]; v];
         let cut_s = cut();
         for r in stage - 1..v {
+            if stopped() {
+                return None;
+            }
             for kout in 0..s {
                 for (pidx, pt) in prev[r][kout].iter().enumerate() {
                     // next stage spans [r+1, r2]
@@ -679,7 +705,7 @@ mod tests {
         // On a memory-slack interval, the stage solve must equal the min
         // over boundary pairs of the conditioned interval DP.
         let (_, costs) = costs_for(6, 2, 8, 4);
-        let ic = interval_costs(&costs, INF);
+        let ic = interval_costs(&costs, INF, None);
         let s = costs.num_strategies();
         for (l, r) in [(0usize, 2usize), (1, 4), (0, 5)] {
             let (got, assign) = solve_interval(&costs, l, r).expect("feasible");
@@ -702,14 +728,32 @@ mod tests {
         let cfg = PlannerConfig::default();
         let free = solve_chain(&g, &costs, &cfg).expect("feasible");
         let inc = AtomicU64::new(free.est_tpi.to_bits());
-        let bounded = solve_chain_bounded(&g, &costs, &cfg, Some(&inc)).expect("still feasible");
+        let bounded =
+            solve_chain_bounded(&g, &costs, &cfg, Some(&inc), None).expect("still feasible");
         assert_eq!(free.placement, bounded.placement);
         assert_eq!(free.choice, bounded.choice);
         assert_eq!(free.est_tpi.to_bits(), bounded.est_tpi.to_bits());
         // a strictly better incumbent may legitimately prune everything
         let tighter = AtomicU64::new((free.est_tpi * 0.5).to_bits());
-        let cutout = solve_chain_bounded(&g, &costs, &cfg, Some(&tighter));
+        let cutout = solve_chain_bounded(&g, &costs, &cfg, Some(&tighter), None);
         assert!(cutout.is_none() || cutout.unwrap().est_tpi >= free.est_tpi);
+    }
+
+    #[test]
+    fn cancelled_token_aborts_the_solve() {
+        let (g, costs) = costs_for(8, 2, 16, 4);
+        let cfg = PlannerConfig::default();
+        let token = CancelToken::new();
+        token.cancel();
+        assert!(solve_chain_bounded(&g, &costs, &cfg, None, Some(&token)).is_none());
+        // a live token leaves the result untouched
+        let live = CancelToken::new();
+        let free = solve_chain(&g, &costs, &cfg).expect("feasible");
+        let with_token =
+            solve_chain_bounded(&g, &costs, &cfg, None, Some(&live)).expect("feasible");
+        assert_eq!(free.est_tpi.to_bits(), with_token.est_tpi.to_bits());
+        assert_eq!(free.placement, with_token.placement);
+        assert_eq!(free.choice, with_token.choice);
     }
 
     #[test]

@@ -24,13 +24,13 @@ pub mod chain_dense;
 pub mod qip;
 pub mod uop;
 
-pub use uop::{uop, UopResult};
+pub use uop::{uop, uop_with, CandidateLog, PlanEvent, SolveHooks, UopResult};
 
 use crate::cost::CostMatrices;
 use crate::strategy::IntraStrategy;
 
 /// Which solving engine the UOP dispatches to.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Engine {
     /// Chain solver when the graph is a chain, MIQP otherwise.
     Auto,
@@ -38,6 +38,27 @@ pub enum Engine {
     Chain,
     /// Force the general MIQP branch-and-bound.
     Miqp,
+}
+
+impl Engine {
+    /// Canonical lowercase key (CLI `--engine`, service JSON).
+    pub fn key(self) -> &'static str {
+        match self {
+            Engine::Auto => "auto",
+            Engine::Chain => "chain",
+            Engine::Miqp => "miqp",
+        }
+    }
+
+    /// Inverse of [`Engine::key`].
+    pub fn by_key(key: &str) -> Option<Engine> {
+        match key.to_ascii_lowercase().as_str() {
+            "auto" => Some(Engine::Auto),
+            "chain" => Some(Engine::Chain),
+            "miqp" => Some(Engine::Miqp),
+            _ => None,
+        }
+    }
 }
 
 /// Planner knobs (Appendix E's Gurobi configuration, reinterpreted for our
@@ -111,24 +132,41 @@ impl Plan {
     }
 
     /// Layer index ranges per stage (stages are contiguous for chains).
-    pub fn stage_ranges(&self) -> Vec<(usize, usize)> {
-        let mut out = vec![(usize::MAX, 0usize); self.pp_size];
+    /// `None` marks a stage with no layers — legal only for *malformed*
+    /// plans (constraint (7b) forbids it), but deserialized plans can be
+    /// malformed, so callers must not index through the sentinel.
+    pub fn stage_ranges(&self) -> Vec<Option<(usize, usize)>> {
+        let mut out: Vec<Option<(usize, usize)>> = vec![None; self.pp_size];
         for (u, &s) in self.placement.iter().enumerate() {
-            out[s].0 = out[s].0.min(u);
-            out[s].1 = out[s].1.max(u);
+            if s >= self.pp_size {
+                continue; // out-of-range stage: reported by check()
+            }
+            out[s] = Some(match out[s] {
+                None => (u, u),
+                Some((a, b)) => (a.min(u), b.max(u)),
+            });
         }
         out
     }
 
-    /// Human-readable one-line summary.
+    /// Human-readable one-line summary. Total on malformed plans: empty
+    /// stages print as `s{i}[empty]`, out-of-bounds strategy indices as
+    /// `s?` (use [`Plan::check`] to diagnose).
     pub fn summary(&self) -> String {
         let ranges = self.stage_ranges();
         let stages: Vec<String> = ranges
             .iter()
             .enumerate()
-            .map(|(i, &(a, b))| {
-                let st = self.strategy_of(a);
-                format!("s{i}[{a}..={b}]{}", st.label())
+            .map(|(i, range)| match range {
+                None => format!("s{i}[empty]"),
+                Some((a, b)) => {
+                    let label = self
+                        .choice
+                        .get(*a)
+                        .and_then(|&k| self.strategies.get(k))
+                        .map_or("s?".to_string(), |st| st.label());
+                    format!("s{i}[{a}..={b}]{label}")
+                }
             })
             .collect();
         format!(
@@ -142,12 +180,32 @@ impl Plan {
     }
 
     /// Validate the plan against the structural MIQP constraints
-    /// (placement (7), selection (8), order-preservation on the graph) and
-    /// memory (5). Returns a list of violated constraints.
+    /// (placement (7), selection (8), order-preservation on the graph),
+    /// memory (5), and device accounting (every stage's strategy must span
+    /// exactly `n / pp_size` devices, i.e. `dp·tp·pp_size = n`). Returns a
+    /// list of violated constraints. Never panics, even on malformed
+    /// (e.g. deserialized) plans: index checks run first and short-circuit
+    /// the cost-model lookups that would go out of bounds.
     pub fn check(&self, graph: &crate::graph::Graph, costs: &CostMatrices) -> Vec<String> {
         let mut bad = Vec::new();
         if self.placement.len() != graph.num_layers() {
             bad.push("placement size mismatch".to_string());
+            return bad;
+        }
+        if self.choice.len() != graph.num_layers() {
+            bad.push("choice size mismatch".to_string());
+            return bad;
+        }
+        // selection (8): every index must name a strategy of the dictionary
+        let mut indices_ok = true;
+        for (u, &k) in self.choice.iter().enumerate() {
+            if k >= self.strategies.len() {
+                bad.push(format!("layer {u} selects strategy {k} of {} (8)", self.strategies.len()));
+                indices_ok = false;
+            }
+        }
+        if self.pp_size == 0 {
+            bad.push("pp_size is zero".to_string());
             return bad;
         }
         for i in 0..self.pp_size {
@@ -165,6 +223,27 @@ impl Plan {
             if !graph.is_contiguous(&subset) {
                 bad.push(format!("stage {i} is not contiguous (6)"));
             }
+        }
+        if !indices_ok {
+            return bad; // the device/memory checks below index by choice
+        }
+        // device accounting: each stage owns n / pp_size devices, so every
+        // chosen strategy must satisfy dp·tp·pp_size = n.
+        let stage_devices = costs.strategies.first().map_or(0, |s| s.devices());
+        for (u, &k) in self.choice.iter().enumerate() {
+            let d = self.strategies[k].devices();
+            if d != stage_devices {
+                bad.push(format!(
+                    "layer {u} strategy uses {d} devices but its stage owns {stage_devices} \
+                     (dp·tp·pp_size ≠ n)"
+                ));
+            }
+        }
+        if self.choice.iter().any(|&k| k >= costs.num_strategies())
+            || self.placement.iter().any(|&s| s >= costs.pp_size)
+        {
+            bad.push("plan does not index this cost matrix (wrong pp_size?)".to_string());
+            return bad;
         }
         let mem = crate::cost::stage_memory(graph, costs, &self.placement, &self.choice);
         for (i, m) in mem.iter().enumerate() {
@@ -204,12 +283,56 @@ mod tests {
     #[test]
     fn stage_ranges_partition_layers() {
         let p = plan_fixture();
-        assert_eq!(p.stage_ranges(), vec![(0, 1), (2, 3)]);
+        assert_eq!(p.stage_ranges(), vec![Some((0, 1)), Some((2, 3))]);
     }
 
     #[test]
     fn summary_mentions_stages() {
         let s = plan_fixture().summary();
         assert!(s.contains("pp2") && s.contains("s0[0..=1]"));
+    }
+
+    #[test]
+    fn malformed_plans_do_not_panic_in_ranges_or_summary() {
+        // stage 1 empty (placement never names it) + an out-of-bounds
+        // strategy index: both used to panic via the (usize::MAX, 0)
+        // sentinel / unchecked indexing.
+        let mut p = plan_fixture();
+        p.placement = vec![0, 0, 0, 2];
+        p.choice = vec![0, 0, 0, 7];
+        p.pp_size = 3;
+        let ranges = p.stage_ranges();
+        assert_eq!(ranges, vec![Some((0, 2)), None, Some((3, 3))]);
+        let s = p.summary();
+        assert!(s.contains("s1[empty]"), "{s}");
+        assert!(s.contains("s2[3..=3]s?"), "{s}");
+    }
+
+    #[test]
+    fn check_flags_out_of_bounds_choice_and_wrong_device_count() {
+        use crate::cluster::ClusterEnv;
+        use crate::graph::models;
+        use crate::profiling::Profile;
+        let g = models::synthetic_chain(4, 5e11, 2e7, 2e6);
+        let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let costs = crate::cost::cost_modeling(&profile, &g, 2, 16, 4);
+
+        // out-of-bounds choice index must be reported, not panic
+        let mut p = plan_fixture();
+        p.choice[2] = 99;
+        let bad = p.check(&g, &costs);
+        assert!(bad.iter().any(|b| b.contains("selects strategy 99")), "{bad:?}");
+
+        // wrong device count: dp4·tp1 strategy on a 4-device stage is
+        // fine; shrink it to dp1·tp1 and the accounting check must fire.
+        let mut q = plan_fixture();
+        q.strategies = vec![IntraStrategy { dp: 1, tp: 1, fsdp: false }];
+        let bad = q.check(&g, &costs);
+        assert!(bad.iter().any(|b| b.contains("devices")), "{bad:?}");
+
+        // wrong choice length short-circuits
+        let mut r = plan_fixture();
+        r.choice.pop();
+        assert!(r.check(&g, &costs).iter().any(|b| b.contains("choice size")));
     }
 }

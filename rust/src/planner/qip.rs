@@ -11,27 +11,29 @@ use std::sync::atomic::AtomicU64;
 use crate::cost::CostMatrices;
 use crate::graph::Graph;
 use crate::planner::{chain, Plan, PlannerConfig};
+use crate::util::cancel::CancelToken;
 
 /// Solve intra-layer-only parallelism (the first step of Algorithm 1,
 /// `pp_size* = 1`, `c* = B`). Returns `None` when no strategy assignment
 /// fits in memory (`SOL×`).
 pub fn solve_qip(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> Option<Plan> {
-    solve_qip_bounded(graph, costs, cfg, None)
+    solve_qip_bounded(graph, costs, cfg, None, None)
 }
 
-/// [`solve_qip`] with the UOP sweep's shared incumbent bound (see
-/// [`chain::solve_chain_bounded`]).
+/// [`solve_qip`] with the UOP sweep's shared incumbent bound and the
+/// service's cancel token (see [`chain::solve_chain_bounded`]).
 pub fn solve_qip_bounded(
     graph: &Graph,
     costs: &CostMatrices,
     cfg: &PlannerConfig,
     incumbent: Option<&AtomicU64>,
+    cancel: Option<&CancelToken>,
 ) -> Option<Plan> {
     assert_eq!(costs.pp_size, 1, "QIP is the single-stage formulation");
     if graph.is_chain() {
-        chain::solve_chain_bounded(graph, costs, cfg, incumbent)
+        chain::solve_chain_bounded(graph, costs, cfg, incumbent, cancel)
     } else {
-        crate::miqp::solve_miqp_bounded(graph, costs, cfg, incumbent)
+        crate::miqp::solve_miqp_bounded(graph, costs, cfg, incumbent, cancel)
     }
 }
 

@@ -28,13 +28,14 @@
 //! strategy-optimization speedups.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::cost::{CostBase, CostMatrices};
 use crate::graph::Graph;
 use crate::planner::{chain, qip, Engine, Plan, PlannerConfig};
 use crate::profiling::Profile;
+use crate::util::cancel::CancelToken;
 
 /// One enumerated `(pp_size, c)` candidate and its outcome (for reporting
 /// and the Figure 4b scalability study). With incumbent sharing, `tpi` is
@@ -67,25 +68,65 @@ impl UopResult {
     }
 }
 
+/// Progress notification emitted by the sweep while it runs (the service's
+/// event callback — replaces the post-hoc-only candidate log for callers
+/// that want live progress). Emitted from worker threads, so sinks must be
+/// `Sync`.
+#[derive(Debug, Clone)]
+pub enum PlanEvent {
+    /// A `(pp_size, c)` candidate solve is starting.
+    CandidateStarted { pp_size: usize, num_micro: usize },
+    /// A candidate solve finished (carries the same entry that lands in
+    /// `UopResult::log`).
+    CandidateFinished { log: CandidateLog },
+}
+
+/// Optional hooks the service threads into [`uop_with`]:
+///
+/// * `cancel` — cooperative cancellation/deadline token, polled between
+///   candidates and inside the chain/MIQP inner loops;
+/// * `on_event` — live [`PlanEvent`] sink (called from worker threads);
+/// * `base_for` — externally cached [`CostBase`] provider keyed by
+///   `pp_size` (the service's cross-request cache). The provider **must**
+///   return bases built for the same `(profile, graph, batch)` the sweep
+///   runs on; `None` builds each base locally.
+#[derive(Default)]
+pub struct SolveHooks<'a> {
+    pub cancel: Option<&'a CancelToken>,
+    pub on_event: Option<&'a (dyn Fn(&PlanEvent) + Sync)>,
+    pub base_for: Option<&'a (dyn Fn(usize) -> Arc<CostBase> + Sync)>,
+}
+
+impl std::fmt::Debug for SolveHooks<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SolveHooks")
+            .field("cancel", &self.cancel.is_some())
+            .field("on_event", &self.on_event.is_some())
+            .field("base_for", &self.base_for.is_some())
+            .finish()
+    }
+}
+
 fn solve_candidate(
     graph: &Graph,
     costs: &CostMatrices,
     cfg: &PlannerConfig,
     incumbent: &AtomicU64,
+    cancel: Option<&CancelToken>,
 ) -> (Option<Plan>, f64) {
     let t0 = Instant::now();
     let inc = Some(incumbent);
     let plan = if costs.pp_size == 1 {
-        qip::solve_qip_bounded(graph, costs, cfg, inc)
+        qip::solve_qip_bounded(graph, costs, cfg, inc, cancel)
     } else {
         match cfg.engine {
-            Engine::Miqp => crate::miqp::solve_miqp_bounded(graph, costs, cfg, inc),
-            Engine::Chain => chain::solve_chain_bounded(graph, costs, cfg, inc),
+            Engine::Miqp => crate::miqp::solve_miqp_bounded(graph, costs, cfg, inc, cancel),
+            Engine::Chain => chain::solve_chain_bounded(graph, costs, cfg, inc, cancel),
             Engine::Auto => {
                 if graph.is_chain() {
-                    chain::solve_chain_bounded(graph, costs, cfg, inc)
+                    chain::solve_chain_bounded(graph, costs, cfg, inc, cancel)
                 } else {
-                    crate::miqp::solve_miqp_bounded(graph, costs, cfg, inc)
+                    crate::miqp::solve_miqp_bounded(graph, costs, cfg, inc, cancel)
                 }
             }
         }
@@ -106,8 +147,27 @@ struct Prepared {
 /// Run the Unified Optimization Process for mini-batch size `batch` on the
 /// profiled environment.
 pub fn uop(profile: &Profile, graph: &Graph, batch: usize, cfg: &PlannerConfig) -> UopResult {
+    uop_with(profile, graph, batch, cfg, &SolveHooks::default())
+}
+
+/// [`uop`] with service hooks: cancellation/deadline, live events, and an
+/// external [`CostBase`] cache (see [`SolveHooks`]).
+///
+/// Cancellation semantics: candidates not yet solved when the token stops
+/// are logged with `tpi: None, solve_secs: 0.0`; a chain solve interrupted
+/// mid-DP reports `None`; an interrupted MIQP returns its best incumbent
+/// (Gurobi-style). `best` therefore holds the best plan found *before* the
+/// stop — possibly none.
+pub fn uop_with(
+    profile: &Profile,
+    graph: &Graph,
+    batch: usize,
+    cfg: &PlannerConfig,
+    hooks: &SolveHooks,
+) -> UopResult {
     let t0 = Instant::now();
     let n = profile.env.total_devices();
+    let stopped = || hooks.cancel.is_some_and(|t| t.should_stop());
 
     // Candidate list: Algorithm 1 — (1, B) first (intra-only QIP), then
     // every pp_size | n except 1 crossed with every c | B except 1.
@@ -126,11 +186,30 @@ pub fn uop(profile: &Profile, graph: &Graph, batch: usize, cfg: &PlannerConfig) 
         }
     }
 
-    // Sweep-wide reuse: one factored cost base per pp_size…
-    let mut bases: Vec<(usize, CostBase)> = Vec::new();
+    // Sweep-wide reuse: one factored cost base per pp_size — taken from
+    // the service's cross-request cache when a provider is hooked in,
+    // built locally otherwise. Base construction is the expensive half of
+    // cost modeling, so the cancel token is polled between builds.
+    let mut bases: Vec<(usize, Arc<CostBase>)> = Vec::new();
     for &(pp, _) in &cands {
         if !bases.iter().any(|(p, _)| *p == pp) {
-            bases.push((pp, CostBase::new(profile, graph, pp, batch)));
+            if stopped() {
+                let log = cands
+                    .iter()
+                    .map(|&(pp, c)| CandidateLog {
+                        pp_size: pp,
+                        num_micro: c,
+                        tpi: None,
+                        solve_secs: 0.0,
+                    })
+                    .collect();
+                return UopResult { best: None, log, wall_secs: t0.elapsed().as_secs_f64() };
+            }
+            let base = match hooks.base_for {
+                Some(provider) => provider(pp),
+                None => Arc::new(CostBase::new(profile, graph, pp, batch)),
+            };
+            bases.push((pp, base));
         }
     }
 
@@ -172,7 +251,23 @@ pub fn uop(profile: &Profile, graph: &Graph, batch: usize, cfg: &PlannerConfig) 
                     break;
                 }
                 let cand = &prepared[i];
-                let (plan, secs) = solve_candidate(graph, &cand.costs, cfg, &incumbent);
+                if stopped() {
+                    // Drain the queue without solving: the log still covers
+                    // every enumerated candidate, marked unsolved.
+                    let log = CandidateLog {
+                        pp_size: cand.pp,
+                        num_micro: cand.c,
+                        tpi: None,
+                        solve_secs: 0.0,
+                    };
+                    results.lock().unwrap().push((cand.idx, log, None));
+                    continue;
+                }
+                if let Some(sink) = hooks.on_event {
+                    sink(&PlanEvent::CandidateStarted { pp_size: cand.pp, num_micro: cand.c });
+                }
+                let (plan, secs) =
+                    solve_candidate(graph, &cand.costs, cfg, &incumbent, hooks.cancel);
                 if let Some(p) = &plan {
                     incumbent.fetch_min(p.est_tpi.to_bits(), Ordering::Relaxed);
                 }
@@ -182,6 +277,9 @@ pub fn uop(profile: &Profile, graph: &Graph, batch: usize, cfg: &PlannerConfig) 
                     tpi: plan.as_ref().map(|p| p.est_tpi),
                     solve_secs: secs,
                 };
+                if let Some(sink) = hooks.on_event {
+                    sink(&PlanEvent::CandidateFinished { log: log.clone() });
+                }
                 results.lock().unwrap().push((cand.idx, log, plan));
             });
         }
@@ -279,6 +377,57 @@ mod tests {
         let p = Profile::analytic(&ClusterEnv::env_b(), &g);
         let res = uop(&p, &g, 8, &PlannerConfig::default());
         assert!(res.log.iter().all(|l| l.pp_size <= 3));
+    }
+
+    #[test]
+    fn uop_with_external_bases_matches_local_build() {
+        // The service's cross-request CostBase cache must be invisible to
+        // the result: provider-built bases give bit-identical plans.
+        let g = models::synthetic_chain(8, 5e11, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let cfg = PlannerConfig { threads: 1, ..Default::default() };
+        let provider = |pp: usize| Arc::new(CostBase::new(&p, &g, pp, 8));
+        let hooks = SolveHooks { base_for: Some(&provider), ..Default::default() };
+        let ext = uop_with(&p, &g, 8, &cfg, &hooks);
+        let loc = uop(&p, &g, 8, &cfg);
+        let (a, b) = (ext.best.expect("feasible"), loc.best.expect("feasible"));
+        assert_eq!(a.est_tpi.to_bits(), b.est_tpi.to_bits());
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.choice, b.choice);
+    }
+
+    #[test]
+    fn uop_cancelled_before_start_logs_all_candidates_unsolved() {
+        let g = models::synthetic_chain(8, 5e11, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let token = crate::util::cancel::CancelToken::new();
+        token.cancel();
+        let hooks = SolveHooks { cancel: Some(&token), ..Default::default() };
+        let res = uop_with(&p, &g, 8, &PlannerConfig::default(), &hooks);
+        assert!(res.best.is_none());
+        assert_eq!(res.log.len(), 10, "log still covers the enumeration");
+        assert!(res.log.iter().all(|l| l.tpi.is_none() && l.solve_secs == 0.0));
+    }
+
+    #[test]
+    fn uop_events_cover_every_solved_candidate() {
+        let g = models::synthetic_chain(8, 5e11, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let events: Mutex<Vec<(bool, usize, usize)>> = Mutex::new(Vec::new());
+        let sink = |e: &PlanEvent| {
+            let row = match e {
+                PlanEvent::CandidateStarted { pp_size, num_micro } => (true, *pp_size, *num_micro),
+                PlanEvent::CandidateFinished { log } => (false, log.pp_size, log.num_micro),
+            };
+            events.lock().unwrap().push(row);
+        };
+        let hooks = SolveHooks { on_event: Some(&sink), ..Default::default() };
+        let res = uop_with(&p, &g, 8, &PlannerConfig::default(), &hooks);
+        let seen = events.into_inner().unwrap();
+        let starts = seen.iter().filter(|(s, _, _)| *s).count();
+        let finishes = seen.iter().filter(|(s, _, _)| !*s).count();
+        assert_eq!(starts, res.log.len());
+        assert_eq!(finishes, res.log.len());
     }
 
     #[test]

@@ -1,0 +1,643 @@
+//! Planner-as-a-service: a long-lived front end over the UOP planner and
+//! the §4 baselines.
+//!
+//! The one-shot free function `planner::uop(profile, graph, batch, cfg)`
+//! rebuilds profiles and cost bases from scratch on every call. A
+//! [`PlannerService`] instead owns three content-keyed caches that
+//! repeated requests share (DESIGN.md §Planner service):
+//!
+//! * **profiles** per `(env, model)` content fingerprint — the analytic
+//!   profile is a pure function of the cluster description and the layer
+//!   graph, so equal content ⇒ equal profile;
+//! * **factored [`CostBase`]s** per `(profile fingerprint, pp_size,
+//!   batch)` — the expensive half of cost modeling. A warm repeated
+//!   request (same env/model/batch, any schedule/engine/`c`) skips cost
+//!   modeling entirely and goes straight to the solves;
+//! * **completed outcomes** per `(profile fingerprint, batch, method,
+//!   engine, schedule, max_pp)` — the planner is deterministic, so a
+//!   strictly repeated request replays the stored plan + candidate log
+//!   without solving at all. Only *completed* solves are stored: a
+//!   cancelled or deadline-cut request never poisons the cache.
+//!
+//! Requests and responses are typed ([`PlanRequest`] / [`PlanResponse`])
+//! with JSON (de)serialization over [`crate::util::json`], which is also
+//! the wire format of `uniap serve --requests <file.json>`. Each request
+//! carries an optional deadline, realised as a [`CancelToken`] threaded
+//! into the chain/MIQP inner loops; callers can additionally cancel
+//! cooperatively, and can observe live progress through the
+//! [`PlanEvent`] callback.
+//!
+//! Determinism guarantee: a warm request returns a plan **byte-identical**
+//! (as canonical JSON) to the cold solve of the same request — caching
+//! only skips recomputation, never changes matrices (property-tested in
+//! `rust/tests/service_api.rs`).
+
+pub mod request;
+pub mod response;
+
+pub use crate::util::cancel::{CancelCause, CancelToken};
+pub use request::PlanRequest;
+pub use response::{plan_from_json, plan_to_json, CacheStats, PlanResponse, Status, Timings};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::baselines::{Baseline, BaselineKind};
+use crate::cluster::ClusterEnv;
+use crate::cost::{CostBase, Schedule};
+use crate::graph::{models, Dtype, Graph};
+use crate::planner::{uop_with, CandidateLog, Engine, Plan, PlanEvent, PlannerConfig, SolveHooks};
+use crate::profiling::Profile;
+
+/// FNV-1a 64-bit accumulator for content fingerprints.
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x1_0000_0000_01b3);
+        }
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.bytes(s.as_bytes());
+    }
+}
+
+/// Content fingerprint of one `(env, graph)` workload — every field the
+/// analytic profiler and the cost models read. Two workloads with equal
+/// fingerprints produce bit-identical profiles and cost bases, which is
+/// what keys both service caches.
+pub fn workload_fingerprint(env: &ClusterEnv, graph: &Graph) -> u64 {
+    let mut h = Fnv::new();
+    h.str(&env.name);
+    h.usize(env.nodes);
+    h.usize(env.gpus_per_node);
+    h.str(&env.device.name);
+    h.f64(env.device.flops_f32);
+    h.f64(env.device.flops_f16);
+    h.f64(env.device.mem_bytes);
+    h.usize(env.group_size);
+    h.f64(env.intra_group_bw);
+    h.f64(env.inter_group_bw);
+    h.f64(env.inter_node_bw);
+    h.f64(env.link_latency);
+    h.f64(env.net_latency);
+    h.str(&graph.name);
+    h.usize(graph.layers.len());
+    for l in &graph.layers {
+        h.str(&l.name);
+        h.str(&l.type_key);
+        h.f64(l.flops_fwd);
+        h.f64(l.params);
+        h.f64(l.act_out_bytes);
+        h.f64(l.act_store_bytes);
+    }
+    h.usize(graph.edges.len());
+    for &(u, v) in &graph.edges {
+        h.usize(u);
+        h.usize(v);
+    }
+    h.u64(match graph.dtype {
+        Dtype::Fp32 => 0,
+        Dtype::Fp16Mixed => 1,
+    });
+    h.usize(graph.seq_len);
+    h.0
+}
+
+/// Everything besides the workload content that determines a solve's
+/// outcome — the completed-outcome cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct OutcomeKey {
+    fp: u64,
+    batch: usize,
+    method: BaselineKind,
+    engine: Engine,
+    schedule: Schedule,
+    max_pp: Option<usize>,
+}
+
+/// A completed solve, stored for replay on strictly repeated requests.
+#[derive(Debug, Clone)]
+struct Outcome {
+    status: Status,
+    error: Option<String>,
+    plan: Option<Plan>,
+    log: Vec<CandidateLog>,
+}
+
+/// Lifetime cache counters (all requests since construction).
+#[derive(Debug, Default)]
+struct Totals {
+    requests: AtomicUsize,
+    profile_hits: AtomicUsize,
+    profile_misses: AtomicUsize,
+    base_hits: AtomicUsize,
+    base_misses: AtomicUsize,
+    plan_hits: AtomicUsize,
+    plan_misses: AtomicUsize,
+}
+
+/// Snapshot of the service's lifetime statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServiceStats {
+    pub requests: usize,
+    pub profile_hits: usize,
+    pub profile_misses: usize,
+    pub base_hits: usize,
+    pub base_misses: usize,
+    pub plan_hits: usize,
+    pub plan_misses: usize,
+    /// Entries currently resident in each cache.
+    pub cached_profiles: usize,
+    pub cached_bases: usize,
+    pub cached_plans: usize,
+}
+
+/// The long-lived planner front end (see module docs). Cheap to share by
+/// reference across threads: the caches sit behind mutexes, and the
+/// expensive builds happen outside the critical sections.
+#[derive(Debug)]
+pub struct PlannerService {
+    /// Worker-thread budget the service divides among concurrent requests
+    /// (DESIGN.md §Service threads).
+    total_threads: usize,
+    profiles: Mutex<HashMap<u64, Arc<Profile>>>,
+    bases: Mutex<HashMap<(u64, usize, usize), Arc<CostBase>>>,
+    outcomes: Mutex<HashMap<OutcomeKey, Outcome>>,
+    totals: Totals,
+}
+
+impl Default for PlannerService {
+    fn default() -> Self {
+        PlannerService::new()
+    }
+}
+
+impl PlannerService {
+    /// Service with the machine's full parallelism as its thread budget.
+    pub fn new() -> PlannerService {
+        let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        PlannerService::with_threads(threads)
+    }
+
+    /// Service with an explicit worker-thread budget.
+    pub fn with_threads(total_threads: usize) -> PlannerService {
+        PlannerService {
+            total_threads: total_threads.max(1),
+            profiles: Mutex::new(HashMap::new()),
+            bases: Mutex::new(HashMap::new()),
+            outcomes: Mutex::new(HashMap::new()),
+            totals: Totals::default(),
+        }
+    }
+
+    /// Sweep worker threads granted to each of `concurrency` concurrent
+    /// requests: the budget is divided so nested parallelism (requests ×
+    /// sweep workers) never oversubscribes the machine.
+    pub fn threads_per_request(&self, concurrency: usize) -> usize {
+        (self.total_threads / concurrency.max(1)).max(1)
+    }
+
+    /// Lifetime statistics snapshot.
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            requests: self.totals.requests.load(Ordering::Relaxed),
+            profile_hits: self.totals.profile_hits.load(Ordering::Relaxed),
+            profile_misses: self.totals.profile_misses.load(Ordering::Relaxed),
+            base_hits: self.totals.base_hits.load(Ordering::Relaxed),
+            base_misses: self.totals.base_misses.load(Ordering::Relaxed),
+            plan_hits: self.totals.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.totals.plan_misses.load(Ordering::Relaxed),
+            cached_profiles: self.profiles.lock().unwrap().len(),
+            cached_bases: self.bases.lock().unwrap().len(),
+            cached_plans: self.outcomes.lock().unwrap().len(),
+        }
+    }
+
+    /// The cached profile for a workload (building and caching it on
+    /// first use) — lets front ends reuse the service's profile for
+    /// simulation/validation instead of rebuilding it.
+    pub fn profile(&self, env: &ClusterEnv, graph: &Graph) -> Arc<Profile> {
+        self.profile_for(workload_fingerprint(env, graph), env, graph).0
+    }
+
+    /// Cached profile lookup; `true` = hit. Builds happen outside the
+    /// lock, so two racing cold requests may both build — the results are
+    /// bit-identical and the second insert is a no-op overwrite.
+    fn profile_for(&self, fp: u64, env: &ClusterEnv, graph: &Graph) -> (Arc<Profile>, bool) {
+        if let Some(p) = self.profiles.lock().unwrap().get(&fp) {
+            return (p.clone(), true);
+        }
+        let built = Arc::new(Profile::analytic(env, graph));
+        self.profiles.lock().unwrap().insert(fp, built.clone());
+        (built, false)
+    }
+
+    /// Serve one request to completion (blocking). Equivalent to
+    /// [`PlannerService::plan_cancellable`] with a fresh token and no
+    /// event sink.
+    pub fn plan(&self, req: &PlanRequest) -> PlanResponse {
+        self.plan_cancellable(req, &CancelToken::new(), None)
+    }
+
+    /// Serve one request under a caller-owned [`CancelToken`], optionally
+    /// streaming [`PlanEvent`]s (called from sweep worker threads).
+    ///
+    /// Status mapping: a found plan is `Ok` even if the deadline expired
+    /// mid-sweep (best-effort incumbent, like Gurobi at its time limit);
+    /// with no plan, the token's cause distinguishes `Cancelled` /
+    /// `DeadlineExceeded` from a genuine `Infeasible`.
+    pub fn plan_cancellable(
+        &self,
+        req: &PlanRequest,
+        cancel: &CancelToken,
+        on_event: Option<&(dyn Fn(&PlanEvent) + Sync)>,
+    ) -> PlanResponse {
+        let t0 = Instant::now();
+        self.totals.requests.fetch_add(1, Ordering::Relaxed);
+
+        let Some(env) = ClusterEnv::by_name(&req.env) else {
+            return PlanResponse::error(&req.id, format!("unknown env {:?}", req.env));
+        };
+        let Some(graph) = models::by_name(&req.model) else {
+            return PlanResponse::error(&req.id, format!("unknown model {:?}", req.model));
+        };
+        let fp = workload_fingerprint(&env, &graph);
+
+        let t_prof = Instant::now();
+        let (profile, prof_hit) = self.profile_for(fp, &env, &graph);
+        let profile_secs = if prof_hit { 0.0 } else { t_prof.elapsed().as_secs_f64() };
+        if prof_hit {
+            self.totals.profile_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.totals.profile_misses.fetch_add(1, Ordering::Relaxed);
+        }
+
+        // Completed-outcome fast path: the planner is deterministic, so a
+        // strictly repeated request replays the stored result.
+        let outcome_key = OutcomeKey {
+            fp,
+            batch: req.batch,
+            method: req.method,
+            engine: req.engine,
+            schedule: req.schedule,
+            max_pp: req.max_pp,
+        };
+        if let Some(hit) = self.outcomes.lock().unwrap().get(&outcome_key).cloned() {
+            self.totals.plan_hits.fetch_add(1, Ordering::Relaxed);
+            return PlanResponse {
+                id: req.id.clone(),
+                status: hit.status,
+                error: hit.error,
+                plan: hit.plan,
+                log: hit.log,
+                timings: Timings {
+                    total_secs: t0.elapsed().as_secs_f64(),
+                    profile_secs,
+                    solve_secs: 0.0,
+                },
+                cache: CacheStats {
+                    profile_hits: prof_hit as usize,
+                    profile_misses: !prof_hit as usize,
+                    base_hits: 0,
+                    base_misses: 0,
+                    plan_hits: 1,
+                    plan_misses: 0,
+                },
+            };
+        }
+        self.totals.plan_misses.fetch_add(1, Ordering::Relaxed);
+
+        // Per-request deadline chains onto the caller's token.
+        let token = match req.deadline_secs {
+            Some(secs) => cancel.child_with_deadline(Duration::from_secs_f64(secs)),
+            None => cancel.clone(),
+        };
+        // The request deadline *fully* subsumes the legacy per-solve
+        // time_limit: with a deadline, each solve's internal budget equals
+        // the request budget (the token, started earlier, always expires
+        // first — so a solver that self-truncates implies an expired
+        // token, and the truncated result is provably never cached
+        // below); without one, the solve runs to proven optimality (the
+        // finite stand-in below only exists because Duration cannot hold
+        // infinity — ~4 months never fires in practice).
+        const NO_LIMIT_SECS: f64 = 1.0e7;
+        let cfg = PlannerConfig {
+            engine: req.engine,
+            schedule: req.schedule,
+            max_pp: req.max_pp,
+            threads: req.threads.unwrap_or(self.total_threads),
+            time_limit: req.deadline_secs.unwrap_or(NO_LIMIT_SECS),
+            ..PlannerConfig::default()
+        };
+
+        // Per-request cache counters, fed by the base provider closure
+        // (atomics: the provider runs on sweep worker threads).
+        let base_hits = AtomicUsize::new(0);
+        let base_misses = AtomicUsize::new(0);
+        let provider = |pp: usize| -> Arc<CostBase> {
+            let key = (fp, pp, req.batch);
+            if let Some(b) = self.bases.lock().unwrap().get(&key) {
+                base_hits.fetch_add(1, Ordering::Relaxed);
+                self.totals.base_hits.fetch_add(1, Ordering::Relaxed);
+                return b.clone();
+            }
+            let built = Arc::new(CostBase::new(&profile, &graph, pp, req.batch));
+            base_misses.fetch_add(1, Ordering::Relaxed);
+            self.totals.base_misses.fetch_add(1, Ordering::Relaxed);
+            self.bases.lock().unwrap().insert(key, built.clone());
+            built
+        };
+        let hooks = SolveHooks {
+            cancel: Some(&token),
+            on_event,
+            base_for: Some(&provider),
+        };
+
+        let (plan, log, solve_secs, failure) = match req.method {
+            BaselineKind::UniAP => {
+                let res = uop_with(&profile, &graph, req.batch, &cfg, &hooks);
+                (res.best, res.log, res.wall_secs, None)
+            }
+            other => {
+                let r = Baseline::run_with(other, &profile, &graph, req.batch, &cfg, &hooks);
+                (r.plan, Vec::new(), r.opt_secs, r.failure)
+            }
+        };
+
+        let status = if plan.is_some() {
+            Status::Ok
+        } else {
+            match token.cause() {
+                Some(CancelCause::Cancelled) => Status::Cancelled,
+                Some(CancelCause::Deadline) => Status::DeadlineExceeded,
+                None => Status::Infeasible,
+            }
+        };
+        let error = if status == Status::Infeasible { failure } else { None };
+        // Store only *completed* solves: a stopped token means the result
+        // may be a truncated sweep (or a best-effort incumbent) that a
+        // later undeadlined request must not inherit. Internal solver
+        // timeouts cannot slip through this check: every solver budget is
+        // the request deadline measured from a *later* start than the
+        // token's, so a self-truncated solve implies an expired token.
+        if token.cause().is_none() {
+            self.outcomes.lock().unwrap().insert(
+                outcome_key,
+                Outcome {
+                    status,
+                    error: error.clone(),
+                    plan: plan.clone(),
+                    log: log.clone(),
+                },
+            );
+        }
+        PlanResponse {
+            id: req.id.clone(),
+            status,
+            error,
+            plan,
+            log,
+            timings: Timings {
+                total_secs: t0.elapsed().as_secs_f64(),
+                profile_secs,
+                solve_secs,
+            },
+            cache: CacheStats {
+                profile_hits: prof_hit as usize,
+                profile_misses: !prof_hit as usize,
+                base_hits: base_hits.load(Ordering::Relaxed),
+                base_misses: base_misses.load(Ordering::Relaxed),
+                plan_hits: 0,
+                plan_misses: 1,
+            },
+        }
+    }
+
+    /// Drain a batch of requests over a pool of `concurrency` request
+    /// workers, dividing the sweep-thread budget per
+    /// [`PlannerService::threads_per_request`] (a request's explicit
+    /// `threads` wins over the policy). Responses come back in request
+    /// order; each request's deadline starts when a worker picks it up.
+    pub fn serve(&self, reqs: &[PlanRequest], concurrency: usize) -> Vec<PlanResponse> {
+        self.serve_cancellable(reqs, concurrency, &CancelToken::new())
+    }
+
+    /// [`PlannerService::serve`] under a caller-owned token: cancelling it
+    /// stops in-flight solves cooperatively and fails the rest of the
+    /// batch fast.
+    pub fn serve_cancellable(
+        &self,
+        reqs: &[PlanRequest],
+        concurrency: usize,
+        cancel: &CancelToken,
+    ) -> Vec<PlanResponse> {
+        if reqs.is_empty() {
+            return Vec::new();
+        }
+        let workers = concurrency.max(1).min(reqs.len());
+        let threads_each = self.threads_per_request(workers);
+        let next = AtomicUsize::new(0);
+        let out: Mutex<Vec<(usize, PlanResponse)>> = Mutex::new(Vec::with_capacity(reqs.len()));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= reqs.len() {
+                        break;
+                    }
+                    let mut req = reqs[i].clone();
+                    if req.threads.is_none() {
+                        req.threads = Some(threads_each);
+                    }
+                    let resp = self.plan_cancellable(&req, cancel, None);
+                    out.lock().unwrap().push((i, resp));
+                });
+            }
+        });
+        let mut rows = out.into_inner().unwrap();
+        rows.sort_by_key(|(i, _)| *i);
+        rows.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bert_req(id: &str) -> PlanRequest {
+        let mut req = PlanRequest::new(id, "bert", "EnvB", 16);
+        req.max_pp = Some(2); // keep unit-test sweeps small
+        req
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_content_sensitive() {
+        let g = models::by_name("bert").unwrap();
+        let env = ClusterEnv::env_b();
+        let a = workload_fingerprint(&env, &g);
+        assert_eq!(a, workload_fingerprint(&ClusterEnv::env_b(), &models::by_name("bert").unwrap()));
+        assert_ne!(a, workload_fingerprint(&ClusterEnv::env_a(), &g));
+        assert_ne!(a, workload_fingerprint(&env, &models::by_name("vit").unwrap()));
+        let mut tweaked = g.clone();
+        tweaked.layers[3].params *= 1.5;
+        assert_ne!(a, workload_fingerprint(&env, &tweaked));
+    }
+
+    #[test]
+    fn unknown_model_or_env_is_an_error_response() {
+        let svc = PlannerService::with_threads(2);
+        let bad_model = svc.plan(&PlanRequest::new("a", "gpt5", "EnvB", 16));
+        assert_eq!(bad_model.status, Status::Error);
+        assert!(bad_model.error.unwrap().contains("unknown model"));
+        let bad_env = svc.plan(&PlanRequest::new("b", "bert", "EnvZ", 16));
+        assert_eq!(bad_env.status, Status::Error);
+        assert!(bad_env.error.unwrap().contains("unknown env"));
+    }
+
+    #[test]
+    fn warm_request_reuses_caches_and_matches_cold_plan_bytes() {
+        let svc = PlannerService::with_threads(2);
+        let cold = svc.plan(&bert_req("cold"));
+        assert_eq!(cold.status, Status::Ok);
+        assert_eq!(cold.cache.profile_misses, 1);
+        assert_eq!(cold.cache.plan_misses, 1);
+        assert!(cold.cache.base_misses > 0 && cold.cache.base_hits == 0);
+
+        // strictly repeated request: completed-outcome replay
+        let warm = svc.plan(&bert_req("warm"));
+        assert_eq!(warm.status, Status::Ok);
+        assert_eq!(warm.cache.plan_hits, 1, "{:?}", warm.cache);
+        assert!(warm.cache.fully_warm(), "{:?}", warm.cache);
+        assert_eq!(warm.timings.solve_secs, 0.0);
+        assert_eq!(warm.log.len(), cold.log.len(), "log replays too");
+
+        let cold_json = plan_to_json(cold.plan.as_ref().unwrap()).to_string();
+        let warm_json = plan_to_json(warm.plan.as_ref().unwrap()).to_string();
+        assert_eq!(cold_json, warm_json, "warm plan must be byte-identical");
+
+        // different schedule, same (env, model, batch): outcome cache
+        // misses but every CostBase is reused — and the plan still matches
+        // a cold solve of the same request byte-for-byte.
+        let mut f1b = bert_req("f1b");
+        f1b.schedule = crate::cost::Schedule::OneF1B;
+        let r = svc.plan(&f1b);
+        assert_eq!(r.status, Status::Ok);
+        assert_eq!(r.cache.plan_misses, 1, "{:?}", r.cache);
+        assert!(r.cache.fully_warm(), "{:?}", r.cache);
+        assert_eq!(r.cache.base_hits, cold.cache.base_misses);
+        let fresh = PlannerService::with_threads(2).plan(&f1b);
+        assert_eq!(
+            plan_to_json(r.plan.as_ref().unwrap()).to_string(),
+            plan_to_json(fresh.plan.as_ref().unwrap()).to_string(),
+        );
+    }
+
+    #[test]
+    fn pre_cancelled_token_reports_cancelled() {
+        let svc = PlannerService::with_threads(2);
+        let token = CancelToken::new();
+        token.cancel();
+        let resp = svc.plan_cancellable(&bert_req("c"), &token, None);
+        assert_eq!(resp.status, Status::Cancelled);
+        assert!(resp.plan.is_none());
+        // every enumerated candidate is still logged, unsolved
+        assert!(resp.log.iter().all(|l| l.tpi.is_none()));
+    }
+
+    #[test]
+    fn zero_deadline_reports_deadline_exceeded() {
+        let svc = PlannerService::with_threads(2);
+        let mut req = bert_req("d");
+        req.deadline_secs = Some(1e-9);
+        let resp = svc.plan(&req);
+        assert_eq!(resp.status, Status::DeadlineExceeded);
+        assert!(resp.plan.is_none());
+    }
+
+    #[test]
+    fn baseline_methods_flow_through_the_service() {
+        let svc = PlannerService::with_threads(2);
+        let mut req = bert_req("g");
+        req.method = BaselineKind::Galvatron;
+        let resp = svc.plan(&req);
+        assert_eq!(resp.status, Status::Ok);
+        assert!(resp.log.is_empty(), "baselines carry no candidate log");
+        // DeepSpeed's launch failure surfaces as infeasible + message
+        let mut ds = PlanRequest::new("ds", "llama-7b", "EnvE", 8);
+        ds.method = BaselineKind::DeepSpeedZero3;
+        let r = svc.plan(&ds);
+        assert_eq!(r.status, Status::Infeasible);
+        assert!(r.error.unwrap().contains("not divisible"));
+    }
+
+    #[test]
+    fn events_stream_during_the_sweep() {
+        let svc = PlannerService::with_threads(1);
+        let events: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let sink = |e: &PlanEvent| {
+            let tag = match e {
+                PlanEvent::CandidateStarted { pp_size, num_micro } => {
+                    format!("start pp{pp_size} c{num_micro}")
+                }
+                PlanEvent::CandidateFinished { log } => {
+                    format!("finish pp{} c{}", log.pp_size, log.num_micro)
+                }
+            };
+            events.lock().unwrap().push(tag);
+        };
+        let resp = svc.plan_cancellable(&bert_req("e"), &CancelToken::new(), Some(&sink));
+        assert_eq!(resp.status, Status::Ok);
+        let seen = events.into_inner().unwrap();
+        let starts = seen.iter().filter(|s| s.starts_with("start")).count();
+        let finishes = seen.iter().filter(|s| s.starts_with("finish")).count();
+        assert_eq!(starts, finishes);
+        assert_eq!(starts, resp.log.len(), "every candidate announced");
+    }
+
+    #[test]
+    fn serve_preserves_request_order_and_divides_threads() {
+        let svc = PlannerService::with_threads(8);
+        assert_eq!(svc.threads_per_request(2), 4);
+        assert_eq!(svc.threads_per_request(16), 1);
+        assert_eq!(svc.threads_per_request(0), 8);
+        let reqs = vec![bert_req("first"), bert_req("second"), bert_req("third")];
+        let resps = svc.serve(&reqs, 2);
+        assert_eq!(resps.len(), 3);
+        assert_eq!(resps[0].id, "first");
+        assert_eq!(resps[1].id, "second");
+        assert_eq!(resps[2].id, "third");
+        assert!(resps.iter().all(|r| r.status == Status::Ok));
+        let stats = svc.stats();
+        assert_eq!(stats.requests, 3);
+        // the third request starts only after another completed, so at
+        // minimum it replays the stored outcome; racing cold requests may
+        // additionally share cost bases.
+        assert!(
+            stats.plan_hits + stats.base_hits > 0,
+            "batch must share work: {stats:?}"
+        );
+    }
+}

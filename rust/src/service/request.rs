@@ -1,0 +1,229 @@
+//! The typed request half of the service boundary.
+//!
+//! A [`PlanRequest`] names a workload — model, environment, mini-batch —
+//! plus solver knobs, a baseline method, and an optional per-request
+//! deadline. It (de)serializes through [`crate::util::json`], so the same
+//! struct is the in-process API (`PlannerService::plan`) and the wire
+//! format of `uniap serve --requests <file.json>`.
+
+use crate::baselines::BaselineKind;
+use crate::cost::Schedule;
+use crate::planner::Engine;
+use crate::util::json::Json;
+
+/// One planning request. `model`/`env` are resolved by name against the
+/// model zoo ([`crate::graph::models::by_name`]) and environment presets
+/// ([`crate::cluster::ClusterEnv::by_name`]) at service time, so requests
+/// stay small and cacheable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanRequest {
+    /// Caller correlation id, echoed verbatim in the response.
+    pub id: String,
+    /// Model zoo name (`bert`, `t5`, `vit`, `swin`, `llama-7b`, …).
+    pub model: String,
+    /// Environment preset name (`EnvA`…`EnvE`).
+    pub env: String,
+    /// Global mini-batch size `B`.
+    pub batch: usize,
+    /// Planning method (UniAP or one of the §4 baselines).
+    pub method: BaselineKind,
+    /// Solver engine selection for the UniAP sweep.
+    pub engine: Engine,
+    /// Pipeline schedule (footnote 2: memory constraint only).
+    pub schedule: Schedule,
+    /// Wall-clock budget for the whole request, seconds. Subsumes the old
+    /// per-solve `time_limit`: the service turns it into a `CancelToken`
+    /// deadline threaded through every solve of the sweep.
+    pub deadline_secs: Option<f64>,
+    /// Restrict `pp_size` candidates (None = all factors of `n`).
+    pub max_pp: Option<usize>,
+    /// Worker threads for this request's sweep. `None` lets the service
+    /// apply its oversubscription policy (DESIGN.md §Service threads).
+    pub threads: Option<usize>,
+}
+
+impl PlanRequest {
+    /// A UniAP request with default knobs.
+    pub fn new(id: &str, model: &str, env: &str, batch: usize) -> PlanRequest {
+        PlanRequest {
+            id: id.to_string(),
+            model: model.to_string(),
+            env: env.to_string(),
+            batch,
+            method: BaselineKind::UniAP,
+            engine: Engine::Auto,
+            schedule: Schedule::GPipe,
+            deadline_secs: None,
+            max_pp: None,
+            threads: None,
+        }
+    }
+
+    /// Serialize (deterministic field order; optional fields emitted as
+    /// `null` so emit∘parse is the identity).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("id", self.id.as_str())
+            .field("model", self.model.as_str())
+            .field("env", self.env.as_str())
+            .field("batch", self.batch)
+            .field("method", self.method.key())
+            .field("engine", self.engine.key())
+            .field("schedule", self.schedule.key())
+            .field("deadline_secs", self.deadline_secs.map_or(Json::Null, Json::Num))
+            .field("max_pp", self.max_pp.map_or(Json::Null, Json::from))
+            .field("threads", self.threads.map_or(Json::Null, Json::from))
+    }
+
+    /// Deserialize. `model`, `env` and `batch` are required; everything
+    /// else falls back to [`PlanRequest::new`] defaults. Unknown enum keys
+    /// are errors (not silent defaults) so malformed request files fail
+    /// loudly.
+    pub fn from_json(j: &Json) -> Result<PlanRequest, String> {
+        let req_str = |key: &str| -> Result<String, String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("request needs a string field \"{key}\""))
+        };
+        let model = req_str("model")?;
+        let env = req_str("env")?;
+        let batch = j
+            .get("batch")
+            .and_then(Json::as_usize)
+            .filter(|&b| b > 0)
+            .ok_or("request needs a positive integer \"batch\"")?;
+        let mut req = PlanRequest::new("", &model, &env, batch);
+        if let Some(id) = j.get("id") {
+            req.id = id.as_str().ok_or("\"id\" must be a string")?.to_string();
+        }
+        if let Some(m) = j.get("method").filter(|v| !v.is_null()) {
+            let key = m.as_str().ok_or("\"method\" must be a string")?;
+            req.method =
+                BaselineKind::by_key(key).ok_or_else(|| format!("unknown method {key:?}"))?;
+        }
+        if let Some(e) = j.get("engine").filter(|v| !v.is_null()) {
+            let key = e.as_str().ok_or("\"engine\" must be a string")?;
+            req.engine = Engine::by_key(key).ok_or_else(|| format!("unknown engine {key:?}"))?;
+        }
+        if let Some(s) = j.get("schedule").filter(|v| !v.is_null()) {
+            let key = s.as_str().ok_or("\"schedule\" must be a string")?;
+            req.schedule =
+                Schedule::by_key(key).ok_or_else(|| format!("unknown schedule {key:?}"))?;
+        }
+        if let Some(d) = j.get("deadline_secs").filter(|v| !v.is_null()) {
+            let secs = d.as_f64().filter(|s| *s > 0.0);
+            req.deadline_secs = Some(secs.ok_or("\"deadline_secs\" must be a positive number")?);
+        }
+        if let Some(p) = j.get("max_pp").filter(|v| !v.is_null()) {
+            req.max_pp = Some(p.as_usize().ok_or("\"max_pp\" must be a non-negative integer")?);
+        }
+        if let Some(t) = j.get("threads").filter(|v| !v.is_null()) {
+            let threads = t.as_usize().filter(|&t| t > 0);
+            req.threads = Some(threads.ok_or("\"threads\" must be a positive integer")?);
+        }
+        Ok(req)
+    }
+
+    /// Parse one request from JSON text.
+    pub fn parse(text: &str) -> Result<PlanRequest, String> {
+        PlanRequest::from_json(&Json::parse(text)?)
+    }
+
+    /// Parse a request *file*: either a JSON array of request objects or a
+    /// single object (treated as a one-element batch).
+    pub fn parse_batch(text: &str) -> Result<Vec<PlanRequest>, String> {
+        let j = Json::parse(text)?;
+        match &j {
+            Json::Arr(items) => items
+                .iter()
+                .enumerate()
+                .map(|(i, item)| {
+                    PlanRequest::from_json(item).map_err(|e| format!("request [{i}]: {e}"))
+                })
+                .collect(),
+            Json::Obj(_) => Ok(vec![PlanRequest::from_json(&j)?]),
+            _ => Err("request file must be a JSON object or array of objects".to_string()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        let mut req = PlanRequest::new("r1", "bert", "EnvB", 16);
+        req.method = BaselineKind::Galvatron;
+        req.engine = Engine::Chain;
+        req.schedule = Schedule::OneF1B;
+        req.deadline_secs = Some(2.5);
+        req.max_pp = Some(4);
+        req.threads = Some(3);
+        let back = PlanRequest::parse(&req.to_json().to_string()).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn minimal_request_defaults() {
+        let req = PlanRequest::parse(r#"{"model":"vit","env":"EnvA","batch":128}"#).unwrap();
+        assert_eq!(req.method, BaselineKind::UniAP);
+        assert_eq!(req.engine, Engine::Auto);
+        assert_eq!(req.schedule, Schedule::GPipe);
+        assert_eq!(req.id, "");
+        assert!(req.deadline_secs.is_none() && req.max_pp.is_none() && req.threads.is_none());
+    }
+
+    #[test]
+    fn missing_or_invalid_fields_error() {
+        assert!(PlanRequest::parse(r#"{"env":"EnvA","batch":8}"#).is_err());
+        assert!(PlanRequest::parse(r#"{"model":"bert","batch":8}"#).is_err());
+        assert!(PlanRequest::parse(r#"{"model":"bert","env":"EnvA"}"#).is_err());
+        assert!(PlanRequest::parse(r#"{"model":"bert","env":"EnvA","batch":0}"#).is_err());
+        assert!(
+            PlanRequest::parse(r#"{"model":"bert","env":"EnvA","batch":8,"method":"x"}"#).is_err()
+        );
+        assert!(PlanRequest::parse(
+            r#"{"model":"bert","env":"EnvA","batch":8,"deadline_secs":-1}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parse_batch_accepts_array_and_single_object() {
+        let one = PlanRequest::parse_batch(r#"{"model":"bert","env":"EnvB","batch":16}"#).unwrap();
+        assert_eq!(one.len(), 1);
+        let many = PlanRequest::parse_batch(
+            r#"[{"model":"bert","env":"EnvB","batch":16},
+                {"id":"2","model":"vit","env":"EnvA","batch":64,"schedule":"1f1b"}]"#,
+        )
+        .unwrap();
+        assert_eq!(many.len(), 2);
+        assert_eq!(many[1].id, "2");
+        assert_eq!(many[1].schedule, Schedule::OneF1B);
+        let bad = PlanRequest::parse_batch(r#"[{"model":"bert","env":"EnvB"}]"#);
+        assert!(bad.unwrap_err().contains("request [0]"));
+    }
+
+    #[test]
+    fn every_enum_key_roundtrips() {
+        for kind in [
+            BaselineKind::UniAP,
+            BaselineKind::Galvatron,
+            BaselineKind::Alpa,
+            BaselineKind::InterOnly,
+            BaselineKind::IntraOnly,
+            BaselineKind::MegatronGrid,
+            BaselineKind::DeepSpeedZero3,
+        ] {
+            assert_eq!(BaselineKind::by_key(kind.key()), Some(kind));
+        }
+        for engine in [Engine::Auto, Engine::Chain, Engine::Miqp] {
+            assert_eq!(Engine::by_key(engine.key()), Some(engine));
+        }
+        for sched in [Schedule::GPipe, Schedule::OneF1B] {
+            assert_eq!(Schedule::by_key(sched.key()), Some(sched));
+        }
+    }
+}

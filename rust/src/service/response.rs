@@ -1,0 +1,392 @@
+//! The typed response half of the service boundary: the chosen [`Plan`],
+//! the candidate log, timings and cache statistics, all (de)serializable
+//! through [`crate::util::json`].
+//!
+//! Plan serialization is **canonical**: emitting the same `Plan` twice
+//! yields the same bytes (insertion-ordered objects, shortest-roundtrip
+//! `f64` formatting), which is what the service's warm-vs-cold
+//! byte-identity guarantee is stated against.
+
+use crate::planner::uop::CandidateLog;
+use crate::planner::Plan;
+use crate::strategy::IntraStrategy;
+use crate::util::json::Json;
+
+/// Outcome class of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// A plan was found.
+    Ok,
+    /// The solve completed and proved no feasible plan exists (`SOL×`).
+    Infeasible,
+    /// The caller cancelled the request before it completed.
+    Cancelled,
+    /// The per-request deadline expired before the sweep finished.
+    DeadlineExceeded,
+    /// The request itself was invalid (unknown model/env, parse error…).
+    Error,
+}
+
+impl Status {
+    /// Canonical lowercase key.
+    pub fn key(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::Infeasible => "infeasible",
+            Status::Cancelled => "cancelled",
+            Status::DeadlineExceeded => "deadline",
+            Status::Error => "error",
+        }
+    }
+
+    /// Inverse of [`Status::key`].
+    pub fn by_key(key: &str) -> Option<Status> {
+        match key {
+            "ok" => Some(Status::Ok),
+            "infeasible" => Some(Status::Infeasible),
+            "cancelled" => Some(Status::Cancelled),
+            "deadline" => Some(Status::DeadlineExceeded),
+            "error" => Some(Status::Error),
+            _ => None,
+        }
+    }
+}
+
+/// Wall-clock breakdown of one request (seconds).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Timings {
+    /// End-to-end service time for the request.
+    pub total_secs: f64,
+    /// Profile construction (0.0 on a cache hit).
+    pub profile_secs: f64,
+    /// Strategy-optimization wall time (the paper's second metric).
+    pub solve_secs: f64,
+}
+
+/// Per-request cache interaction counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// Profile cache hits/misses for this request (at most one each).
+    pub profile_hits: usize,
+    pub profile_misses: usize,
+    /// `CostBase` cache hits/misses across the request's `pp_size` sweep.
+    pub base_hits: usize,
+    pub base_misses: usize,
+    /// Completed-outcome cache (at most one each): a hit replays a prior
+    /// identical solve without touching the planner at all.
+    pub plan_hits: usize,
+    pub plan_misses: usize,
+}
+
+impl CacheStats {
+    /// `true` when the request never rebuilt a profile or cost base.
+    pub fn fully_warm(&self) -> bool {
+        self.base_misses == 0 && self.profile_misses == 0
+    }
+}
+
+/// One planning response (see module docs).
+#[derive(Debug, Clone)]
+pub struct PlanResponse {
+    /// Echo of `PlanRequest::id`.
+    pub id: String,
+    pub status: Status,
+    /// Human-readable cause when `status` is `Error` (or a failure note
+    /// from a baseline, e.g. DeepSpeed's divisibility launch check).
+    pub error: Option<String>,
+    /// The chosen plan when `status` is `Ok`.
+    pub plan: Option<Plan>,
+    /// Candidate log in Algorithm 1 enumeration order (UniAP method only).
+    pub log: Vec<CandidateLog>,
+    pub timings: Timings,
+    pub cache: CacheStats,
+}
+
+/// Canonical JSON form of a [`Plan`].
+pub fn plan_to_json(plan: &Plan) -> Json {
+    let strategies = Json::Arr(
+        plan.strategies
+            .iter()
+            .map(|s| {
+                Json::obj()
+                    .field("dp", s.dp)
+                    .field("tp", s.tp)
+                    .field("fsdp", s.fsdp)
+            })
+            .collect(),
+    );
+    Json::obj()
+        .field("pp_size", plan.pp_size)
+        .field("num_micro", plan.num_micro)
+        .field("batch", plan.batch)
+        .field("placement", plan.placement.clone())
+        .field("choice", plan.choice.clone())
+        .field("strategies", strategies)
+        .field("est_tpi", plan.est_tpi)
+        .field("est_throughput", plan.est_throughput())
+        .field("summary", plan.summary())
+}
+
+/// Parse a [`Plan`] back from its canonical JSON (derived fields
+/// `est_throughput`/`summary` are ignored).
+pub fn plan_from_json(j: &Json) -> Result<Plan, String> {
+    let us = |key: &str| -> Result<usize, String> {
+        j.get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("plan needs integer \"{key}\""))
+    };
+    let vec_us = |key: &str| -> Result<Vec<usize>, String> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("plan needs array \"{key}\""))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| format!("\"{key}\" holds a non-integer")))
+            .collect()
+    };
+    let strategies = j
+        .get("strategies")
+        .and_then(Json::as_arr)
+        .ok_or("plan needs array \"strategies\"")?
+        .iter()
+        .map(|s| -> Result<IntraStrategy, String> {
+            Ok(IntraStrategy {
+                dp: s.get("dp").and_then(Json::as_usize).ok_or("strategy needs \"dp\"")?,
+                tp: s.get("tp").and_then(Json::as_usize).ok_or("strategy needs \"tp\"")?,
+                fsdp: s.get("fsdp").and_then(Json::as_bool).ok_or("strategy needs \"fsdp\"")?,
+            })
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(Plan {
+        pp_size: us("pp_size")?,
+        num_micro: us("num_micro")?,
+        batch: us("batch")?,
+        placement: vec_us("placement")?,
+        choice: vec_us("choice")?,
+        strategies,
+        est_tpi: j
+            .get("est_tpi")
+            .and_then(Json::as_f64)
+            .ok_or("plan needs number \"est_tpi\"")?,
+    })
+}
+
+fn log_entry_to_json(l: &CandidateLog) -> Json {
+    Json::obj()
+        .field("pp_size", l.pp_size)
+        .field("num_micro", l.num_micro)
+        .field("tpi", l.tpi.map_or(Json::Null, Json::Num))
+        .field("solve_secs", l.solve_secs)
+}
+
+fn log_entry_from_json(j: &Json) -> Result<CandidateLog, String> {
+    Ok(CandidateLog {
+        pp_size: j.get("pp_size").and_then(Json::as_usize).ok_or("log entry needs \"pp_size\"")?,
+        num_micro: j
+            .get("num_micro")
+            .and_then(Json::as_usize)
+            .ok_or("log entry needs \"num_micro\"")?,
+        tpi: match j.get("tpi") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_f64().ok_or("\"tpi\" must be a number or null")?),
+        },
+        solve_secs: j
+            .get("solve_secs")
+            .and_then(Json::as_f64)
+            .ok_or("log entry needs \"solve_secs\"")?,
+    })
+}
+
+impl PlanResponse {
+    /// A bare error response (request never reached the planner).
+    pub fn error(id: &str, message: String) -> PlanResponse {
+        PlanResponse {
+            id: id.to_string(),
+            status: Status::Error,
+            error: Some(message),
+            plan: None,
+            log: Vec::new(),
+            timings: Timings::default(),
+            cache: CacheStats::default(),
+        }
+    }
+
+    /// Serialize (deterministic field order).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("id", self.id.as_str())
+            .field("status", self.status.key())
+            .field("error", self.error.as_deref().map_or(Json::Null, Json::from))
+            .field("plan", self.plan.as_ref().map_or(Json::Null, plan_to_json))
+            .field("log", Json::Arr(self.log.iter().map(log_entry_to_json).collect()))
+            .field(
+                "timings",
+                Json::obj()
+                    .field("total_secs", self.timings.total_secs)
+                    .field("profile_secs", self.timings.profile_secs)
+                    .field("solve_secs", self.timings.solve_secs),
+            )
+            .field(
+                "cache",
+                Json::obj()
+                    .field("profile_hits", self.cache.profile_hits)
+                    .field("profile_misses", self.cache.profile_misses)
+                    .field("base_hits", self.cache.base_hits)
+                    .field("base_misses", self.cache.base_misses)
+                    .field("plan_hits", self.cache.plan_hits)
+                    .field("plan_misses", self.cache.plan_misses),
+            )
+    }
+
+    /// Deserialize a response (the `serve --validate` path and scripted
+    /// consumers use this).
+    pub fn from_json(j: &Json) -> Result<PlanResponse, String> {
+        let status_key = j
+            .get("status")
+            .and_then(Json::as_str)
+            .ok_or("response needs string \"status\"")?;
+        let status = Status::by_key(status_key)
+            .ok_or_else(|| format!("unknown status {status_key:?}"))?;
+        let plan = match j.get("plan") {
+            None | Some(Json::Null) => None,
+            Some(p) => Some(plan_from_json(p)?),
+        };
+        let log = j
+            .get("log")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(log_entry_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let tf = |obj: &str, key: &str| -> f64 {
+            j.get(obj).and_then(|o| o.get(key)).and_then(Json::as_f64).unwrap_or(0.0)
+        };
+        let tu = |key: &str| -> usize {
+            j.get("cache").and_then(|o| o.get(key)).and_then(Json::as_usize).unwrap_or(0)
+        };
+        Ok(PlanResponse {
+            id: j.get("id").and_then(Json::as_str).unwrap_or("").to_string(),
+            status,
+            error: match j.get("error") {
+                None | Some(Json::Null) => None,
+                Some(e) => Some(e.as_str().ok_or("\"error\" must be a string")?.to_string()),
+            },
+            plan,
+            log,
+            timings: Timings {
+                total_secs: tf("timings", "total_secs"),
+                profile_secs: tf("timings", "profile_secs"),
+                solve_secs: tf("timings", "solve_secs"),
+            },
+            cache: CacheStats {
+                profile_hits: tu("profile_hits"),
+                profile_misses: tu("profile_misses"),
+                base_hits: tu("base_hits"),
+                base_misses: tu("base_misses"),
+                plan_hits: tu("plan_hits"),
+                plan_misses: tu("plan_misses"),
+            },
+        })
+    }
+
+    /// Parse one response from JSON text.
+    pub fn parse(text: &str) -> Result<PlanResponse, String> {
+        PlanResponse::from_json(&Json::parse(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_fixture() -> Plan {
+        Plan {
+            pp_size: 2,
+            num_micro: 4,
+            batch: 16,
+            placement: vec![0, 0, 1, 1],
+            choice: vec![0, 1, 1, 0],
+            strategies: vec![
+                IntraStrategy { dp: 4, tp: 1, fsdp: false },
+                IntraStrategy { dp: 2, tp: 2, fsdp: true },
+            ],
+            est_tpi: 0.123456789012345,
+        }
+    }
+
+    #[test]
+    fn plan_json_roundtrip_is_byte_identical() {
+        let plan = plan_fixture();
+        let text = plan_to_json(&plan).to_string();
+        let back = plan_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(plan_to_json(&back).to_string(), text);
+        assert_eq!(back.est_tpi.to_bits(), plan.est_tpi.to_bits());
+        assert_eq!(back.placement, plan.placement);
+        assert_eq!(back.choice, plan.choice);
+        assert_eq!(back.strategies, plan.strategies);
+    }
+
+    #[test]
+    fn response_roundtrip_preserves_structure() {
+        let resp = PlanResponse {
+            id: "req-7".into(),
+            status: Status::Ok,
+            error: None,
+            plan: Some(plan_fixture()),
+            log: vec![
+                CandidateLog { pp_size: 1, num_micro: 16, tpi: Some(0.5), solve_secs: 0.01 },
+                CandidateLog { pp_size: 2, num_micro: 4, tpi: None, solve_secs: 0.02 },
+            ],
+            timings: Timings { total_secs: 0.2, profile_secs: 0.05, solve_secs: 0.12 },
+            cache: CacheStats {
+                profile_hits: 1,
+                profile_misses: 0,
+                base_hits: 3,
+                base_misses: 1,
+                plan_hits: 0,
+                plan_misses: 1,
+            },
+        };
+        let text = resp.to_json().to_string();
+        let back = PlanResponse::parse(&text).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.status, Status::Ok);
+        assert_eq!(back.log.len(), 2);
+        assert_eq!(back.log[1].tpi, None);
+        assert_eq!(back.cache, resp.cache);
+        assert!(!back.cache.fully_warm());
+    }
+
+    #[test]
+    fn error_response_roundtrip() {
+        let resp = PlanResponse::error("bad", "unknown model \"gpt\"".to_string());
+        let back = PlanResponse::parse(&resp.to_json().to_string()).unwrap();
+        assert_eq!(back.status, Status::Error);
+        assert!(back.error.unwrap().contains("unknown model"));
+        assert!(back.plan.is_none());
+    }
+
+    #[test]
+    fn status_keys_roundtrip() {
+        for s in [
+            Status::Ok,
+            Status::Infeasible,
+            Status::Cancelled,
+            Status::DeadlineExceeded,
+            Status::Error,
+        ] {
+            assert_eq!(Status::by_key(s.key()), Some(s));
+        }
+        assert_eq!(Status::by_key("nope"), None);
+    }
+
+    #[test]
+    fn malformed_plans_are_rejected() {
+        for bad in [
+            r#"{"pp_size":1}"#,
+            r#"{"pp_size":1,"num_micro":1,"batch":8,"placement":[0],"choice":["x"],"strategies":[],"est_tpi":1}"#,
+            r#"{"pp_size":1,"num_micro":1,"batch":8,"placement":[0],"choice":[0],"strategies":[{"dp":1}],"est_tpi":1}"#,
+        ] {
+            assert!(plan_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Cooperative cancellation for planner solves.
+//!
+//! Lives in `util` (not `service`) so the core solver modules can depend
+//! on it without inverting the service-over-planner layering; the service
+//! re-exports it as part of its public API.
+//!
+//! A [`CancelToken`] is a cheap, clonable handle the service threads into
+//! the chain/MIQP inner loops (and the UOP sweep between candidates). It
+//! carries two stop conditions:
+//!
+//! * an explicit [`CancelToken::cancel`] flag (a caller abandoning the
+//!   request), and
+//! * an optional wall-clock **deadline** — the per-request generalisation
+//!   of the old per-solve `PlannerConfig::time_limit` (Appendix E's 60 s
+//!   Gurobi budget): one budget for the whole sweep rather than one per
+//!   candidate.
+//!
+//! Tokens form a chain: [`CancelToken::child_with_deadline`] derives a
+//! token that stops when *either* the parent stops or its own (tighter)
+//! deadline passes, so a service-wide shutdown propagates into every
+//! in-flight request. Solvers poll [`CancelToken::should_stop`] at coarse
+//! granularity (once per interval-DP row, once per 4096 branch-and-bound
+//! nodes) — a relaxed atomic load plus, at most, one monotonic clock read.
+//!
+//! Protocol (DESIGN.md §Cancellation): a cancelled solve returns `None`
+//! exactly like an infeasible one; the *cause* is recovered from the token
+//! ([`CancelToken::cause`]), which is how `PlanResponse::status`
+//! distinguishes `cancelled` / `deadline` from a genuine `SOL×`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a token asked the solver to stop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelCause {
+    /// Explicitly cancelled by the caller.
+    Cancelled,
+    /// The wall-clock deadline passed.
+    Deadline,
+}
+
+#[derive(Debug)]
+struct Inner {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+    parent: Option<Arc<Inner>>,
+}
+
+impl Inner {
+    fn cancelled(&self) -> bool {
+        if self.cancelled.load(Ordering::Relaxed) {
+            return true;
+        }
+        self.parent.as_ref().is_some_and(|p| p.cancelled())
+    }
+
+    fn expired(&self, now: Instant) -> bool {
+        if self.deadline.is_some_and(|d| now >= d) {
+            return true;
+        }
+        self.parent.as_ref().is_some_and(|p| p.expired(now))
+    }
+}
+
+/// Clonable cooperative-cancellation handle (see module docs).
+#[derive(Debug, Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken::new()
+    }
+}
+
+impl CancelToken {
+    /// A token that never stops on its own (cancel-only).
+    pub fn new() -> CancelToken {
+        CancelToken {
+            inner: Arc::new(Inner { cancelled: AtomicBool::new(false), deadline: None, parent: None }),
+        }
+    }
+
+    /// A token that stops `timeout` from now.
+    pub fn with_deadline(timeout: Duration) -> CancelToken {
+        CancelToken {
+            inner: Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline: Some(Instant::now() + timeout),
+                parent: None,
+            }),
+        }
+    }
+
+    /// Derive a token that stops when `self` stops *or* `timeout` from now
+    /// passes — whichever comes first. Cancelling the child does not cancel
+    /// the parent.
+    pub fn child_with_deadline(&self, timeout: Duration) -> CancelToken {
+        CancelToken {
+            inner: Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline: Some(Instant::now() + timeout),
+                parent: Some(self.inner.clone()),
+            }),
+        }
+    }
+
+    /// Request cancellation (idempotent; visible to all clones and
+    /// children).
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// `true` once the token (or an ancestor) was explicitly cancelled.
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cancelled()
+    }
+
+    /// `true` once any deadline on the chain has passed.
+    pub fn deadline_expired(&self) -> bool {
+        self.inner.expired(Instant::now())
+    }
+
+    /// The solvers' polling predicate: explicit cancel OR expired deadline.
+    pub fn should_stop(&self) -> bool {
+        self.inner.cancelled() || self.inner.expired(Instant::now())
+    }
+
+    /// Why the token stopped, if it did. Explicit cancellation wins over a
+    /// deadline that also happens to have passed.
+    pub fn cause(&self) -> Option<CancelCause> {
+        if self.inner.cancelled() {
+            Some(CancelCause::Cancelled)
+        } else if self.inner.expired(Instant::now()) {
+            Some(CancelCause::Deadline)
+        } else {
+            None
+        }
+    }
+
+    /// Time left until the nearest deadline on the chain (None = unbounded).
+    pub fn remaining(&self) -> Option<Duration> {
+        let now = Instant::now();
+        let mut best: Option<Instant> = None;
+        let mut node: Option<&Inner> = Some(&self.inner);
+        while let Some(inner) = node {
+            if let Some(d) = inner.deadline {
+                best = Some(best.map_or(d, |b: Instant| b.min(d)));
+            }
+            node = inner.parent.as_deref();
+        }
+        best.map(|d| d.saturating_duration_since(now))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_token_does_not_stop() {
+        let t = CancelToken::new();
+        assert!(!t.should_stop());
+        assert!(t.cause().is_none());
+        assert!(t.remaining().is_none());
+    }
+
+    #[test]
+    fn cancel_is_visible_to_clones() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        t.cancel();
+        assert!(c.should_stop());
+        assert_eq!(c.cause(), Some(CancelCause::Cancelled));
+    }
+
+    #[test]
+    fn deadline_expires() {
+        let t = CancelToken::with_deadline(Duration::from_millis(0));
+        assert!(t.should_stop());
+        assert_eq!(t.cause(), Some(CancelCause::Deadline));
+        let slow = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert!(!slow.should_stop());
+        assert!(slow.remaining().unwrap() > Duration::from_secs(3000));
+    }
+
+    #[test]
+    fn child_inherits_parent_cancellation() {
+        let parent = CancelToken::new();
+        let child = parent.child_with_deadline(Duration::from_secs(3600));
+        assert!(!child.should_stop());
+        parent.cancel();
+        assert!(child.should_stop());
+        assert_eq!(child.cause(), Some(CancelCause::Cancelled));
+    }
+
+    #[test]
+    fn child_deadline_does_not_stop_parent() {
+        let parent = CancelToken::new();
+        let child = parent.child_with_deadline(Duration::from_millis(0));
+        assert!(child.should_stop());
+        assert!(!parent.should_stop());
+        child.cancel();
+        assert!(!parent.is_cancelled());
+    }
+
+    #[test]
+    fn explicit_cancel_wins_over_deadline() {
+        let t = CancelToken::with_deadline(Duration::from_millis(0));
+        t.cancel();
+        assert_eq!(t.cause(), Some(CancelCause::Cancelled));
+    }
+}

@@ -1,8 +1,10 @@
-//! Small shared utilities: math helpers, factorisation, JSON emission.
+//! Small shared utilities: math helpers, factorisation, JSON, and the
+//! cooperative cancellation primitive.
 //!
-//! The environment's crate registry is offline, so we avoid serde and emit
-//! JSON by hand where machine-readable output is needed.
+//! The environment's crate registry is offline, so we avoid serde and
+//! hand-roll JSON where machine-readable input/output is needed.
 
+pub mod cancel;
 pub mod json;
 
 /// All divisors of `n` in ascending order (including 1 and `n`).

@@ -150,12 +150,12 @@ fn incumbent_bounded_solves_keep_their_optimum() {
                 return Ok(()); // infeasible case — nothing to bound
             };
             let inc = AtomicU64::new(free.est_tpi.to_bits());
-            let chain_bounded = chain::solve_chain_bounded(&g, &costs, &cfg, Some(&inc))
+            let chain_bounded = chain::solve_chain_bounded(&g, &costs, &cfg, Some(&inc), None)
                 .ok_or("chain lost its optimum under its own incumbent")?;
             if chain_bounded.placement != free.placement || chain_bounded.choice != free.choice {
                 return Err("bounded chain plan differs from the free plan".into());
             }
-            let miqp_bounded = uniap::miqp::solve_miqp_bounded(&g, &costs, &cfg, Some(&inc))
+            let miqp_bounded = uniap::miqp::solve_miqp_bounded(&g, &costs, &cfg, Some(&inc), None)
                 .ok_or("miqp lost its optimum under the incumbent")?;
             if (miqp_bounded.est_tpi - free.est_tpi).abs() > 1e-12 * free.est_tpi {
                 return Err(format!(

@@ -1,0 +1,271 @@
+//! Integration + property tests for the planner service layer: JSON
+//! round-trips over randomized values (via the `testing::` PRNG), the
+//! warm-vs-cold cache equivalence guarantee, and batch serving with
+//! per-request deadlines.
+
+use uniap::baselines::BaselineKind;
+use uniap::cost::Schedule;
+use uniap::planner::uop::CandidateLog;
+use uniap::planner::{Engine, Plan, PlannerConfig};
+use uniap::service::{
+    plan_from_json, plan_to_json, CacheStats, CancelToken, PlanRequest, PlanResponse,
+    PlannerService, Status, Timings,
+};
+use uniap::strategy::strategies_for;
+use uniap::testing::{self, Rng};
+use uniap::util::json::Json;
+
+/// A structurally valid random plan: contiguous stages over a chain,
+/// in-bounds strategy choices, a real strategy dictionary.
+fn random_plan(rng: &mut Rng) -> Plan {
+    let pp = *rng.pick(&[1usize, 2, 4]);
+    let layers = rng.usize_in(pp, pp + 8);
+    let stage_devices = *rng.pick(&[1usize, 2, 4]);
+    let strategies = strategies_for(stage_devices);
+    // contiguous placement: pp non-empty stage sizes summing to `layers`
+    let mut sizes = vec![1usize; pp];
+    for _ in 0..layers - pp {
+        let i = rng.usize_in(0, pp);
+        sizes[i] += 1;
+    }
+    let mut placement = Vec::with_capacity(layers);
+    for (s, &len) in sizes.iter().enumerate() {
+        placement.extend(std::iter::repeat(s).take(len));
+    }
+    let choice = (0..layers).map(|_| rng.usize_in(0, strategies.len())).collect();
+    Plan {
+        pp_size: pp,
+        num_micro: *rng.pick(&[1usize, 2, 4, 8]),
+        batch: *rng.pick(&[8usize, 16, 64]),
+        placement,
+        choice,
+        strategies,
+        est_tpi: rng.f64_in(1e-4, 10.0),
+    }
+}
+
+fn random_request(rng: &mut Rng) -> PlanRequest {
+    let mut req = PlanRequest::new(
+        &format!("req-{}", rng.usize_in(0, 1000)),
+        rng.pick(&["bert", "t5", "vit", "swin", "llama-7b"]),
+        rng.pick(&["EnvA", "EnvB", "EnvC", "EnvD", "EnvE"]),
+        *rng.pick(&[8usize, 16, 32, 128]),
+    );
+    req.method = *rng.pick(&[
+        BaselineKind::UniAP,
+        BaselineKind::Galvatron,
+        BaselineKind::Alpa,
+        BaselineKind::IntraOnly,
+    ]);
+    req.engine = *rng.pick(&[Engine::Auto, Engine::Chain, Engine::Miqp]);
+    req.schedule = *rng.pick(&[Schedule::GPipe, Schedule::OneF1B]);
+    if rng.bool(0.5) {
+        req.deadline_secs = Some(rng.f64_in(0.1, 60.0));
+    }
+    if rng.bool(0.5) {
+        req.max_pp = Some(*rng.pick(&[1usize, 2, 4, 8]));
+    }
+    if rng.bool(0.5) {
+        req.threads = Some(rng.usize_in(1, 9));
+    }
+    req
+}
+
+#[test]
+fn plan_json_roundtrip_property() {
+    testing::check("plan_json_roundtrip", 60, random_plan, |plan| {
+        let text = plan_to_json(plan).to_string();
+        let back = plan_from_json(&Json::parse(&text).map_err(|e| e.to_string())?)
+            .map_err(|e| format!("reparse failed: {e}"))?;
+        let again = plan_to_json(&back).to_string();
+        if again != text {
+            return Err(format!("emit∘parse not identity:\n  {text}\n  {again}"));
+        }
+        if back.est_tpi.to_bits() != plan.est_tpi.to_bits() {
+            return Err("est_tpi lost precision".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn request_json_roundtrip_property() {
+    testing::check("request_json_roundtrip", 60, random_request, |req| {
+        let text = req.to_json().to_string();
+        let back = PlanRequest::parse(&text).map_err(|e| e.to_string())?;
+        if &back != req {
+            return Err(format!("{back:?} != {req:?}"));
+        }
+        // pretty emission must parse identically
+        let pretty = PlanRequest::parse(&req.to_json().to_pretty()).map_err(|e| e.to_string())?;
+        if &pretty != req {
+            return Err("pretty form diverged".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn response_json_roundtrip_property() {
+    testing::check(
+        "response_json_roundtrip",
+        40,
+        |rng| {
+            let status = *rng.pick(&[
+                Status::Ok,
+                Status::Infeasible,
+                Status::Cancelled,
+                Status::DeadlineExceeded,
+            ]);
+            let plan = (status == Status::Ok).then(|| random_plan(rng));
+            let log = (0..rng.usize_in(0, 6))
+                .map(|_| CandidateLog {
+                    pp_size: *rng.pick(&[1usize, 2, 4, 8]),
+                    num_micro: *rng.pick(&[2usize, 4, 8]),
+                    tpi: rng.bool(0.7).then(|| rng.f64_in(1e-3, 5.0)),
+                    solve_secs: rng.f64_in(0.0, 2.0),
+                })
+                .collect();
+            PlanResponse {
+                id: format!("r{}", rng.usize_in(0, 100)),
+                status,
+                error: (status == Status::Infeasible).then(|| "SOL×".to_string()),
+                plan,
+                log,
+                timings: Timings {
+                    total_secs: rng.f64_in(0.0, 3.0),
+                    profile_secs: rng.f64_in(0.0, 0.5),
+                    solve_secs: rng.f64_in(0.0, 2.0),
+                },
+                cache: CacheStats {
+                    profile_hits: rng.usize_in(0, 2),
+                    profile_misses: rng.usize_in(0, 2),
+                    base_hits: rng.usize_in(0, 6),
+                    base_misses: rng.usize_in(0, 6),
+                    plan_hits: rng.usize_in(0, 2),
+                    plan_misses: rng.usize_in(0, 2),
+                },
+            }
+        },
+        |resp| {
+            let text = resp.to_json().to_string();
+            let back = PlanResponse::parse(&text).map_err(|e| e.to_string())?;
+            if back.to_json().to_string() != text {
+                return Err("emit∘parse not identity".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The acceptance guarantee: a warm repeated request returns a plan
+/// byte-identical (as canonical JSON) to the cold-cache solve, for both
+/// the outcome-cache path (strict repeat) and the cost-base path
+/// (different schedule).
+#[test]
+fn warm_cache_equivalence_is_byte_identical() {
+    let mut req = PlanRequest::new("equiv", "bert", "EnvB", 16);
+    req.max_pp = Some(2);
+
+    let shared = PlannerService::with_threads(2);
+    let cold = shared.plan(&req);
+    assert_eq!(cold.status, Status::Ok);
+    let cold_bytes = plan_to_json(cold.plan.as_ref().unwrap()).to_string();
+
+    // strict repeat → outcome replay
+    let repeat = shared.plan(&req);
+    assert_eq!(repeat.cache.plan_hits, 1);
+    assert_eq!(plan_to_json(repeat.plan.as_ref().unwrap()).to_string(), cold_bytes);
+
+    // same bases, different schedule → solved warm; must equal the plan a
+    // completely fresh service produces for that request
+    let mut variant = req.clone();
+    variant.schedule = Schedule::OneF1B;
+    variant.id = "variant".into();
+    let warm_variant = shared.plan(&variant);
+    assert_eq!(warm_variant.status, Status::Ok);
+    assert!(warm_variant.cache.fully_warm(), "{:?}", warm_variant.cache);
+    let fresh_variant = PlannerService::with_threads(2).plan(&variant);
+    assert_eq!(
+        plan_to_json(warm_variant.plan.as_ref().unwrap()).to_string(),
+        plan_to_json(fresh_variant.plan.as_ref().unwrap()).to_string(),
+        "warm solve must be byte-identical to a cold solve"
+    );
+
+    // and the service path must agree with the raw planner API
+    let env = uniap::cluster::ClusterEnv::env_b();
+    let graph = uniap::graph::models::bert_huge();
+    let profile = uniap::profiling::Profile::analytic(&env, &graph);
+    let cfg = PlannerConfig { max_pp: Some(2), threads: 2, ..Default::default() };
+    let direct = uniap::planner::uop(&profile, &graph, 16, &cfg).best.expect("feasible");
+    assert_eq!(plan_to_json(&direct).to_string(), cold_bytes, "service == uop()");
+}
+
+#[test]
+fn serve_honours_per_request_deadlines_in_a_batch() {
+    let mut ok_req = PlanRequest::new("ok", "bert", "EnvB", 16);
+    ok_req.max_pp = Some(2);
+    let mut doomed = ok_req.clone();
+    doomed.id = "doomed".into();
+    doomed.deadline_secs = Some(1e-9);
+
+    let svc = PlannerService::with_threads(2);
+    let resps = svc.serve(&[ok_req, doomed], 2);
+    assert_eq!(resps.len(), 2);
+    assert_eq!(resps[0].id, "ok");
+    assert_eq!(resps[0].status, Status::Ok);
+    assert_eq!(resps[1].id, "doomed");
+    assert_eq!(resps[1].status, Status::DeadlineExceeded);
+    assert!(resps[1].plan.is_none());
+}
+
+#[test]
+fn serve_cancellable_stops_the_whole_batch() {
+    let mut req = PlanRequest::new("x", "bert", "EnvB", 16);
+    req.max_pp = Some(2);
+    let token = CancelToken::new();
+    token.cancel();
+    let svc = PlannerService::with_threads(2);
+    let resps = svc.serve_cancellable(&[req.clone(), req], 2, &token);
+    assert_eq!(resps.len(), 2);
+    assert!(resps.iter().all(|r| r.status == Status::Cancelled), "{:?}", resps[0].status);
+}
+
+#[test]
+fn request_file_roundtrip_through_serve_validates() {
+    // Mirrors the CI smoke: parse a batch file, serve it, emit the
+    // response array, re-parse it, and check every plan.
+    let file = r#"[
+        {"id": "bert-gpipe", "model": "bert", "env": "EnvB", "batch": 16, "max_pp": 2},
+        {"id": "bert-1f1b", "model": "bert", "env": "EnvB", "batch": 16,
+         "schedule": "1f1b", "max_pp": 2},
+        {"id": "galvatron", "model": "bert", "env": "EnvB", "batch": 16,
+         "method": "galvatron"}
+    ]"#;
+    let reqs = PlanRequest::parse_batch(file).expect("parses");
+    let svc = PlannerService::with_threads(2);
+    let resps = svc.serve(&reqs, 2);
+    let text = Json::Arr(resps.iter().map(PlanResponse::to_json).collect()).to_string();
+    let parsed = Json::parse(&text).expect("responses parse");
+    let items = parsed.as_arr().unwrap();
+    assert_eq!(items.len(), 3);
+    for (i, item) in items.iter().enumerate() {
+        let resp = PlanResponse::from_json(item).expect("response parses");
+        assert_eq!(resp.status, Status::Ok, "request {i}");
+        let plan = resp.plan.expect("plan present");
+        let req = &reqs[i];
+        let env = uniap::cluster::ClusterEnv::by_name(&req.env).unwrap();
+        let graph = uniap::graph::models::by_name(&req.model).unwrap();
+        let profile = uniap::profiling::Profile::analytic(&env, &graph);
+        let costs = uniap::cost::cost_modeling_sched(
+            &profile,
+            &graph,
+            plan.pp_size,
+            plan.batch,
+            plan.num_micro,
+            req.schedule,
+        );
+        let violations = plan.check(&graph, &costs);
+        assert!(violations.is_empty(), "request {i}: {violations:?}");
+    }
+}
