@@ -17,7 +17,14 @@
 //! also asserts the byte-identity guarantee: warm responses carry plans
 //! whose canonical JSON equals the cold solve's.
 //!
+//! ISSUE 3 adds the **batch-generic base** row: a request for a *new*
+//! mini-batch on a known workload must reuse every `(fp, pp)` cost base
+//! (the cache key lost its batch dimension) — tracked under
+//! `warm_new_batch_base_hits`.
+//!
 //! Run: `cargo bench --bench service_throughput`
+//! CI smoke: `UNIAP_BENCH_SMOKE=1` shrinks rows to single unwarmed
+//! samples.
 //! Writes `BENCH_service_throughput.json` (schema `uniap-bench-v1`).
 
 use uniap::cost::Schedule;
@@ -25,17 +32,24 @@ use uniap::report::bench::{section, BenchReport};
 use uniap::service::{plan_to_json, PlanRequest, PlannerService, Status};
 
 fn main() {
+    let smoke = std::env::var("UNIAP_BENCH_SMOKE").is_ok();
+    let w = |n: usize| if smoke { 0 } else { n };
+    let s = |n: usize| if smoke { 1 } else { n };
+
     let mut rep = BenchReport::new("service_throughput");
     rep.note("model", "BERT-Huge");
     rep.note("env", "EnvB");
     rep.note("batch", 16usize);
+    if smoke {
+        rep.note("smoke", true);
+    }
 
     let req = PlanRequest::new("bench", "bert", "EnvB", 16);
     let mut variant = req.clone();
     variant.schedule = Schedule::OneF1B;
 
     section("planner service: cold vs warm requests");
-    rep.bench("service cold (fresh caches per request)", 1, 5, || {
+    rep.bench("service cold (fresh caches per request)", w(1), s(5), || {
         let svc = PlannerService::new();
         std::hint::black_box(svc.plan(&req));
     });
@@ -45,11 +59,25 @@ fn main() {
     assert_eq!(cold.status, Status::Ok, "workload must be plannable");
     let cold_variant = PlannerService::new().plan(&variant);
 
-    rep.bench("service warm (same batch, different schedule)", 1, 5, || {
+    rep.bench("service warm (same batch, different schedule)", w(1), s(5), || {
         std::hint::black_box(svc.plan(&variant));
     });
-    rep.bench("service warm (strict repeat)", 1, 10, || {
+    rep.bench("service warm (strict repeat)", w(1), s(10), || {
         std::hint::black_box(svc.plan(&req));
+    });
+
+    // batch-generic bases: a brand-new mini-batch misses the outcome
+    // cache but rebuilds no cost base at all
+    let mut new_batch = req.clone();
+    new_batch.id = "b8".into();
+    new_batch.batch = 8; // strictly less memory than the B=16 baseline
+    let warm_b8 = svc.plan(&new_batch);
+    assert_eq!(warm_b8.status, Status::Ok);
+    assert_eq!(warm_b8.cache.base_misses, 0, "bases must be batch-generic");
+    assert!(warm_b8.cache.base_hits > 0);
+    rep.note("warm_new_batch_base_hits", warm_b8.cache.base_hits);
+    rep.bench("service warm (new batch B=8, shared bases)", w(1), s(5), || {
+        std::hint::black_box(svc.plan(&new_batch));
     });
 
     // byte-identity guarantee (the other half of the acceptance gate)
@@ -67,6 +95,8 @@ fn main() {
     let stats = svc.stats();
     rep.note("base_cache_hits", stats.base_hits);
     rep.note("plan_cache_hits", stats.plan_hits);
+    rep.note("frontier_cache_hits", stats.frontier_hits);
+    rep.note("outcome_evictions", stats.outcome_evictions);
 
     if let Some(speedup) = rep.speedup(
         "service cold (fresh caches per request)",
@@ -92,7 +122,7 @@ fn main() {
             r
         })
         .collect();
-    rep.bench("serve 6 requests, concurrency 2 (warm service)", 0, 3, || {
+    rep.bench("serve 6 requests, concurrency 2 (warm service)", 0, s(3), || {
         std::hint::black_box(svc.serve(&file, 2));
     });
 

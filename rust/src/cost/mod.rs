@@ -15,16 +15,18 @@
 //!
 //! ## Factored construction (DESIGN.md §Factored cost model)
 //!
-//! Every matrix entry is an *affine* function of `1/c` for a fixed
-//! `pp_size`: compute and activation-volume terms scale with the
-//! micro-batch size `B/(dp·c)` while latency terms, FSDP parameter
-//! gathers and the once-per-iteration gradient sync do not depend on `c`
-//! at all. [`CostBase`] captures those affine coefficients once per
-//! `pp_size` — the expensive part: profile lookups, ring/P2P bandwidth
-//! probing, and the `S²` resharding structure — and
-//! [`CostBase::materialize`] turns them into concrete [`CostMatrices`]
-//! for any `c` with a cheap scaling pass. The UOP sweep therefore builds
-//! `O(|pp|)` bases instead of `O(|pp|·|c|)` full matrices.
+//! Every matrix entry is affine in the mini-batch `B`, with the
+//! `B`-dependent part affine in `1/c`, for a fixed `pp_size`: compute
+//! and activation-volume terms scale with the micro-batch size
+//! `B/(dp·c)` while latency terms, FSDP parameter gathers and the
+//! once-per-iteration gradient sync depend on neither. [`CostBase`]
+//! captures the `(B, c)`-independent structure once per `pp_size` — the
+//! expensive part: profile lookups, ring/P2P bandwidth probing, and the
+//! `S²` resharding structure — and [`CostBase::materialize`] turns it
+//! into concrete [`CostMatrices`] for any `(B, c, schedule)` with a
+//! cheap arithmetic replay. The UOP sweep therefore builds `O(|pp|)`
+//! bases instead of `O(|pp|·|c|)` full matrices, and the service caches
+//! bases per `(workload, pp)` across *all* batch sizes.
 //! [`cost_modeling_sched`] delegates to this path, so single-candidate
 //! callers and the sweep see bit-identical matrices.
 
@@ -188,44 +190,55 @@ fn probe_affine(f: impl Fn(f64) -> f64) -> Affine {
     aff
 }
 
-/// The `c`-independent part of the cost model for one `pp_size`: affine
-/// coefficients in `1/c` for every matrix entry. Built once per
-/// `pp_size` by the UOP sweep and materialised per micro-batch count.
+/// The workload-generic part of the cost model for one `pp_size`: every
+/// probed quantity (profile lookups, collective affines, the `S²`
+/// resharding structure) is independent of both the mini-batch `B` and
+/// the micro-batch count `c`, and every matrix entry is affine in `B`
+/// with the `B`-dependent part affine in `1/c`. A base is therefore
+/// built **once per `(workload, pp_size)`** — the service keys its cache
+/// exactly so — and materialised per `(B, c, schedule)` with a cheap
+/// arithmetic replay.
 #[derive(Debug, Clone)]
 pub struct CostBase {
     /// Strategy dictionary shared by every layer of a stage.
     pub strategies: Vec<IntraStrategy>,
     /// Pipeline-parallel size this base was built for.
     pub pp_size: usize,
-    /// Global mini-batch size `B`.
-    pub batch: usize,
     /// Per-device memory limit (after the safety reserve).
     pub mem_limit: f64,
-    /// `fwd[u][k]` / `bwd[u][k]`: per-micro-batch seconds, affine in `1/c`.
-    fwd: Vec<Vec<Affine>>,
-    bwd: Vec<Vec<Affine>>,
-    /// Once-per-iteration DP gradient sync (independent of `c`).
+    /// `t_fwd[u][k]`: profiled per-sample forward compute seconds.
+    t_fwd: Vec<Vec<f64>>,
+    /// `B`- and `c`-independent additive seconds per direction (TP
+    /// latency intercepts + FSDP parameter gathers after CCOC overlap).
+    f_konst: Vec<Vec<f64>>,
+    b_konst: Vec<Vec<f64>>,
+    /// Once-per-iteration DP gradient sync (independent of `B` and `c`).
     per_iter: Vec<Vec<f64>>,
-    /// Model-state bytes (eq. 1; independent of `c`).
+    /// Model-state bytes (eq. 1; independent of `B` and `c`).
     m_state: Vec<Vec<f64>>,
-    /// Full-mini-batch activation residency; the schedule's in-flight
-    /// fraction scales it at materialisation time.
-    m_act: Vec<Vec<f64>>,
+    /// Per-strategy TP all-reduce affine (the group depends only on the
+    /// strategy, not the layer).
+    ar_tp: Vec<Affine>,
     /// Intra-stage / cross-stage resharding seconds per `(k, l)` as affine
     /// functions of the edge byte volume (shared by every edge — only the
     /// volume differs between edges).
     reshard: Vec<Vec<Affine>>,
     cross: Vec<Vec<Affine>>,
-    /// Per-edge byte-volume coefficient: `bytes(e, c) = edge_bytes[e]/c`.
-    edge_bytes: Vec<f64>,
+    /// Per-layer activation bytes per sample — the coefficients the
+    /// `B`-dependent terms scale at materialisation time.
+    act_out: Vec<f64>,
+    act_store: Vec<f64>,
+    /// Per-edge source-layer output bytes per sample:
+    /// `bytes(e, B, c) = edge_act[e]·B/c`.
+    edge_act: Vec<f64>,
 }
 
 impl CostBase {
-    /// Build the `c`-independent cost structure for one `pp_size` — the
-    /// expensive half of the `CostModeling` step of Algorithm 1: profile
-    /// lookups, collective-model probing, and the `S²` resharding
-    /// structure over the representative stage rank blocks.
-    pub fn new(profile: &Profile, graph: &Graph, pp_size: usize, batch: usize) -> CostBase {
+    /// Build the `(B, c)`-independent cost structure for one `pp_size` —
+    /// the expensive half of the `CostModeling` step of Algorithm 1:
+    /// profile lookups, collective-model probing, and the `S²`
+    /// resharding structure over the representative stage rank blocks.
+    pub fn new(profile: &Profile, graph: &Graph, pp_size: usize) -> CostBase {
         let env = &profile.env;
         let n = env.total_devices();
         assert!(n % pp_size == 0, "pp_size {pp_size} must divide {n}");
@@ -243,8 +256,6 @@ impl CostBase {
         let c_dtype = graph.dtype.c_dtype();
         let ccoc = profile.ccoc;
 
-        // Per-strategy TP all-reduce affine (the group depends only on the
-        // strategy, not the layer).
         let ar_tp: Vec<Affine> = strategies
             .iter()
             .map(|st| {
@@ -257,63 +268,52 @@ impl CostBase {
             })
             .collect();
 
-        let mut fwd = vec![vec![Affine::default(); s_count]; v];
-        let mut bwd = vec![vec![Affine::default(); s_count]; v];
+        let mut t_fwd = vec![vec![0.0; s_count]; v];
+        let mut f_konst = vec![vec![0.0; s_count]; v];
+        let mut b_konst = vec![vec![0.0; s_count]; v];
         let mut per_iter = vec![vec![0.0; s_count]; v];
         let mut m_state = vec![vec![0.0; s_count]; v];
-        let mut m_act = vec![vec![0.0; s_count]; v];
 
         for (u, layer) in graph.layers.iter().enumerate() {
             for (k, st) in strategies.iter().enumerate() {
-                let dp = st.dp as f64;
-                // Per-replica mini-batch in samples; the UOP divides it by
-                // `c` at materialisation time.
-                let b_rep = batch as f64 / dp;
-
-                // --- time (affine in 1/c) -----------------------------
-                let fwd_comp = profile.fwd_time_per_sample(&layer.type_key, st.tp) * b_rep;
-                let bwd_comp = 2.0 * fwd_comp; // §3.2: BP ≈ 2× FP for MatMul layers
-                let mut f = Affine { slope: fwd_comp, konst: 0.0 };
-                let mut b = Affine { slope: bwd_comp, konst: 0.0 };
+                t_fwd[u][k] = profile.fwd_time_per_sample(&layer.type_key, st.tp);
 
                 // TP collectives: 2 all-reduces of the layer output per
-                // direction (attention out + MLP out), Megatron-style.
+                // direction (attention out + MLP out), Megatron-style —
+                // the volume term scales with `B/(dp·c)` and is applied
+                // at materialisation; the latency intercept lands here.
+                let mut fk = 0.0;
+                let mut bk = 0.0;
                 if st.tp > 1 {
-                    let vol = layer.act_out_bytes * b_rep; // × 1/c later
-                    f.slope += 2.0 * ar_tp[k].slope * vol;
-                    f.konst += 2.0 * ar_tp[k].konst;
-                    b.slope += 2.0 * ar_tp[k].slope * vol;
-                    b.konst += 2.0 * ar_tp[k].konst;
+                    fk += 2.0 * ar_tp[k].konst;
+                    bk += 2.0 * ar_tp[k].konst;
                 }
                 // FSDP: all-gather the layer's parameter shard before use
                 // in FP and BP, reduce-scatter gradients after BP. Pure
-                // parameter traffic — independent of `c`.
+                // parameter traffic — independent of `B` and `c`.
                 let param_bytes = layer.params * elem / st.tp as f64;
                 if st.fsdp && st.dp > 1 {
                     let group = env.dp_group(&stage0, st.tp, 0);
                     let ag = env.allgather_time(param_bytes, &group);
                     let rs = env.reducescatter_time(param_bytes, &group);
                     // gathers overlap with compute of neighbouring layers
-                    f.konst += ag * (1.0 - ccoc);
-                    b.konst += (ag + rs) * (1.0 - ccoc);
+                    fk += ag * (1.0 - ccoc);
+                    bk += (ag + rs) * (1.0 - ccoc);
                 }
+                f_konst[u][k] = fk;
+                b_konst[u][k] = bk;
+
                 // DP gradient all-reduce: once per iteration, overlapped
                 // with backward compute by CCOC (§3.2 overlapping model).
-                let mut iter_cost = 0.0;
                 if st.dp > 1 && !st.fsdp {
                     let group = env.dp_group(&stage0, st.tp, 0);
                     let grad_bytes = layer.params * elem / st.tp as f64;
-                    iter_cost = env.allreduce_time(grad_bytes, &group) * (1.0 - ccoc);
+                    per_iter[u][k] = env.allreduce_time(grad_bytes, &group) * (1.0 - ccoc);
                 }
 
-                fwd[u][k] = f;
-                bwd[u][k] = b;
-                per_iter[u][k] = iter_cost;
-
-                // --- memory (eq. 1 + activation) ----------------------
+                // --- memory (eq. 1 model states) ----------------------
                 let ps = layer.params * elem; // parameter storage size
                 m_state[u][k] = c_dtype * ps / (st.tp as f64 * st.fsdp_factor());
-                m_act[u][k] = layer.act_store_bytes * b_rep / st.tp as f64;
             }
         }
 
@@ -329,32 +329,33 @@ impl CostBase {
                 }
             }
         }
-        let edge_bytes: Vec<f64> = graph
-            .edges
-            .iter()
-            .map(|&(u, _)| graph.layers[u].act_out_bytes * batch as f64)
-            .collect();
 
         CostBase {
             strategies,
             pp_size,
-            batch,
             mem_limit: profile.mem_limit() / MEM_SAFETY,
-            fwd,
-            bwd,
+            t_fwd,
+            f_konst,
+            b_konst,
             per_iter,
             m_state,
-            m_act,
+            ar_tp,
             reshard,
             cross,
-            edge_bytes,
+            act_out: graph.layers.iter().map(|l| l.act_out_bytes).collect(),
+            act_store: graph.layers.iter().map(|l| l.act_store_bytes).collect(),
+            edge_act: graph.edges.iter().map(|&(u, _)| graph.layers[u].act_out_bytes).collect(),
         }
     }
 
-    /// Cheap per-`c` scaling pass: evaluate every affine coefficient at
-    /// `1/c` and apply the schedule's activation-residency fraction.
-    pub fn materialize(&self, num_micro: usize, schedule: Schedule) -> CostMatrices {
-        let v = self.fwd.len();
+    /// Cheap per-candidate arithmetic replay: scale every coefficient by
+    /// the per-replica mini-batch `B/dp`, evaluate the affine forms at
+    /// `1/c`, and apply the schedule's activation-residency fraction.
+    /// The operation order mirrors the pre-batch-generic construction
+    /// exactly, so one base serves every `(B, c, schedule)` with
+    /// bit-identical matrices to a from-scratch build.
+    pub fn materialize(&self, batch: usize, num_micro: usize, schedule: Schedule) -> CostMatrices {
+        let v = self.t_fwd.len();
         let s_count = self.strategies.len();
         let inv_c = 1.0 / num_micro as f64;
         let frac = schedule.inflight_fraction(self.pp_size, num_micro);
@@ -365,22 +366,36 @@ impl CostBase {
         let mut per_iter = vec![vec![0.0; s_count]; v];
         let mut m = vec![vec![0.0; s_count]; v];
         for u in 0..v {
-            for k in 0..s_count {
-                let f = self.fwd[u][k].at(inv_c);
-                let b = self.bwd[u][k].at(inv_c);
+            for (k, st) in self.strategies.iter().enumerate() {
+                let dp = st.dp as f64;
+                let b_rep = batch as f64 / dp; // per-replica mini-batch
+
+                let fwd_comp = self.t_fwd[u][k] * b_rep;
+                let bwd_comp = 2.0 * fwd_comp; // §3.2: BP ≈ 2× FP for MatMul
+                let mut f_slope = fwd_comp;
+                let mut b_slope = bwd_comp;
+                if st.tp > 1 {
+                    let vol = self.act_out[u] * b_rep; // × 1/c below
+                    f_slope += 2.0 * self.ar_tp[k].slope * vol;
+                    b_slope += 2.0 * self.ar_tp[k].slope * vol;
+                }
+                let f = f_slope * inv_c + self.f_konst[u][k];
+                let b = b_slope * inv_c + self.b_konst[u][k];
                 let it = self.per_iter[u][k];
                 a_fwd[u][k] = f;
                 a_bwd[u][k] = b;
                 per_iter[u][k] = it;
                 a[u][k] = f + b + it / num_micro as f64;
-                m[u][k] = self.m_state[u][k] + self.m_act[u][k] * frac;
+
+                let m_act = self.act_store[u] * b_rep / st.tp as f64;
+                m[u][k] = self.m_state[u][k] + m_act * frac;
             }
         }
 
-        let mut r = Vec::with_capacity(self.edge_bytes.len());
-        let mut rp = Vec::with_capacity(self.edge_bytes.len());
-        for &coef in &self.edge_bytes {
-            let bytes_full = coef * inv_c;
+        let mut r = Vec::with_capacity(self.edge_act.len());
+        let mut rp = Vec::with_capacity(self.edge_act.len());
+        for &coef in &self.edge_act {
+            let bytes_full = (coef * batch as f64) * inv_c;
             let mut re = vec![vec![0.0; s_count]; s_count];
             let mut rpe = vec![vec![0.0; s_count]; s_count];
             for k in 0..s_count {
@@ -404,7 +419,7 @@ impl CostBase {
             rp,
             pp_size: self.pp_size,
             num_micro,
-            batch: self.batch,
+            batch,
             mem_limit: self.mem_limit,
         }
     }
@@ -439,7 +454,7 @@ pub fn cost_modeling_sched(
     num_micro: usize,
     schedule: Schedule,
 ) -> CostMatrices {
-    CostBase::new(profile, graph, pp_size, batch).materialize(num_micro, schedule)
+    CostBase::new(profile, graph, pp_size).materialize(batch, num_micro, schedule)
 }
 
 /// Estimated TPI for an explicit assignment, evaluating objective (2)
@@ -634,31 +649,62 @@ mod tests {
 
     #[test]
     fn factored_base_reproduces_direct_model_across_envb_sweep() {
-        // Satellite requirement: base(pp) + scale(c) must reproduce the
-        // straight-line cost model for every (pp, c) candidate of EnvB
-        // (n = 8, B = 16), under both pipeline schedules.
+        // Satellite requirement: ONE base per pp + scale(B, c) must
+        // reproduce the straight-line cost model for every (B, pp, c)
+        // candidate of EnvB (n = 8), under both pipeline schedules. The
+        // batch loop is what pins batch-genericity against *independent*
+        // algebra — a B-mis-scaling in the replay would calibrate away
+        // at a single batch size.
         let g = models::bert_huge();
         let p = Profile::analytic(&ClusterEnv::env_b(), &g);
         let tol = 1e-9;
         for pp in crate::util::divisors(8) {
-            let base = CostBase::new(&p, &g, pp, 16);
-            for c in crate::util::divisors(16) {
-                for sched in [Schedule::GPipe, Schedule::OneF1B] {
-                    let got = base.materialize(c, sched);
-                    let want = cost_modeling_direct(&p, &g, pp, 16, c, sched);
-                    assert_eq!(got.strategies, want.strategies);
-                    assert_eq!(got.pp_size, want.pp_size);
-                    assert_eq!(got.num_micro, want.num_micro);
-                    assert_eq!(got.mem_limit, want.mem_limit);
-                    assert_rows_close("a", &got.a, &want.a, tol);
-                    assert_rows_close("a_fwd", &got.a_fwd, &want.a_fwd, tol);
-                    assert_rows_close("a_bwd", &got.a_bwd, &want.a_bwd, tol);
-                    assert_rows_close("per_iter", &got.per_iter, &want.per_iter, tol);
-                    assert_rows_close("m", &got.m, &want.m, tol);
-                    for e in 0..want.r.len() {
-                        assert_rows_close("r", &got.r[e], &want.r[e], tol);
-                        assert_rows_close("rp", &got.rp[e], &want.rp[e], tol);
+            let base = CostBase::new(&p, &g, pp);
+            for batch in [8usize, 16, 64] {
+                for c in crate::util::divisors(batch.min(16)) {
+                    for sched in [Schedule::GPipe, Schedule::OneF1B] {
+                        let got = base.materialize(batch, c, sched);
+                        let want = cost_modeling_direct(&p, &g, pp, batch, c, sched);
+                        assert_eq!(got.strategies, want.strategies);
+                        assert_eq!(got.pp_size, want.pp_size);
+                        assert_eq!(got.num_micro, want.num_micro);
+                        assert_eq!(got.mem_limit, want.mem_limit);
+                        assert_rows_close("a", &got.a, &want.a, tol);
+                        assert_rows_close("a_fwd", &got.a_fwd, &want.a_fwd, tol);
+                        assert_rows_close("a_bwd", &got.a_bwd, &want.a_bwd, tol);
+                        assert_rows_close("per_iter", &got.per_iter, &want.per_iter, tol);
+                        assert_rows_close("m", &got.m, &want.m, tol);
+                        for e in 0..want.r.len() {
+                            assert_rows_close("r", &got.r[e], &want.r[e], tol);
+                            assert_rows_close("rp", &got.rp[e], &want.rp[e], tol);
+                        }
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_base_serves_every_batch_bit_identically() {
+        // The batch-generic base collapses the per-batch cache dimension:
+        // materialising one (workload, pp) base at any B must equal the
+        // public per-(B, c) construction bit for bit.
+        let g = models::bert_huge();
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let base = CostBase::new(&p, &g, 2);
+        for batch in [8usize, 16, 64] {
+            for c in [2usize, 4] {
+                for sched in [Schedule::GPipe, Schedule::OneF1B] {
+                    let got = base.materialize(batch, c, sched);
+                    let want = cost_modeling_sched(&p, &g, 2, batch, c, sched);
+                    assert_eq!(got.a, want.a, "B={batch} c={c}");
+                    assert_eq!(got.a_fwd, want.a_fwd);
+                    assert_eq!(got.a_bwd, want.a_bwd);
+                    assert_eq!(got.per_iter, want.per_iter);
+                    assert_eq!(got.m, want.m);
+                    assert_eq!(got.r, want.r);
+                    assert_eq!(got.rp, want.rp);
+                    assert_eq!(got.batch, batch);
                 }
             }
         }
@@ -671,9 +717,9 @@ mod tests {
         // matrices.
         let g = models::bert_huge();
         let p = Profile::analytic(&ClusterEnv::env_b(), &g);
-        let base = CostBase::new(&p, &g, 2, 16);
+        let base = CostBase::new(&p, &g, 2);
         for c in [2usize, 4, 8] {
-            let via_base = base.materialize(c, Schedule::GPipe);
+            let via_base = base.materialize(16, c, Schedule::GPipe);
             let via_api = cost_modeling_sched(&p, &g, 2, 16, c, Schedule::GPipe);
             assert_eq!(via_base.a, via_api.a);
             assert_eq!(via_base.a_fwd, via_api.a_fwd);

@@ -25,9 +25,10 @@
 //! | [`profiling`] | analytic + PJRT-measured profilers (§3.1) |
 //! | [`strategy`] | intra-layer strategy space (DP/TP/FSDP) + resharding |
 //! | [`cost`] | time + memory cost models → A, R, R′, M matrices (§3.2) |
-//! | [`miqp`] | general MIQP solver: linearisation, simplex, branch & bound (§3.3) |
-//! | [`planner`] | chain-exact solver, QIP intra-only, UOP (Alg. 1) |
-//! | [`service`] | planner-as-a-service: typed PlanRequest/PlanResponse, cross-request profile + cost-base caches, cancellation/deadlines, batch drain |
+//! | [`miqp`] | general MIQP solver: linearisation, simplex, branch & bound + per-stage dominance pruning (§3.3) |
+//! | [`planner`] | chain-exact solver (row-parallel interval DP), QIP intra-only, cross-candidate frontier memo, UOP (Alg. 1) |
+//! | [`service`] | planner-as-a-service: typed PlanRequest/PlanResponse, cross-request profile + batch-generic cost-base + frontier caches, LRU-bounded outcome replay, cancellation/deadlines, batch drain |
+//! | [`util`] | divisors/stats helpers, hand-rolled JSON, FNV content hashing, cancel tokens, process-wide thread budget + row fan-out pool |
 //! | [`baselines`] | Galvatron, Alpa-like, Megatron grid, DeepSpeed, inter-/intra-only |
 //! | [`sim`] | discrete-event GPipe pipeline simulator (ground truth) |
 //! | `runtime` | PJRT artifact loading + execution (feature `pjrt`) |

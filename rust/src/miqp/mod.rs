@@ -27,6 +27,7 @@
 
 pub mod formulation;
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
@@ -34,6 +35,15 @@ use crate::cost::CostMatrices;
 use crate::graph::Graph;
 use crate::planner::{Plan, PlannerConfig};
 use crate::util::cancel::CancelToken;
+
+/// Cap on each dominance frontier: past it, new points still prune
+/// against the stored ones but are not remembered (sound — forgetting a
+/// point only loses pruning power, never correctness).
+const DOM_CAP: usize = 32;
+
+/// Dominance store: branch-and-bound state `(depth, stage, k)` → Pareto
+/// frontier of `[closed Σ, closed max, open pᵢ, open stage mem]` points.
+type DomStore = HashMap<(usize, usize, usize), Vec<[f64; 4]>>;
 
 struct Search<'a> {
     graph: &'a Graph,
@@ -55,6 +65,14 @@ struct Search<'a> {
     /// stopped search returns its best incumbent (Gurobi's time-limit
     /// behaviour), not `None`.
     cancel: Option<&'a CancelToken>,
+    /// Per-stage prefix dominance store (chain graphs only, where layer
+    /// placement is monotone so earlier stages are closed): keyed by the
+    /// branch-and-bound state `(depth, stage, k)`, each frontier holds
+    /// Pareto-minimal `[closed Σ, closed max, open pᵢ, open stage mem]`
+    /// prefixes. A node coordinate-wise ≥ a stored one reaches only
+    /// completions the stored node's (already fully explored) subtree
+    /// reaches at no lower objective — it dies before expansion.
+    dominance: Option<DomStore>,
 }
 
 /// Pruning threshold from a sweep incumbent: a 1e-9 relative slack keeps
@@ -69,6 +87,56 @@ fn incumbent_cutoff(incumbent: Option<&AtomicU64>) -> f64 {
 impl<'a> Search<'a> {
     fn lower_bound(&self, depth: usize, sum: f64, mx: f64) -> f64 {
         sum + self.suffix_min[depth] + (self.costs.num_micro as f64 - 1.0) * mx
+    }
+
+    /// Dominance test + frontier maintenance for the prefix that just
+    /// assigned layer `depth` to `(stage, k)`. Returns `true` when an
+    /// already-explored prefix with the same boundary state is at least
+    /// as good on every coordinate the future can see — the node is then
+    /// pruned before expansion. Only called on chain graphs (see the
+    /// field docs for why the closed/open split needs monotone
+    /// placement).
+    fn dominated(
+        &mut self,
+        depth: usize,
+        stage: usize,
+        k: usize,
+        p_acc: &[f64],
+        o_acc: &[f64],
+        open_mem: f64,
+    ) -> bool {
+        let Some(dom) = self.dominance.as_mut() else {
+            return false;
+        };
+        // Coordinates the future objective is monotone in: the closed
+        // accumulators (stages/boundaries no later layer can touch), the
+        // open stage's partial pᵢ, and the open stage's memory headroom.
+        let mut closed_sum = 0.0;
+        let mut closed_max = 0.0f64;
+        for (j, &p) in p_acc.iter().enumerate() {
+            if j != stage {
+                closed_sum += p;
+                closed_max = closed_max.max(p);
+            }
+        }
+        for &o in o_acc {
+            closed_sum += o;
+            closed_max = closed_max.max(o);
+        }
+        let point = [closed_sum, closed_max, p_acc[stage], open_mem];
+        let front = dom.entry((depth, stage, k)).or_default();
+        for q in front.iter() {
+            if q[0] <= point[0] && q[1] <= point[1] && q[2] <= point[2] && q[3] <= point[3] {
+                return true; // an explored prefix dominates this one
+            }
+        }
+        front.retain(|q| {
+            !(point[0] <= q[0] && point[1] <= q[1] && point[2] <= q[2] && point[3] <= q[3])
+        });
+        if front.len() < DOM_CAP {
+            front.push(point);
+        }
+        false
     }
 
     /// DFS over layers in topological order.
@@ -140,6 +208,17 @@ impl<'a> Search<'a> {
         if hi < lo {
             return;
         }
+        // On chains (dominance store active) the first layer's stage is
+        // forced: placement is monotone and stage 0 must be non-empty
+        // (7b), so a prefix starting past stage 0 can never complete.
+        // Pinning it prunes those doomed subtrees AND removes an
+        // ordering hazard in the dominance store — without it, a doomed
+        // start-at-stage>0 prefix shares a `(depth, stage, k)` key with
+        // feasible start-0 prefixes, and soundness would silently rest
+        // on the ascending stage loop visiting stage 0 first.
+        if depth == 0 && self.dominance.is_some() {
+            hi = lo;
+        }
 
         for stage in lo..=hi {
             for k in 0..self.costs.num_strategies() {
@@ -180,7 +259,9 @@ impl<'a> Search<'a> {
                     .chain(o_acc.iter())
                     .cloned()
                     .fold(0.0f64, f64::max);
-                if self.lower_bound(depth + 1, sum, mx) < self.best_obj {
+                if self.lower_bound(depth + 1, sum, mx) < self.best_obj
+                    && !self.dominated(depth, stage, k, p_acc, o_acc, stage_mem[stage])
+                {
                     self.dfs(depth + 1, placement, choice, stage_mem, p_acc, o_acc);
                 }
 
@@ -218,6 +299,20 @@ pub fn solve_miqp_bounded(
     incumbent: Option<&AtomicU64>,
     cancel: Option<&CancelToken>,
 ) -> Option<Plan> {
+    // Dominance pruning needs monotone layer placement (every pred is
+    // the previous layer), which only chains guarantee — a DAG branch
+    // can still route later layers into an "earlier" stage.
+    solve_miqp_impl(graph, costs, cfg, incumbent, cancel, graph.is_chain())
+}
+
+fn solve_miqp_impl(
+    graph: &Graph,
+    costs: &CostMatrices,
+    cfg: &PlannerConfig,
+    incumbent: Option<&AtomicU64>,
+    cancel: Option<&CancelToken>,
+    dominance: bool,
+) -> Option<Plan> {
     let v = graph.num_layers();
     if costs.pp_size > v {
         return None;
@@ -249,6 +344,7 @@ pub fn solve_miqp_bounded(
         nodes: 0,
         incumbent,
         cancel,
+        dominance: dominance.then(HashMap::new),
     };
     let mut placement = Vec::with_capacity(v);
     let mut choice = Vec::with_capacity(v);
@@ -315,6 +411,34 @@ mod tests {
             let b = chain::solve_chain(&g, &costs, &cfg).expect("chain feasible");
             let rel = (a.est_tpi - b.est_tpi).abs() / b.est_tpi;
             assert!(rel < 1e-4, "nl={nl} pp={pp}: miqp {} vs chain {}", a.est_tpi, b.est_tpi);
+        }
+    }
+
+    #[test]
+    fn dominance_pruning_preserves_the_optimum() {
+        // The per-stage prefix dominance store may only drop nodes whose
+        // completions another explored prefix reaches at no lower
+        // objective — the returned optimum must be unchanged.
+        for (nl, pp, c) in [(5usize, 2usize, 2usize), (6, 2, 4), (6, 4, 2), (8, 4, 4)] {
+            let (g, costs) = costs_for(nl, pp, 8, c);
+            let cfg = PlannerConfig::default();
+            let pruned = solve_miqp_impl(&g, &costs, &cfg, None, None, true);
+            let plain = solve_miqp_impl(&g, &costs, &cfg, None, None, false);
+            match (pruned, plain) {
+                (Some(a), Some(b)) => {
+                    let rel = (a.est_tpi - b.est_tpi).abs() / b.est_tpi;
+                    assert!(
+                        rel < 1e-9,
+                        "nl={nl} pp={pp} c={c}: pruned {} vs plain {}",
+                        a.est_tpi,
+                        b.est_tpi
+                    );
+                }
+                (None, None) => {}
+                (a, b) => {
+                    panic!("feasibility mismatch nl={nl} pp={pp}: {:?} vs {:?}", a.is_some(), b.is_some())
+                }
+            }
         }
     }
 

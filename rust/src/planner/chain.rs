@@ -36,8 +36,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::cost::CostMatrices;
 use crate::graph::Graph;
+use crate::planner::memo::{FrontierMemo, MemFrontier};
 use crate::planner::{Plan, PlannerConfig};
 use crate::util::cancel::CancelToken;
+use crate::util::pool::{parallel_rows_ctx, ThreadBudget};
 
 const INF: f64 = f64::INFINITY;
 
@@ -45,13 +47,16 @@ const INF: f64 = f64::INFINITY;
 struct IntervalCosts {
     v: usize,
     s: usize,
-    /// flattened `[l * v + r][k_in * s + k_out]`
-    table: Vec<Vec<f64>>,
+    /// Flat `[(l·v + r)·s² + k_in·s + k_out]`. Row `l` owns the
+    /// contiguous `v·s²` block `[l·v·s², (l+1)·v·s²)` — the layout that
+    /// lets the per-`l` sweeps run on different threads over disjoint
+    /// `&mut` slices, no synchronisation needed.
+    table: Vec<f64>,
 }
 
 impl IntervalCosts {
     fn get(&self, l: usize, r: usize, kin: usize, kout: usize) -> f64 {
-        self.table[l * self.v + r][kin * self.s + kout]
+        self.table[(l * self.v + r) * self.s * self.s + kin * self.s + kout]
     }
 }
 
@@ -87,9 +92,36 @@ fn pareto_compact_into(src: &mut Vec<MemCost>, dst: &mut Vec<MemCost>) {
     src.clear();
 }
 
-/// Run the sparse interval DP for every `l`, producing the boundary-pair
-/// cost table. `O(V² · S³ · F)` where `F` is the typical frontier length —
-/// tens in practice vs. the dense engine's 1024-cell bucket grid.
+/// Per-worker scratch for the interval DP rows, reused across the rows
+/// one worker owns — allocation-free steady state, like the old serial
+/// sweep's hoisted buffers, but one set per thread.
+struct RowBufs {
+    /// fronts[kin * s + kcur] = Pareto frontier of interval prefixes
+    fronts: Vec<Vec<MemCost>>,
+    next: Vec<Vec<MemCost>>,
+    scratch: Vec<MemCost>,
+    /// `kin_base[kin]` — fl-accumulated lower bound on the memory of any
+    /// prefix entering the interval with strategy `kin` (the memo's
+    /// interior relaxation; see [`MemFrontier`]).
+    kin_base: Vec<f64>,
+}
+
+impl RowBufs {
+    fn new(s: usize) -> RowBufs {
+        RowBufs {
+            fronts: vec![Vec::new(); s * s],
+            next: vec![Vec::new(); s * s],
+            scratch: Vec::new(),
+            kin_base: vec![0.0; s],
+        }
+    }
+}
+
+/// One row of the sparse interval DP: fill every `(l, r)` cell for this
+/// `l` into `out`, the row's `v·s²` slice of the flat table. Rows are
+/// mutually independent — they read only the shared matrices and write
+/// only their own slice — which is what makes the row fan-out of
+/// [`interval_costs`] bit-identical to the serial sweep.
 ///
 /// §Perf structure (EXPERIMENTS.md §Perf logs the deltas):
 /// * **sparse frontiers** — only `(mem, cost)` points where extra memory
@@ -100,7 +132,13 @@ fn pareto_compact_into(src: &mut Vec<MemCost>, dst: &mut Vec<MemCost>) {
 /// * **early stage-infeasibility cut** — frontier points whose memory
 ///   exceeds the budget are dropped at insertion (frontiers are memory-
 ///   ascending, so the scan breaks at the first overflow), and the `r`
-///   loop stops once even the cheapest-memory prefix no longer fits.
+///   loop is bounded by the memoised feasibility span: past it even the
+///   cheapest strategies no longer fit.
+/// * **per-cell memory cut** (cross-candidate memo) — a `(kin, knew)`
+///   cell whose cheapest possible occupant already overflows the budget
+///   (entry memory relaxed to the memo's interior minima, accumulated in
+///   DP order so the bound holds in exact f64 semantics) is skipped
+///   before any frontier extension; its frontier would come out empty.
 /// * **incumbent stage cut** — objective (2) satisfies
 ///   `TPI ≥ c · pᵢ` for every stage `i` (the stage appears in both the
 ///   `Σ` and the `max` terms), so when the UOP sweep has published an
@@ -110,87 +148,124 @@ fn pareto_compact_into(src: &mut Vec<MemCost>, dst: &mut Vec<MemCost>) {
 ///   frontiers (and stops the `r` loop) for dominated candidates early.
 ///   Pass `INF` for the unbounded (plan-identical) solve.
 ///
-/// The cancel token is polled once per `(l, r)` interval step; on stop the
-/// partially-filled table is returned immediately and the caller must
-/// treat the solve as abandoned (DESIGN.md §Cancellation).
-fn interval_costs(
+/// The cancel token is polled once per `(l, r)` interval step; on stop
+/// the partially-filled row is abandoned immediately and the caller must
+/// treat the whole solve as abandoned (DESIGN.md §Cancellation).
+fn interval_row(
     costs: &CostMatrices,
+    feas: &MemFrontier,
     stage_cut: f64,
+    l: usize,
+    out: &mut [f64],
+    bufs: &mut RowBufs,
     cancel: Option<&CancelToken>,
-) -> IntervalCosts {
+) {
     let v = costs.num_layers();
     let s = costs.num_strategies();
     let limit = costs.mem_limit;
-    let mut table = vec![vec![INF; s * s]; v * v];
-
-    // per-layer minimum memory for the early infeasibility cut
-    let min_m: Vec<f64> = costs
-        .m
-        .iter()
-        .map(|row| row.iter().cloned().fold(INF, f64::min))
-        .collect();
-
-    // fronts[kin * s + kcur] = Pareto frontier of interval prefixes
-    let mut fronts: Vec<Vec<MemCost>> = vec![Vec::new(); s * s];
-    let mut next: Vec<Vec<MemCost>> = vec![Vec::new(); s * s];
-    let mut scratch: Vec<MemCost> = Vec::new();
-    for l in 0..v {
-        for f in fronts.iter_mut() {
-            f.clear();
-        }
+    let RowBufs { fronts, next, scratch, kin_base } = bufs;
+    for f in fronts.iter_mut() {
+        f.clear();
+    }
+    {
+        let diag = &mut out[l * s * s..(l + 1) * s * s];
         for k in 0..s {
             let mem = costs.m[l][k];
+            kin_base[k] = mem;
             if mem <= limit && costs.a[l][k] <= stage_cut {
                 fronts[k * s + k].push(MemCost { mem, cost: costs.a[l][k] });
-                table[l * v + l][k * s + k] = costs.a[l][k];
+                diag[k * s + k] = costs.a[l][k];
             }
         }
-        let mut min_prefix = min_m[l];
-        if min_prefix > limit {
-            continue; // layer l alone cannot fit anywhere
+    }
+    // memoised feasibility horizon: intervals past the span cannot fit
+    // even with every layer at its cheapest-memory strategy
+    for r in l + 1..(l + feas.span[l]).min(v) {
+        if cancel.is_some_and(|t| t.should_stop()) {
+            return; // abandoned mid-row — the caller checks the token
         }
-        for r in l + 1..v {
-            if cancel.is_some_and(|t| t.should_stop()) {
-                return IntervalCosts { v, s, table }; // abandoned mid-build
-            }
-            min_prefix += min_m[r];
-            if min_prefix > limit {
-                break; // even the cheapest strategies no longer fit
-            }
-            let edge = r - 1; // chain edge (r-1) → r
-            let cell = &mut table[l * v + r];
-            for kin in 0..s {
-                for knew in 0..s {
-                    let madd = costs.m[r][knew];
-                    for kcur in 0..s {
-                        let cur = &fronts[kin * s + kcur];
-                        if cur.is_empty() {
-                            continue;
-                        }
-                        let trans = costs.a[r][knew] + costs.r[edge][kcur][knew];
-                        for p in cur {
-                            let nm = p.mem + madd;
-                            if nm > limit {
-                                break; // memory ascending — the rest overflow too
-                            }
-                            let nc = p.cost + trans;
-                            if nc <= stage_cut {
-                                scratch.push(MemCost { mem: nm, cost: nc });
-                            }
-                        }
+        let edge = r - 1; // chain edge (r-1) → r
+        let cell = &mut out[r * s * s..(r + 1) * s * s];
+        for kin in 0..s {
+            for knew in 0..s {
+                let madd = costs.m[r][knew];
+                let dst = &mut next[kin * s + knew];
+                if kin_base[kin] + madd > limit {
+                    // even the cheapest continuation entering at `kin`
+                    // overflows once extended by (r, knew): the frontier
+                    // below would come out empty — skip building it
+                    dst.clear();
+                    continue;
+                }
+                for kcur in 0..s {
+                    let cur = &fronts[kin * s + kcur];
+                    if cur.is_empty() {
+                        continue;
                     }
-                    let dst = &mut next[kin * s + knew];
-                    pareto_compact_into(&mut scratch, dst);
-                    if let Some(last) = dst.last() {
-                        cell[kin * s + knew] = last.cost;
+                    let trans = costs.a[r][knew] + costs.r[edge][kcur][knew];
+                    for p in cur {
+                        let nm = p.mem + madd;
+                        if nm > limit {
+                            break; // memory ascending — the rest overflow too
+                        }
+                        let nc = p.cost + trans;
+                        if nc <= stage_cut {
+                            scratch.push(MemCost { mem: nm, cost: nc });
+                        }
                     }
                 }
-            }
-            std::mem::swap(&mut fronts, &mut next);
-            if fronts.iter().all(|f| f.is_empty()) {
-                break; // no feasible prefix survives for any boundary pair
+                pareto_compact_into(scratch, dst);
+                if let Some(last) = dst.last() {
+                    cell[kin * s + knew] = last.cost;
+                }
             }
         }
+        std::mem::swap(fronts, next);
+        if fronts.iter().all(|f| f.is_empty()) {
+            return; // no feasible prefix survives for any boundary pair
+        }
+        for base in kin_base.iter_mut() {
+            *base += feas.min_m[r];
+        }
+    }
+}
+
+/// Run the sparse interval DP for every `l`, producing the boundary-pair
+/// cost table. `O(V² · S³ · F)` where `F` is the typical frontier length —
+/// tens in practice vs. the dense engine's 1024-cell bucket grid.
+///
+/// The per-`l` rows are independent (each owns a disjoint slice of the
+/// flat table), so they are striped across `1 + helpers` workers via
+/// [`parallel_rows_ctx`]; `helpers == 0` is the exact serial path. Every
+/// helper count produces a bit-identical table — pinned by
+/// `rust/tests/chain_equivalence.rs`.
+///
+/// On cancellation workers stop claiming rows and abandon the row in
+/// flight; the caller must check the token and discard the partial table.
+fn interval_costs(
+    costs: &CostMatrices,
+    feas: &MemFrontier,
+    stage_cut: f64,
+    cancel: Option<&CancelToken>,
+    helpers: usize,
+) -> IntervalCosts {
+    let v = costs.num_layers();
+    let s = costs.num_strategies();
+    let row_len = v * s * s;
+    let mut table = vec![INF; v * row_len];
+    {
+        let rows: Vec<(usize, &mut [f64])> = table.chunks_mut(row_len).enumerate().collect();
+        parallel_rows_ctx(
+            helpers,
+            rows,
+            || RowBufs::new(s),
+            |bufs, (l, out)| {
+                if cancel.is_some_and(|t| t.should_stop()) {
+                    return; // drain the remaining rows without touching them
+                }
+                interval_row(costs, feas, stage_cut, l, out, bufs, cancel);
+            },
+        );
     }
     IntervalCosts { v, s, table }
 }
@@ -341,15 +416,33 @@ pub fn solve_chain(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfig) -> 
 /// optimum, so the sweep's returned plan is unchanged.
 ///
 /// `cancel` is the service's cooperative stop token, polled once per
-/// interval-DP row and once per pipeline-DP `(stage, r)` cell; a stopped
-/// solve returns `None` (indistinguishable from infeasible here — the
-/// caller recovers the cause from the token).
+/// interval-DP row step and once per pipeline-DP `(stage, r)` cell; a
+/// stopped solve returns `None` (indistinguishable from infeasible here —
+/// the caller recovers the cause from the token).
 pub fn solve_chain_bounded(
     graph: &Graph,
     costs: &CostMatrices,
-    _cfg: &PlannerConfig,
+    cfg: &PlannerConfig,
     incumbent: Option<&AtomicU64>,
     cancel: Option<&CancelToken>,
+) -> Option<Plan> {
+    solve_chain_with(graph, costs, cfg, incumbent, cancel, None)
+}
+
+/// [`solve_chain_bounded`] with an optional cross-candidate
+/// [`FrontierMemo`]: the memory-feasibility frontier is taken from (and
+/// contributed to) the memo instead of being re-derived, so `(pp, c)`
+/// candidates — and, through the service, whole requests — that share
+/// memory matrices derive it once. Memoised and memo-free solves are
+/// bit-identical (the frontier only skips provably-empty work; pinned in
+/// `rust/tests/chain_equivalence.rs`).
+pub fn solve_chain_with(
+    graph: &Graph,
+    costs: &CostMatrices,
+    cfg: &PlannerConfig,
+    incumbent: Option<&AtomicU64>,
+    cancel: Option<&CancelToken>,
+    memo: Option<&FrontierMemo>,
 ) -> Option<Plan> {
     assert!(graph.is_chain(), "chain solver requires a chain graph");
     let v = graph.num_layers();
@@ -372,9 +465,44 @@ pub fn solve_chain_bounded(
 
     let stopped = || cancel.is_some_and(|t| t.should_stop());
 
+    // Memory-feasibility frontier — shared across candidates with equal
+    // memory matrices when the sweep hooks a memo in, derived locally
+    // otherwise (cheap: one pass over M).
+    let shared;
+    let built;
+    let feas: &MemFrontier = if let Some(m) = memo {
+        shared = m.frontier_for(costs);
+        &shared
+    } else {
+        built = MemFrontier::build(&costs.m, costs.mem_limit);
+        &built
+    };
+
+    // Row fan-out: an explicit `cfg.row_helpers` wins (tests and benches
+    // pin the worker count); otherwise lease whatever the machine has
+    // spare from the global budget — zero when the sweep saturates it,
+    // which is exactly the serial path (DESIGN.md §Two-level thread
+    // budget).
+    let row_lease;
+    let helpers = match cfg.row_helpers {
+        Some(n) => {
+            row_lease = None;
+            n
+        }
+        None => {
+            let budget = ThreadBudget::global();
+            let want = (v - 1).min(budget.capacity().saturating_sub(1));
+            let lease = budget.lease(want);
+            let granted = lease.granted();
+            row_lease = Some(lease);
+            granted
+        }
+    };
+
     // Objective (2) ≥ c · pᵢ for any stage, so interval prefixes costing
     // more than incumbent/c can never improve on the incumbent.
-    let ic = interval_costs(costs, cut() / c, cancel);
+    let ic = interval_costs(costs, feas, cut() / c, cancel, helpers);
+    drop(row_lease); // return the row helpers to the budget immediately
     if stopped() {
         return None; // the table above may be partial — abandon the solve
     }
@@ -705,7 +833,8 @@ mod tests {
         // On a memory-slack interval, the stage solve must equal the min
         // over boundary pairs of the conditioned interval DP.
         let (_, costs) = costs_for(6, 2, 8, 4);
-        let ic = interval_costs(&costs, INF, None);
+        let feas = MemFrontier::build(&costs.m, costs.mem_limit);
+        let ic = interval_costs(&costs, &feas, INF, None, 0);
         let s = costs.num_strategies();
         for (l, r) in [(0usize, 2usize), (1, 4), (0, 5)] {
             let (got, assign) = solve_interval(&costs, l, r).expect("feasible");
@@ -737,6 +866,71 @@ mod tests {
         let tighter = AtomicU64::new((free.est_tpi * 0.5).to_bits());
         let cutout = solve_chain_bounded(&g, &costs, &cfg, Some(&tighter), None);
         assert!(cutout.is_none() || cutout.unwrap().est_tpi >= free.est_tpi);
+    }
+
+    #[test]
+    fn row_parallel_interval_table_is_bit_identical_to_serial() {
+        // The per-l rows are independent; any helper count must fill the
+        // exact same flat table, bit for bit.
+        for (nl, pp, c) in [(8usize, 2usize, 4usize), (6, 4, 2), (12, 2, 8)] {
+            let (_, costs) = costs_for(nl, pp, 16, c);
+            let feas = MemFrontier::build(&costs.m, costs.mem_limit);
+            let serial = interval_costs(&costs, &feas, INF, None, 0);
+            for helpers in [1usize, 3, 7] {
+                let par = interval_costs(&costs, &feas, INF, None, helpers);
+                let same = serial
+                    .table
+                    .iter()
+                    .zip(&par.table)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "nl={nl} pp={pp} c={c} helpers={helpers}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_parallel_solve_matches_serial_plan_bits() {
+        let (g, costs) = costs_for(10, 2, 16, 4);
+        let serial_cfg = PlannerConfig { row_helpers: Some(0), ..Default::default() };
+        let par_cfg = PlannerConfig { row_helpers: Some(4), ..Default::default() };
+        let a = solve_chain(&g, &costs, &serial_cfg).expect("feasible");
+        let b = solve_chain(&g, &costs, &par_cfg).expect("feasible");
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.choice, b.choice);
+        assert_eq!(a.est_tpi.to_bits(), b.est_tpi.to_bits());
+    }
+
+    #[test]
+    fn memoised_frontier_solve_matches_memo_free_plan_bits() {
+        let (g, costs) = costs_for(8, 4, 16, 4);
+        let cfg = PlannerConfig::default();
+        let memo = FrontierMemo::new();
+        let free = solve_chain(&g, &costs, &cfg).expect("feasible");
+        let via_memo =
+            solve_chain_with(&g, &costs, &cfg, None, None, Some(&memo)).expect("feasible");
+        assert_eq!(free.placement, via_memo.placement);
+        assert_eq!(free.choice, via_memo.choice);
+        assert_eq!(free.est_tpi.to_bits(), via_memo.est_tpi.to_bits());
+        // a second solve on the same matrices reuses the stored frontier
+        let again = solve_chain_with(&g, &costs, &cfg, None, None, Some(&memo)).expect("feasible");
+        assert_eq!(free.est_tpi.to_bits(), again.est_tpi.to_bits());
+        let (hits, misses) = memo.stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn cancelled_token_aborts_row_parallel_solve() {
+        // A token fired before (or during) the solve must stop every DP
+        // worker row and surface as None regardless of the fan-out width.
+        let (g, costs) = costs_for(12, 2, 16, 4);
+        for helpers in [0usize, 3] {
+            let cfg = PlannerConfig { row_helpers: Some(helpers), ..Default::default() };
+            let token = CancelToken::new();
+            token.cancel();
+            let t0 = std::time::Instant::now();
+            assert!(solve_chain_with(&g, &costs, &cfg, None, Some(&token), None).is_none());
+            assert!(t0.elapsed().as_secs_f64() < 5.0, "cancel not honoured promptly");
+        }
     }
 
     #[test]

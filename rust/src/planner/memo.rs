@@ -1,0 +1,207 @@
+//! Cross-candidate frontier memoisation for the chain interval DP
+//! (DESIGN.md §Frontier memoisation).
+//!
+//! The sparse interval DP spends part of every `(pp, c)` candidate
+//! deriving the same *memory-feasibility* structure: which layer spans
+//! can fit the per-device budget at all, and which boundary-strategy
+//! cells can never host a feasible frontier. That structure depends only
+//! on the memory matrix `M` and the budget — and `M` is shared widely
+//! across candidates: under GPipe the activation residency covers the
+//! full per-replica mini-batch regardless of `c`, so every `c` of one
+//! `pp_size` materialises bit-identical `M` (1F1B joins them whenever
+//! `c ≤ pp`). [`FrontierMemo`] therefore keys the derived
+//! [`MemFrontier`] by an FNV-1a content hash over the exact bit patterns
+//! of `M` and the budget, and candidates — and, through the service,
+//! whole requests — that share memory matrices reuse one frontier
+//! instead of re-deriving it per solve.
+//!
+//! Everything a [`MemFrontier`] answers is a *lower bound on reachable
+//! memory* computed with the same `f64` accumulation order the DP itself
+//! uses (floating-point addition of non-negative terms is monotone, so
+//! replacing interior layers by their cheapest-memory strategy bounds
+//! every concrete path from below — in exact `f64` semantics, not just
+//! real arithmetic). A cut based on it only ever skips work whose
+//! frontier would come out empty, so memoised and memo-free solves are
+//! bit-identical; `rust/tests/chain_equivalence.rs` pins this.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cost::CostMatrices;
+use crate::util::hash::Fnv;
+
+/// Memory-feasibility frontier of one memory matrix: the reusable,
+/// cost-independent half of the interval DP.
+#[derive(Debug)]
+pub struct MemFrontier {
+    /// `min_m[u]` — cheapest per-device memory of layer `u` over all
+    /// strategies (the interior relaxation of any path through `u`).
+    pub min_m: Vec<f64>,
+    /// `span[l]` — the number of consecutive layers starting at `l`
+    /// whose cheapest-strategy memory, accumulated in DP order, still
+    /// fits the budget. `0` means layer `l` alone cannot fit anywhere;
+    /// intervals `[l, r]` with `r ≥ l + span[l]` are infeasible for
+    /// every strategy assignment.
+    pub span: Vec<usize>,
+}
+
+impl MemFrontier {
+    /// Derive the frontier for a memory matrix under `mem_limit`.
+    pub fn build(m: &[Vec<f64>], mem_limit: f64) -> MemFrontier {
+        let v = m.len();
+        let min_m: Vec<f64> = m
+            .iter()
+            .map(|row| row.iter().cloned().fold(f64::INFINITY, f64::min))
+            .collect();
+        let mut span = vec![0usize; v];
+        for (l, s) in span.iter_mut().enumerate() {
+            // Same accumulation order as the DP's prefix memory, so the
+            // bound is valid in exact f64 semantics (see module docs).
+            let mut acc = min_m[l];
+            if acc > mem_limit {
+                continue;
+            }
+            let mut n = 1usize;
+            for &mm in &min_m[l + 1..] {
+                acc += mm;
+                if acc > mem_limit {
+                    break;
+                }
+                n += 1;
+            }
+            *s = n;
+        }
+        MemFrontier { min_m, span }
+    }
+
+    /// Content key of a memory matrix + budget: FNV-1a over the exact
+    /// bit patterns. Equal keys ⇒ (collision caveat aside) bit-identical
+    /// inputs ⇒ bit-identical frontiers.
+    pub fn fingerprint(m: &[Vec<f64>], mem_limit: f64) -> u64 {
+        let mut h = Fnv::new();
+        h.f64(mem_limit);
+        h.usize(m.len());
+        for row in m {
+            h.usize(row.len());
+            for &x in row {
+                h.f64(x);
+            }
+        }
+        h.finish()
+    }
+}
+
+/// Content-keyed [`MemFrontier`] store shared across the `(pp, c)`
+/// candidates of a sweep (threaded in through `SolveHooks`) and across
+/// requests (owned by `PlannerService`). Cheap to probe: one hash over
+/// `V·S` floats plus a short critical section.
+#[derive(Debug, Default)]
+pub struct FrontierMemo {
+    map: Mutex<HashMap<u64, Arc<MemFrontier>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl FrontierMemo {
+    /// Empty memo.
+    pub fn new() -> FrontierMemo {
+        FrontierMemo::default()
+    }
+
+    /// The frontier for this candidate's memory matrix, derived on first
+    /// use. Builds happen outside the lock; two racing cold candidates
+    /// may both build, and the results are bit-identical so the second
+    /// insert is a no-op overwrite.
+    pub fn frontier_for(&self, costs: &CostMatrices) -> Arc<MemFrontier> {
+        let key = MemFrontier::fingerprint(&costs.m, costs.mem_limit);
+        if let Some(f) = self.map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return f.clone();
+        }
+        let built = Arc::new(MemFrontier::build(&costs.m, costs.mem_limit));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.map.lock().unwrap().insert(key, built.clone());
+        built
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Frontiers currently resident.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// `true` when no frontier has been derived yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterEnv;
+    use crate::cost::cost_modeling;
+    use crate::graph::models;
+    use crate::profiling::Profile;
+
+    fn costs_for(pp: usize, c: usize) -> CostMatrices {
+        let g = models::bert_huge();
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        cost_modeling(&p, &g, pp, 16, c)
+    }
+
+    #[test]
+    fn span_matches_incremental_budget_scan() {
+        let costs = costs_for(2, 4);
+        let f = MemFrontier::build(&costs.m, costs.mem_limit);
+        for l in 0..costs.num_layers() {
+            // re-derive by the definition
+            let mut acc = f.min_m[l];
+            let mut want = 0usize;
+            if acc <= costs.mem_limit {
+                want = 1;
+                for u in l + 1..costs.num_layers() {
+                    acc += f.min_m[u];
+                    if acc > costs.mem_limit {
+                        break;
+                    }
+                    want += 1;
+                }
+            }
+            assert_eq!(f.span[l], want, "l={l}");
+        }
+    }
+
+    #[test]
+    fn gpipe_candidates_share_one_frontier_across_c() {
+        // GPipe memory is c-independent, so every c of one pp hits the
+        // same memoised frontier.
+        let memo = FrontierMemo::new();
+        let a = memo.frontier_for(&costs_for(2, 2));
+        let b = memo.frontier_for(&costs_for(2, 4));
+        let c = memo.frontier_for(&costs_for(2, 8));
+        assert!(Arc::ptr_eq(&a, &b) && Arc::ptr_eq(&b, &c));
+        assert_eq!(memo.stats(), (2, 1));
+        assert_eq!(memo.len(), 1);
+        // a different pp has different memory matrices — new entry
+        let d = memo.frontier_for(&costs_for(4, 2));
+        assert!(!Arc::ptr_eq(&a, &d));
+        assert_eq!(memo.len(), 2);
+    }
+
+    #[test]
+    fn fingerprint_is_bit_sensitive() {
+        let costs = costs_for(2, 4);
+        let base = MemFrontier::fingerprint(&costs.m, costs.mem_limit);
+        assert_eq!(base, MemFrontier::fingerprint(&costs.m, costs.mem_limit));
+        let mut tweaked = costs.m.clone();
+        tweaked[3][0] = f64::from_bits(tweaked[3][0].to_bits() + 1); // one ulp
+        assert_ne!(base, MemFrontier::fingerprint(&tweaked, costs.mem_limit));
+        assert_ne!(base, MemFrontier::fingerprint(&costs.m, costs.mem_limit + 1.0));
+    }
+}

@@ -21,6 +21,7 @@
 
 pub mod chain;
 pub mod chain_dense;
+pub mod memo;
 pub mod qip;
 pub mod uop;
 
@@ -77,7 +78,15 @@ pub struct PlannerConfig {
     pub time_limit: f64,
     /// Worker threads for the UOP sweep (the paper exploits Gurobi's
     /// multi-threaded search; our sweep parallelises across candidates).
+    /// Leased from the global [`crate::util::pool::ThreadBudget`], so
+    /// concurrent sweeps never oversubscribe the machine.
     pub threads: usize,
+    /// Extra worker threads for the row-parallel interval DP *inside* one
+    /// chain solve. `None` (default) leases whatever the global thread
+    /// budget has spare — zero when the sweep saturates the machine;
+    /// `Some(0)` forces the serial row sweep; `Some(n)` pins exactly `n`
+    /// helpers (tests/benches). Every setting yields bit-identical plans.
+    pub row_helpers: Option<usize>,
     /// Restrict `pp_size` candidates (None = all factors of `n`).
     pub max_pp: Option<usize>,
 }
@@ -94,6 +103,7 @@ impl Default for PlannerConfig {
             mem_buckets: 1024,
             time_limit: 60.0,
             threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+            row_helpers: None,
             max_pp: None,
         }
     }

@@ -10,6 +10,7 @@ use std::sync::atomic::AtomicU64;
 
 use crate::cost::CostMatrices;
 use crate::graph::Graph;
+use crate::planner::memo::FrontierMemo;
 use crate::planner::{chain, Plan, PlannerConfig};
 use crate::util::cancel::CancelToken;
 
@@ -29,9 +30,22 @@ pub fn solve_qip_bounded(
     incumbent: Option<&AtomicU64>,
     cancel: Option<&CancelToken>,
 ) -> Option<Plan> {
+    solve_qip_with(graph, costs, cfg, incumbent, cancel, None)
+}
+
+/// [`solve_qip_bounded`] with the sweep's cross-candidate
+/// [`FrontierMemo`] (chain graphs only; the MIQP fallback ignores it).
+pub fn solve_qip_with(
+    graph: &Graph,
+    costs: &CostMatrices,
+    cfg: &PlannerConfig,
+    incumbent: Option<&AtomicU64>,
+    cancel: Option<&CancelToken>,
+    memo: Option<&FrontierMemo>,
+) -> Option<Plan> {
     assert_eq!(costs.pp_size, 1, "QIP is the single-stage formulation");
     if graph.is_chain() {
-        chain::solve_chain_bounded(graph, costs, cfg, incumbent, cancel)
+        chain::solve_chain_with(graph, costs, cfg, incumbent, cancel, memo)
     } else {
         crate::miqp::solve_miqp_bounded(graph, costs, cfg, incumbent, cancel)
     }

@@ -9,23 +9,31 @@
 //! Sweep-wide solver reuse (DESIGN.md §Sweep-wide reuse) — candidates are
 //! *not* treated as independent:
 //!
-//! * **one factored [`CostBase`] per `pp_size`** — the expensive half of
-//!   cost modeling (profile lookups, collective-model probing, the `S²`
-//!   resharding structure) is built `O(|pp|)` times; each `(pp, c)`
-//!   candidate then materialises its matrices with a cheap affine
-//!   scaling pass instead of rebuilding from scratch;
+//! * **one batch-generic [`CostBase`] per `pp_size`** — the expensive
+//!   half of cost modeling (profile lookups, collective-model probing,
+//!   the `S²` resharding structure) is built `O(|pp|)` times; each
+//!   `(pp, c)` candidate then materialises its matrices with a cheap
+//!   affine replay instead of rebuilding from scratch (and the service's
+//!   cross-request cache shares the same bases across batch sizes);
 //! * **shared incumbent bound** — the best TPI found so far is published
 //!   through an `AtomicU64` (positive `f64` bits order like integers);
 //!   every chain/MIQP solve prunes branches that cannot strictly beat it;
+//! * **cross-candidate frontier memo** — candidates whose memory
+//!   matrices hash equal (all `c` of one `pp` under GPipe) share one
+//!   derived interval memory-feasibility frontier
+//!   ([`crate::planner::memo`]);
 //! * **lower-bound candidate ordering** — candidates are solved in
 //!   ascending order of an admissible TPI lower bound
 //!   (`Σ_u min_k A[u][k] · (1 + (c−1)/pp)`), so good incumbents arrive
 //!   early and late candidates are cut cheaply. The log and the returned
 //!   best plan keep the deterministic Algorithm 1 order.
 //!
-//! The sweep still fans out across worker threads — the analogue of the
+//! The sweep fans out across worker threads — the analogue of the
 //! paper's multi-threaded Gurobi search that underlies its 17–107×
-//! strategy-optimization speedups.
+//! strategy-optimization speedups — and those workers are leased from
+//! the process-wide [`ThreadBudget`] shared with the row-parallel
+//! interval DP inside each candidate, so sweeps × rows never
+//! oversubscribe the machine (DESIGN.md §Two-level thread budget).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -33,9 +41,11 @@ use std::time::Instant;
 
 use crate::cost::{CostBase, CostMatrices};
 use crate::graph::Graph;
+use crate::planner::memo::FrontierMemo;
 use crate::planner::{chain, qip, Engine, Plan, PlannerConfig};
 use crate::profiling::Profile;
 use crate::util::cancel::CancelToken;
+use crate::util::pool::ThreadBudget;
 
 /// One enumerated `(pp_size, c)` candidate and its outcome (for reporting
 /// and the Figure 4b scalability study). With incumbent sharing, `tpi` is
@@ -88,13 +98,19 @@ pub enum PlanEvent {
 /// * `on_event` — live [`PlanEvent`] sink (called from worker threads);
 /// * `base_for` — externally cached [`CostBase`] provider keyed by
 ///   `pp_size` (the service's cross-request cache). The provider **must**
-///   return bases built for the same `(profile, graph, batch)` the sweep
-///   runs on; `None` builds each base locally.
+///   return bases built for the same `(profile, graph)` workload the
+///   sweep runs on; `None` builds each base locally. Bases are
+///   batch-generic — the sweep materialises them for its own `batch`.
+/// * `frontier_memo` — externally owned cross-candidate [`FrontierMemo`]
+///   (the service shares one across requests); `None` uses a sweep-local
+///   memo, so candidates with equal memory matrices still share
+///   frontiers within the sweep.
 #[derive(Default)]
 pub struct SolveHooks<'a> {
     pub cancel: Option<&'a CancelToken>,
     pub on_event: Option<&'a (dyn Fn(&PlanEvent) + Sync)>,
     pub base_for: Option<&'a (dyn Fn(usize) -> Arc<CostBase> + Sync)>,
+    pub frontier_memo: Option<&'a FrontierMemo>,
 }
 
 impl std::fmt::Debug for SolveHooks<'_> {
@@ -103,6 +119,7 @@ impl std::fmt::Debug for SolveHooks<'_> {
             .field("cancel", &self.cancel.is_some())
             .field("on_event", &self.on_event.is_some())
             .field("base_for", &self.base_for.is_some())
+            .field("frontier_memo", &self.frontier_memo.is_some())
             .finish()
     }
 }
@@ -113,18 +130,20 @@ fn solve_candidate(
     cfg: &PlannerConfig,
     incumbent: &AtomicU64,
     cancel: Option<&CancelToken>,
+    memo: &FrontierMemo,
 ) -> (Option<Plan>, f64) {
     let t0 = Instant::now();
     let inc = Some(incumbent);
+    let memo = Some(memo);
     let plan = if costs.pp_size == 1 {
-        qip::solve_qip_bounded(graph, costs, cfg, inc, cancel)
+        qip::solve_qip_with(graph, costs, cfg, inc, cancel, memo)
     } else {
         match cfg.engine {
             Engine::Miqp => crate::miqp::solve_miqp_bounded(graph, costs, cfg, inc, cancel),
-            Engine::Chain => chain::solve_chain_bounded(graph, costs, cfg, inc, cancel),
+            Engine::Chain => chain::solve_chain_with(graph, costs, cfg, inc, cancel, memo),
             Engine::Auto => {
                 if graph.is_chain() {
-                    chain::solve_chain_bounded(graph, costs, cfg, inc, cancel)
+                    chain::solve_chain_with(graph, costs, cfg, inc, cancel, memo)
                 } else {
                     crate::miqp::solve_miqp_bounded(graph, costs, cfg, inc, cancel)
                 }
@@ -207,7 +226,7 @@ pub fn uop_with(
             }
             let base = match hooks.base_for {
                 Some(provider) => provider(pp),
-                None => Arc::new(CostBase::new(profile, graph, pp, batch)),
+                None => Arc::new(CostBase::new(profile, graph, pp)),
             };
             bases.push((pp, base));
         }
@@ -222,7 +241,7 @@ pub fn uop_with(
         .enumerate()
         .map(|(idx, &(pp, c))| {
             let base = &bases.iter().find(|(p, _)| *p == pp).expect("base built above").1;
-            let costs = base.materialize(c, cfg.schedule);
+            let costs = base.materialize(batch, c, cfg.schedule);
             let min_sum: f64 = costs
                 .a
                 .iter()
@@ -237,53 +256,71 @@ pub fn uop_with(
         .collect();
     prepared.sort_by(|a, b| a.lb.partial_cmp(&b.lb).unwrap().then(a.idx.cmp(&b.idx)));
 
+    // Cross-candidate frontier memo: the service shares one across
+    // requests; a bare sweep still shares frontiers between its own
+    // candidates through a local memo.
+    let local_memo = FrontierMemo::new();
+    let memo = hooks.frontier_memo.unwrap_or(&local_memo);
+
     // Shared incumbent: bits of the best TPI published so far (positive
     // f64 bits compare like integers, so fetch_min keeps the minimum).
     let incumbent = AtomicU64::new(f64::INFINITY.to_bits());
     let results: Mutex<Vec<(usize, CandidateLog, Option<Plan>)>> = Mutex::new(Vec::new());
     let next = AtomicUsize::new(0);
-    let workers = cfg.threads.max(1).min(prepared.len().max(1));
+    // Candidate workers are leased from the global thread budget so
+    // concurrent sweeps (and the row fan-out inside each solve) share one
+    // machine-wide pool instead of oversubscribing. A worker hands its
+    // permit back the moment the queue drains, so late candidates spend
+    // the idle cores on row parallelism (DESIGN.md §Two-level budget).
+    let want = cfg.threads.max(1).min(prepared.len().max(1));
+    let lease = ThreadBudget::global().lease(want);
+    let workers = lease.granted().max(1);
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= prepared.len() {
-                    break;
-                }
-                let cand = &prepared[i];
-                if stopped() {
-                    // Drain the queue without solving: the log still covers
-                    // every enumerated candidate, marked unsolved.
+            scope.spawn(|| {
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= prepared.len() {
+                        break;
+                    }
+                    let cand = &prepared[i];
+                    if stopped() {
+                        // Drain the queue without solving: the log still
+                        // covers every enumerated candidate, marked
+                        // unsolved.
+                        let log = CandidateLog {
+                            pp_size: cand.pp,
+                            num_micro: cand.c,
+                            tpi: None,
+                            solve_secs: 0.0,
+                        };
+                        results.lock().unwrap().push((cand.idx, log, None));
+                        continue;
+                    }
+                    if let Some(sink) = hooks.on_event {
+                        sink(&PlanEvent::CandidateStarted { pp_size: cand.pp, num_micro: cand.c });
+                    }
+                    let (plan, secs) =
+                        solve_candidate(graph, &cand.costs, cfg, &incumbent, hooks.cancel, memo);
+                    if let Some(p) = &plan {
+                        incumbent.fetch_min(p.est_tpi.to_bits(), Ordering::Relaxed);
+                    }
                     let log = CandidateLog {
                         pp_size: cand.pp,
                         num_micro: cand.c,
-                        tpi: None,
-                        solve_secs: 0.0,
+                        tpi: plan.as_ref().map(|p| p.est_tpi),
+                        solve_secs: secs,
                     };
-                    results.lock().unwrap().push((cand.idx, log, None));
-                    continue;
+                    if let Some(sink) = hooks.on_event {
+                        sink(&PlanEvent::CandidateFinished { log: log.clone() });
+                    }
+                    results.lock().unwrap().push((cand.idx, log, plan));
                 }
-                if let Some(sink) = hooks.on_event {
-                    sink(&PlanEvent::CandidateStarted { pp_size: cand.pp, num_micro: cand.c });
-                }
-                let (plan, secs) =
-                    solve_candidate(graph, &cand.costs, cfg, &incumbent, hooks.cancel);
-                if let Some(p) = &plan {
-                    incumbent.fetch_min(p.est_tpi.to_bits(), Ordering::Relaxed);
-                }
-                let log = CandidateLog {
-                    pp_size: cand.pp,
-                    num_micro: cand.c,
-                    tpi: plan.as_ref().map(|p| p.est_tpi),
-                    solve_secs: secs,
-                };
-                if let Some(sink) = hooks.on_event {
-                    sink(&PlanEvent::CandidateFinished { log: log.clone() });
-                }
-                results.lock().unwrap().push((cand.idx, log, plan));
+                lease.release_one(); // free this core for in-flight rows
             });
         }
     });
+    drop(lease);
 
     let mut rows = results.into_inner().unwrap();
     rows.sort_by_key(|(i, _, _)| *i);
@@ -386,7 +423,7 @@ mod tests {
         let g = models::synthetic_chain(8, 5e11, 2e7, 2e6);
         let p = Profile::analytic(&ClusterEnv::env_b(), &g);
         let cfg = PlannerConfig { threads: 1, ..Default::default() };
-        let provider = |pp: usize| Arc::new(CostBase::new(&p, &g, pp, 8));
+        let provider = |pp: usize| Arc::new(CostBase::new(&p, &g, pp));
         let hooks = SolveHooks { base_for: Some(&provider), ..Default::default() };
         let ext = uop_with(&p, &g, 8, &cfg, &hooks);
         let loc = uop(&p, &g, 8, &cfg);
@@ -394,6 +431,27 @@ mod tests {
         assert_eq!(a.est_tpi.to_bits(), b.est_tpi.to_bits());
         assert_eq!(a.placement, b.placement);
         assert_eq!(a.choice, b.choice);
+    }
+
+    #[test]
+    fn uop_with_shared_frontier_memo_matches_local_and_shares_across_c() {
+        let g = models::synthetic_chain(8, 5e11, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let cfg = PlannerConfig { threads: 1, ..Default::default() };
+        let memo = FrontierMemo::new();
+        let hooks = SolveHooks { frontier_memo: Some(&memo), ..Default::default() };
+        let ext = uop_with(&p, &g, 8, &cfg, &hooks);
+        let loc = uop(&p, &g, 8, &cfg);
+        let (a, b) = (ext.best.expect("feasible"), loc.best.expect("feasible"));
+        assert_eq!(a.est_tpi.to_bits(), b.est_tpi.to_bits());
+        assert_eq!(a.placement, b.placement);
+        assert_eq!(a.choice, b.choice);
+        // GPipe memory matrices depend only on pp_size, so the 10
+        // candidates (pp ∈ {1,2,4,8} × c ∈ {2,4,8}, plus (1, B)) derive
+        // exactly one frontier per pp and share it across every c.
+        let (hits, misses) = memo.stats();
+        assert_eq!(misses, 4, "one frontier per pp_size");
+        assert_eq!(hits, 6, "every other candidate reuses a stored frontier");
     }
 
     #[test]

@@ -9,15 +9,25 @@
 //! * **profiles** per `(env, model)` content fingerprint — the analytic
 //!   profile is a pure function of the cluster description and the layer
 //!   graph, so equal content ⇒ equal profile;
-//! * **factored [`CostBase`]s** per `(profile fingerprint, pp_size,
-//!   batch)` — the expensive half of cost modeling. A warm repeated
-//!   request (same env/model/batch, any schedule/engine/`c`) skips cost
-//!   modeling entirely and goes straight to the solves;
+//! * **batch-generic [`CostBase`]s** per `(profile fingerprint,
+//!   pp_size)` — the expensive half of cost modeling. Every coefficient
+//!   is affine in the mini-batch `B`, so one base serves every
+//!   `(B, c, schedule)` of the workload: a warm request with *any*
+//!   batch size skips cost modeling entirely and goes straight to the
+//!   solves;
 //! * **completed outcomes** per `(profile fingerprint, batch, method,
 //!   engine, schedule, max_pp)` — the planner is deterministic, so a
 //!   strictly repeated request replays the stored plan + candidate log
 //!   without solving at all. Only *completed* solves are stored: a
-//!   cancelled or deadline-cut request never poisons the cache.
+//!   cancelled or deadline-cut request never poisons the cache. The
+//!   store is LRU-bounded ([`DEFAULT_OUTCOME_CAPACITY`], configurable
+//!   via [`PlannerService::with_outcome_capacity`]) so long `serve`
+//!   sessions don't grow without bound — plan-less ("truncated")
+//!   entries evict first, then least-recently-used.
+//!
+//! The service additionally owns the planner's cross-candidate interval
+//! frontier memo (`planner::memo::FrontierMemo`), threaded into every
+//! sweep so requests that share memory matrices share derived frontiers.
 //!
 //! Requests and responses are typed ([`PlanRequest`] / [`PlanResponse`])
 //! with JSON (de)serialization over [`crate::util::json`], which is also
@@ -48,41 +58,10 @@ use crate::baselines::{Baseline, BaselineKind};
 use crate::cluster::ClusterEnv;
 use crate::cost::{CostBase, Schedule};
 use crate::graph::{models, Dtype, Graph};
+use crate::planner::memo::FrontierMemo;
 use crate::planner::{uop_with, CandidateLog, Engine, Plan, PlanEvent, PlannerConfig, SolveHooks};
 use crate::profiling::Profile;
-
-/// FNV-1a 64-bit accumulator for content fingerprints.
-struct Fnv(u64);
-
-impl Fnv {
-    fn new() -> Fnv {
-        Fnv(0xcbf2_9ce4_8422_2325)
-    }
-
-    fn bytes(&mut self, bs: &[u8]) {
-        for &b in bs {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x1_0000_0000_01b3);
-        }
-    }
-
-    fn u64(&mut self, x: u64) {
-        self.bytes(&x.to_le_bytes());
-    }
-
-    fn f64(&mut self, x: f64) {
-        self.u64(x.to_bits());
-    }
-
-    fn usize(&mut self, x: usize) {
-        self.u64(x as u64);
-    }
-
-    fn str(&mut self, s: &str) {
-        self.usize(s.len());
-        self.bytes(s.as_bytes());
-    }
-}
+use crate::util::hash::Fnv;
 
 /// Content fingerprint of one `(env, graph)` workload — every field the
 /// analytic profiler and the cost models read. Two workloads with equal
@@ -123,7 +102,7 @@ pub fn workload_fingerprint(env: &ClusterEnv, graph: &Graph) -> u64 {
         Dtype::Fp16Mixed => 1,
     });
     h.usize(graph.seq_len);
-    h.0
+    h.finish()
 }
 
 /// Everything besides the workload content that determines a solve's
@@ -145,6 +124,67 @@ struct Outcome {
     error: Option<String>,
     plan: Option<Plan>,
     log: Vec<CandidateLog>,
+}
+
+/// Default bound on the completed-outcome cache (see [`OutcomeCache`]).
+pub const DEFAULT_OUTCOME_CAPACITY: usize = 256;
+
+/// Bounded completed-outcome store: long-running `serve` sessions see an
+/// unbounded stream of distinct requests, so the replay cache carries an
+/// LRU bound instead of growing forever. Eviction policy (ISSUE 3):
+/// **truncated-first** — entries carrying no plan (an infeasibility
+/// proof, or any future degraded result) have the lowest replay value
+/// and go first, oldest first — then plain least-recently-used.
+/// Capacity 0 disables outcome caching entirely.
+#[derive(Debug)]
+struct OutcomeCache {
+    capacity: usize,
+    /// Monotonic access clock; entries remember their last touch.
+    tick: u64,
+    map: HashMap<OutcomeKey, (Outcome, u64)>,
+    evictions: usize,
+}
+
+impl OutcomeCache {
+    fn new(capacity: usize) -> OutcomeCache {
+        OutcomeCache { capacity, tick: 0, map: HashMap::new(), evictions: 0 }
+    }
+
+    /// Replay lookup; a hit refreshes the entry's recency.
+    fn get(&mut self, key: &OutcomeKey) -> Option<Outcome> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(key).map(|(outcome, touched)| {
+            *touched = tick;
+            outcome.clone()
+        })
+    }
+
+    /// Store a completed solve, evicting per the policy above when full.
+    fn insert(&mut self, key: OutcomeKey, outcome: Outcome) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.tick += 1;
+        if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
+            // victim: truncated (plan-less) entries first, then LRU —
+            // encoded as (has_plan, last_touch) minimisation
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, (o, touched))| (o.plan.is_some(), *touched))
+                .map(|(k, _)| *k);
+            if let Some(k) = victim {
+                self.map.remove(&k);
+                self.evictions += 1;
+            }
+        }
+        self.map.insert(key, (outcome, self.tick));
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
 }
 
 /// Lifetime cache counters (all requests since construction).
@@ -173,6 +213,12 @@ pub struct ServiceStats {
     pub cached_profiles: usize,
     pub cached_bases: usize,
     pub cached_plans: usize,
+    /// Interval memory-feasibility frontiers resident / reused
+    /// (the planner's cross-candidate memo, shared across requests).
+    pub cached_frontiers: usize,
+    pub frontier_hits: usize,
+    /// Outcome-cache evictions since construction (LRU bound).
+    pub outcome_evictions: usize,
 }
 
 /// The long-lived planner front end (see module docs). Cheap to share by
@@ -184,8 +230,13 @@ pub struct PlannerService {
     /// (DESIGN.md §Service threads).
     total_threads: usize,
     profiles: Mutex<HashMap<u64, Arc<Profile>>>,
-    bases: Mutex<HashMap<(u64, usize, usize), Arc<CostBase>>>,
-    outcomes: Mutex<HashMap<OutcomeKey, Outcome>>,
+    /// Batch-generic cost bases keyed `(workload fp, pp_size)` — one base
+    /// serves every `(B, c, schedule)` of the workload (ISSUE 3 collapsed
+    /// the former per-batch key dimension).
+    bases: Mutex<HashMap<(u64, usize), Arc<CostBase>>>,
+    outcomes: Mutex<OutcomeCache>,
+    /// Cross-request interval frontier memo, threaded into every sweep.
+    frontiers: FrontierMemo,
     totals: Totals,
 }
 
@@ -208,9 +259,17 @@ impl PlannerService {
             total_threads: total_threads.max(1),
             profiles: Mutex::new(HashMap::new()),
             bases: Mutex::new(HashMap::new()),
-            outcomes: Mutex::new(HashMap::new()),
+            outcomes: Mutex::new(OutcomeCache::new(DEFAULT_OUTCOME_CAPACITY)),
+            frontiers: FrontierMemo::new(),
             totals: Totals::default(),
         }
+    }
+
+    /// Rebound outcome cache (builder-style): `capacity` completed
+    /// solves are retained, truncated-first/LRU evicted beyond that;
+    /// `0` disables outcome replay entirely.
+    pub fn with_outcome_capacity(self, capacity: usize) -> PlannerService {
+        PlannerService { outcomes: Mutex::new(OutcomeCache::new(capacity)), ..self }
     }
 
     /// Sweep worker threads granted to each of `concurrency` concurrent
@@ -222,6 +281,7 @@ impl PlannerService {
 
     /// Lifetime statistics snapshot.
     pub fn stats(&self) -> ServiceStats {
+        let (frontier_hits, _) = self.frontiers.stats();
         ServiceStats {
             requests: self.totals.requests.load(Ordering::Relaxed),
             profile_hits: self.totals.profile_hits.load(Ordering::Relaxed),
@@ -233,6 +293,9 @@ impl PlannerService {
             cached_profiles: self.profiles.lock().unwrap().len(),
             cached_bases: self.bases.lock().unwrap().len(),
             cached_plans: self.outcomes.lock().unwrap().len(),
+            cached_frontiers: self.frontiers.len(),
+            frontier_hits,
+            outcome_evictions: self.outcomes.lock().unwrap().evictions,
         }
     }
 
@@ -305,7 +368,7 @@ impl PlannerService {
             schedule: req.schedule,
             max_pp: req.max_pp,
         };
-        if let Some(hit) = self.outcomes.lock().unwrap().get(&outcome_key).cloned() {
+        if let Some(hit) = self.outcomes.lock().unwrap().get(&outcome_key) {
             self.totals.plan_hits.fetch_add(1, Ordering::Relaxed);
             return PlanResponse {
                 id: req.id.clone(),
@@ -358,13 +421,15 @@ impl PlannerService {
         let base_hits = AtomicUsize::new(0);
         let base_misses = AtomicUsize::new(0);
         let provider = |pp: usize| -> Arc<CostBase> {
-            let key = (fp, pp, req.batch);
+            // Batch-generic bases: the key carries no batch dimension, so
+            // requests for every mini-batch of one workload share them.
+            let key = (fp, pp);
             if let Some(b) = self.bases.lock().unwrap().get(&key) {
                 base_hits.fetch_add(1, Ordering::Relaxed);
                 self.totals.base_hits.fetch_add(1, Ordering::Relaxed);
                 return b.clone();
             }
-            let built = Arc::new(CostBase::new(&profile, &graph, pp, req.batch));
+            let built = Arc::new(CostBase::new(&profile, &graph, pp));
             base_misses.fetch_add(1, Ordering::Relaxed);
             self.totals.base_misses.fetch_add(1, Ordering::Relaxed);
             self.bases.lock().unwrap().insert(key, built.clone());
@@ -374,6 +439,7 @@ impl PlannerService {
             cancel: Some(&token),
             on_event,
             base_for: Some(&provider),
+            frontier_memo: Some(&self.frontiers),
         };
 
         let (plan, log, solve_secs, failure) = match req.method {
@@ -553,6 +619,105 @@ mod tests {
             plan_to_json(r.plan.as_ref().unwrap()).to_string(),
             plan_to_json(fresh.plan.as_ref().unwrap()).to_string(),
         );
+    }
+
+    #[test]
+    fn base_cache_is_shared_across_batch_sizes() {
+        // ISSUE 3: bases are batch-generic and keyed (fp, pp), so a new
+        // mini-batch on a known workload rebuilds nothing.
+        let svc = PlannerService::with_threads(2);
+        let cold = svc.plan(&bert_req("b16"));
+        assert_eq!(cold.status, Status::Ok);
+        assert!(cold.cache.base_misses > 0);
+        // B=8 strictly shrinks memory vs the known-feasible B=16
+        let mut b8 = bert_req("b8");
+        b8.batch = 8;
+        let warm = svc.plan(&b8);
+        assert_eq!(warm.status, Status::Ok);
+        assert_eq!(warm.cache.plan_misses, 1, "different batch ⇒ new outcome");
+        assert_eq!(warm.cache.base_misses, 0, "{:?}", warm.cache);
+        assert_eq!(warm.cache.base_hits, cold.cache.base_misses);
+        assert!(warm.cache.fully_warm(), "{:?}", warm.cache);
+        // and the sweeps shared interval frontiers across requests
+        assert!(svc.stats().cached_frontiers > 0);
+    }
+
+    fn outcome_fixture(with_plan: bool) -> Outcome {
+        use crate::strategy::IntraStrategy;
+        let plan = with_plan.then(|| Plan {
+            pp_size: 1,
+            num_micro: 1,
+            batch: 1,
+            placement: vec![0],
+            choice: vec![0],
+            strategies: vec![IntraStrategy { dp: 1, tp: 1, fsdp: false }],
+            est_tpi: 1.0,
+        });
+        Outcome {
+            status: if plan.is_some() { Status::Ok } else { Status::Infeasible },
+            error: None,
+            plan,
+            log: Vec::new(),
+        }
+    }
+
+    fn outcome_key(batch: usize) -> OutcomeKey {
+        OutcomeKey {
+            fp: 7,
+            batch,
+            method: BaselineKind::UniAP,
+            engine: Engine::Auto,
+            schedule: Schedule::GPipe,
+            max_pp: None,
+        }
+    }
+
+    #[test]
+    fn outcome_cache_evicts_truncated_first_then_lru() {
+        let mut cache = OutcomeCache::new(3);
+        cache.insert(outcome_key(1), outcome_fixture(false)); // plan-less
+        cache.insert(outcome_key(2), outcome_fixture(true));
+        cache.insert(outcome_key(3), outcome_fixture(true));
+        assert!(cache.get(&outcome_key(2)).is_some()); // refresh key 2
+        cache.insert(outcome_key(4), outcome_fixture(true));
+        assert_eq!(cache.len(), 3);
+        assert!(cache.get(&outcome_key(1)).is_none(), "plan-less entry evicted first");
+        // no truncated entries left: plain LRU takes the stalest (key 3)
+        cache.insert(outcome_key(5), outcome_fixture(true));
+        assert_eq!(cache.len(), 3);
+        assert!(cache.get(&outcome_key(3)).is_none(), "LRU victim");
+        assert!(cache.get(&outcome_key(2)).is_some(), "refreshed entry survives");
+        assert_eq!(cache.evictions, 2);
+        // re-inserting an existing key is an update, not an eviction
+        cache.insert(outcome_key(2), outcome_fixture(true));
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.evictions, 2);
+    }
+
+    #[test]
+    fn outcome_capacity_zero_disables_replay() {
+        let mut cache = OutcomeCache::new(0);
+        cache.insert(outcome_key(1), outcome_fixture(true));
+        assert_eq!(cache.len(), 0);
+        assert!(cache.get(&outcome_key(1)).is_none());
+    }
+
+    #[test]
+    fn service_outcome_cache_respects_the_configured_bound() {
+        let svc = PlannerService::with_threads(2).with_outcome_capacity(1);
+        let first = svc.plan(&bert_req("one"));
+        assert_eq!(first.status, Status::Ok);
+        let mut other = bert_req("two");
+        other.schedule = crate::cost::Schedule::OneF1B;
+        let second = svc.plan(&other);
+        assert_eq!(second.status, Status::Ok);
+        let stats = svc.stats();
+        assert!(stats.cached_plans <= 1, "{stats:?}");
+        assert!(stats.outcome_evictions >= 1, "{stats:?}");
+        // the evicted outcome re-solves instead of replaying
+        let again = svc.plan(&bert_req("one-again"));
+        assert_eq!(again.cache.plan_hits, 0, "{:?}", again.cache);
+        assert_eq!(again.cache.plan_misses, 1);
     }
 
     #[test]

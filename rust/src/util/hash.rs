@@ -1,0 +1,89 @@
+//! FNV-1a 64-bit content hashing, shared by the service's workload
+//! fingerprints and the planner's frontier-memo keys.
+//!
+//! Not a general-purpose `Hasher`: callers feed exact byte
+//! representations (`f64::to_bits`, length-prefixed strings) so that two
+//! equal hashes imply — with the usual 64-bit collision caveat —
+//! bit-identical inputs, which is the property both cache layers key on.
+
+/// FNV-1a 64-bit accumulator.
+#[derive(Debug, Clone)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv::new()
+    }
+}
+
+impl Fnv {
+    /// Fresh accumulator at the FNV-1a offset basis.
+    pub fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Absorb raw bytes.
+    pub fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x1_0000_0000_01b3);
+        }
+    }
+
+    /// Absorb a `u64` (little-endian bytes).
+    pub fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    /// Absorb an `f64` by exact bit pattern (`-0.0 ≠ 0.0`, NaNs by payload).
+    pub fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    /// Absorb a `usize` (widened to 64 bits).
+    pub fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+
+    /// Absorb a string, length-prefixed so concatenations cannot collide.
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.bytes(s.as_bytes());
+    }
+
+    /// The accumulated hash.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_input_sensitive() {
+        let mut a = Fnv::new();
+        a.str("abc");
+        a.f64(1.5);
+        let mut b = Fnv::new();
+        b.str("abc");
+        b.f64(1.5);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv::new();
+        c.str("abc");
+        c.f64(1.5000000000000002);
+        assert_ne!(a.finish(), c.finish(), "one ulp must change the hash");
+    }
+
+    #[test]
+    fn length_prefix_separates_string_boundaries() {
+        let mut a = Fnv::new();
+        a.str("ab");
+        a.str("c");
+        let mut b = Fnv::new();
+        b.str("a");
+        b.str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+}

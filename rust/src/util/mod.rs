@@ -1,11 +1,14 @@
-//! Small shared utilities: math helpers, factorisation, JSON, and the
-//! cooperative cancellation primitive.
+//! Small shared utilities: math helpers, factorisation, JSON, content
+//! hashing, the cooperative cancellation primitive, and the process-wide
+//! worker-thread budget.
 //!
 //! The environment's crate registry is offline, so we avoid serde and
 //! hand-roll JSON where machine-readable input/output is needed.
 
 pub mod cancel;
+pub mod hash;
 pub mod json;
+pub mod pool;
 
 /// All divisors of `n` in ascending order (including 1 and `n`).
 pub fn divisors(n: usize) -> Vec<usize> {

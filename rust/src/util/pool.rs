@@ -1,0 +1,303 @@
+//! Process-wide worker-thread budget and a striped row fan-out helper —
+//! the coordination layer behind the two-level planner parallelism
+//! (DESIGN.md §Two-level thread budget).
+//!
+//! Two layers of the planner want threads at once: the UOP sweep fans out
+//! across `(pp, c)` candidates, and inside one candidate the interval DP
+//! fans out across its independent per-`l` rows. Letting each layer size
+//! itself from `available_parallelism` would oversubscribe the machine
+//! `sweep × rows`-fold, so both lease from one [`ThreadBudget`]:
+//!
+//! * the sweep leases its candidate workers up front and hands each
+//!   worker's permit back the moment that worker drains the queue
+//!   ([`Lease::release_one`]), so late candidates can spend the idle
+//!   cores on row parallelism;
+//! * the interval DP leases row helpers per solve and returns them when
+//!   the table is built. A saturated budget grants zero helpers and the
+//!   DP runs on the calling thread — same code path, same results.
+//!
+//! Leasing never blocks and never grants more than asked: the budget is a
+//! single atomic counter, and a [`Lease`] returns whatever it still holds
+//! when dropped (panic-safe). Results are unaffected by how many permits
+//! a lease wins — parallel callers must keep their outputs disjoint and
+//! deterministic, which [`parallel_rows`] enforces structurally by
+//! striping owned work items across workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// A ledger of worker-thread permits (see module docs). The process-wide
+/// instance ([`ThreadBudget::global`]) is sized to the machine's available
+/// parallelism; tests build private budgets to get deterministic grants.
+#[derive(Debug)]
+pub struct ThreadBudget {
+    capacity: usize,
+    available: AtomicUsize,
+}
+
+impl ThreadBudget {
+    /// A budget holding `capacity` permits.
+    pub fn new(capacity: usize) -> ThreadBudget {
+        ThreadBudget { capacity, available: AtomicUsize::new(capacity) }
+    }
+
+    /// The process-wide budget, sized to `available_parallelism` once.
+    pub fn global() -> &'static ThreadBudget {
+        static GLOBAL: OnceLock<ThreadBudget> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let cap = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+            ThreadBudget::new(cap)
+        })
+    }
+
+    /// Total permits the budget was built with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Permits currently unleased.
+    pub fn available(&self) -> usize {
+        self.available.load(Ordering::Relaxed)
+    }
+
+    /// Claim up to `want` permits without blocking. The grant may be any
+    /// value in `0..=want`; callers must run correctly (serially) on a
+    /// zero grant.
+    pub fn lease(&self, want: usize) -> Lease<'_> {
+        let mut cur = self.available.load(Ordering::Relaxed);
+        loop {
+            let take = cur.min(want);
+            if take == 0 {
+                return Lease { budget: self, held: AtomicUsize::new(0) };
+            }
+            match self.available.compare_exchange_weak(
+                cur,
+                cur - take,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Lease { budget: self, held: AtomicUsize::new(take) },
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn release(&self, n: usize) {
+        if n > 0 {
+            self.available.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+}
+
+/// RAII claim on budget permits: whatever is still held returns to the
+/// budget on drop. [`Lease::release_one`] hands permits back early —
+/// sweep workers use it to free their core for row fan-out the moment
+/// their candidate queue drains.
+#[derive(Debug)]
+pub struct Lease<'a> {
+    budget: &'a ThreadBudget,
+    held: AtomicUsize,
+}
+
+impl Lease<'_> {
+    /// Permits this lease currently holds.
+    pub fn granted(&self) -> usize {
+        self.held.load(Ordering::Relaxed)
+    }
+
+    /// Return one permit early (idempotent at zero). `true` if a permit
+    /// was actually returned.
+    pub fn release_one(&self) -> bool {
+        let mut cur = self.held.load(Ordering::Relaxed);
+        loop {
+            if cur == 0 {
+                return false;
+            }
+            match self.held.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.budget.release(1);
+                    return true;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        self.budget.release(self.held.swap(0, Ordering::Relaxed));
+    }
+}
+
+/// Run `f` over `items`, striping them round-robin across `1 + helpers`
+/// workers (the caller is worker 0). With zero helpers or at most one
+/// item everything runs inline on the caller — the exact serial path.
+///
+/// Striping (rather than work stealing) keeps the distribution
+/// deterministic and lets each worker *own* its items, so `&mut` outputs
+/// travel into the worker without synchronisation. Callers get identical
+/// results for every helper count as long as each item's work writes only
+/// through state the item carries — which is how the interval DP uses it:
+/// item `l` owns the disjoint row slice `table[l·v .. (l+1)·v]`.
+pub fn parallel_rows<T, F>(helpers: usize, items: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    parallel_rows_ctx(helpers, items, || (), |(), item| f(item));
+}
+
+/// [`parallel_rows`] with a per-worker context: `init` runs once on each
+/// worker (including the caller) and the resulting value is threaded
+/// mutably through that worker's items. This is how the interval DP
+/// reuses its frontier scratch buffers across the rows one worker owns
+/// instead of reallocating them per row.
+pub fn parallel_rows_ctx<T, C, I, F>(helpers: usize, items: Vec<T>, init: I, f: F)
+where
+    T: Send,
+    I: Fn() -> C + Sync,
+    F: Fn(&mut C, T) + Sync,
+{
+    if helpers == 0 || items.len() <= 1 {
+        let mut ctx = init();
+        for item in items {
+            f(&mut ctx, item);
+        }
+        return;
+    }
+    let workers = (helpers + 1).min(items.len());
+    let mut buckets: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        buckets[i % workers].push(item);
+    }
+    let mut rest = buckets.into_iter();
+    let mine = rest.next().expect("workers >= 1");
+    std::thread::scope(|scope| {
+        for bucket in rest {
+            let f = &f;
+            let init = &init;
+            scope.spawn(move || {
+                let mut ctx = init();
+                for item in bucket {
+                    f(&mut ctx, item);
+                }
+            });
+        }
+        let mut ctx = init();
+        for item in mine {
+            f(&mut ctx, item);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn lease_grants_at_most_available_and_returns_on_drop() {
+        let budget = ThreadBudget::new(4);
+        let a = budget.lease(3);
+        assert_eq!(a.granted(), 3);
+        assert_eq!(budget.available(), 1);
+        let b = budget.lease(3);
+        assert_eq!(b.granted(), 1, "only the remainder is granted");
+        let c = budget.lease(5);
+        assert_eq!(c.granted(), 0, "an empty budget grants zero, never blocks");
+        drop(a);
+        assert_eq!(budget.available(), 3);
+        drop(b);
+        drop(c);
+        assert_eq!(budget.available(), budget.capacity());
+    }
+
+    #[test]
+    fn release_one_hands_back_incrementally() {
+        let budget = ThreadBudget::new(2);
+        let lease = budget.lease(2);
+        assert!(lease.release_one());
+        assert_eq!(lease.granted(), 1);
+        assert_eq!(budget.available(), 1);
+        assert!(lease.release_one());
+        assert!(!lease.release_one(), "idempotent at zero");
+        drop(lease);
+        assert_eq!(budget.available(), 2, "drop never double-releases");
+    }
+
+    #[test]
+    fn global_budget_has_machine_capacity() {
+        let g = ThreadBudget::global();
+        assert!(g.capacity() >= 1);
+        assert!(g.available() <= g.capacity());
+    }
+
+    #[test]
+    fn parallel_rows_visits_every_item_exactly_once() {
+        for helpers in [0usize, 1, 3, 7] {
+            let seen = Mutex::new(Vec::new());
+            parallel_rows(helpers, (0..23usize).collect(), |i| {
+                seen.lock().unwrap().push(i);
+            });
+            let mut got = seen.into_inner().unwrap();
+            got.sort_unstable();
+            assert_eq!(got, (0..23).collect::<Vec<_>>(), "helpers={helpers}");
+        }
+    }
+
+    #[test]
+    fn parallel_rows_carries_disjoint_mutable_outputs() {
+        let mut out = vec![0usize; 16];
+        {
+            let items: Vec<(usize, &mut usize)> = out.iter_mut().enumerate().collect();
+            parallel_rows(3, items, |(i, slot)| *slot = i * i);
+        }
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_rows_ctx_reuses_one_context_per_worker() {
+        use std::sync::atomic::AtomicUsize;
+        for helpers in [0usize, 3] {
+            let inits = AtomicUsize::new(0);
+            let mut out = vec![0usize; 10];
+            {
+                let items: Vec<(usize, &mut usize)> = out.iter_mut().enumerate().collect();
+                parallel_rows_ctx(
+                    helpers,
+                    items,
+                    || {
+                        inits.fetch_add(1, Ordering::Relaxed);
+                        0usize // per-worker item counter
+                    },
+                    |ctx, (i, slot)| {
+                        *ctx += 1;
+                        *slot = i + 1;
+                    },
+                );
+            }
+            assert!(out.iter().enumerate().all(|(i, v)| *v == i + 1), "helpers={helpers}");
+            let contexts = inits.load(Ordering::Relaxed);
+            assert!(contexts <= helpers + 1, "one context per worker, not per item");
+        }
+    }
+
+    #[test]
+    fn parallel_rows_handles_empty_and_single() {
+        parallel_rows(4, Vec::<usize>::new(), |_| panic!("no items"));
+        let hits = Mutex::new(0usize);
+        parallel_rows(4, vec![7usize], |i| {
+            assert_eq!(i, 7);
+            *hits.lock().unwrap() += 1;
+        });
+        assert_eq!(*hits.lock().unwrap(), 1);
+    }
+}

@@ -3,12 +3,17 @@
 //! plans to the MIQP branch-and-bound on randomized chains, agree with the
 //! frozen dense-grid reference wherever quantisation cannot bite, and keep
 //! its optimum under incumbent-bounded solves.
+//!
+//! ISSUE 3 extends the guarantee to the parallel planner core: the
+//! row-parallel interval DP and the cross-candidate frontier memo must
+//! both leave plans bit-identical to the serial, memo-free path.
 
 use std::sync::atomic::AtomicU64;
 
 use uniap::cluster::ClusterEnv;
 use uniap::cost::cost_modeling;
 use uniap::graph::{Dtype, Graph, Layer, LayerKind};
+use uniap::planner::memo::FrontierMemo;
 use uniap::planner::{chain, chain_dense, PlannerConfig};
 use uniap::profiling::Profile;
 use uniap::testing;
@@ -120,6 +125,71 @@ fn sparse_agrees_with_dense_reference_when_memory_is_slack() {
                     "feasibility mismatch: sparse {:?} dense {:?}",
                     a.is_some(),
                     b.is_some()
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn row_parallel_and_memoised_solves_are_bit_identical_to_serial() {
+    // The tentpole guarantee of the parallel planner core: fanning the
+    // per-`l` interval rows across threads and reusing memoised memory
+    // frontiers may change *nothing* about the returned plan — same
+    // placement, same choices, same objective bits — on randomized
+    // heterogeneous chains where ties have probability zero.
+    testing::check(
+        "row_parallel_memo_bit_identical",
+        10,
+        |rng| {
+            let n = rng.usize_in(4, 10);
+            let pp = *rng.pick(&[2usize, 4]);
+            let c = *rng.pick(&[2usize, 4]);
+            let helpers = *rng.pick(&[1usize, 2, 5]);
+            let seed = rng.next_u64();
+            (n, pp, c, helpers, seed)
+        },
+        |&(n, pp, c, helpers, seed)| {
+            let mut grng = testing::Rng::new(seed);
+            let g = random_chain(&mut grng, n);
+            let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+            let costs = cost_modeling(&profile, &g, pp, 8, c);
+            let serial_cfg = PlannerConfig { row_helpers: Some(0), ..Default::default() };
+            let par_cfg = PlannerConfig { row_helpers: Some(helpers), ..Default::default() };
+            let memo = FrontierMemo::new();
+            let serial = chain::solve_chain_with(&g, &costs, &serial_cfg, None, None, None);
+            let par = chain::solve_chain_with(&g, &costs, &par_cfg, None, None, Some(&memo));
+            // a second memoised solve replays the stored frontier
+            let warm = chain::solve_chain_with(&g, &costs, &par_cfg, None, None, Some(&memo));
+            match (serial, par, warm) {
+                (Some(a), Some(b), Some(w)) => {
+                    if a.placement != b.placement || a.choice != b.choice {
+                        return Err(format!(
+                            "plan mismatch: serial {:?}/{:?} vs parallel {:?}/{:?}",
+                            a.placement, a.choice, b.placement, b.choice
+                        ));
+                    }
+                    if a.est_tpi.to_bits() != b.est_tpi.to_bits() {
+                        return Err(format!(
+                            "est_tpi not bit-identical: {} vs {}",
+                            a.est_tpi, b.est_tpi
+                        ));
+                    }
+                    if w.est_tpi.to_bits() != a.est_tpi.to_bits() || w.choice != a.choice {
+                        return Err("memo-warm solve diverged".to_string());
+                    }
+                    let (hits, misses) = memo.stats();
+                    if (hits, misses) != (1, 1) {
+                        return Err(format!("memo not reused: hits {hits} misses {misses}"));
+                    }
+                    Ok(())
+                }
+                (None, None, None) => Ok(()),
+                (a, b, w) => Err(format!(
+                    "feasibility mismatch: serial {:?} parallel {:?} warm {:?}",
+                    a.is_some(),
+                    b.is_some(),
+                    w.is_some()
                 )),
             }
         },

@@ -219,6 +219,45 @@ fn serve_honours_per_request_deadlines_in_a_batch() {
     assert!(resps[1].plan.is_none());
 }
 
+/// ISSUE 3 satellite: a token fired mid-solve must stop every row-parallel
+/// DP worker promptly, and the truncated outcome must never enter the
+/// replay cache.
+#[test]
+fn cancel_mid_solve_stops_row_parallel_workers_and_never_caches() {
+    // Swin-Huge (50 layers) at B=128 is the heaviest sweep in the zoo —
+    // 8 candidates even under max_pp=2 — so a 5 ms cancel always lands
+    // mid-solve while the interval rows are fanned out.
+    let mut req = PlanRequest::new("mid", "swin", "EnvA", 128);
+    req.max_pp = Some(2);
+    req.threads = Some(2); // leave budget spare so rows fan out
+    let svc = PlannerService::with_threads(2);
+    let token = CancelToken::new();
+    let t0 = std::time::Instant::now();
+    let resp = std::thread::scope(|scope| {
+        let handle = scope.spawn(|| svc.plan_cancellable(&req, &token, None));
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        token.cancel();
+        handle.join().expect("solver thread must not panic")
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    // Promptness: the DP polls the token once per row step, so the stop
+    // must land orders of magnitude before a full Swin solve would.
+    assert!(elapsed < 30.0, "cancel not honoured promptly: {elapsed}s");
+    // The sweep was truly truncated: at least one candidate unsolved.
+    assert!(
+        resp.log.iter().any(|l| l.tpi.is_none()),
+        "cancel landed after the whole sweep finished — workload too small"
+    );
+    // A truncated sweep may still carry a best-effort incumbent (then it
+    // reports Ok); with no plan the cause must surface as Cancelled.
+    if resp.plan.is_none() {
+        assert_eq!(resp.status, Status::Cancelled);
+    }
+    // Never cache the truncated outcome: nothing may be replayable.
+    assert_eq!(svc.stats().cached_plans, 0, "truncated outcome was cached");
+    assert_eq!(svc.stats().plan_hits, 0);
+}
+
 #[test]
 fn serve_cancellable_stops_the_whole_batch() {
     let mut req = PlanRequest::new("x", "bert", "EnvB", 16);
