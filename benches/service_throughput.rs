@@ -22,14 +22,28 @@
 //! (the cache key lost its batch dimension) — tracked under
 //! `warm_new_batch_base_hits`.
 //!
+//! ISSUE 4 adds the **socket** row: the same warm request served through
+//! `serve --listen` over loopback TCP (`service_socket_warm` — the
+//! framing + scheduling overhead on top of the in-process warm path),
+//! with the byte-identity of socket-served plans asserted against the
+//! in-process responses.
+//!
 //! Run: `cargo bench --bench service_throughput`
 //! CI smoke: `UNIAP_BENCH_SMOKE=1` shrinks rows to single unwarmed
 //! samples.
 //! Writes `BENCH_service_throughput.json` (schema `uniap-bench-v1`).
 
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::sync::Arc;
+
 use uniap::cost::Schedule;
 use uniap::report::bench::{section, BenchReport};
-use uniap::service::{plan_to_json, PlanRequest, PlannerService, Status};
+use uniap::service::{
+    plan_to_json, CancelToken, PlanRequest, PlanResponse, PlannerService, Server, ServerOptions,
+    Status,
+};
+use uniap::util::net::{read_frame, write_frame};
 
 fn main() {
     let smoke = std::env::var("UNIAP_BENCH_SMOKE").is_ok();
@@ -54,7 +68,7 @@ fn main() {
         std::hint::black_box(svc.plan(&req));
     });
 
-    let svc = PlannerService::new();
+    let svc = Arc::new(PlannerService::new());
     let cold = svc.plan(&req);
     assert_eq!(cold.status, Status::Ok, "workload must be plannable");
     let cold_variant = PlannerService::new().plan(&variant);
@@ -125,6 +139,56 @@ fn main() {
     rep.bench("serve 6 requests, concurrency 2 (warm service)", 0, s(3), || {
         std::hint::black_box(svc.serve(&file, 2));
     });
+
+    // --- socket-served warm requests (ISSUE 4) ---------------------------
+    // The long-running `serve --listen` path: the same warm strict-repeat
+    // request, now crossing loopback TCP + NDJSON framing. The delta to
+    // "service warm (strict repeat)" is the serving overhead per request.
+    section("socket serving (serve --listen, loopback)");
+    let server = Server::bind("127.0.0.1:0").expect("ephemeral bind");
+    let addr = server.local_addr();
+    let shutdown = CancelToken::new();
+    let server_thread = {
+        let svc = svc.clone();
+        let shutdown = shutdown.clone();
+        std::thread::spawn(move || server.run(&svc, &ServerOptions::default(), &shutdown))
+    };
+    let stream = TcpStream::connect(addr).expect("connect to own server");
+    let read_half = stream.try_clone().expect("clone stream");
+    let mut sock_reader = BufReader::new(read_half);
+    let mut sock_writer = BufWriter::new(stream);
+    let frame = req.to_json().to_string();
+    let never = || false;
+    let mut socket_round = || -> PlanResponse {
+        write_frame(&mut sock_writer, &frame).expect("send");
+        let line = read_frame(&mut sock_reader, 1 << 24, &never)
+            .expect("read")
+            .expect("server alive");
+        PlanResponse::parse(&line).expect("typed response")
+    };
+    let socket_warm = socket_round();
+    assert_eq!(socket_warm.status, Status::Ok);
+    let identical_socket = plan_to_json(socket_warm.plan.as_ref().unwrap()).to_string()
+        == plan_to_json(cold.plan.as_ref().unwrap()).to_string();
+    assert!(identical_socket, "socket-served plan differs from the in-process solve");
+    rep.note("socket_warm_plan_byte_identical", identical_socket);
+    rep.bench("service warm over socket (strict repeat, loopback)", w(2), s(10), || {
+        std::hint::black_box(socket_round());
+    });
+    if let Some(overhead) = rep.speedup(
+        "service warm over socket (strict repeat, loopback)",
+        "service warm (strict repeat)",
+    ) {
+        println!("socket overhead on a warm repeat: {overhead:.2}× the in-process time");
+        rep.note("socket_warm_overhead_factor", overhead);
+    }
+    drop(sock_writer);
+    drop(sock_reader);
+    shutdown.cancel();
+    server_thread
+        .join()
+        .expect("server thread must not panic")
+        .expect("server run() must exit cleanly");
 
     match rep.write() {
         Ok(path) => println!("wrote {}", path.display()),

@@ -42,8 +42,11 @@ fn inter_op_dp(q: &[Vec<f64>], v: usize, pp: usize, c: usize) -> Option<Vec<(usi
     struct Pt {
         sum: f64,
         mx: f64,
-        prev: usize, // previous boundary r (layer index), usize::MAX at start
-        prev_idx: usize,
+        /// Previous boundary `(r, frontier index)` — `None` for the first
+        /// stage. PR 2 purged the `usize::MAX` sentinel from `Plan`; this
+        /// was the last holdout, and reconstruction below can no longer
+        /// index with a sentinel by construction (ISSUE 4).
+        prev: Option<(usize, usize)>,
     }
     let mut fronts: Vec<Vec<Vec<Pt>>> = Vec::with_capacity(pp);
     let mut f0: Vec<Vec<Pt>> = vec![Vec::new(); v];
@@ -53,7 +56,7 @@ fn inter_op_dp(q: &[Vec<f64>], v: usize, pp: usize, c: usize) -> Option<Vec<(usi
         }
         let cost = q[0][r];
         if cost.is_finite() {
-            f0[r].push(Pt { sum: cost, mx: cost, prev: usize::MAX, prev_idx: 0 });
+            f0[r].push(Pt { sum: cost, mx: cost, prev: None });
         }
     }
     fronts.push(f0);
@@ -70,8 +73,7 @@ fn inter_op_dp(q: &[Vec<f64>], v: usize, pp: usize, c: usize) -> Option<Vec<(usi
                     let cand = Pt {
                         sum: pt.sum + cost,
                         mx: pt.mx.max(cost),
-                        prev: r,
-                        prev_idx: idx,
+                        prev: Some((r, idx)),
                     };
                     let dominated = nf[r2]
                         .iter()
@@ -100,11 +102,21 @@ fn inter_op_dp(q: &[Vec<f64>], v: usize, pp: usize, c: usize) -> Option<Vec<(usi
     let mut bounds = Vec::new();
     for stage in (0..pp).rev() {
         let pt = fronts[stage][r][idx];
-        let l = if stage == 0 { 0 } else { pt.prev + 1 };
-        bounds.push((l, r));
-        if stage > 0 {
-            r = pt.prev;
-            idx = pt.prev_idx;
+        match pt.prev {
+            Some((pr, pidx)) => {
+                bounds.push((pr + 1, r));
+                r = pr;
+                idx = pidx;
+            }
+            None => {
+                // first stage: the DP only seeds prev-less points at
+                // stage 0, so a mismatch is a broken invariant — degrade
+                // to "no partition" instead of reconstructing garbage
+                if stage != 0 {
+                    return None;
+                }
+                bounds.push((0, r));
+            }
         }
     }
     bounds.reverse();
@@ -189,6 +201,28 @@ mod tests {
             .collect();
         let bounds = inter_op_dp(&q, v, 2, 16).unwrap();
         assert_eq!(bounds, vec![(0, 3), (4, 7)]);
+    }
+
+    #[test]
+    fn inter_op_dp_handles_single_layer_chain() {
+        // Degenerate chain (ISSUE 4): one layer, one stage — reconstruction
+        // used to touch the usize::MAX sentinel path; now the prev-less
+        // point is the whole answer.
+        let q = vec![vec![3.0]];
+        assert_eq!(inter_op_dp(&q, 1, 1, 4).unwrap(), vec![(0, 0)]);
+        // infeasible single interval → None, not a panic
+        assert!(inter_op_dp(&[vec![f64::INFINITY]], 1, 1, 4).is_none());
+    }
+
+    #[test]
+    fn alpa_plans_a_single_layer_model_end_to_end() {
+        let g = models::synthetic_chain(1, 5e11, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let r = run(&p, &g, 8, &PlannerConfig::default());
+        let plan = r.plan.expect("single layer must be plannable");
+        assert_eq!(plan.pp_size, 1, "pp > v candidates are skipped");
+        assert_eq!(plan.placement, vec![0]);
+        assert!(plan.est_tpi.is_finite());
     }
 
     #[test]

@@ -97,7 +97,9 @@ pub fn run(profile: &Profile, graph: &Graph, batch: usize, _cfg: &PlannerConfig)
                     est_tpi: est,
                 };
                 let sim = simulate_plan(graph, profile, &plan, &sim_cfg);
-                let feasible = !sim.oom && est.is_finite();
+                // a degenerate profile can simulate to NaN throughput —
+                // count it as a crash, never as a rankable candidate
+                let feasible = !sim.oom && est.is_finite() && sim.throughput.is_finite();
                 if feasible {
                     simulated_secs += LAUNCH_OVERHEAD + TEST_ITERS * sim.tpi;
                     if best.as_ref().map_or(true, |(thr, _)| sim.throughput > *thr) {
@@ -141,10 +143,13 @@ pub struct GridStats {
 /// Compute the Table 5 row from a grid outcome.
 pub fn stats(outcome: &GridOutcome) -> Option<GridStats> {
     let mut thr: Vec<f64> = outcome.candidates.iter().filter_map(|c| c.throughput).collect();
+    // NaN throughputs (degenerate profiles, hand-built outcomes) rank as
+    // infeasible rather than panicking the descending sort (ISSUE 4).
+    thr.retain(|t| !t.is_nan());
     if thr.is_empty() {
         return None;
     }
-    thr.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    thr.sort_by(|a, b| b.total_cmp(a));
     Some(GridStats {
         top1: thr[0],
         top2: thr.get(1).copied().unwrap_or(thr[0]),
@@ -190,6 +195,43 @@ mod tests {
         let s = stats(&out).expect("some feasible candidates");
         assert!(s.top1 >= s.top2 && s.top2 >= s.median && s.median >= s.slowest);
         assert_eq!(s.total, out.candidates.len());
+    }
+
+    #[test]
+    fn stats_exclude_nan_throughput_candidates() {
+        // ISSUE 4 regression: a NaN-throughput candidate used to panic the
+        // descending `partial_cmp().unwrap()` sort; it must now count as
+        // infeasible alongside the `None` candidates.
+        let mk = |thr: Option<f64>| Candidate {
+            tp: 1,
+            pp: 1,
+            dp: 8,
+            micro_batch: 1,
+            throughput: thr,
+            plan: None,
+        };
+        let outcome = GridOutcome {
+            result: BaselineResult {
+                kind: BaselineKind::MegatronGrid,
+                plan: None,
+                opt_secs: 0.0,
+                failure: None,
+            },
+            candidates: vec![mk(Some(2.0)), mk(Some(f64::NAN)), mk(Some(1.0)), mk(None)],
+            simulated_search_secs: 0.0,
+        };
+        let s = stats(&outcome).expect("two real candidates remain");
+        assert_eq!(s.top1, 2.0);
+        assert_eq!(s.top2, 1.0);
+        assert_eq!(s.slowest, 1.0);
+        assert_eq!(s.infeasible, 2, "NaN ranks with the crashes");
+        assert_eq!(s.total, 4);
+        // all-NaN degrades to None, not to a panic
+        let all_nan = GridOutcome {
+            candidates: vec![mk(Some(f64::NAN))],
+            ..outcome
+        };
+        assert!(stats(&all_nan).is_none());
     }
 
     #[test]

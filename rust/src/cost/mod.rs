@@ -33,6 +33,8 @@
 use crate::graph::Graph;
 use crate::profiling::Profile;
 use crate::strategy::{cross_stage_cost, reshard_cost, strategies_for, IntraStrategy};
+use crate::util::fsio::{f64_from_hex, f64_to_hex};
+use crate::util::json::Json;
 
 /// Allocator-fragmentation reserve: the memory constraint (5) plans
 /// against `mem_limit / MEM_SAFETY` so that real-allocator overhead (the
@@ -234,6 +236,20 @@ pub struct CostBase {
 }
 
 impl CostBase {
+    /// Number of layers this base covers.
+    pub fn num_layers(&self) -> usize {
+        self.t_fwd.len()
+    }
+
+    /// Number of graph edges this base covers (`materialize` emits one
+    /// `R`/`R'` block per entry). The service checks both counts against
+    /// the live graph before using a cached base, so a base restored
+    /// from a damaged snapshot is rebuilt instead of driving the solver
+    /// out of bounds.
+    pub fn num_edges(&self) -> usize {
+        self.edge_act.len()
+    }
+
     /// Build the `(B, c)`-independent cost structure for one `pp_size` —
     /// the expensive half of the `CostModeling` step of Algorithm 1:
     /// profile lookups, collective-model probing, and the `S²`
@@ -422,6 +438,198 @@ impl CostBase {
             batch,
             mem_limit: self.mem_limit,
         }
+    }
+}
+
+// --- snapshot (de)serialization (ISSUE 4) -----------------------------------
+//
+// The service persists its `(workload fp, pp_size)` cost-base cache across
+// restarts. Every float travels as exact bit hex: the warm-vs-cold
+// byte-identity guarantee extends across a restart only if a restored base
+// materialises *bit-identical* matrices, and decimal round-trips are one
+// `-0.0` away from silently breaking that.
+
+fn hexvec_to_json(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Str(f64_to_hex(x))).collect())
+}
+
+fn hexvec_from_json(j: &Json, key: &str) -> Result<Vec<f64>, String> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("cost base needs array {key:?}"))?
+        .iter()
+        .map(|v| f64_from_hex(v.as_str().ok_or_else(|| format!("{key:?} holds a non-hex entry"))?))
+        .collect()
+}
+
+fn hexmat_to_json(m: &[Vec<f64>]) -> Json {
+    Json::Arr(m.iter().map(|row| hexvec_to_json(row)).collect())
+}
+
+fn hexmat_from_json(
+    j: &Json,
+    key: &str,
+    rows: usize,
+    cols: usize,
+) -> Result<Vec<Vec<f64>>, String> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("cost base needs array {key:?}"))?;
+    if arr.len() != rows {
+        return Err(format!("{key:?} has {} rows, expected {rows}", arr.len()));
+    }
+    arr.iter()
+        .map(|row| {
+            let row = row.as_arr().ok_or_else(|| format!("{key:?} holds a non-array row"))?;
+            if row.len() != cols {
+                return Err(format!("{key:?} has a {}-wide row, expected {cols}", row.len()));
+            }
+            row.iter()
+                .map(|v| {
+                    f64_from_hex(
+                        v.as_str().ok_or_else(|| format!("{key:?} holds a non-hex entry"))?,
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl Affine {
+    fn to_json(self) -> Json {
+        Json::Arr(vec![Json::Str(f64_to_hex(self.slope)), Json::Str(f64_to_hex(self.konst))])
+    }
+
+    fn from_json(j: &Json) -> Result<Affine, String> {
+        let pair = j
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .ok_or("affine must be a [slope, konst] pair")?;
+        let bit = |v: &Json| f64_from_hex(v.as_str().ok_or("affine holds a non-hex entry")?);
+        Ok(Affine { slope: bit(&pair[0])?, konst: bit(&pair[1])? })
+    }
+}
+
+fn affmat_to_json(m: &[Vec<Affine>]) -> Json {
+    Json::Arr(
+        m.iter()
+            .map(|row| Json::Arr(row.iter().map(|a| a.to_json()).collect()))
+            .collect(),
+    )
+}
+
+fn affmat_from_json(j: &Json, key: &str, side: usize) -> Result<Vec<Vec<Affine>>, String> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("cost base needs array {key:?}"))?;
+    if arr.len() != side {
+        return Err(format!("{key:?} has {} rows, expected {side}", arr.len()));
+    }
+    arr.iter()
+        .map(|row| {
+            let row = row.as_arr().ok_or_else(|| format!("{key:?} holds a non-array row"))?;
+            if row.len() != side {
+                return Err(format!("{key:?} has a {}-wide row, expected {side}", row.len()));
+            }
+            row.iter().map(Affine::from_json).collect()
+        })
+        .collect()
+}
+
+impl CostBase {
+    /// Serialize for the service's on-disk snapshot (bit-exact floats;
+    /// see the section comment above).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field(
+                "strategies",
+                Json::Arr(
+                    self.strategies
+                        .iter()
+                        .map(|s| {
+                            Json::obj().field("dp", s.dp).field("tp", s.tp).field("fsdp", s.fsdp)
+                        })
+                        .collect(),
+                ),
+            )
+            .field("pp_size", self.pp_size)
+            .field("mem_limit", Json::Str(f64_to_hex(self.mem_limit)))
+            .field("t_fwd", hexmat_to_json(&self.t_fwd))
+            .field("f_konst", hexmat_to_json(&self.f_konst))
+            .field("b_konst", hexmat_to_json(&self.b_konst))
+            .field("per_iter", hexmat_to_json(&self.per_iter))
+            .field("m_state", hexmat_to_json(&self.m_state))
+            .field("ar_tp", Json::Arr(self.ar_tp.iter().map(|a| a.to_json()).collect()))
+            .field("reshard", affmat_to_json(&self.reshard))
+            .field("cross", affmat_to_json(&self.cross))
+            .field("act_out", hexvec_to_json(&self.act_out))
+            .field("act_store", hexvec_to_json(&self.act_store))
+            .field("edge_act", hexvec_to_json(&self.edge_act))
+    }
+
+    /// Inverse of [`CostBase::to_json`]. Shape-checks every matrix so a
+    /// corrupt snapshot fails the load (→ cold start) instead of
+    /// panicking a later `materialize`.
+    pub fn from_json(j: &Json) -> Result<CostBase, String> {
+        let strategies = j
+            .get("strategies")
+            .and_then(Json::as_arr)
+            .ok_or("cost base needs array \"strategies\"")?
+            .iter()
+            .map(|s| -> Result<IntraStrategy, String> {
+                Ok(IntraStrategy {
+                    dp: s.get("dp").and_then(Json::as_usize).ok_or("strategy needs \"dp\"")?,
+                    tp: s.get("tp").and_then(Json::as_usize).ok_or("strategy needs \"tp\"")?,
+                    fsdp: s.get("fsdp").and_then(Json::as_bool).ok_or("strategy needs \"fsdp\"")?,
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let s = strategies.len();
+        if s == 0 {
+            return Err("cost base has an empty strategy dictionary".to_string());
+        }
+        let pp_size = j
+            .get("pp_size")
+            .and_then(Json::as_usize)
+            .filter(|&pp| pp >= 1)
+            .ok_or("cost base needs positive integer \"pp_size\"")?;
+        let mem_limit = f64_from_hex(
+            j.get("mem_limit").and_then(Json::as_str).ok_or("cost base needs hex \"mem_limit\"")?,
+        )?;
+        let act_out = hexvec_from_json(j, "act_out")?;
+        let v = act_out.len();
+        let ar_tp_json = j
+            .get("ar_tp")
+            .and_then(Json::as_arr)
+            .ok_or("cost base needs array \"ar_tp\"")?;
+        if ar_tp_json.len() != s {
+            return Err(format!("\"ar_tp\" has {} entries, expected {s}", ar_tp_json.len()));
+        }
+        let base = CostBase {
+            t_fwd: hexmat_from_json(j, "t_fwd", v, s)?,
+            f_konst: hexmat_from_json(j, "f_konst", v, s)?,
+            b_konst: hexmat_from_json(j, "b_konst", v, s)?,
+            per_iter: hexmat_from_json(j, "per_iter", v, s)?,
+            m_state: hexmat_from_json(j, "m_state", v, s)?,
+            ar_tp: ar_tp_json.iter().map(Affine::from_json).collect::<Result<Vec<_>, _>>()?,
+            reshard: affmat_from_json(j, "reshard", s)?,
+            cross: affmat_from_json(j, "cross", s)?,
+            act_store: {
+                let xs = hexvec_from_json(j, "act_store")?;
+                if xs.len() != v {
+                    return Err(format!("\"act_store\" has {} entries, expected {v}", xs.len()));
+                }
+                xs
+            },
+            edge_act: hexvec_from_json(j, "edge_act")?,
+            strategies,
+            pp_size,
+            mem_limit,
+            act_out,
+        };
+        Ok(base)
     }
 }
 
@@ -729,6 +937,55 @@ mod tests {
             assert_eq!(via_base.r, via_api.r);
             assert_eq!(via_base.rp, via_api.rp);
         }
+    }
+
+    #[test]
+    fn cost_base_json_roundtrip_materializes_bit_identically() {
+        // ISSUE 4: a base restored from the on-disk snapshot must be
+        // indistinguishable from the one that was saved — same canonical
+        // JSON, and bit-identical matrices for every (B, c, schedule).
+        let g = models::bert_huge();
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        for pp in [1usize, 2] {
+            let base = CostBase::new(&p, &g, pp);
+            let text = base.to_json().to_string();
+            let back = CostBase::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.to_json().to_string(), text, "emit∘parse identity");
+            for (batch, c) in [(16usize, 4usize), (8, 2), (64, 8)] {
+                for sched in [Schedule::GPipe, Schedule::OneF1B] {
+                    let want = base.materialize(batch, c, sched);
+                    let got = back.materialize(batch, c, sched);
+                    assert_eq!(got.a, want.a, "pp={pp} B={batch} c={c}");
+                    assert_eq!(got.m, want.m);
+                    assert_eq!(got.r, want.r);
+                    assert_eq!(got.rp, want.rp);
+                    assert_eq!(got.mem_limit.to_bits(), want.mem_limit.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cost_base_from_json_rejects_malformed_snapshots() {
+        let g = models::bert_huge();
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let good = CostBase::new(&p, &g, 2).to_json();
+        // drop a required field
+        assert!(CostBase::from_json(&Json::parse("{}").unwrap()).is_err());
+        // corrupt a matrix shape: truncate t_fwd's first row
+        let mut clipped = good.clone();
+        if let Json::Obj(fields) = &mut clipped {
+            for (k, v) in fields.iter_mut() {
+                if k == "t_fwd" {
+                    if let Json::Arr(rows) = v {
+                        if let Json::Arr(row) = &mut rows[0] {
+                            row.pop();
+                        }
+                    }
+                }
+            }
+        }
+        assert!(CostBase::from_json(&clipped).is_err(), "shape damage must fail the load");
     }
 
     #[test]

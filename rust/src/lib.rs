@@ -27,8 +27,8 @@
 //! | [`cost`] | time + memory cost models → A, R, R′, M matrices (§3.2) |
 //! | [`miqp`] | general MIQP solver: linearisation, simplex, branch & bound + per-stage dominance pruning (§3.3) |
 //! | [`planner`] | chain-exact solver (row-parallel interval DP), QIP intra-only, cross-candidate frontier memo, UOP (Alg. 1) |
-//! | [`service`] | planner-as-a-service: typed PlanRequest/PlanResponse, cross-request profile + batch-generic cost-base + frontier caches, LRU-bounded outcome replay, cancellation/deadlines, batch drain |
-//! | [`util`] | divisors/stats helpers, hand-rolled JSON, FNV content hashing, cancel tokens, process-wide thread budget + row fan-out pool |
+//! | [`service`] | planner-as-a-service: typed PlanRequest/PlanResponse, cross-request profile + batch-generic cost-base + frontier caches, LRU-bounded outcome replay, cancellation/deadlines, batch drain, `serve --listen` socket server + persistent state snapshots |
+//! | [`util`] | divisors/stats helpers, hand-rolled JSON (with non-finite sentinels), FNV content hashing, cancel tokens, process-wide thread budget + row fan-out pool, NDJSON socket framing, atomic file IO |
 //! | [`baselines`] | Galvatron, Alpa-like, Megatron grid, DeepSpeed, inter-/intra-only |
 //! | [`sim`] | discrete-event GPipe pipeline simulator (ground truth) |
 //! | `runtime` | PJRT artifact loading + execution (feature `pjrt`) |

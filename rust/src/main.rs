@@ -42,6 +42,14 @@ COMMANDS:
              [--json]
   serve      --requests <file.json> [--concurrency N] [--pretty] [--validate]
              drains the request file through one shared PlannerService
+             --listen <host:port> [--state-dir DIR] [--snapshot-secs N]
+             [--max-frame-bytes N]
+             long-running socket mode: one JSON request (or array) per
+             line in, one response line out; ctrl-c shuts down gracefully
+             and, with --state-dir, persists the planner caches for the
+             next start
+             --connect <host:port> --requests <file.json> [--pretty]
+             client mode: send the request file to a listening server
   profile    --model <name> --env <name>
   train      --artifacts <dir> --steps N [--micro N] [--lr F]
   calibrate  [--size N] [--iters N]
@@ -218,7 +226,104 @@ fn validate_responses(
     Ok(plans)
 }
 
+/// Long-running socket mode: `uniap serve --listen <addr>`.
+fn cmd_serve_listen(args: &Args) -> Result<(), String> {
+    let addr = args.require("listen").map_err(|_| {
+        "--listen needs an address (host:port, e.g. 127.0.0.1:7741; port 0 picks one)".to_string()
+    })?;
+    let opts = uniap::service::ServerOptions {
+        state_dir: {
+            let dir = args.get("state-dir", "");
+            (!dir.is_empty()).then(|| std::path::PathBuf::from(dir))
+        },
+        snapshot_secs: args.get_f64("snapshot-secs", 30.0)?,
+        max_frame_bytes: args
+            .get_usize("max-frame-bytes", uniap::util::net::DEFAULT_MAX_FRAME_BYTES)?,
+        watch_sigint: true,
+    };
+    let service = PlannerService::new();
+    if let Some(dir) = &opts.state_dir {
+        match service.load_state(dir) {
+            uniap::service::LoadOutcome::Loaded { frontiers, bases } => {
+                eprintln!("restored state: {frontiers} frontiers, {bases} cost bases");
+            }
+            uniap::service::LoadOutcome::ColdStart { reason: None } => {
+                eprintln!("no snapshot in {} — cold start", dir.display());
+            }
+            uniap::service::LoadOutcome::ColdStart { reason: Some(why) } => {
+                eprintln!("snapshot in {} unusable ({why}) — cold start", dir.display());
+            }
+        }
+    }
+    let server = uniap::service::Server::bind(&addr)?;
+    if !uniap::service::server::install_sigint_handler() {
+        eprintln!("note: no SIGINT hook on this platform; stop with a TCP-level kill");
+    }
+    eprintln!(
+        "listening on {} (one JSON request or array per line; ctrl-c for graceful shutdown)",
+        server.local_addr()
+    );
+    let shutdown = uniap::service::CancelToken::new();
+    server.run(&service, &opts, &shutdown)?;
+    let stats = service.stats();
+    eprintln!(
+        "shut down after {} connections, {} requests ({} plan-cache hits, \
+         {} persisted-frontier hits, {} snapshots written)",
+        stats.connections,
+        stats.requests,
+        stats.plan_hits,
+        stats.persisted_frontier_hits,
+        stats.snapshots_written,
+    );
+    Ok(())
+}
+
+/// Client mode: `uniap serve --connect <addr> --requests <file>`.
+fn cmd_serve_connect(args: &Args) -> Result<(), String> {
+    use std::io::{BufReader, BufWriter};
+    let addr = args.require("connect")?;
+    let path = args.require("requests")?;
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    // parse + re-emit compactly: validates locally and guarantees the
+    // frame is a single line whatever the file's formatting
+    let reqs = PlanRequest::parse_batch(&text)?;
+    let frame =
+        Json::Arr(reqs.iter().map(PlanRequest::to_json).collect()).to_string();
+    let stream = std::net::TcpStream::connect(&addr)
+        .map_err(|e| format!("cannot connect to {addr:?}: {e}"))?;
+    let read_half = stream.try_clone().map_err(|e| format!("cannot clone stream: {e}"))?;
+    let mut writer = BufWriter::new(stream);
+    uniap::util::net::write_frame(&mut writer, &frame)?;
+    let mut reader = BufReader::new(read_half);
+    let never = || false;
+    // the reply direction is trusted (our own server) and a fully-solved
+    // batch must never be discarded client-side over a size cap — allow
+    // up to 1 GiB, far beyond any real response array
+    let reply = uniap::util::net::read_frame(&mut reader, 1 << 30, &never)
+        .map_err(|e| format!("no response: {e}"))?
+        .ok_or("server closed the connection without responding")?;
+    let parsed = Json::parse(&reply)?;
+    println!("{}", if args.flag("pretty") { parsed.to_pretty() } else { parsed.to_string() });
+    // frame-level failures (oversized frame, malformed batch) come back
+    // as a single error *object*, not an array — exit non-zero for both
+    let is_error = |r: &Json| r.get("status").and_then(Json::as_str) == Some("error");
+    let n_err = match parsed.as_arr() {
+        Some(items) => items.iter().filter(|r| is_error(r)).count(),
+        None => is_error(&parsed) as usize,
+    };
+    if n_err > 0 {
+        return Err(format!("{n_err} response(s) came back with status \"error\""));
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
+    if args.has("listen") {
+        return cmd_serve_listen(args);
+    }
+    if args.has("connect") {
+        return cmd_serve_connect(args);
+    }
     let path = args.require("requests")?;
     let text = std::fs::read_to_string(&path).map_err(|e| format!("cannot read {path}: {e}"))?;
     let reqs = PlanRequest::parse_batch(&text)?;

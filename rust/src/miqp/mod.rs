@@ -317,6 +317,11 @@ fn solve_miqp_impl(
     if costs.pp_size > v {
         return None;
     }
+    // NaN audit (ISSUE 4): fold(INF, f64::min) *absorbs* NaN entries —
+    // f64::min prefers the non-NaN operand — so a degenerate profile
+    // shrinks this admissible bound toward the finite entries (weaker
+    // pruning, still admissible) and an all-NaN row leaves INF, which
+    // prunes the branch exactly as an infeasible layer should be.
     let min_a: Vec<f64> = costs
         .a
         .iter()

@@ -76,12 +76,12 @@ fn pareto_compact_into(src: &mut Vec<MemCost>, dst: &mut Vec<MemCost>) {
     if src.is_empty() {
         return;
     }
-    src.sort_unstable_by(|a, b| {
-        a.mem
-            .partial_cmp(&b.mem)
-            .unwrap()
-            .then(a.cost.partial_cmp(&b.cost).unwrap())
-    });
+    // total_cmp, not partial_cmp().unwrap(): a degenerate profile can put
+    // NaN into the cost matrices, and a panicking comparator inside the
+    // row fan-out would poison the whole sweep (ISSUE 4). NaNs order
+    // last, and the `cost < best` scan below drops them (NaN beats
+    // nothing), so NaN-cost points simply never survive compaction.
+    src.sort_unstable_by(|a, b| a.mem.total_cmp(&b.mem).then(a.cost.total_cmp(&b.cost)));
     let mut best = INF;
     for &p in src.iter() {
         if p.cost < best {
@@ -324,12 +324,9 @@ fn interval_dp_nodes(
                     cand.push(Node { mem: nm, cost: n.cost + trans, prev_k: kcur, prev_idx: idx });
                 }
             }
-            cand.sort_unstable_by(|a, b| {
-                a.mem
-                    .partial_cmp(&b.mem)
-                    .unwrap()
-                    .then(a.cost.partial_cmp(&b.cost).unwrap())
-            });
+            // NaN-safe (see pareto_compact_into): NaNs sort last and the
+            // `cost < best` scan never admits them.
+            cand.sort_unstable_by(|a, b| a.mem.total_cmp(&b.mem).then(a.cost.total_cmp(&b.cost)));
             let mut best = INF;
             for n in cand {
                 if n.cost < best {

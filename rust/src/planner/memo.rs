@@ -29,7 +29,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cost::CostMatrices;
+use crate::util::fsio::{f64_from_hex, f64_to_hex};
 use crate::util::hash::Fnv;
+use crate::util::json::Json;
 
 /// Memory-feasibility frontier of one memory matrix: the reusable,
 /// cost-independent half of the interval DP.
@@ -50,6 +52,10 @@ impl MemFrontier {
     /// Derive the frontier for a memory matrix under `mem_limit`.
     pub fn build(m: &[Vec<f64>], mem_limit: f64) -> MemFrontier {
         let v = m.len();
+        // NaN audit (ISSUE 4): fold(INF, f64::min) absorbs NaN entries, so
+        // NaN memory never leaks into the accumulated spans; an all-NaN
+        // row leaves INF → span 0 → the interval is cut, which matches the
+        // DP itself (NaN-cost points never survive Pareto compaction).
         let min_m: Vec<f64> = m
             .iter()
             .map(|row| row.iter().cloned().fold(f64::INFINITY, f64::min))
@@ -75,6 +81,45 @@ impl MemFrontier {
         MemFrontier { min_m, span }
     }
 
+    /// Serialize for the service's on-disk state snapshot (ISSUE 4).
+    /// Floats travel as exact bit hex — the memo's whole contract is
+    /// bit-identity, and a decimal round-trip is one `-0.0` away from
+    /// silently breaking it.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field(
+                "min_m",
+                Json::Arr(self.min_m.iter().map(|&x| Json::Str(f64_to_hex(x))).collect()),
+            )
+            .field("span", self.span.clone())
+    }
+
+    /// Inverse of [`MemFrontier::to_json`].
+    pub fn from_json(j: &Json) -> Result<MemFrontier, String> {
+        let min_m = j
+            .get("min_m")
+            .and_then(Json::as_arr)
+            .ok_or("frontier needs array \"min_m\"")?
+            .iter()
+            .map(|v| f64_from_hex(v.as_str().ok_or("\"min_m\" holds a non-hex entry")?))
+            .collect::<Result<Vec<f64>, String>>()?;
+        let span = j
+            .get("span")
+            .and_then(Json::as_arr)
+            .ok_or("frontier needs array \"span\"")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| "\"span\" holds a non-integer".to_string()))
+            .collect::<Result<Vec<usize>, String>>()?;
+        if min_m.len() != span.len() {
+            return Err(format!(
+                "frontier shape mismatch: {} min_m vs {} span",
+                min_m.len(),
+                span.len()
+            ));
+        }
+        Ok(MemFrontier { min_m, span })
+    }
+
     /// Content key of a memory matrix + budget: FNV-1a over the exact
     /// bit patterns. Equal keys ⇒ (collision caveat aside) bit-identical
     /// inputs ⇒ bit-identical frontiers.
@@ -92,15 +137,31 @@ impl MemFrontier {
     }
 }
 
+/// One stored frontier plus its provenance: entries restored from a
+/// persisted snapshot are flagged so the service can report warm-start
+/// value (`persisted_hits`) separately from within-process reuse.
+#[derive(Debug)]
+struct MemoEntry {
+    frontier: Arc<MemFrontier>,
+    preloaded: bool,
+}
+
 /// Content-keyed [`MemFrontier`] store shared across the `(pp, c)`
 /// candidates of a sweep (threaded in through `SolveHooks`) and across
 /// requests (owned by `PlannerService`). Cheap to probe: one hash over
-/// `V·S` floats plus a short critical section.
+/// `V·S` floats plus a short critical section. Survives process
+/// restarts through [`FrontierMemo::export`] / [`FrontierMemo::preload`]
+/// (the service's `--state-dir` snapshot, ISSUE 4): the keys are content
+/// hashes over exact matrix bits, so a stale snapshot — one written by a
+/// different cost model — simply never hits.
 #[derive(Debug, Default)]
 pub struct FrontierMemo {
-    map: Mutex<HashMap<u64, Arc<MemFrontier>>>,
+    map: Mutex<HashMap<u64, MemoEntry>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    /// Hits on entries restored from a persisted snapshot — the counter
+    /// that proves a restart actually reused its predecessor's work.
+    persisted_hits: AtomicUsize,
 }
 
 impl FrontierMemo {
@@ -115,19 +176,62 @@ impl FrontierMemo {
     /// insert is a no-op overwrite.
     pub fn frontier_for(&self, costs: &CostMatrices) -> Arc<MemFrontier> {
         let key = MemFrontier::fingerprint(&costs.m, costs.mem_limit);
-        if let Some(f) = self.map.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return f.clone();
+        if let Some(entry) = self.map.lock().unwrap().get(&key) {
+            // Shape guard (ISSUE 4): a snapshot-restored frontier whose
+            // body does not match its content key (buggy writer — the
+            // checksum detects corruption, not inconsistency) must not
+            // drive the DP out of bounds; a mismatched entry is rebuilt
+            // and overwritten below instead.
+            if entry.frontier.min_m.len() == costs.m.len() {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                if entry.preloaded {
+                    self.persisted_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                return entry.frontier.clone();
+            }
         }
         let built = Arc::new(MemFrontier::build(&costs.m, costs.mem_limit));
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.map.lock().unwrap().insert(key, built.clone());
+        self.map
+            .lock()
+            .unwrap()
+            .insert(key, MemoEntry { frontier: built.clone(), preloaded: false });
         built
+    }
+
+    /// Restore one persisted frontier under its content key. Existing
+    /// entries win (they were derived in-process from live matrices);
+    /// restored ones are flagged for the `persisted_hits` counter.
+    pub fn preload(&self, key: u64, frontier: MemFrontier) {
+        self.map
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| MemoEntry { frontier: Arc::new(frontier), preloaded: true });
+    }
+
+    /// Every resident `(key, frontier)`, sorted by key — the
+    /// deterministic order the snapshot writer needs.
+    pub fn export(&self) -> Vec<(u64, Arc<MemFrontier>)> {
+        let mut out: Vec<(u64, Arc<MemFrontier>)> = self
+            .map
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, e)| (*k, e.frontier.clone()))
+            .collect();
+        out.sort_by_key(|(k, _)| *k);
+        out
     }
 
     /// `(hits, misses)` since construction.
     pub fn stats(&self) -> (usize, usize) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Hits served by entries restored from a persisted snapshot.
+    pub fn persisted_hits(&self) -> usize {
+        self.persisted_hits.load(Ordering::Relaxed)
     }
 
     /// Frontiers currently resident.
@@ -192,6 +296,77 @@ mod tests {
         let d = memo.frontier_for(&costs_for(4, 2));
         assert!(!Arc::ptr_eq(&a, &d));
         assert_eq!(memo.len(), 2);
+    }
+
+    #[test]
+    fn frontier_json_roundtrip_is_bit_exact() {
+        let costs = costs_for(2, 4);
+        let f = MemFrontier::build(&costs.m, costs.mem_limit);
+        let back = MemFrontier::from_json(&Json::parse(&f.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.span, f.span);
+        assert_eq!(back.min_m.len(), f.min_m.len());
+        for (a, b) in back.min_m.iter().zip(&f.min_m) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // malformed payloads are errors, not panics
+        assert!(MemFrontier::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(MemFrontier::from_json(
+            &Json::parse(r#"{"min_m":["00"],"span":[1]}"#).unwrap()
+        )
+        .is_err());
+        assert!(MemFrontier::from_json(
+            &Json::parse(r#"{"min_m":[],"span":[1]}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn preloaded_entries_count_persisted_hits_and_never_shadow_live_ones() {
+        let memo = FrontierMemo::new();
+        let costs = costs_for(2, 4);
+        let key = MemFrontier::fingerprint(&costs.m, costs.mem_limit);
+        memo.preload(key, MemFrontier::build(&costs.m, costs.mem_limit));
+        assert_eq!(memo.len(), 1);
+        assert_eq!(memo.persisted_hits(), 0);
+        // first probe is already a hit — and a *persisted* one
+        let _ = memo.frontier_for(&costs);
+        assert_eq!(memo.stats(), (1, 0), "preloaded entry serves the cold probe");
+        assert_eq!(memo.persisted_hits(), 1);
+        // a live entry is never replaced by a later preload
+        let live = FrontierMemo::new();
+        let a = live.frontier_for(&costs);
+        live.preload(key, MemFrontier { min_m: vec![], span: vec![] });
+        let b = live.frontier_for(&costs);
+        assert!(Arc::ptr_eq(&a, &b), "live entry survives the preload");
+        assert_eq!(live.persisted_hits(), 0);
+    }
+
+    #[test]
+    fn damaged_preloaded_frontier_is_rebuilt_not_served() {
+        // ISSUE 4 shape guard: a restored frontier whose body doesn't
+        // match its content key must be rebuilt, never handed to the DP.
+        let costs = costs_for(2, 4);
+        let key = MemFrontier::fingerprint(&costs.m, costs.mem_limit);
+        let memo = FrontierMemo::new();
+        memo.preload(key, MemFrontier { min_m: vec![0.0], span: vec![1] });
+        let f = memo.frontier_for(&costs);
+        assert_eq!(f.min_m.len(), costs.num_layers(), "served frontier matches the matrix");
+        assert_eq!(memo.stats(), (0, 1), "damaged entry counts as a miss");
+        assert_eq!(memo.persisted_hits(), 0);
+        // and the rebuilt entry replaced the damaged one for next time
+        let again = memo.frontier_for(&costs);
+        assert!(Arc::ptr_eq(&f, &again));
+        assert_eq!(memo.stats(), (1, 1));
+    }
+
+    #[test]
+    fn export_is_key_sorted_and_complete() {
+        let memo = FrontierMemo::new();
+        let _ = memo.frontier_for(&costs_for(2, 4));
+        let _ = memo.frontier_for(&costs_for(4, 2));
+        let exported = memo.export();
+        assert_eq!(exported.len(), 2);
+        assert!(exported[0].0 < exported[1].0, "deterministic snapshot order");
     }
 
     #[test]

@@ -254,7 +254,12 @@ pub fn uop_with(
             Prepared { idx, pp, c, costs, lb }
         })
         .collect();
-    prepared.sort_by(|a, b| a.lb.partial_cmp(&b.lb).unwrap().then(a.idx.cmp(&b.idx)));
+    // total_cmp: a degenerate profile (NaN FLOPs, NaN bandwidth) makes the
+    // admissible bound NaN — e.g. `min_sum = ∞` times `(c−1) = 0` — and
+    // `partial_cmp().unwrap()` here panicked the whole sweep (ISSUE 4).
+    // NaN bounds order last: those candidates still solve, just without
+    // ordering credit.
+    prepared.sort_by(|a, b| a.lb.total_cmp(&b.lb).then(a.idx.cmp(&b.idx)));
 
     // Cross-candidate frontier memo: the service shares one across
     // requests; a bare sweep still shares frontiers between its own
@@ -302,6 +307,12 @@ pub fn uop_with(
                     }
                     let (plan, secs) =
                         solve_candidate(graph, &cand.costs, cfg, &incumbent, hooks.cancel, memo);
+                    // NaN hardening (ISSUE 4): a NaN-TPI "plan" can only
+                    // come from a degenerate cost model; treat it as
+                    // infeasible so it neither wins best-plan selection
+                    // (where `NaN < x` is always false and a first-placed
+                    // NaN would stick) nor pollutes the incumbent.
+                    let plan = plan.filter(|p| !p.est_tpi.is_nan());
                     if let Some(p) = &plan {
                         incumbent.fetch_min(p.est_tpi.to_bits(), Ordering::Relaxed);
                     }
@@ -486,6 +497,27 @@ mod tests {
         let finishes = seen.iter().filter(|(s, _, _)| !*s).count();
         assert_eq!(starts, res.log.len());
         assert_eq!(finishes, res.log.len());
+    }
+
+    #[test]
+    fn uop_survives_nan_costs() {
+        // ISSUE 4 regression: a degenerate profile (NaN per-layer FLOPs)
+        // makes every execution cost — and the candidate lower bounds —
+        // NaN. The sweep used to panic in the `partial_cmp().unwrap()`
+        // candidate sort (and again inside the chain DP's Pareto sorts);
+        // it must now complete and report the workload as infeasible
+        // rather than return a NaN-cost plan.
+        let g = models::synthetic_chain(4, f64::NAN, 2e7, 2e6);
+        let p = Profile::analytic(&ClusterEnv::env_b(), &g);
+        let res = uop(&p, &g, 8, &PlannerConfig::default());
+        assert!(
+            res.best.as_ref().map_or(true, |b| !b.est_tpi.is_nan()),
+            "a NaN-TPI plan must never be selected"
+        );
+        assert!(
+            res.log.iter().all(|l| l.tpi.map_or(true, |t| !t.is_nan())),
+            "NaN candidates must log as unsolved, not as NaN optima"
+        );
     }
 
     #[test]

@@ -41,13 +41,24 @@
 //! (as canonical JSON) to the cold solve of the same request — caching
 //! only skips recomputation, never changes matrices (property-tested in
 //! `rust/tests/service_api.rs`).
+//!
+//! Long-running serving (ISSUE 4): [`Server`] exposes the same typed
+//! boundary over TCP — `uniap serve --listen <addr>`, one JSON document
+//! per line — and the frontier memo plus the cost-base cache survive
+//! process restarts through the versioned `--state-dir` snapshot
+//! ([`snapshot`]), so a restarted server warm-starts instead of
+//! re-deriving its caches (`rust/tests/serve_socket.rs` pins both).
 
 pub mod request;
 pub mod response;
+pub mod server;
+pub mod snapshot;
 
 pub use crate::util::cancel::{CancelCause, CancelToken};
 pub use request::PlanRequest;
 pub use response::{plan_from_json, plan_to_json, CacheStats, PlanResponse, Status, Timings};
+pub use server::{Server, ServerOptions};
+pub use snapshot::LoadOutcome;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -197,6 +208,14 @@ struct Totals {
     base_misses: AtomicUsize,
     plan_hits: AtomicUsize,
     plan_misses: AtomicUsize,
+    /// Socket connections accepted on behalf of this service (`serve
+    /// --listen`; 0 for in-process use).
+    connections: AtomicUsize,
+    /// State snapshots written (periodic ticks + shutdown).
+    snapshots_written: AtomicUsize,
+    /// Entries restored from a persisted `--state-dir` snapshot.
+    persisted_frontiers_loaded: AtomicUsize,
+    persisted_bases_loaded: AtomicUsize,
 }
 
 /// Snapshot of the service's lifetime statistics.
@@ -219,6 +238,16 @@ pub struct ServiceStats {
     pub frontier_hits: usize,
     /// Outcome-cache evictions since construction (LRU bound).
     pub outcome_evictions: usize,
+    /// Socket connections accepted (`serve --listen`).
+    pub connections: usize,
+    /// State snapshots written to `--state-dir`.
+    pub snapshots_written: usize,
+    /// Entries restored from a persisted snapshot at startup…
+    pub persisted_frontiers_loaded: usize,
+    pub persisted_bases_loaded: usize,
+    /// …and how often the restored frontiers actually served a solve —
+    /// the counter that proves a restart warm-started (ISSUE 4).
+    pub persisted_frontier_hits: usize,
 }
 
 /// The long-lived planner front end (see module docs). Cheap to share by
@@ -296,7 +325,30 @@ impl PlannerService {
             cached_frontiers: self.frontiers.len(),
             frontier_hits,
             outcome_evictions: self.outcomes.lock().unwrap().evictions,
+            connections: self.totals.connections.load(Ordering::Relaxed),
+            snapshots_written: self.totals.snapshots_written.load(Ordering::Relaxed),
+            persisted_frontiers_loaded: self
+                .totals
+                .persisted_frontiers_loaded
+                .load(Ordering::Relaxed),
+            persisted_bases_loaded: self.totals.persisted_bases_loaded.load(Ordering::Relaxed),
+            persisted_frontier_hits: self.frontiers.persisted_hits(),
         }
+    }
+
+    /// Record one accepted socket connection (called by [`Server`]).
+    pub(crate) fn note_connection(&self) {
+        self.totals.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Entry counts of the two persisted caches — the snapshot tick's
+    /// cheap dirty signal. Both caches grow by insertion only (the
+    /// shape-guard rebuild in the base provider is the one overwrite,
+    /// and it only fires recovering from a damaged snapshot), so equal
+    /// counts ⇒ nothing new to persist; the unconditional shutdown
+    /// snapshot covers the overwrite case.
+    pub fn persistable_entries(&self) -> (usize, usize) {
+        (self.frontiers.len(), self.bases.lock().unwrap().len())
     }
 
     /// The cached profile for a workload (building and caching it on
@@ -340,6 +392,14 @@ impl PlannerService {
     ) -> PlanResponse {
         let t0 = Instant::now();
         self.totals.requests.fetch_add(1, Ordering::Relaxed);
+
+        // Field validation before anything is built from the request
+        // (ISSUE 4): a negative/NaN deadline used to reach
+        // `Duration::from_secs_f64` below and panic the worker — fatal for
+        // a one-shot CLI, an availability bug for `serve --listen`.
+        if let Err(e) = req.validate() {
+            return PlanResponse::error(&req.id, format!("invalid request: {e}"));
+        }
 
         let Some(env) = ClusterEnv::by_name(&req.env) else {
             return PlanResponse::error(&req.id, format!("unknown env {:?}", req.env));
@@ -393,7 +453,9 @@ impl PlannerService {
         }
         self.totals.plan_misses.fetch_add(1, Ordering::Relaxed);
 
-        // Per-request deadline chains onto the caller's token.
+        // Per-request deadline chains onto the caller's token (the
+        // validation above guarantees `secs` is finite, positive and below
+        // MAX_DEADLINE_SECS, so this construction cannot panic).
         let token = match req.deadline_secs {
             Some(secs) => cancel.child_with_deadline(Duration::from_secs_f64(secs)),
             None => cancel.clone(),
@@ -403,10 +465,14 @@ impl PlannerService {
         // the request budget (the token, started earlier, always expires
         // first — so a solver that self-truncates implies an expired
         // token, and the truncated result is provably never cached
-        // below); without one, the solve runs to proven optimality (the
-        // finite stand-in below only exists because Duration cannot hold
-        // infinity — ~4 months never fires in practice).
-        const NO_LIMIT_SECS: f64 = 1.0e7;
+        // below); without one, the solve runs to proven optimality. The
+        // finite stand-in only exists because Duration cannot hold
+        // infinity, and it is *defined as* the largest deadline a request
+        // may carry (request::MAX_DEADLINE_SECS, ~116 days — never fires
+        // in practice): the cache-safety argument above needs
+        // time_limit ≥ every valid deadline, so the two constants must
+        // not drift apart.
+        const NO_LIMIT_SECS: f64 = request::MAX_DEADLINE_SECS;
         let cfg = PlannerConfig {
             engine: req.engine,
             schedule: req.schedule,
@@ -425,9 +491,16 @@ impl PlannerService {
             // requests for every mini-batch of one workload share them.
             let key = (fp, pp);
             if let Some(b) = self.bases.lock().unwrap().get(&key) {
-                base_hits.fetch_add(1, Ordering::Relaxed);
-                self.totals.base_hits.fetch_add(1, Ordering::Relaxed);
-                return b.clone();
+                // Shape guard (ISSUE 4): a base restored from a damaged
+                // state snapshot could carry the wrong layer/edge counts
+                // — checksums catch corruption, not a buggy writer — and
+                // materialising it would drive the solver out of bounds.
+                // A mismatched entry is rebuilt (and overwritten) below.
+                if b.num_layers() == graph.num_layers() && b.num_edges() == graph.edges.len() {
+                    base_hits.fetch_add(1, Ordering::Relaxed);
+                    self.totals.base_hits.fetch_add(1, Ordering::Relaxed);
+                    return b.clone();
+                }
             }
             let built = Arc::new(CostBase::new(&profile, &graph, pp));
             base_misses.fetch_add(1, Ordering::Relaxed);
@@ -546,6 +619,29 @@ impl PlannerService {
         let mut rows = out.into_inner().unwrap();
         rows.sort_by_key(|(i, _)| *i);
         rows.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Persist the reusable planner state — the frontier memo and the
+    /// `(fp, pp)` cost-base cache — into `dir`, atomically (temp file +
+    /// rename). See [`snapshot`] for the format and what is *not* stored.
+    pub fn save_state(&self, dir: &std::path::Path) -> Result<std::path::PathBuf, String> {
+        let path = snapshot::save(self, dir)?;
+        self.totals.snapshots_written.fetch_add(1, Ordering::Relaxed);
+        Ok(path)
+    }
+
+    /// Restore persisted state from `dir`, if a valid snapshot exists.
+    /// A missing, version-mismatched or corrupt snapshot degrades to a
+    /// cold start ([`LoadOutcome::ColdStart`]) — never to an error that
+    /// blocks serving, and never to wrong plans: entries are content-
+    /// keyed, so stale state simply never hits.
+    pub fn load_state(&self, dir: &std::path::Path) -> LoadOutcome {
+        let out = snapshot::load(self, dir);
+        if let LoadOutcome::Loaded { frontiers, bases } = &out {
+            self.totals.persisted_frontiers_loaded.fetch_add(*frontiers, Ordering::Relaxed);
+            self.totals.persisted_bases_loaded.fetch_add(*bases, Ordering::Relaxed);
+        }
+        out
     }
 }
 
@@ -730,6 +826,21 @@ mod tests {
         assert!(resp.plan.is_none());
         // every enumerated candidate is still logged, unsolved
         assert!(resp.log.iter().all(|l| l.tpi.is_none()));
+    }
+
+    #[test]
+    fn invalid_deadline_is_a_typed_error_not_a_panic() {
+        // ISSUE 4 regression: these deadlines used to panic the worker in
+        // Duration::from_secs_f64.
+        let svc = PlannerService::with_threads(2);
+        for bad in [f64::NAN, f64::INFINITY, -1.0, 0.0] {
+            let mut req = bert_req("bad-deadline");
+            req.deadline_secs = Some(bad);
+            let resp = svc.plan(&req);
+            assert_eq!(resp.status, Status::Error, "deadline {bad}");
+            assert!(resp.error.unwrap().contains("deadline_secs"));
+            assert!(resp.plan.is_none());
+        }
     }
 
     #[test]

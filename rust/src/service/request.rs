@@ -42,6 +42,12 @@ pub struct PlanRequest {
     pub threads: Option<usize>,
 }
 
+/// Upper bound on a request deadline, seconds (~116 days). Far beyond any
+/// real solve, and small enough that `Duration::from_secs_f64` can never
+/// overflow — the bound that makes [`PlanRequest::validate`] sufficient
+/// to keep the deadline construction panic-free.
+pub const MAX_DEADLINE_SECS: f64 = 1.0e7;
+
 impl PlanRequest {
     /// A UniAP request with default knobs.
     pub fn new(id: &str, model: &str, env: &str, batch: usize) -> PlanRequest {
@@ -57,6 +63,39 @@ impl PlanRequest {
             max_pp: None,
             threads: None,
         }
+    }
+
+    /// Field-level sanity of a request, independent of name resolution.
+    /// The service runs this before building anything from the request
+    /// (ISSUE 4): `Duration::from_secs_f64` panics on negative / NaN /
+    /// overflowing seconds, and with requests arriving over a socket a
+    /// malicious or buggy client must get a typed error response, never a
+    /// panicked worker. `from_json` applies the same checks, so in-process
+    /// constructors and the wire agree on what a valid request is.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.batch == 0 {
+            return Err("\"batch\" must be ≥ 1".to_string());
+        }
+        if let Some(d) = self.deadline_secs {
+            if !d.is_finite() || d <= 0.0 {
+                return Err(format!(
+                    "\"deadline_secs\" must be a finite positive number, got {d}"
+                ));
+            }
+            if d > MAX_DEADLINE_SECS {
+                return Err(format!(
+                    "\"deadline_secs\" must be ≤ {MAX_DEADLINE_SECS:e} (got {d}); \
+                     omit it to solve to optimality"
+                ));
+            }
+        }
+        if self.max_pp == Some(0) {
+            return Err("\"max_pp\" must be ≥ 1".to_string());
+        }
+        if self.threads == Some(0) {
+            return Err("\"threads\" must be ≥ 1".to_string());
+        }
+        Ok(())
     }
 
     /// Serialize (deterministic field order; optional fields emitted as
@@ -122,6 +161,10 @@ impl PlanRequest {
             let threads = t.as_usize().filter(|&t| t > 0);
             req.threads = Some(threads.ok_or("\"threads\" must be a positive integer")?);
         }
+        // field-type checks above, value-range checks here — notably the
+        // non-finite deadlines that the sentinel-aware number parsing
+        // (util::json) now lets through as real f64 values
+        req.validate()?;
         Ok(req)
     }
 
@@ -186,6 +229,39 @@ mod tests {
         );
         assert!(PlanRequest::parse(
             r#"{"model":"bert","env":"EnvA","batch":8,"deadline_secs":-1}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validate_rejects_panic_inducing_fields() {
+        // ISSUE 4: these all used to reach Duration::from_secs_f64 (or the
+        // sweep) unchecked when the request was built in-process.
+        let ok = PlanRequest::new("v", "bert", "EnvB", 16);
+        assert!(ok.validate().is_ok());
+        let mut bad = ok.clone();
+        bad.deadline_secs = Some(f64::NAN);
+        assert!(bad.validate().is_err());
+        bad.deadline_secs = Some(f64::INFINITY);
+        assert!(bad.validate().is_err());
+        bad.deadline_secs = Some(-3.0);
+        assert!(bad.validate().is_err());
+        bad.deadline_secs = Some(MAX_DEADLINE_SECS * 2.0);
+        assert!(bad.validate().is_err());
+        bad.deadline_secs = Some(30.0);
+        assert!(bad.validate().is_ok());
+        bad.batch = 0;
+        assert!(bad.validate().is_err());
+        bad.batch = 16;
+        bad.max_pp = Some(0);
+        assert!(bad.validate().is_err());
+        bad.max_pp = None;
+        bad.threads = Some(0);
+        assert!(bad.validate().is_err());
+        // the wire shares the checks: a sentinel-string infinity parses as
+        // a number now, and must be rejected as a deadline
+        assert!(PlanRequest::parse(
+            r#"{"model":"bert","env":"EnvA","batch":8,"deadline_secs":"inf"}"#
         )
         .is_err());
     }

@@ -357,6 +357,38 @@ mod tests {
     }
 
     #[test]
+    fn infeasible_infinite_costs_roundtrip() {
+        // ISSUE 4 regression: an INFINITY cost used to serialize as `null`,
+        // so the typed re-parse of the response failed. The sentinel form
+        // must round-trip byte-identically and preserve the value.
+        let mut plan = plan_fixture();
+        plan.est_tpi = f64::INFINITY;
+        let resp = PlanResponse {
+            id: "inf".into(),
+            status: Status::Infeasible,
+            error: Some("SOL×".into()),
+            plan: Some(plan),
+            log: vec![
+                CandidateLog {
+                    pp_size: 2,
+                    num_micro: 4,
+                    tpi: Some(f64::INFINITY),
+                    solve_secs: 0.1,
+                },
+                CandidateLog { pp_size: 4, num_micro: 2, tpi: None, solve_secs: 0.0 },
+            ],
+            timings: Timings::default(),
+            cache: CacheStats::default(),
+        };
+        let text = resp.to_json().to_string();
+        let back = PlanResponse::parse(&text).expect("sentinel form must parse");
+        assert_eq!(back.to_json().to_string(), text, "emit∘parse identity");
+        assert!(back.plan.unwrap().est_tpi.is_infinite());
+        assert_eq!(back.log[0].tpi, Some(f64::INFINITY));
+        assert_eq!(back.log[1].tpi, None);
+    }
+
+    #[test]
     fn error_response_roundtrip() {
         let resp = PlanResponse::error("bad", "unknown model \"gpt\"".to_string());
         let back = PlanResponse::parse(&resp.to_json().to_string()).unwrap();

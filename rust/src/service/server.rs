@@ -1,0 +1,399 @@
+//! Long-running socket front end: `uniap serve --listen <addr>`
+//! (ISSUE 4; DESIGN.md §Service — socket serving).
+//!
+//! One [`PlannerService`] behind a TCP listener, newline-delimited JSON
+//! framing (`util::net`): each line holds either one `PlanRequest`
+//! object (answered with one `PlanResponse` line) or an array of them
+//! (answered with one response-array line, drained through
+//! `serve_cancellable` — the same code path as the file-drain mode).
+//! Responses return in request order per connection.
+//!
+//! Operational contract:
+//!
+//! * **deadlines start at dequeue** — a request's `deadline_secs` budget
+//!   is realised as a `CancelToken` child created when the frame is
+//!   picked up, not when the client wrote it;
+//! * **thread policy** — requests that don't pin `threads` get
+//!   `threads_per_request(active connections)`, the same machine-wide
+//!   division the batch drain applies (workers themselves still lease
+//!   from the global `ThreadBudget`, so bursts degrade gracefully);
+//! * **malformed input is an availability non-event** — unparseable
+//!   lines get a typed `error` response and the connection keeps
+//!   serving; an oversized frame gets a typed error and a close (the
+//!   framing is lost); a mid-solve disconnect cancels nothing else and
+//!   the worker just drops the unwritable response. Request handling is
+//!   additionally wrapped in `catch_unwind`, so a planner bug takes
+//!   down one request, not the process;
+//! * **graceful shutdown** — SIGINT (or cancelling the caller's
+//!   shutdown token) stops the accept loop, cancels in-flight solves
+//!   cooperatively, waits for connection threads (reads poll the token
+//!   across a short socket timeout), and writes a final state snapshot;
+//! * **persistence** — with a `state_dir`, the frontier memo and the
+//!   cost-base cache are snapshotted atomically on shutdown and on a
+//!   periodic tick, skipped while the caches are unchanged
+//!   ([`super::snapshot`]).
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::util::cancel::CancelToken;
+use crate::util::json::Json;
+use crate::util::net::{drain_frame, read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME_BYTES};
+
+use super::{PlanRequest, PlanResponse, PlannerService};
+
+/// SIGINT (ctrl-c) → graceful-shutdown flag. Hand-rolled through the
+/// C runtime's `signal` (the `libc`/`ctrlc` crates are unavailable
+/// offline); the handler only stores an atomic flag, which is
+/// async-signal-safe, and the accept loop polls it.
+#[cfg(unix)]
+mod sigint {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigint(_signum: i32) {
+        TRIGGERED.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() -> bool {
+        const SIGINT: i32 = 2;
+        unsafe { signal(SIGINT, on_sigint) };
+        true
+    }
+
+    pub fn triggered() -> bool {
+        TRIGGERED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sigint {
+    pub fn install() -> bool {
+        false // no portable std hook; rely on the shutdown token
+    }
+
+    pub fn triggered() -> bool {
+        false
+    }
+}
+
+/// Install the process's SIGINT → graceful-shutdown hook. Returns `false`
+/// on platforms without one (shutdown then needs the token).
+pub fn install_sigint_handler() -> bool {
+    sigint::install()
+}
+
+/// Knobs of one serving session.
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Directory for the persistent state snapshot; `None` disables
+    /// persistence entirely.
+    pub state_dir: Option<PathBuf>,
+    /// Seconds between periodic snapshots (`state_dir` only); `<= 0`
+    /// snapshots on shutdown only.
+    pub snapshot_secs: f64,
+    /// Per-frame byte cap (`util::net`).
+    pub max_frame_bytes: usize,
+    /// Poll the process SIGINT flag in the accept loop (the CLI sets
+    /// this; tests drive shutdown through the token instead).
+    pub watch_sigint: bool,
+}
+
+impl Default for ServerOptions {
+    fn default() -> ServerOptions {
+        ServerOptions {
+            state_dir: None,
+            snapshot_secs: 30.0,
+            max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
+            watch_sigint: false,
+        }
+    }
+}
+
+/// A bound listener, ready to serve (see module docs).
+#[derive(Debug)]
+pub struct Server {
+    listener: TcpListener,
+    local_addr: SocketAddr,
+}
+
+impl Server {
+    /// Bind `addr` (`host:port`; port 0 picks an ephemeral port). The
+    /// error spells out the address that failed — `serve --listen`
+    /// surfaces it verbatim, loudly, instead of a bare `AddrParseError`.
+    pub fn bind(addr: &str) -> Result<Server, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            format!("cannot listen on {addr:?}: {e} (expected host:port, e.g. 127.0.0.1:7741)")
+        })?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| format!("cannot resolve bound address for {addr:?}: {e}"))?;
+        Ok(Server { listener, local_addr })
+    }
+
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Serve until `shutdown` stops (or SIGINT, when watched). Blocks;
+    /// returns after all connection threads have drained and — with a
+    /// `state_dir` — the final snapshot is written.
+    pub fn run(
+        &self,
+        service: &PlannerService,
+        opts: &ServerOptions,
+        shutdown: &CancelToken,
+    ) -> Result<(), String> {
+        self.listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("cannot poll listener: {e}"))?;
+        let active = AtomicUsize::new(0);
+        let mut last_snapshot = Instant::now();
+        // dirty signal: skip ticks when the persisted caches are unchanged
+        // (an idle server must not re-serialize + fsync its whole state
+        // every tick forever)
+        let mut last_saved_entries: Option<(usize, usize)> = None;
+        std::thread::scope(|scope| {
+            loop {
+                if opts.watch_sigint && sigint::triggered() {
+                    shutdown.cancel(); // reach in-flight solves too
+                }
+                if shutdown.should_stop() {
+                    break;
+                }
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        service.note_connection();
+                        active.fetch_add(1, Ordering::Relaxed);
+                        let active = &active;
+                        scope.spawn(move || {
+                            handle_connection(service, stream, opts, shutdown, active);
+                            active.fetch_sub(1, Ordering::Relaxed);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => {
+                        eprintln!("accept error: {e}");
+                        std::thread::sleep(Duration::from_millis(100));
+                    }
+                }
+                if let Some(dir) = &opts.state_dir {
+                    if opts.snapshot_secs > 0.0
+                        && last_snapshot.elapsed().as_secs_f64() >= opts.snapshot_secs
+                    {
+                        let entries = service.persistable_entries();
+                        if last_saved_entries != Some(entries) {
+                            match service.save_state(dir) {
+                                Ok(_) => last_saved_entries = Some(entries),
+                                Err(e) => eprintln!("snapshot tick failed: {e}"),
+                            }
+                        }
+                        last_snapshot = Instant::now();
+                    }
+                }
+            }
+            // scope exit joins every connection thread; their reads poll
+            // the shutdown token across the socket timeout, so the wait
+            // is bounded
+        });
+        if let Some(dir) = &opts.state_dir {
+            service.save_state(dir)?;
+        }
+        Ok(())
+    }
+}
+
+/// Serve one accepted connection to completion (see module docs).
+fn handle_connection(
+    service: &PlannerService,
+    stream: TcpStream,
+    opts: &ServerOptions,
+    shutdown: &CancelToken,
+    active: &AtomicUsize,
+) {
+    // accepted sockets inherit O_NONBLOCK from the listener on some
+    // platforms — undo it, the connection loop blocks on the timeout
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    // short read timeout: read_frame treats it as an idle tick and polls
+    // the shutdown token, which is what bounds the graceful-shutdown wait
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let Ok(read_half) = stream.try_clone() else {
+        return; // peer vanished between accept and setup
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    let stop = || shutdown.should_stop();
+    loop {
+        match read_frame(&mut reader, opts.max_frame_bytes, &stop) {
+            Ok(None) => break, // clean EOF or shutdown
+            Ok(Some(line)) if line.trim().is_empty() => continue, // keepalive blank line
+            Ok(Some(line)) => {
+                let out = serve_frame(service, &line, shutdown, active);
+                if write_frame(&mut writer, &out).is_err() {
+                    break; // client disconnected (possibly mid-solve)
+                }
+            }
+            Err(FrameError::Oversized(n)) => {
+                // overlong line: typed error, then close — after draining
+                // the rest of the line in O(1) memory, so the close does
+                // not RST the error response off the wire
+                let resp = PlanResponse::error(
+                    "",
+                    format!(
+                        "frame exceeds the {}-byte cap ({n} bytes read); \
+                         reconnect and send smaller batches",
+                        opts.max_frame_bytes
+                    ),
+                );
+                let _ = write_frame(&mut writer, &resp.to_json().to_string());
+                drain_frame(&mut reader, &stop);
+                break;
+            }
+            Err(FrameError::NotUtf8) => {
+                // the line was consumed in full — framing is intact, so
+                // this is a malformed request, not a dead stream
+                let resp = PlanResponse::error("", "frame is not valid UTF-8".to_string());
+                if write_frame(&mut writer, &resp.to_json().to_string()).is_err() {
+                    break;
+                }
+            }
+            Err(FrameError::Io(_)) => break, // reset / broken stream
+        }
+    }
+}
+
+/// Turn one frame into one response line. Never panics outward: planner
+/// bugs surface as typed `error` responses.
+fn serve_frame(
+    service: &PlannerService,
+    line: &str,
+    shutdown: &CancelToken,
+    active: &AtomicUsize,
+) -> String {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        serve_frame_inner(service, line, shutdown, active)
+    }));
+    match result {
+        Ok(out) => out,
+        Err(_) => PlanResponse::error("", "internal error while serving the request".to_string())
+            .to_json()
+            .to_string(),
+    }
+}
+
+fn serve_frame_inner(
+    service: &PlannerService,
+    line: &str,
+    shutdown: &CancelToken,
+    active: &AtomicUsize,
+) -> String {
+    let doc = match Json::parse(line) {
+        Ok(doc) => doc,
+        Err(e) => {
+            return PlanResponse::error("", format!("malformed request: {e}"))
+                .to_json()
+                .to_string()
+        }
+    };
+    // echo the caller's correlation id even on invalid requests
+    let id = doc.get("id").and_then(Json::as_str).unwrap_or("").to_string();
+    match doc {
+        Json::Arr(items) => {
+            // map the already-parsed elements — no second parse of the frame
+            let reqs: Result<Vec<PlanRequest>, String> = items
+                .iter()
+                .enumerate()
+                .map(|(i, item)| {
+                    PlanRequest::from_json(item).map_err(|e| format!("request [{i}]: {e}"))
+                })
+                .collect();
+            match reqs {
+                Ok(reqs) if reqs.is_empty() => {
+                    PlanResponse::error("", "empty request batch".to_string())
+                        .to_json()
+                        .to_string()
+                }
+                Ok(reqs) => {
+                    let concurrency = reqs.len().clamp(1, 4);
+                    let resps = service.serve_cancellable(&reqs, concurrency, shutdown);
+                    Json::Arr(resps.iter().map(PlanResponse::to_json).collect()).to_string()
+                }
+                Err(e) => PlanResponse::error("", format!("invalid request batch: {e}"))
+                    .to_json()
+                    .to_string(),
+            }
+        }
+        obj => match PlanRequest::from_json(&obj) {
+            Ok(mut req) => {
+                if req.threads.is_none() {
+                    // divide the machine across live connections, exactly
+                    // like the batch drain divides across its workers
+                    req.threads =
+                        Some(service.threads_per_request(active.load(Ordering::Relaxed)));
+                }
+                service.plan_cancellable(&req, shutdown, None).to_json().to_string()
+            }
+            Err(e) => PlanResponse::error(&id, format!("invalid request: {e}"))
+                .to_json()
+                .to_string(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_rejects_bad_addresses_loudly() {
+        let err = Server::bind("not-an-address").unwrap_err();
+        assert!(err.contains("not-an-address"), "{err}");
+        assert!(err.contains("host:port"), "suggests the fix: {err}");
+        // invalid port
+        assert!(Server::bind("127.0.0.1:notaport").is_err());
+    }
+
+    #[test]
+    fn bind_ephemeral_port_reports_real_address() {
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        assert_ne!(server.local_addr().port(), 0);
+    }
+
+    #[test]
+    fn serve_frame_maps_bad_input_to_typed_errors() {
+        let svc = PlannerService::with_threads(2);
+        let shutdown = CancelToken::new();
+        let active = AtomicUsize::new(1);
+        let out = serve_frame(&svc, "{ nope", &shutdown, &active);
+        let resp = PlanResponse::parse(&out).expect("error responses are still valid frames");
+        assert_eq!(resp.status, crate::service::Status::Error);
+        assert!(resp.error.unwrap().contains("malformed"));
+        // invalid field values echo the id
+        let out = serve_frame(
+            &svc,
+            r#"{"id":"x1","model":"bert","env":"EnvB","batch":16,"deadline_secs":-5}"#,
+            &shutdown,
+            &active,
+        );
+        let resp = PlanResponse::parse(&out).unwrap();
+        assert_eq!(resp.id, "x1");
+        assert_eq!(resp.status, crate::service::Status::Error);
+        // batch frames answer with an array
+        let out = serve_frame(&svc, r#"[{"model":"bert","env":"EnvB"}]"#, &shutdown, &active);
+        let resp = PlanResponse::parse(&out).unwrap();
+        assert_eq!(resp.status, crate::service::Status::Error);
+        assert!(resp.error.unwrap().contains("batch"));
+    }
+}

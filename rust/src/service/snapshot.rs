@@ -1,0 +1,351 @@
+//! Versioned on-disk snapshot of the service's reusable planner state
+//! (ISSUE 4; DESIGN.md §Service — persistence).
+//!
+//! What persists — the two caches whose contents are pure functions of
+//! content keys, so replaying them can never change a result:
+//!
+//! * the **frontier memo** (`planner::memo::FrontierMemo`): keyed by an
+//!   FNV over the exact bits of the memory matrix + budget;
+//! * the **cost-base cache** keyed `(workload fingerprint, pp_size)`.
+//!
+//! What does **not** persist: profiles (cheap to rebuild, and implied by
+//! the fingerprint), and the completed-outcome cache (bounded, replayable
+//! from the persisted layers at solve speed, and the one cache whose
+//! entries embed `Plan`s — keeping plans out of the snapshot keeps the
+//! "a snapshot can never change a plan" argument trivial).
+//!
+//! ## Format
+//!
+//! One JSON file, `state.json`, written atomically (temp file + rename —
+//! `util::fsio`):
+//!
+//! ```json
+//! {"format":"uniap-state","version":1,
+//!  "payload":{"frontiers":[{"key":"…16 hex…","frontier":{…}}…],
+//!             "bases":[{"fp":"…","pp":2,"base":{…}}…]},
+//!  "checksum":"…16 hex…"}
+//! ```
+//!
+//! Every float inside the payload is exact bit hex, keys are 16-digit
+//! hex, and `checksum` is FNV-1a over the canonical (compact) emission
+//! of `payload`. Validation on load: format tag, version, checksum, and
+//! per-entry shape checks. **Any** failure degrades to a cold start —
+//! a stale or corrupt snapshot must never panic the server or poison a
+//! plan. Staleness beyond corruption is handled by the keys themselves:
+//! a snapshot written by an older cost model carries fingerprints today's
+//! matrices never hash to, so its entries are dead weight, not wrong
+//! answers.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::cost::CostBase;
+use crate::planner::memo::MemFrontier;
+use crate::util::fsio::{u64_from_hex, u64_to_hex, write_atomic};
+use crate::util::hash::Fnv;
+use crate::util::json::Json;
+
+use super::PlannerService;
+
+/// Snapshot format version — bump on any incompatible layout change
+/// (older files then cold-start, by design).
+pub const SNAPSHOT_VERSION: usize = 1;
+
+/// Snapshot file name inside `--state-dir`.
+pub const SNAPSHOT_FILE: &str = "state.json";
+
+/// Result of [`PlannerService::load_state`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LoadOutcome {
+    /// Nothing restored. `reason` is `None` when no snapshot existed,
+    /// `Some(why)` when one existed but failed validation.
+    ColdStart { reason: Option<String> },
+    /// Restored entry counts.
+    Loaded { frontiers: usize, bases: usize },
+}
+
+fn checksum(payload_text: &str) -> String {
+    let mut h = Fnv::new();
+    h.str(payload_text);
+    u64_to_hex(h.finish())
+}
+
+/// Assemble the snapshot document for `service`'s current caches.
+pub(super) fn to_json(service: &PlannerService) -> Json {
+    let frontiers = Json::Arr(
+        service
+            .frontiers
+            .export()
+            .into_iter()
+            .map(|(key, f)| {
+                Json::obj()
+                    .field("key", Json::Str(u64_to_hex(key)))
+                    .field("frontier", f.to_json())
+            })
+            .collect(),
+    );
+    let mut bases: Vec<((u64, usize), Arc<CostBase>)> = service
+        .bases
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, b)| (*k, b.clone()))
+        .collect();
+    bases.sort_by_key(|(k, _)| *k); // deterministic emission
+    let bases = Json::Arr(
+        bases
+            .into_iter()
+            .map(|((fp, pp), base)| {
+                Json::obj()
+                    .field("fp", Json::Str(u64_to_hex(fp)))
+                    .field("pp", pp)
+                    .field("base", base.to_json())
+            })
+            .collect(),
+    );
+    let payload = Json::obj().field("frontiers", frontiers).field("bases", bases);
+    let sum = checksum(&payload.to_string());
+    Json::obj()
+        .field("format", "uniap-state")
+        .field("version", SNAPSHOT_VERSION)
+        .field("payload", payload)
+        .field("checksum", sum)
+}
+
+/// Write `service`'s snapshot into `dir` atomically; returns the path.
+pub(super) fn save(service: &PlannerService, dir: &Path) -> Result<PathBuf, String> {
+    let path = dir.join(SNAPSHOT_FILE);
+    write_atomic(&path, &to_json(service).to_string())?;
+    Ok(path)
+}
+
+/// Validate and apply one snapshot document. Returns restored counts.
+fn apply(service: &PlannerService, doc: &Json) -> Result<(usize, usize), String> {
+    if doc.get("format").and_then(Json::as_str) != Some("uniap-state") {
+        return Err("not a uniap-state file".to_string());
+    }
+    let version = doc.get("version").and_then(Json::as_usize).ok_or("missing version")?;
+    if version != SNAPSHOT_VERSION {
+        return Err(format!("snapshot version {version}, this build reads {SNAPSHOT_VERSION}"));
+    }
+    let payload = doc.get("payload").ok_or("missing payload")?;
+    let stored = doc.get("checksum").and_then(Json::as_str).ok_or("missing checksum")?;
+    // The emitter is canonical (insertion-ordered, deterministic number
+    // formatting), so re-emitting the parsed payload reproduces the
+    // exact bytes the checksum was computed over.
+    let actual = checksum(&payload.to_string());
+    if stored != actual {
+        return Err(format!("checksum mismatch: file says {stored}, content hashes to {actual}"));
+    }
+
+    // Parse *everything* before touching the service: a snapshot that is
+    // half-garbage restores nothing rather than something.
+    let mut frontiers: Vec<(u64, MemFrontier)> = Vec::new();
+    for (i, entry) in payload
+        .get("frontiers")
+        .and_then(Json::as_arr)
+        .ok_or("payload needs array \"frontiers\"")?
+        .iter()
+        .enumerate()
+    {
+        let key = u64_from_hex(
+            entry
+                .get("key")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("frontier [{i}]: no key"))?,
+        )?;
+        let frontier = MemFrontier::from_json(
+            entry.get("frontier").ok_or_else(|| format!("frontier [{i}]: no body"))?,
+        )
+        .map_err(|e| format!("frontier [{i}]: {e}"))?;
+        frontiers.push((key, frontier));
+    }
+    let mut bases: Vec<((u64, usize), CostBase)> = Vec::new();
+    for (i, entry) in payload
+        .get("bases")
+        .and_then(Json::as_arr)
+        .ok_or("payload needs array \"bases\"")?
+        .iter()
+        .enumerate()
+    {
+        let fp = u64_from_hex(
+            entry
+                .get("fp")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("base [{i}]: no fp"))?,
+        )?;
+        let pp = entry
+            .get("pp")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("base [{i}]: no pp"))?;
+        let base = CostBase::from_json(
+            entry.get("base").ok_or_else(|| format!("base [{i}]: no body"))?,
+        )
+        .map_err(|e| format!("base [{i}]: {e}"))?;
+        // cross-check the cache key against the body: a buggy writer
+        // mapping a pp=2 base under (fp, 4) would otherwise sail past the
+        // service's layer/edge shape guard (both are pp-independent) and
+        // silently change plans
+        if base.pp_size != pp {
+            return Err(format!(
+                "base [{i}]: keyed pp {pp} but body says pp_size {}",
+                base.pp_size
+            ));
+        }
+        bases.push(((fp, pp), base));
+    }
+
+    let n_frontiers = frontiers.len();
+    for (key, frontier) in frontiers {
+        service.frontiers.preload(key, frontier);
+    }
+    let n_bases = bases.len();
+    {
+        let mut cache = service.bases.lock().unwrap();
+        for (key, base) in bases {
+            cache.entry(key).or_insert_with(|| Arc::new(base));
+        }
+    }
+    Ok((n_frontiers, n_bases))
+}
+
+/// Load `dir`'s snapshot into `service` (see [`LoadOutcome`]).
+pub(super) fn load(service: &PlannerService, dir: &Path) -> LoadOutcome {
+    let path = dir.join(SNAPSHOT_FILE);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return LoadOutcome::ColdStart { reason: None }
+        }
+        Err(e) => {
+            return LoadOutcome::ColdStart {
+                reason: Some(format!("cannot read {}: {e}", path.display())),
+            }
+        }
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => return LoadOutcome::ColdStart { reason: Some(format!("parse error: {e}")) },
+    };
+    match apply(service, &doc) {
+        Ok((frontiers, bases)) => LoadOutcome::Loaded { frontiers, bases },
+        Err(reason) => LoadOutcome::ColdStart { reason: Some(reason) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{PlanRequest, PlannerService, Status};
+
+    fn temp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("uniap-snapshot-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn warm_service() -> PlannerService {
+        let svc = PlannerService::with_threads(2);
+        let mut req = PlanRequest::new("warm", "bert", "EnvB", 16);
+        req.max_pp = Some(2);
+        assert_eq!(svc.plan(&req).status, Status::Ok);
+        svc
+    }
+
+    #[test]
+    fn save_then_load_restores_every_entry() {
+        let dir = temp_dir("roundtrip");
+        let svc = warm_service();
+        let before = svc.stats();
+        assert!(before.cached_frontiers > 0 && before.cached_bases > 0);
+        svc.save_state(&dir).expect("save");
+        assert_eq!(svc.stats().snapshots_written, 1);
+
+        let fresh = PlannerService::with_threads(2);
+        match fresh.load_state(&dir) {
+            LoadOutcome::Loaded { frontiers, bases } => {
+                assert_eq!(frontiers, before.cached_frontiers);
+                assert_eq!(bases, before.cached_bases);
+            }
+            other => panic!("expected Loaded, got {other:?}"),
+        }
+        let after = fresh.stats();
+        assert_eq!(after.cached_frontiers, before.cached_frontiers);
+        assert_eq!(after.cached_bases, before.cached_bases);
+        assert_eq!(after.persisted_frontiers_loaded, before.cached_frontiers);
+        assert_eq!(after.persisted_bases_loaded, before.cached_bases);
+
+        // the restored service solves bit-identically and *uses* the
+        // persisted frontiers (base_misses = 0, persisted hits > 0)
+        let mut req = PlanRequest::new("restart", "bert", "EnvB", 16);
+        req.max_pp = Some(2);
+        let restarted = fresh.plan(&req);
+        assert_eq!(restarted.status, Status::Ok);
+        assert_eq!(restarted.cache.base_misses, 0, "{:?}", restarted.cache);
+        assert!(fresh.stats().persisted_frontier_hits > 0);
+        let original = warm_service().plan(&req);
+        assert_eq!(
+            crate::service::plan_to_json(restarted.plan.as_ref().unwrap()).to_string(),
+            crate::service::plan_to_json(original.plan.as_ref().unwrap()).to_string(),
+            "restored state must not change the plan"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_snapshot_is_a_quiet_cold_start() {
+        let dir = temp_dir("missing");
+        let svc = PlannerService::with_threads(2);
+        assert_eq!(svc.load_state(&dir), LoadOutcome::ColdStart { reason: None });
+        assert_eq!(svc.stats().persisted_frontiers_loaded, 0);
+    }
+
+    #[test]
+    fn corrupt_snapshots_cold_start_with_a_reason() {
+        let dir = temp_dir("corrupt");
+        let svc = warm_service();
+        let path = svc.save_state(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+
+        // flip one payload byte → checksum mismatch
+        let tampered = text.replacen("\"span\":[", "\"span\":[9,", 1);
+        assert_ne!(tampered, text, "fixture must actually tamper");
+        std::fs::write(&path, &tampered).unwrap();
+        let fresh = PlannerService::with_threads(2);
+        match fresh.load_state(&dir) {
+            LoadOutcome::ColdStart { reason: Some(r) } => {
+                assert!(r.contains("checksum"), "{r}")
+            }
+            other => panic!("expected checksum cold start, got {other:?}"),
+        }
+        assert_eq!(fresh.stats().cached_frontiers, 0, "nothing restored");
+
+        // outright garbage → parse-error cold start
+        std::fs::write(&path, "not json at all").unwrap();
+        assert!(matches!(
+            fresh.load_state(&dir),
+            LoadOutcome::ColdStart { reason: Some(_) }
+        ));
+
+        // version from the future → cold start naming the version
+        let future = text.replacen("\"version\":1", "\"version\":999", 1);
+        std::fs::write(&path, &future).unwrap();
+        match fresh.load_state(&dir) {
+            LoadOutcome::ColdStart { reason: Some(r) } => assert!(r.contains("999"), "{r}"),
+            other => panic!("expected version cold start, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_emission_is_deterministic() {
+        let svc = warm_service();
+        assert_eq!(to_json(&svc).to_string(), to_json(&svc).to_string());
+        // and checksum-stable through a parse→emit cycle
+        let text = to_json(&svc).to_string();
+        let doc = Json::parse(&text).unwrap();
+        let fresh = PlannerService::with_threads(2);
+        assert!(apply(&fresh, &doc).is_ok());
+    }
+}

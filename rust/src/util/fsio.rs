@@ -1,0 +1,131 @@
+//! Atomic file IO and bit-exact float encoding for on-disk state
+//! (DESIGN.md §Service — persistence).
+//!
+//! The persistent planner state (frontier memo, cost-base cache) is
+//! rewritten while a server is live, and a crash mid-write must never
+//! leave a half-written file where the next startup will read it:
+//! [`write_atomic`] writes to a sibling temp file and `rename`s it into
+//! place, which is atomic on POSIX filesystems (and effectively so on
+//! NTFS). Readers therefore observe either the old snapshot or the new
+//! one, never a torn mixture.
+//!
+//! Float encoding: the snapshot's correctness contract is *bit*-identity
+//! (cache keys are FNV hashes over exact `f64` bit patterns), and the
+//! decimal shortest-roundtrip form is one conversion away from that
+//! guarantee going stale (e.g. `-0.0` prints as `0`). [`f64_to_hex`] /
+//! [`f64_from_hex`] store the IEEE-754 bits as 16 hex digits instead —
+//! trivially exact, including negative zero and NaN payloads.
+
+use std::path::{Path, PathBuf};
+
+/// Write `contents` to `path` atomically: temp file in the same
+/// directory, flush+sync, then rename over the target. The temp name is
+/// derived from the process id so two processes snapshotting into the
+/// same directory cannot trample each other's temp file.
+pub fn write_atomic(path: &Path, contents: &str) -> Result<(), String> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(dir) = dir {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+    }
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| format!("{} has no file name", path.display()))?
+        .to_string_lossy()
+        .into_owned();
+    let tmp: PathBuf = match dir {
+        Some(dir) => dir.join(format!(".{file_name}.tmp.{}", std::process::id())),
+        None => PathBuf::from(format!(".{file_name}.tmp.{}", std::process::id())),
+    };
+    let write = || -> std::io::Result<()> {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+    };
+    write().map_err(|e| {
+        let _ = std::fs::remove_file(&tmp); // best-effort cleanup
+        format!("cannot write {}: {e}", path.display())
+    })
+}
+
+/// Exact bit encoding of an `f64` as 16 lowercase hex digits.
+pub fn f64_to_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Inverse of [`f64_to_hex`].
+pub fn f64_from_hex(s: &str) -> Result<f64, String> {
+    if s.len() != 16 {
+        return Err(format!("f64 hex must be 16 digits, got {s:?}"));
+    }
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|_| format!("invalid f64 hex {s:?}"))
+}
+
+/// Exact encoding of a `u64` (cache keys) as 16 lowercase hex digits —
+/// JSON numbers only hold 53 exact integer bits, so keys travel as
+/// strings.
+pub fn u64_to_hex(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// Inverse of [`u64_to_hex`].
+pub fn u64_from_hex(s: &str) -> Result<u64, String> {
+    if s.len() != 16 {
+        return Err(format!("u64 hex must be 16 digits, got {s:?}"));
+    }
+    u64::from_str_radix(s, 16).map_err(|_| format!("invalid u64 hex {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("uniap-fsio-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn write_atomic_replaces_contents_and_leaves_no_temp() {
+        let path = temp_path("atomic.txt");
+        write_atomic(&path, "first").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "first");
+        write_atomic(&path, "second").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second");
+        // no temp litter next to the target
+        let dir = path.parent().unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("atomic.txt.tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn write_atomic_creates_missing_directories() {
+        let dir = temp_path("nested");
+        let path = dir.join("deep/state.json");
+        write_atomic(&path, "x").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hex_roundtrips_are_bit_exact() {
+        for x in [0.0, -0.0, 1.5, f64::INFINITY, f64::NEG_INFINITY, f64::NAN, 1e-300, -6.02e23] {
+            let back = f64_from_hex(&f64_to_hex(x)).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
+        for k in [0u64, 1, u64::MAX, 0xcbf2_9ce4_8422_2325] {
+            assert_eq!(u64_from_hex(&u64_to_hex(k)).unwrap(), k);
+        }
+        assert!(f64_from_hex("xyz").is_err());
+        assert!(f64_from_hex("00").is_err());
+        assert!(u64_from_hex("zzzzzzzzzzzzzzzz").is_err());
+    }
+}

@@ -5,6 +5,15 @@
 //! deterministic (insertion order preserved); parsing is a small
 //! recursive-descent reader accepting standard JSON (RFC 8259) with
 //! `\uXXXX` escapes including surrogate pairs.
+//!
+//! Non-finite floats (ISSUE 4): JSON has no `Infinity`/`NaN` literal, and
+//! the old emitter wrote `null` — so a `PlanResponse` carrying an
+//! infeasible `f64::INFINITY` cost failed its typed re-parse. Non-finite
+//! numbers now emit the canonical sentinel strings `"inf"` / `"-inf"` /
+//! `"nan"`, and [`Json::as_f64`] accepts them back, so every numeric field
+//! round-trips (NaN canonically — the payload bits are not preserved).
+//! The sentinels stay inside string syntax, so the wire format remains
+//! RFC 8259 and foreign parsers still read the documents.
 
 use std::fmt::Write as _;
 
@@ -36,8 +45,12 @@ impl Json {
     }
 
     /// Parse a JSON document. Errors carry the byte offset of the problem.
+    /// Nesting is bounded ([`MAX_PARSE_DEPTH`]): the reader is recursive-
+    /// descent, and with untrusted input arriving over the service socket
+    /// an unbounded `[[[[…` would overflow the stack — an *abort*, not a
+    /// catchable panic (ISSUE 4).
     pub fn parse(text: &str) -> Result<Json, String> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -55,10 +68,18 @@ impl Json {
         }
     }
 
-    /// Numeric view.
+    /// Numeric view. Accepts the non-finite sentinel strings the emitter
+    /// produces (`"inf"`, `"-inf"`, `"nan"`), so typed consumers see a
+    /// total round-trip for every `f64`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
+            Json::Str(s) => match s.as_str() {
+                "inf" => Some(f64::INFINITY),
+                "-inf" => Some(f64::NEG_INFINITY),
+                "nan" => Some(f64::NAN),
+                _ => None,
+            },
             _ => None,
         }
     }
@@ -187,8 +208,12 @@ fn write_num(out: &mut String, x: f64) {
         } else {
             let _ = write!(out, "{}", x);
         }
+    } else if x == f64::INFINITY {
+        out.push_str("\"inf\""); // JSON has no Inf/NaN literal: sentinel strings
+    } else if x == f64::NEG_INFINITY {
+        out.push_str("\"-inf\"");
     } else {
-        out.push_str("null"); // JSON has no NaN/Inf
+        out.push_str("\"nan\"");
     }
 }
 
@@ -246,9 +271,16 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
+/// Maximum container nesting [`Json::parse`] accepts. Far beyond any
+/// document this crate emits (requests/responses/snapshots nest < 10),
+/// far below stack-overflow territory.
+pub const MAX_PARSE_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting, checked against [`MAX_PARSE_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -298,7 +330,26 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Bump the nesting depth for one container, erroring past the bound.
+    fn descend(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_PARSE_DEPTH {
+            return Err(format!(
+                "nesting deeper than {MAX_PARSE_DEPTH} at byte {}",
+                self.pos
+            ));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, String> {
+        self.descend()?;
+        let result = self.array_body();
+        self.depth -= 1;
+        result
+    }
+
+    fn array_body(&mut self) -> Result<Json, String> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -322,6 +373,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
+        self.descend()?;
+        let result = self.object_body();
+        self.depth -= 1;
+        result
+    }
+
+    fn object_body(&mut self) -> Result<Json, String> {
         self.expect(b'{')?;
         let mut fields = Vec::new();
         self.skip_ws();
@@ -484,8 +542,23 @@ mod tests {
     }
 
     #[test]
-    fn nan_becomes_null() {
-        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    fn non_finite_numbers_roundtrip_via_sentinels() {
+        // emit → the canonical sentinel strings…
+        assert_eq!(Json::Num(f64::NAN).to_string(), "\"nan\"");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "\"inf\"");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "\"-inf\"");
+        // …and the typed numeric view accepts them back
+        assert_eq!(Json::parse("\"inf\"").unwrap().as_f64(), Some(f64::INFINITY));
+        assert_eq!(Json::parse("\"-inf\"").unwrap().as_f64(), Some(f64::NEG_INFINITY));
+        assert!(Json::parse("\"nan\"").unwrap().as_f64().unwrap().is_nan());
+        // re-emission of the parsed form is byte-identical to the original
+        for x in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let text = Json::Num(x).to_string();
+            assert_eq!(Json::parse(&text).unwrap().to_string(), text);
+        }
+        // ordinary strings never masquerade as numbers
+        assert_eq!(Json::Str("infinite".into()).as_f64(), None);
+        assert_eq!(Json::Str("".into()).as_f64(), None);
     }
 
     #[test]
@@ -517,6 +590,23 @@ mod tests {
         for bad in ["", "{", "[1,", "{\"a\" 1}", "tru", "1 2", "\"\\q\"", "\"\\uD800\""] {
             assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
         }
+    }
+
+    #[test]
+    fn nesting_depth_is_bounded() {
+        // ISSUE 4: the socket server parses untrusted frames, and a deep
+        // `[[[[…` used to recurse to a stack-overflow *abort* that no
+        // catch_unwind contains. Past the bound it must be a plain error…
+        let deep = "[".repeat(MAX_PARSE_DEPTH + 1) + &"]".repeat(MAX_PARSE_DEPTH + 1);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        let hostile = "[".repeat(500_000);
+        assert!(Json::parse(&hostile).is_err(), "no abort, no overflow");
+        // …while anything at or under the bound still parses, and sibling
+        // containers don't accumulate depth.
+        let at_limit = "[".repeat(MAX_PARSE_DEPTH) + &"]".repeat(MAX_PARSE_DEPTH);
+        assert!(Json::parse(&at_limit).is_ok());
+        assert!(Json::parse("[[1],[2],{\"a\":[3]}]").is_ok());
     }
 
     #[test]

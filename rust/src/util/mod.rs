@@ -6,8 +6,10 @@
 //! hand-roll JSON where machine-readable input/output is needed.
 
 pub mod cancel;
+pub mod fsio;
 pub mod hash;
 pub mod json;
+pub mod net;
 pub mod pool;
 
 /// All divisors of `n` in ascending order (including 1 and `n`).
@@ -66,12 +68,14 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Median of a slice (averages the middle pair for even lengths).
+/// NaN-safe: `total_cmp` orders NaNs last instead of panicking, so a
+/// degenerate sample set cannot take the caller down (ISSUE 4).
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -147,6 +151,16 @@ mod tests {
         assert!((stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn median_survives_nan_samples() {
+        // NaNs sort last under total_cmp; the call must not panic and the
+        // NaN-free prefix still determines the middle for odd counts.
+        // sorted: [1, 2, 3, NaN, NaN] → the middle element is 3.0
+        let v = [3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        assert_eq!(median(&v), 3.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Newline-delimited JSON framing for the socket service (DESIGN.md
+//! §Service — wire framing).
+//!
+//! The wire protocol of `uniap serve --listen` is deliberately minimal:
+//! one JSON document per line (`\n`-terminated, optional `\r` tolerated),
+//! request in, response out, in order, over a plain TCP stream. Framing
+//! lives in `util` so the server loop, the CLI client and the tests all
+//! speak through the same reader:
+//!
+//! * **bounded** — a frame larger than the caller's cap aborts with
+//!   [`FrameError::Oversized`] after buffering at most `cap + 2` bytes
+//!   (`Take`-limited reads; the slack admits a `\r\n` terminator on an
+//!   exactly-at-cap frame), so a hostile peer cannot balloon memory;
+//! * **interruptible** — reads poll `should_stop` across the socket's
+//!   read timeout, so a graceful shutdown never hangs on an idle
+//!   connection;
+//! * **EOF-tolerant** — a final unterminated line is still a frame
+//!   (piped clients often omit the trailing newline), and a clean EOF
+//!   between frames reads as `Ok(None)`.
+
+use std::io::{BufRead, ErrorKind, Read, Write};
+
+/// Default cap on one frame, bytes. Generous for request batches (a
+/// `PlanRequest` is ~200 bytes), far below anything that hurts.
+pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The line exceeded the caller's frame cap (bytes seen so far).
+    /// Framing is lost beyond this point — close the connection.
+    Oversized(usize),
+    /// The line was fully consumed but is not valid UTF-8. Framing is
+    /// intact — answer with a typed error and keep serving.
+    NotUtf8,
+    /// The underlying stream failed (reset, timeout chain broken, …).
+    Io(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversized(n) => write!(f, "frame exceeds cap ({n} bytes buffered)"),
+            FrameError::NotUtf8 => write!(f, "frame is not valid UTF-8"),
+            FrameError::Io(e) => write!(f, "stream error: {e}"),
+        }
+    }
+}
+
+/// Read one `\n`-terminated frame. `Ok(None)` means the peer closed the
+/// connection cleanly (or `should_stop` fired while waiting) — both end
+/// the serving loop. Timeout-shaped IO errors (`WouldBlock` /
+/// `TimedOut` / `Interrupted`) are treated as "keep waiting", which is
+/// what lets a socket with a short read timeout poll `should_stop`.
+pub fn read_frame<R: BufRead>(
+    reader: &mut R,
+    max_bytes: usize,
+    should_stop: &dyn Fn() -> bool,
+) -> Result<Option<String>, FrameError> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if should_stop() {
+            return Ok(None);
+        }
+        // The cap applies to the *logical* frame (terminator stripped), so
+        // buffering allows for it plus a full `\r\n`: a CRLF frame of
+        // exactly max_bytes holds max_bytes + 1 bytes before its `\n`
+        // arrives and must not be rejected early.
+        if buf.len() > max_bytes + 1 {
+            return Err(FrameError::Oversized(buf.len()));
+        }
+        // Take-limit each read so a newline-less flood can never buffer
+        // more than max_bytes + 2 before we notice.
+        let room = (max_bytes + 2 - buf.len()) as u64;
+        let mut limited = reader.by_ref().take(room);
+        match limited.read_until(b'\n', &mut buf) {
+            Ok(0) => {
+                // zero new bytes with room > 0 ⇒ real EOF
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                break; // EOF-terminated final frame
+            }
+            Ok(_) => {
+                if buf.last() == Some(&b'\n') {
+                    buf.pop();
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    break;
+                }
+                // no delimiter: either the take-limit was hit (loop
+                // re-checks the cap) or EOF landed mid-line (next read
+                // returns Ok(0) and finishes the frame)
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                continue; // idle tick — poll should_stop and wait on
+            }
+            Err(e) => return Err(FrameError::Io(e.to_string())),
+        }
+    }
+    if buf.len() > max_bytes {
+        return Err(FrameError::Oversized(buf.len()));
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| FrameError::NotUtf8)
+}
+
+/// Discard input until the next newline or EOF, in O(1) memory. Used
+/// after an oversized frame: closing a socket with unread data queued
+/// makes the kernel RST the connection, which can clobber the typed
+/// error response still in flight — draining the offending line first
+/// lets the close happen cleanly. Returns `true` if the delimiter was
+/// reached (`false` on EOF, stream error or `should_stop`).
+pub fn drain_frame<R: BufRead>(reader: &mut R, should_stop: &dyn Fn() -> bool) -> bool {
+    loop {
+        if should_stop() {
+            return false;
+        }
+        let (consumed, done) = match reader.fill_buf() {
+            Ok(chunk) => {
+                if chunk.is_empty() {
+                    return false; // EOF
+                }
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(pos) => (pos + 1, true),
+                    None => (chunk.len(), false),
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(_) => return false,
+        };
+        reader.consume(consumed);
+        if done {
+            return true;
+        }
+    }
+}
+
+/// Write one frame: the document, a newline, and a flush (responses must
+/// not sit in the buffer while the client blocks on them).
+pub fn write_frame<W: Write>(writer: &mut W, frame: &str) -> Result<(), String> {
+    let put = || -> std::io::Result<()> {
+        writer.write_all(frame.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()
+    };
+    put().map_err(|e| format!("cannot write frame: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn no_stop() -> bool {
+        false
+    }
+
+    fn read(input: &[u8], cap: usize) -> Result<Option<String>, FrameError> {
+        read_frame(&mut BufReader::new(input), cap, &no_stop)
+    }
+
+    #[test]
+    fn frames_split_on_newlines() {
+        let mut r = BufReader::new(&b"{\"a\":1}\n{\"b\":2}\r\nfinal"[..]);
+        assert_eq!(read_frame(&mut r, 1024, &no_stop).unwrap().unwrap(), "{\"a\":1}");
+        assert_eq!(read_frame(&mut r, 1024, &no_stop).unwrap().unwrap(), "{\"b\":2}");
+        assert_eq!(
+            read_frame(&mut r, 1024, &no_stop).unwrap().unwrap(),
+            "final",
+            "EOF terminates the last frame"
+        );
+        assert!(read_frame(&mut r, 1024, &no_stop).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn oversized_frames_abort_with_bounded_buffering() {
+        let big = vec![b'x'; 4096];
+        match read(&big, 64) {
+            Err(FrameError::Oversized(n)) => {
+                assert!(n <= 64 + 2, "buffered {n} bytes past the cap")
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // exactly at the cap is fine — for LF and CRLF terminators alike
+        let mut ok = vec![b'y'; 64];
+        ok.push(b'\n');
+        assert_eq!(read(&ok, 64).unwrap().unwrap().len(), 64);
+        let mut crlf = vec![b'y'; 64];
+        crlf.extend_from_slice(b"\r\n");
+        assert_eq!(read(&crlf, 64).unwrap().unwrap().len(), 64);
+        // one byte over the cap is not, under either terminator
+        let mut over = vec![b'z'; 65];
+        over.push(b'\n');
+        assert!(matches!(read(&over, 64), Err(FrameError::Oversized(_))));
+    }
+
+    #[test]
+    fn drain_frame_skips_to_the_next_line() {
+        let mut r = BufReader::new(&b"garbage without end then\nnext"[..]);
+        assert!(drain_frame(&mut r, &no_stop));
+        assert_eq!(read_frame(&mut r, 64, &no_stop).unwrap().unwrap(), "next");
+        // EOF before a delimiter → false
+        let mut r = BufReader::new(&b"no newline"[..]);
+        assert!(!drain_frame(&mut r, &no_stop));
+    }
+
+    #[test]
+    fn should_stop_ends_the_read() {
+        let stop = || true;
+        let mut r = BufReader::new(&b"never-delivered"[..]);
+        assert!(read_frame(&mut r, 1024, &stop).unwrap().is_none());
+    }
+
+    #[test]
+    fn invalid_utf8_is_recoverable() {
+        // the line is fully consumed, so framing survives: the caller can
+        // answer with a typed error and read the next frame
+        let mut r = BufReader::new(&b"\xff\xfe\n{\"ok\":1}\n"[..]);
+        assert!(matches!(read_frame(&mut r, 64, &no_stop), Err(FrameError::NotUtf8)));
+        assert_eq!(read_frame(&mut r, 64, &no_stop).unwrap().unwrap(), "{\"ok\":1}");
+    }
+
+    #[test]
+    fn write_frame_appends_newline() {
+        let mut out: Vec<u8> = Vec::new();
+        write_frame(&mut out, "{\"ok\":true}").unwrap();
+        assert_eq!(out, b"{\"ok\":true}\n");
+    }
+}

@@ -1,0 +1,296 @@
+//! Integration tests for the `serve --listen` socket mode (ISSUE 4):
+//! the server is driven in-process over real loopback TCP — malformed
+//! and oversized frames, mid-solve disconnects, concurrent warm-cache
+//! requests, and a kill-and-restart cycle over the persisted state
+//! snapshot. Everything must come back as typed responses, never as a
+//! panic, and socket-served plans must be byte-identical to direct
+//! `PlannerService::plan` calls.
+
+use std::io::{BufReader, BufWriter, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use uniap::service::{
+    plan_to_json, CancelToken, PlanRequest, PlanResponse, PlannerService, Server, ServerOptions,
+    Status,
+};
+use uniap::util::net::{read_frame, write_frame, FrameError};
+
+/// A server running on an ephemeral loopback port, shut down (and
+/// joined) on drop so a failing test cannot leak its thread past the
+/// harness.
+struct TestServer {
+    addr: SocketAddr,
+    service: Arc<PlannerService>,
+    shutdown: CancelToken,
+    thread: Option<std::thread::JoinHandle<Result<(), String>>>,
+}
+
+impl TestServer {
+    fn start(service: Arc<PlannerService>, opts: ServerOptions) -> TestServer {
+        let server = Server::bind("127.0.0.1:0").expect("ephemeral bind");
+        let addr = server.local_addr();
+        let shutdown = CancelToken::new();
+        let thread = {
+            let service = service.clone();
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || server.run(&service, &opts, &shutdown))
+        };
+        TestServer { addr, service, shutdown, thread: Some(thread) }
+    }
+
+    fn connect(&self) -> (BufReader<TcpStream>, BufWriter<TcpStream>) {
+        let stream = TcpStream::connect(self.addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let read_half = stream.try_clone().unwrap();
+        (BufReader::new(read_half), BufWriter::new(stream))
+    }
+
+    fn stop(&mut self) -> Result<(), String> {
+        self.shutdown.cancel();
+        match self.thread.take() {
+            Some(t) => t.join().expect("server thread must not panic"),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        let _ = self.stop();
+    }
+}
+
+fn bert_req(id: &str) -> PlanRequest {
+    let mut req = PlanRequest::new(id, "bert", "EnvB", 16);
+    req.max_pp = Some(2); // keep test sweeps small
+    req
+}
+
+/// Send one frame, read one frame, parse it as a response.
+fn round_trip(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    frame: &str,
+) -> PlanResponse {
+    write_frame(writer, frame).expect("send");
+    let never = || false;
+    let line = read_frame(reader, 1 << 24, &never)
+        .expect("read")
+        .expect("server closed unexpectedly");
+    PlanResponse::parse(&line).expect("typed response")
+}
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("uniap-serve-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_and_the_connection_survives() {
+    let mut server =
+        TestServer::start(Arc::new(PlannerService::with_threads(2)), ServerOptions::default());
+    let (mut reader, mut writer) = server.connect();
+
+    // malformed JSON → typed error, connection stays open
+    let resp = round_trip(&mut reader, &mut writer, "this is not json");
+    assert_eq!(resp.status, Status::Error);
+    assert!(resp.error.unwrap().contains("malformed"));
+
+    // invalid field values → typed error echoing the id
+    let resp = round_trip(
+        &mut reader,
+        &mut writer,
+        r#"{"id":"bad","model":"bert","env":"EnvB","batch":16,"deadline_secs":-1}"#,
+    );
+    assert_eq!(resp.status, Status::Error);
+    assert_eq!(resp.id, "bad");
+
+    // unknown model → typed error
+    let resp = round_trip(
+        &mut reader,
+        &mut writer,
+        r#"{"id":"ghost","model":"gpt9","env":"EnvB","batch":16}"#,
+    );
+    assert_eq!(resp.status, Status::Error);
+    assert!(resp.error.unwrap().contains("unknown model"));
+
+    // …and the very same connection still serves a real request,
+    // byte-identical to the in-process service
+    let req = bert_req("after-errors");
+    let resp = round_trip(&mut reader, &mut writer, &req.to_json().to_string());
+    assert_eq!(resp.status, Status::Ok);
+    let direct = PlannerService::with_threads(2).plan(&req);
+    assert_eq!(
+        plan_to_json(resp.plan.as_ref().unwrap()).to_string(),
+        plan_to_json(direct.plan.as_ref().unwrap()).to_string(),
+        "socket-served plan must equal the in-process plan"
+    );
+    server.stop().expect("clean shutdown");
+}
+
+#[test]
+fn oversized_frames_abort_the_connection_with_a_typed_error() {
+    let opts = ServerOptions { max_frame_bytes: 512, ..Default::default() };
+    let mut server = TestServer::start(Arc::new(PlannerService::with_threads(2)), opts);
+    let (mut reader, mut writer) = server.connect();
+    let huge = format!("{{\"id\":\"{}\"}}", "x".repeat(4096));
+    write_frame(&mut writer, &huge).expect("send");
+    let never = || false;
+    let line = read_frame(&mut reader, 1 << 20, &never).expect("read").expect("error frame");
+    let resp = PlanResponse::parse(&line).expect("typed error");
+    assert_eq!(resp.status, Status::Error);
+    assert!(resp.error.unwrap().contains("cap"), "names the frame cap");
+    // framing is lost → server closes; the next read sees the end of the
+    // connection (clean EOF, or a reset if the kernels race the close)
+    match read_frame(&mut reader, 1 << 20, &never) {
+        Ok(None) | Err(FrameError::Io(_)) => {}
+        other => panic!("connection must be closed, got {other:?}"),
+    }
+    // the server itself is fine: a fresh connection serves
+    let (mut r2, mut w2) = server.connect();
+    let resp = round_trip(&mut r2, &mut w2, &bert_req("fresh").to_json().to_string());
+    assert_eq!(resp.status, Status::Ok);
+    server.stop().expect("clean shutdown");
+}
+
+#[test]
+fn mid_solve_disconnect_does_not_take_the_server_down() {
+    let mut server =
+        TestServer::start(Arc::new(PlannerService::with_threads(2)), ServerOptions::default());
+    {
+        // fire a real request and vanish before the response arrives
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut writer = BufWriter::new(stream);
+        let frame = bert_req("vanishing").to_json().to_string();
+        writer.write_all(frame.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        // drop: both halves close while the solve is (likely) in flight
+    }
+    // the server must keep serving new connections afterwards
+    let (mut reader, mut writer) = server.connect();
+    let resp = round_trip(&mut reader, &mut writer, &bert_req("survivor").to_json().to_string());
+    assert_eq!(resp.status, Status::Ok);
+    server.stop().expect("no panic anywhere in the server");
+}
+
+#[test]
+fn concurrent_connections_serve_byte_identical_warm_plans() {
+    let service = Arc::new(PlannerService::with_threads(4));
+    // warm the caches once in-process; socket requests must then be
+    // pure cache traffic and still byte-identical
+    let warm = service.plan(&bert_req("warm-up"));
+    assert_eq!(warm.status, Status::Ok);
+    let want = plan_to_json(warm.plan.as_ref().unwrap()).to_string();
+
+    let mut server = TestServer::start(service.clone(), ServerOptions::default());
+    let addr = server.addr;
+    let mut clients = Vec::new();
+    for i in 0..4 {
+        let want = want.clone();
+        clients.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+            let read_half = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(read_half);
+            let mut writer = BufWriter::new(stream);
+            let req = bert_req(&format!("client-{i}"));
+            write_frame(&mut writer, &req.to_json().to_string()).unwrap();
+            let never = || false;
+            let line = read_frame(&mut reader, 1 << 24, &never).unwrap().unwrap();
+            let resp = PlanResponse::parse(&line).unwrap();
+            assert_eq!(resp.status, Status::Ok);
+            assert_eq!(resp.id, format!("client-{i}"), "responses stay per-connection");
+            assert_eq!(
+                plan_to_json(resp.plan.as_ref().unwrap()).to_string(),
+                want,
+                "all clients see the same bytes"
+            );
+        }));
+    }
+    for c in clients {
+        c.join().expect("client");
+    }
+    let stats = server.service.stats();
+    assert!(stats.connections >= 4, "{stats:?}");
+    assert!(stats.plan_hits >= 4, "warm requests must replay: {stats:?}");
+    server.stop().expect("clean shutdown");
+}
+
+#[test]
+fn batch_frames_reuse_serve_cancellable_and_keep_request_order() {
+    let mut server =
+        TestServer::start(Arc::new(PlannerService::with_threads(2)), ServerOptions::default());
+    let (mut reader, mut writer) = server.connect();
+    let frame = format!(
+        "[{},{}]",
+        bert_req("first").to_json().to_string(),
+        bert_req("second").to_json().to_string()
+    );
+    write_frame(&mut writer, &frame).unwrap();
+    let never = || false;
+    let line = read_frame(&mut reader, 1 << 24, &never).unwrap().unwrap();
+    let arr = uniap::util::json::Json::parse(&line).unwrap();
+    let items = arr.as_arr().expect("batch frame answers with an array");
+    assert_eq!(items.len(), 2);
+    let first = PlanResponse::from_json(&items[0]).unwrap();
+    let second = PlanResponse::from_json(&items[1]).unwrap();
+    assert_eq!((first.id.as_str(), second.id.as_str()), ("first", "second"));
+    assert!(first.status == Status::Ok && second.status == Status::Ok);
+    server.stop().expect("clean shutdown");
+}
+
+#[test]
+fn kill_and_restart_reuses_the_persisted_frontier_memo() {
+    let dir = temp_dir("restart");
+    let opts = ServerOptions { state_dir: Some(dir.clone()), ..Default::default() };
+
+    // generation 1: serve one request, shut down (writes the snapshot)
+    let first_plan;
+    {
+        let mut server =
+            TestServer::start(Arc::new(PlannerService::with_threads(2)), opts.clone());
+        let (mut reader, mut writer) = server.connect();
+        let resp = round_trip(&mut reader, &mut writer, &bert_req("gen1").to_json().to_string());
+        assert_eq!(resp.status, Status::Ok);
+        first_plan = plan_to_json(resp.plan.as_ref().unwrap()).to_string();
+        let stats = server.service.stats();
+        assert!(stats.cached_frontiers > 0 && stats.cached_bases > 0, "{stats:?}");
+        server.stop().expect("graceful shutdown writes the snapshot");
+        assert!(dir.join("state.json").exists(), "snapshot file must exist");
+    }
+
+    // generation 2: fresh process-equivalent — new service, same state dir
+    {
+        let service = Arc::new(PlannerService::with_threads(2));
+        let loaded = service.load_state(&dir);
+        let restored = matches!(
+            &loaded,
+            uniap::service::LoadOutcome::Loaded { frontiers, .. } if *frontiers > 0
+        );
+        assert!(restored, "{loaded:?}");
+        let mut server = TestServer::start(service.clone(), opts.clone());
+        let (mut reader, mut writer) = server.connect();
+        let resp = round_trip(&mut reader, &mut writer, &bert_req("gen2").to_json().to_string());
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(
+            plan_to_json(resp.plan.as_ref().unwrap()).to_string(),
+            first_plan,
+            "restart must yield bit-identical plans"
+        );
+        assert_eq!(resp.cache.base_misses, 0, "persisted bases cover the sweep: {:?}", resp.cache);
+        let stats = service.stats();
+        assert!(stats.persisted_frontiers_loaded > 0, "{stats:?}");
+        assert!(stats.persisted_bases_loaded > 0, "{stats:?}");
+        assert!(
+            stats.persisted_frontier_hits > 0,
+            "the warm-start counter is the acceptance gate: {stats:?}"
+        );
+        server.stop().expect("clean shutdown");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

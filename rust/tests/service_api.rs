@@ -122,7 +122,15 @@ fn response_json_roundtrip_property() {
                 .map(|_| CandidateLog {
                     pp_size: *rng.pick(&[1usize, 2, 4, 8]),
                     num_micro: *rng.pick(&[2usize, 4, 8]),
-                    tpi: rng.bool(0.7).then(|| rng.f64_in(1e-3, 5.0)),
+                    // infeasible outcomes included (ISSUE 4): an INFINITY
+                    // cost must survive the wire via the "inf" sentinel
+                    tpi: rng.bool(0.7).then(|| {
+                        if rng.bool(0.2) {
+                            f64::INFINITY
+                        } else {
+                            rng.f64_in(1e-3, 5.0)
+                        }
+                    }),
                     solve_secs: rng.f64_in(0.0, 2.0),
                 })
                 .collect();
