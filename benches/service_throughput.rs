@@ -28,6 +28,12 @@
 //! with the byte-identity of socket-served plans asserted against the
 //! in-process responses.
 //!
+//! ISSUE 5 adds the **warm-via-peer** row: a *fresh* service that first
+//! merges a peer's exported snapshot (the `sync` frame payload — parse,
+//! validate, merge included in the measured time) and then solves. The
+//! delta to the cold row is what cross-machine state sync buys a
+//! just-booted server; `peer_warm_speedup` records the ratio.
+//!
 //! Run: `cargo bench --bench service_throughput`
 //! CI smoke: `UNIAP_BENCH_SMOKE=1` shrinks rows to single unwarmed
 //! samples.
@@ -41,7 +47,7 @@ use uniap::cost::Schedule;
 use uniap::report::bench::{section, BenchReport};
 use uniap::service::{
     plan_to_json, CancelToken, PlanRequest, PlanResponse, PlannerService, Server, ServerOptions,
-    Status,
+    Snapshot, Status,
 };
 use uniap::util::net::{read_frame, write_frame};
 
@@ -93,6 +99,44 @@ fn main() {
     rep.bench("service warm (new batch B=8, shared bases)", w(1), s(5), || {
         std::hint::black_box(svc.plan(&new_batch));
     });
+
+    // --- warm via a peer's merged snapshot (ISSUE 5) ---------------------
+    // What `serve --sync-from <peer>` buys a just-booted server: a fresh
+    // service merges the peer's exported snapshot (parse + validation +
+    // merge measured too) and solves with every cost base and frontier
+    // already resident. Only the profile and the outcome cache rebuild.
+    section("shared state: warm via peer snapshot");
+    let peer_text = svc.export_snapshot().to_json().to_string();
+    rep.note("peer_snapshot_bytes", peer_text.len());
+    let via_peer = {
+        let warmed = PlannerService::new();
+        let wired = Snapshot::parse(&peer_text).expect("exported snapshot validates");
+        let (frontiers, bases) = warmed.merge_snapshot(&wired);
+        rep.note("peer_frontiers_merged", frontiers);
+        rep.note("peer_bases_merged", bases);
+        let resp = warmed.plan(&req);
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(resp.cache.base_misses, 0, "peer snapshot must cover the sweep");
+        assert!(warmed.stats().persisted_frontier_hits > 0, "frontiers must be reused");
+        resp
+    };
+    let identical_peer = plan_to_json(via_peer.plan.as_ref().unwrap()).to_string()
+        == plan_to_json(cold.plan.as_ref().unwrap()).to_string();
+    assert!(identical_peer, "peer-warmed plan differs from the cold solve");
+    rep.note("peer_warm_plan_byte_identical", identical_peer);
+    rep.bench("service warm via peer snapshot (fresh service per request)", w(1), s(5), || {
+        let warmed = PlannerService::new();
+        let wired = Snapshot::parse(&peer_text).expect("exported snapshot validates");
+        warmed.merge_snapshot(&wired);
+        std::hint::black_box(warmed.plan(&req));
+    });
+    if let Some(speedup) = rep.speedup(
+        "service cold (fresh caches per request)",
+        "service warm via peer snapshot (fresh service per request)",
+    ) {
+        println!("warm-via-peer speedup (incl. snapshot parse + merge): {speedup:.2}×");
+        rep.note("peer_warm_speedup", speedup);
+    }
 
     // byte-identity guarantee (the other half of the acceptance gate)
     let warm = svc.plan(&req);

@@ -49,6 +49,13 @@ impl Args {
         self.opts.get(key).cloned().ok_or_else(|| format!("missing required option --{key}"))
     }
 
+    /// The raw option value, when one was given (no default) — for
+    /// options whose mere presence changes a command's mode, like
+    /// `serve --sync-from <addr>`.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
     /// usize option with default.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
         match self.opts.get(key) {
@@ -94,6 +101,9 @@ mod tests {
         assert!(a.flag("verbose"));
         assert!(!a.flag("quiet"));
         assert!(a.has("model") && a.has("verbose") && !a.has("engine"));
+        assert_eq!(a.opt("model"), Some("bert"));
+        assert_eq!(a.opt("engine"), None);
+        assert_eq!(a.opt("verbose"), None, "bare flags carry no value");
     }
 
     #[test]

@@ -631,6 +631,44 @@ impl CostBase {
         };
         Ok(base)
     }
+
+    /// Bit-exact equality of two bases: every float compared as raw
+    /// `f64` bits (`-0.0`, NaN payloads and all), shapes included. The
+    /// snapshot merge uses this to recognise that two entries colliding
+    /// on one `(fp, pp)` content key carry the same payload (ISSUE 5)
+    /// without serializing either side.
+    pub fn content_eq(&self, other: &CostBase) -> bool {
+        let vec_eq = |a: &[f64], b: &[f64]| {
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+        };
+        let mat_eq = |a: &[Vec<f64>], b: &[Vec<f64>]| {
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| vec_eq(x, y))
+        };
+        let aff_eq = |a: &Affine, b: &Affine| {
+            a.slope.to_bits() == b.slope.to_bits() && a.konst.to_bits() == b.konst.to_bits()
+        };
+        let affmat_eq = |a: &[Vec<Affine>], b: &[Vec<Affine>]| {
+            a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| {
+                    x.len() == y.len() && x.iter().zip(y).all(|(p, q)| aff_eq(p, q))
+                })
+        };
+        self.strategies == other.strategies
+            && self.pp_size == other.pp_size
+            && self.mem_limit.to_bits() == other.mem_limit.to_bits()
+            && mat_eq(&self.t_fwd, &other.t_fwd)
+            && mat_eq(&self.f_konst, &other.f_konst)
+            && mat_eq(&self.b_konst, &other.b_konst)
+            && mat_eq(&self.per_iter, &other.per_iter)
+            && mat_eq(&self.m_state, &other.m_state)
+            && self.ar_tp.len() == other.ar_tp.len()
+            && self.ar_tp.iter().zip(&other.ar_tp).all(|(a, b)| aff_eq(a, b))
+            && affmat_eq(&self.reshard, &other.reshard)
+            && affmat_eq(&self.cross, &other.cross)
+            && vec_eq(&self.act_out, &other.act_out)
+            && vec_eq(&self.act_store, &other.act_store)
+            && vec_eq(&self.edge_act, &other.edge_act)
+    }
 }
 
 /// Build the cost matrices for one `(pp_size, c)` candidate of the UOP
@@ -951,6 +989,8 @@ mod tests {
             let text = base.to_json().to_string();
             let back = CostBase::from_json(&Json::parse(&text).unwrap()).unwrap();
             assert_eq!(back.to_json().to_string(), text, "emit∘parse identity");
+            assert!(back.content_eq(&base), "bitwise content equality across the wire");
+            assert!(!CostBase::new(&p, &g, if pp == 1 { 2 } else { 1 }).content_eq(&base));
             for (batch, c) in [(16usize, 4usize), (8, 2), (64, 8)] {
                 for sched in [Schedule::GPipe, Schedule::OneF1B] {
                     let want = base.materialize(batch, c, sched);

@@ -43,13 +43,19 @@ COMMANDS:
   serve      --requests <file.json> [--concurrency N] [--pretty] [--validate]
              drains the request file through one shared PlannerService
              --listen <host:port> [--state-dir DIR] [--snapshot-secs N]
-             [--max-frame-bytes N]
+             [--max-frame-bytes N] [--sync-from <host:port>]
              long-running socket mode: one JSON request (or array) per
              line in, one response line out; ctrl-c shuts down gracefully
              and, with --state-dir, persists the planner caches for the
-             next start
+             next start. Several servers may share one --state-dir (each
+             writes its own generation file and they merge). --sync-from
+             additionally pulls a peer server's snapshot at startup and
+             merges it, warming this server from another machine
              --connect <host:port> --requests <file.json> [--pretty]
              client mode: send the request file to a listening server
+             --sync-from <host:port> --state-dir DIR
+             one-shot sync: pull the peer's snapshot, merge it into the
+             state dir, and exit
   profile    --model <name> --env <name>
   train      --artifacts <dir> --steps N [--micro N] [--lr F]
   calibrate  [--size N] [--iters N]
@@ -255,6 +261,21 @@ fn cmd_serve_listen(args: &Args) -> Result<(), String> {
             }
         }
     }
+    if let Some(peer) = args.opt("sync-from") {
+        // warm from a peer machine before accepting traffic; a dead or
+        // confused peer costs warmth, never availability
+        match uniap::service::server::fetch_snapshot(
+            peer,
+            uniap::service::server::DEFAULT_MAX_SYNC_BYTES,
+            uniap::service::server::DEFAULT_SYNC_TIMEOUT,
+        ) {
+            Ok(snap) => {
+                let (frontiers, bases) = service.merge_snapshot(&snap);
+                eprintln!("synced from {peer}: merged {frontiers} new frontiers, {bases} new cost bases");
+            }
+            Err(e) => eprintln!("sync from {peer} failed ({e}) — continuing with local state"),
+        }
+    }
     let server = uniap::service::Server::bind(&addr)?;
     if !uniap::service::server::install_sigint_handler() {
         eprintln!("note: no SIGINT hook on this platform; stop with a TCP-level kill");
@@ -317,12 +338,44 @@ fn cmd_serve_connect(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// One-shot state sync: `uniap serve --sync-from <addr> --state-dir DIR`
+/// (no `--listen`). Pulls the peer's snapshot, merges it with whatever
+/// the state dir already holds, and writes the union back — a warm
+/// cache courier for fleets that stage state out-of-band.
+fn cmd_serve_sync(args: &Args) -> Result<(), String> {
+    let peer = args.require("sync-from")?;
+    let dir = args.require("state-dir").map_err(|_| {
+        "--sync-from without --listen needs --state-dir DIR to merge the pulled snapshot into"
+            .to_string()
+    })?;
+    let dir = std::path::PathBuf::from(dir);
+    let service = PlannerService::new();
+    if let uniap::service::LoadOutcome::Loaded { frontiers, bases } = service.load_state(&dir) {
+        eprintln!("local state: {frontiers} frontiers, {bases} cost bases");
+    }
+    let snap = uniap::service::server::fetch_snapshot(
+        &peer,
+        uniap::service::server::DEFAULT_MAX_SYNC_BYTES,
+        uniap::service::server::DEFAULT_SYNC_TIMEOUT,
+    )?;
+    let (frontiers, bases) = service.merge_snapshot(&snap);
+    let path = service.save_state(&dir)?;
+    eprintln!(
+        "synced from {peer}: merged {frontiers} new frontiers, {bases} new cost bases into {}",
+        path.display()
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     if args.has("listen") {
         return cmd_serve_listen(args);
     }
     if args.has("connect") {
         return cmd_serve_connect(args);
+    }
+    if args.has("sync-from") {
+        return cmd_serve_sync(args);
     }
     let path = args.require("requests")?;
     let text = std::fs::read_to_string(&path).map_err(|e| format!("cannot read {path}: {e}"))?;

@@ -120,6 +120,21 @@ impl MemFrontier {
         Ok(MemFrontier { min_m, span })
     }
 
+    /// Bit-exact equality of two frontiers (`min_m` compared as `f64`
+    /// bits, so NaNs and `-0.0` compare like the snapshot serialization
+    /// treats them). The snapshot merge uses this to recognise that two
+    /// entries colliding on one content key are in fact the same payload
+    /// (ISSUE 5) without serializing either.
+    pub fn content_eq(&self, other: &MemFrontier) -> bool {
+        self.span == other.span
+            && self.min_m.len() == other.min_m.len()
+            && self
+                .min_m
+                .iter()
+                .zip(&other.min_m)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
     /// Content key of a memory matrix + budget: FNV-1a over the exact
     /// bit patterns. Equal keys ⇒ (collision caveat aside) bit-identical
     /// inputs ⇒ bit-identical frontiers.
@@ -202,12 +217,20 @@ impl FrontierMemo {
     /// Restore one persisted frontier under its content key. Existing
     /// entries win (they were derived in-process from live matrices);
     /// restored ones are flagged for the `persisted_hits` counter.
-    pub fn preload(&self, key: u64, frontier: MemFrontier) {
-        self.map
-            .lock()
-            .unwrap()
-            .entry(key)
-            .or_insert_with(|| MemoEntry { frontier: Arc::new(frontier), preloaded: true });
+    /// Takes an `Arc` so a merged [`crate::service::Snapshot`] applied
+    /// to several services shares one allocation per frontier. Returns
+    /// `true` when the entry was actually inserted — the snapshot layer
+    /// counts absorbed entries per call instead of diffing `len()`
+    /// around the loop, which would misattribute concurrent live
+    /// insertions to the snapshot.
+    pub fn preload(&self, key: u64, frontier: Arc<MemFrontier>) -> bool {
+        match self.map.lock().unwrap().entry(key) {
+            std::collections::hash_map::Entry::Occupied(_) => false,
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(MemoEntry { frontier, preloaded: true });
+                true
+            }
+        }
     }
 
     /// Every resident `(key, frontier)`, sorted by key — the
@@ -325,7 +348,7 @@ mod tests {
         let memo = FrontierMemo::new();
         let costs = costs_for(2, 4);
         let key = MemFrontier::fingerprint(&costs.m, costs.mem_limit);
-        memo.preload(key, MemFrontier::build(&costs.m, costs.mem_limit));
+        assert!(memo.preload(key, Arc::new(MemFrontier::build(&costs.m, costs.mem_limit))));
         assert_eq!(memo.len(), 1);
         assert_eq!(memo.persisted_hits(), 0);
         // first probe is already a hit — and a *persisted* one
@@ -335,7 +358,10 @@ mod tests {
         // a live entry is never replaced by a later preload
         let live = FrontierMemo::new();
         let a = live.frontier_for(&costs);
-        live.preload(key, MemFrontier { min_m: vec![], span: vec![] });
+        assert!(
+            !live.preload(key, Arc::new(MemFrontier { min_m: vec![], span: vec![] })),
+            "an occupied key reports no insertion"
+        );
         let b = live.frontier_for(&costs);
         assert!(Arc::ptr_eq(&a, &b), "live entry survives the preload");
         assert_eq!(live.persisted_hits(), 0);
@@ -348,7 +374,7 @@ mod tests {
         let costs = costs_for(2, 4);
         let key = MemFrontier::fingerprint(&costs.m, costs.mem_limit);
         let memo = FrontierMemo::new();
-        memo.preload(key, MemFrontier { min_m: vec![0.0], span: vec![1] });
+        memo.preload(key, Arc::new(MemFrontier { min_m: vec![0.0], span: vec![1] }));
         let f = memo.frontier_for(&costs);
         assert_eq!(f.min_m.len(), costs.num_layers(), "served frontier matches the matrix");
         assert_eq!(memo.stats(), (0, 1), "damaged entry counts as a miss");
@@ -357,6 +383,23 @@ mod tests {
         let again = memo.frontier_for(&costs);
         assert!(Arc::ptr_eq(&f, &again));
         assert_eq!(memo.stats(), (1, 1));
+    }
+
+    #[test]
+    fn content_eq_is_bitwise() {
+        let costs = costs_for(2, 4);
+        let a = MemFrontier::build(&costs.m, costs.mem_limit);
+        let b = MemFrontier::build(&costs.m, costs.mem_limit);
+        assert!(a.content_eq(&b));
+        // one ulp on one entry breaks equality
+        let mut c = MemFrontier { min_m: b.min_m.clone(), span: b.span.clone() };
+        c.min_m[0] = f64::from_bits(c.min_m[0].to_bits() ^ 1);
+        assert!(!a.content_eq(&c));
+        // -0.0 vs 0.0 are different payloads (bit semantics)
+        let z = MemFrontier { min_m: vec![0.0], span: vec![1] };
+        let nz = MemFrontier { min_m: vec![-0.0], span: vec![1] };
+        assert!(!z.content_eq(&nz));
+        assert!(z.content_eq(&z));
     }
 
     #[test]

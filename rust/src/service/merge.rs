@@ -1,0 +1,541 @@
+//! Snapshot values and snapshot *merging* — the shared-state layer of
+//! the planner service (ISSUE 5; DESIGN.md §Snapshot merging &
+//! multi-process state).
+//!
+//! PR 4 made the service's reusable planner state durable on one host:
+//! one process, one `state.json`. This module turns that file format
+//! into a first-class value, [`Snapshot`], so state can flow between
+//! *processes and machines*: every sibling generation file in a shared
+//! `--state-dir` is a `Snapshot`, the `sync` frame a peer server
+//! exports over the wire is a `Snapshot`, and combining any of them is
+//! one operation — [`Snapshot::merge`].
+//!
+//! ## Merge semantics
+//!
+//! Both persisted caches are **content-keyed**: frontier entries by an
+//! FNV over the exact bits of the memory matrix + budget, cost bases by
+//! `(workload fingerprint, pp_size)`. Equal keys therefore mean equal
+//! payloads, and merging is a plain union:
+//!
+//! * **keyed payloads never take a writer preference** — on a key
+//!   collision the entries are first compared bit-for-bit
+//!   (`content_eq`); equal payloads (the overwhelmingly common case)
+//!   keep the already-resident `Arc`. If a buggy writer ever maps two
+//!   *different* payloads to one key, the lexicographically smaller
+//!   canonical JSON emission wins — an arbitrary but *deterministic*
+//!   rule, so merge stays commutative, associative and idempotent
+//!   byte-for-byte even under adversarial input (pinned by
+//!   `rust/tests/state_merge.rs`);
+//! * **last-writer-wins applies to metadata only** — the `(seq,
+//!   writer)` stamp identifying who wrote a snapshot is taken from the
+//!   maximum, which is again order-independent.
+//!
+//! Because a merged snapshot contains only entries some writer derived
+//! from live matrices under their content keys, applying it to a
+//! service can never change a plan's bytes: a stale or foreign entry
+//! simply never hits, and a hit replays exactly what the service would
+//! have derived itself. The test battery (`state_merge.rs`) locks this
+//! down: any merge order preloaded into a service yields
+//! `PlanResponse`s byte-identical to a cold solve.
+//!
+//! ## Document format
+//!
+//! The same versioned + checksummed envelope PR 4 introduced, with the
+//! metadata stamp added *inside* the checksummed payload:
+//!
+//! ```json
+//! {"format":"uniap-state","version":1,
+//!  "payload":{"meta":{"writer":"12345","seq":3},
+//!             "frontiers":[{"key":"…16 hex…","frontier":{…}}…],
+//!             "bases":[{"fp":"…16 hex…","pp":2,"base":{…}}…]},
+//!  "checksum":"…16 hex…"}
+//! ```
+//!
+//! Entries are emitted in key order (`BTreeMap` iteration), floats as
+//! exact bit hex, and the checksum is FNV-1a over the canonical compact
+//! emission of `payload` — so equal snapshots have equal bytes, which
+//! is what the merge-order property tests compare. Files written by
+//! PR 4 (no `meta`) still load: the stamp defaults to `("", 0)`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::cost::CostBase;
+use crate::planner::memo::MemFrontier;
+use crate::util::fsio::{u64_from_hex, u64_to_hex};
+use crate::util::hash::Fnv;
+use crate::util::json::Json;
+
+use super::snapshot::SNAPSHOT_VERSION;
+use super::PlannerService;
+
+/// Provenance stamp of one snapshot — the only fields merge resolves by
+/// writer recency rather than by content key.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SnapshotMeta {
+    /// Writer identity (the serving CLI uses the process id; tests use
+    /// symbolic tags).
+    pub writer: String,
+    /// Writer-local snapshot sequence number.
+    pub seq: usize,
+}
+
+/// One snapshot of the service's persisted planner state as a value:
+/// the frontier memo entries and the `(fp, pp)` cost-base cache, plus a
+/// provenance stamp. See the module docs for merge semantics and the
+/// on-disk format.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    /// Last-writer metadata (never influences keyed payloads).
+    pub meta: SnapshotMeta,
+    frontiers: BTreeMap<u64, Arc<MemFrontier>>,
+    bases: BTreeMap<(u64, usize), Arc<CostBase>>,
+}
+
+fn checksum(payload_text: &str) -> String {
+    let mut h = Fnv::new();
+    h.str(payload_text);
+    u64_to_hex(h.finish())
+}
+
+impl Snapshot {
+    /// An empty snapshot carrying `meta` (entries are added through
+    /// [`Snapshot::insert_frontier`] / [`Snapshot::insert_base`]).
+    pub fn with_meta(meta: SnapshotMeta) -> Snapshot {
+        Snapshot { meta, ..Snapshot::default() }
+    }
+
+    /// Capture `service`'s current persisted caches under a writer tag
+    /// (`seq` continues the service's snapshot counter).
+    pub fn from_service(service: &PlannerService, writer: &str) -> Snapshot {
+        let mut snap = Snapshot {
+            meta: SnapshotMeta {
+                writer: writer.to_string(),
+                seq: service.snapshots_written() + 1,
+            },
+            ..Snapshot::default()
+        };
+        for (key, frontier) in service.frontiers.export() {
+            snap.frontiers.insert(key, frontier);
+        }
+        for (key, base) in service.bases.lock().unwrap().iter() {
+            snap.bases.insert(*key, base.clone());
+        }
+        snap
+    }
+
+    /// Preload every entry into `service` (existing entries win — they
+    /// were derived in-process from live matrices). Returns the number
+    /// of *newly added* `(frontiers, bases)`.
+    pub fn apply_to(&self, service: &PlannerService) -> (usize, usize) {
+        let mut new_frontiers = 0usize;
+        for (key, frontier) in &self.frontiers {
+            if service.frontiers.preload(*key, frontier.clone()) {
+                new_frontiers += 1;
+            }
+        }
+        let mut new_bases = 0usize;
+        {
+            let mut cache = service.bases.lock().unwrap();
+            for (key, base) in &self.bases {
+                if let std::collections::hash_map::Entry::Vacant(e) = cache.entry(*key) {
+                    e.insert(base.clone());
+                    new_bases += 1;
+                }
+            }
+        }
+        (new_frontiers, new_bases)
+    }
+
+    /// Add one frontier under its content key (first insert wins, like
+    /// [`Snapshot::merge`]).
+    pub fn insert_frontier(&mut self, key: u64, frontier: Arc<MemFrontier>) {
+        self.frontiers.entry(key).or_insert(frontier);
+    }
+
+    /// Add one cost base under `(fp, base.pp_size)` — deriving the key's
+    /// `pp` half from the body makes the key/body mismatch the on-disk
+    /// validation guards against unrepresentable here.
+    pub fn insert_base(&mut self, fp: u64, base: Arc<CostBase>) {
+        self.bases.entry((fp, base.pp_size)).or_insert(base);
+    }
+
+    /// `(frontier, base)` entry counts.
+    pub fn counts(&self) -> (usize, usize) {
+        (self.frontiers.len(), self.bases.len())
+    }
+
+    /// `true` when the snapshot holds no entries at all.
+    pub fn is_empty(&self) -> bool {
+        self.frontiers.is_empty() && self.bases.is_empty()
+    }
+
+    /// Resident frontier keys, ascending.
+    pub fn frontier_keys(&self) -> Vec<u64> {
+        self.frontiers.keys().copied().collect()
+    }
+
+    /// Resident base keys `(fp, pp)`, ascending.
+    pub fn base_keys(&self) -> Vec<(u64, usize)> {
+        self.bases.keys().copied().collect()
+    }
+
+    /// `true` when both snapshots carry exactly the same keyed payloads
+    /// — **metadata ignored**. This is the "did this save change
+    /// anything?" test the on-disk layer uses to skip no-op rewrites:
+    /// comparing emitted bytes instead would never match, because the
+    /// advancing `meta.seq` dirties them on every save, and idle
+    /// co-located servers would ping-pong full rewrites forever.
+    pub fn same_entries(&self, other: &Snapshot) -> bool {
+        self.frontiers.len() == other.frontiers.len()
+            && self.bases.len() == other.bases.len()
+            && self
+                .frontiers
+                .iter()
+                .zip(&other.frontiers)
+                .all(|((ka, fa), (kb, fb))| {
+                    ka == kb && (Arc::ptr_eq(fa, fb) || fa.content_eq(fb))
+                })
+            && self
+                .bases
+                .iter()
+                .zip(&other.bases)
+                .all(|((ka, ba), (kb, bb))| {
+                    ka == kb && (Arc::ptr_eq(ba, bb) || ba.content_eq(bb))
+                })
+    }
+
+    /// `true` when every keyed payload of `other` is present in `self`
+    /// with identical content (metadata ignored) — the redundancy test
+    /// behind generation-file garbage collection: a generation covered
+    /// by the merged `state.json` adds no durability and can go.
+    pub fn covers(&self, other: &Snapshot) -> bool {
+        other.frontiers.iter().all(|(key, f)| {
+            self.frontiers
+                .get(key)
+                .is_some_and(|mine| Arc::ptr_eq(mine, f) || mine.content_eq(f))
+        }) && other.bases.iter().all(|(key, b)| {
+            self.bases
+                .get(key)
+                .is_some_and(|mine| Arc::ptr_eq(mine, b) || mine.content_eq(b))
+        })
+    }
+
+    /// Union this snapshot with `other` (see module docs): keyed
+    /// payloads union by content key with a deterministic tie-break,
+    /// metadata goes to the later `(seq, writer)`. Commutative,
+    /// associative and idempotent on the emitted bytes.
+    pub fn merge(mut self, other: Snapshot) -> Snapshot {
+        if (other.meta.seq, other.meta.writer.as_str())
+            > (self.meta.seq, self.meta.writer.as_str())
+        {
+            self.meta = other.meta;
+        }
+        for (key, theirs) in other.frontiers {
+            match self.frontiers.entry(key) {
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(theirs);
+                }
+                std::collections::btree_map::Entry::Occupied(mut e) => {
+                    let mine = e.get();
+                    if Arc::ptr_eq(mine, &theirs) || mine.content_eq(&theirs) {
+                        continue; // same payload — keep the resident Arc
+                    }
+                    // genuine key collision (buggy writer): pick the
+                    // lexicographically smaller canonical emission so
+                    // every merge order settles on the same bytes
+                    if theirs.to_json().to_string() < mine.to_json().to_string() {
+                        e.insert(theirs);
+                    }
+                }
+            }
+        }
+        for (key, theirs) in other.bases {
+            match self.bases.entry(key) {
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(theirs);
+                }
+                std::collections::btree_map::Entry::Occupied(mut e) => {
+                    let mine = e.get();
+                    if Arc::ptr_eq(mine, &theirs) || mine.content_eq(&theirs) {
+                        continue;
+                    }
+                    if theirs.to_json().to_string() < mine.to_json().to_string() {
+                        e.insert(theirs);
+                    }
+                }
+            }
+        }
+        self
+    }
+
+    /// Emit the full versioned + checksummed snapshot document.
+    pub fn to_json(&self) -> Json {
+        let meta = Json::obj()
+            .field("writer", self.meta.writer.as_str())
+            .field("seq", self.meta.seq);
+        let frontiers = Json::Arr(
+            self.frontiers
+                .iter()
+                .map(|(key, f)| {
+                    Json::obj()
+                        .field("key", Json::Str(u64_to_hex(*key)))
+                        .field("frontier", f.to_json())
+                })
+                .collect(),
+        );
+        let bases = Json::Arr(
+            self.bases
+                .iter()
+                .map(|((fp, pp), base)| {
+                    Json::obj()
+                        .field("fp", Json::Str(u64_to_hex(*fp)))
+                        .field("pp", *pp)
+                        .field("base", base.to_json())
+                })
+                .collect(),
+        );
+        let payload = Json::obj()
+            .field("meta", meta)
+            .field("frontiers", frontiers)
+            .field("bases", bases);
+        let sum = checksum(&payload.to_string());
+        Json::obj()
+            .field("format", "uniap-state")
+            .field("version", SNAPSHOT_VERSION)
+            .field("payload", payload)
+            .field("checksum", sum)
+    }
+
+    /// Validate and structure one snapshot document. Everything is
+    /// checked before anything is returned — format tag, version,
+    /// checksum over the canonical payload emission, and per-entry
+    /// shapes — so a half-garbage document yields an error, never a
+    /// partial snapshot (callers then degrade to a cold start).
+    pub fn from_json(doc: &Json) -> Result<Snapshot, String> {
+        if doc.get("format").and_then(Json::as_str) != Some("uniap-state") {
+            return Err("not a uniap-state file".to_string());
+        }
+        let version = doc.get("version").and_then(Json::as_usize).ok_or("missing version")?;
+        if version != SNAPSHOT_VERSION {
+            return Err(format!(
+                "snapshot version {version}, this build reads {SNAPSHOT_VERSION}"
+            ));
+        }
+        let payload = doc.get("payload").ok_or("missing payload")?;
+        let stored = doc.get("checksum").and_then(Json::as_str).ok_or("missing checksum")?;
+        // The emitter is canonical (insertion-ordered, deterministic
+        // number formatting), so re-emitting the parsed payload
+        // reproduces the exact bytes the checksum was computed over.
+        let actual = checksum(&payload.to_string());
+        if stored != actual {
+            return Err(format!(
+                "checksum mismatch: file says {stored}, content hashes to {actual}"
+            ));
+        }
+
+        let mut snap = Snapshot::default();
+        if let Some(meta) = payload.get("meta") {
+            snap.meta.writer = meta
+                .get("writer")
+                .and_then(Json::as_str)
+                .ok_or("meta needs string \"writer\"")?
+                .to_string();
+            snap.meta.seq =
+                meta.get("seq").and_then(Json::as_usize).ok_or("meta needs integer \"seq\"")?;
+        }
+        for (i, entry) in payload
+            .get("frontiers")
+            .and_then(Json::as_arr)
+            .ok_or("payload needs array \"frontiers\"")?
+            .iter()
+            .enumerate()
+        {
+            let key = u64_from_hex(
+                entry
+                    .get("key")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("frontier [{i}]: no key"))?,
+            )?;
+            let frontier = MemFrontier::from_json(
+                entry.get("frontier").ok_or_else(|| format!("frontier [{i}]: no body"))?,
+            )
+            .map_err(|e| format!("frontier [{i}]: {e}"))?;
+            snap.frontiers.insert(key, Arc::new(frontier));
+        }
+        for (i, entry) in payload
+            .get("bases")
+            .and_then(Json::as_arr)
+            .ok_or("payload needs array \"bases\"")?
+            .iter()
+            .enumerate()
+        {
+            let fp = u64_from_hex(
+                entry
+                    .get("fp")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("base [{i}]: no fp"))?,
+            )?;
+            let pp = entry
+                .get("pp")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("base [{i}]: no pp"))?;
+            let base = CostBase::from_json(
+                entry.get("base").ok_or_else(|| format!("base [{i}]: no body"))?,
+            )
+            .map_err(|e| format!("base [{i}]: {e}"))?;
+            // cross-check the cache key against the body: a buggy writer
+            // mapping a pp=2 base under (fp, 4) would otherwise sail past
+            // the service's layer/edge shape guard (both pp-independent)
+            // and silently change plans
+            if base.pp_size != pp {
+                return Err(format!(
+                    "base [{i}]: keyed pp {pp} but body says pp_size {}",
+                    base.pp_size
+                ));
+            }
+            snap.bases.insert((fp, pp), Arc::new(base));
+        }
+        Ok(snap)
+    }
+
+    /// Parse one snapshot document from text.
+    pub fn parse(text: &str) -> Result<Snapshot, String> {
+        Snapshot::from_json(&Json::parse(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterEnv;
+    use crate::graph::models;
+    use crate::profiling::Profile;
+    use crate::service::{workload_fingerprint, PlanRequest, PlannerService, Status};
+
+    fn warm_service() -> PlannerService {
+        let svc = PlannerService::with_threads(2);
+        let mut req = PlanRequest::new("warm", "bert", "EnvB", 16);
+        req.max_pp = Some(2);
+        assert_eq!(svc.plan(&req).status, Status::Ok);
+        svc
+    }
+
+    #[test]
+    fn snapshot_roundtrips_byte_identically() {
+        let svc = warm_service();
+        let snap = Snapshot::from_service(&svc, "w1");
+        assert!(!snap.is_empty());
+        let text = snap.to_json().to_string();
+        let back = Snapshot::parse(&text).unwrap();
+        assert_eq!(back.to_json().to_string(), text, "emit∘parse identity");
+        assert_eq!(back.counts(), snap.counts());
+        assert_eq!(back.meta, snap.meta);
+    }
+
+    #[test]
+    fn merge_unions_disjoint_snapshots_and_keeps_duplicates_single() {
+        let g = models::bert_huge();
+        let env = ClusterEnv::env_b();
+        let profile = Profile::analytic(&env, &g);
+        let fp = workload_fingerprint(&env, &g);
+        let base1 = Arc::new(crate::cost::CostBase::new(&profile, &g, 1));
+        let base2 = Arc::new(crate::cost::CostBase::new(&profile, &g, 2));
+        let mut a = Snapshot::with_meta(SnapshotMeta { writer: "a".into(), seq: 1 });
+        a.insert_base(fp, base1.clone());
+        let mut b = Snapshot::with_meta(SnapshotMeta { writer: "b".into(), seq: 2 });
+        b.insert_base(fp, base1.clone()); // shared entry
+        b.insert_base(fp, base2.clone()); // new entry
+        let merged = a.clone().merge(b.clone());
+        assert_eq!(merged.counts(), (0, 2));
+        assert_eq!(merged.base_keys(), vec![(fp, 1), (fp, 2)]);
+        // metadata went to the later writer; payloads by key only
+        assert_eq!(merged.meta, SnapshotMeta { writer: "b".into(), seq: 2 });
+        // and the reverse order emits the same bytes
+        assert_eq!(
+            merged.to_json().to_string(),
+            b.merge(a).to_json().to_string(),
+            "merge must be commutative"
+        );
+    }
+
+    #[test]
+    fn adversarial_key_collisions_resolve_deterministically() {
+        // Two *different* payloads under one key (only a buggy writer
+        // can produce this): both merge orders must settle on the same
+        // winner, or merged files would depend on merge order.
+        let g = models::bert_huge();
+        let env = ClusterEnv::env_b();
+        let profile = Profile::analytic(&env, &g);
+        let costs = crate::cost::cost_modeling(&profile, &g, 2, 16, 4);
+        let f_real = Arc::new(MemFrontier::build(&costs.m, costs.mem_limit));
+        let f_fake = Arc::new(MemFrontier { min_m: vec![0.0], span: vec![1] });
+        let key = 7u64;
+        let mut a = Snapshot::default();
+        a.insert_frontier(key, f_real.clone());
+        let mut b = Snapshot::default();
+        b.insert_frontier(key, f_fake.clone());
+        let ab = a.clone().merge(b.clone()).to_json().to_string();
+        let ba = b.merge(a).to_json().to_string();
+        assert_eq!(ab, ba, "collision winner must not depend on merge order");
+    }
+
+    #[test]
+    fn same_entries_and_covers_ignore_metadata() {
+        let svc = warm_service();
+        let a = Snapshot::from_service(&svc, "a");
+        let b = Snapshot::from_service(&svc, "b"); // same payloads, new meta
+        assert_ne!(a.meta, b.meta);
+        assert!(a.same_entries(&b) && b.same_entries(&a));
+        assert!(a.covers(&b) && b.covers(&a));
+        let empty = Snapshot::default();
+        assert!(a.covers(&empty), "everything covers the empty snapshot");
+        assert!(!empty.covers(&a));
+        assert!(!a.same_entries(&empty));
+        // covers is subset-shaped, same_entries is equality-shaped
+        let mut bigger = a.clone();
+        let g = models::bert_huge();
+        let env = ClusterEnv::env_a();
+        let profile = Profile::analytic(&env, &g);
+        bigger.insert_base(
+            workload_fingerprint(&env, &g),
+            Arc::new(crate::cost::CostBase::new(&profile, &g, 1)),
+        );
+        assert!(bigger.covers(&a) && !a.covers(&bigger));
+        assert!(!bigger.same_entries(&a));
+    }
+
+    #[test]
+    fn from_json_rejects_mismatched_base_keys_and_bad_meta() {
+        let svc = warm_service();
+        let text = Snapshot::from_service(&svc, "w").to_json().to_string();
+        // retag a base's pp key without touching the body → the checksum
+        // still matches (we recompute it), so the pp cross-check is what
+        // must catch it
+        let doc = Json::parse(&text).unwrap();
+        let payload = doc.get("payload").unwrap().clone();
+        let mut tampered = payload.clone();
+        if let Json::Obj(fields) = &mut tampered {
+            for (k, v) in fields.iter_mut() {
+                if k == "bases" {
+                    if let Json::Arr(entries) = v {
+                        if let Json::Obj(entry) = &mut entries[0] {
+                            for (ek, ev) in entry.iter_mut() {
+                                if ek == "pp" {
+                                    *ev = Json::from(99usize);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let redoc = Json::obj()
+            .field("format", "uniap-state")
+            .field("version", SNAPSHOT_VERSION)
+            .field("payload", tampered.clone())
+            .field("checksum", checksum(&tampered.to_string()));
+        let err = Snapshot::from_json(&redoc).unwrap_err();
+        assert!(err.contains("keyed pp 99"), "{err}");
+    }
+}

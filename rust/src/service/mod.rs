@@ -48,13 +48,23 @@
 //! process restarts through the versioned `--state-dir` snapshot
 //! ([`snapshot`]), so a restarted server warm-starts instead of
 //! re-deriving its caches (`rust/tests/serve_socket.rs` pins both).
+//!
+//! Shared state (ISSUE 5): snapshots are first-class values
+//! ([`Snapshot`], [`merge`]) that union by content key, so the warm
+//! caches scale past one process — N servers behind one `--state-dir`
+//! write per-process generation files and cooperatively merge them, and
+//! `uniap serve --sync-from <addr>` pulls a peer machine's exported
+//! snapshot over the wire's `sync` frame and merges it in. Merged state
+//! can never change a plan's bytes (`rust/tests/state_merge.rs`).
 
+pub mod merge;
 pub mod request;
 pub mod response;
 pub mod server;
 pub mod snapshot;
 
 pub use crate::util::cancel::{CancelCause, CancelToken};
+pub use merge::{Snapshot, SnapshotMeta};
 pub use request::PlanRequest;
 pub use response::{plan_from_json, plan_to_json, CacheStats, PlanResponse, Status, Timings};
 pub use server::{Server, ServerOptions};
@@ -621,20 +631,61 @@ impl PlannerService {
         rows.into_iter().map(|(_, r)| r).collect()
     }
 
-    /// Persist the reusable planner state — the frontier memo and the
-    /// `(fp, pp)` cost-base cache — into `dir`, atomically (temp file +
-    /// rename). See [`snapshot`] for the format and what is *not* stored.
-    pub fn save_state(&self, dir: &std::path::Path) -> Result<std::path::PathBuf, String> {
-        let path = snapshot::save(self, dir)?;
-        self.totals.snapshots_written.fetch_add(1, Ordering::Relaxed);
-        Ok(path)
+    /// Writer tag this process stamps into snapshot files and metadata.
+    fn process_tag() -> String {
+        std::process::id().to_string()
     }
 
-    /// Restore persisted state from `dir`, if a valid snapshot exists.
-    /// A missing, version-mismatched or corrupt snapshot degrades to a
-    /// cold start ([`LoadOutcome::ColdStart`]) — never to an error that
-    /// blocks serving, and never to wrong plans: entries are content-
-    /// keyed, so stale state simply never hits.
+    /// Snapshots written so far (feeds the metadata `seq` stamp).
+    fn snapshots_written(&self) -> usize {
+        self.totals.snapshots_written.load(Ordering::Relaxed)
+    }
+
+    /// Persist the reusable planner state — the frontier memo and the
+    /// `(fp, pp)` cost-base cache — into `dir` under this process's
+    /// writer tag. See [`PlannerService::save_state_tagged`].
+    pub fn save_state(&self, dir: &std::path::Path) -> Result<std::path::PathBuf, String> {
+        self.save_state_tagged(dir, &PlannerService::process_tag())
+    }
+
+    /// [`PlannerService::save_state`] under an explicit writer tag
+    /// (tests simulate several "processes" in one). The save writes the
+    /// writer's own `state.<tag>.json` generation atomically, merges
+    /// every sibling generation into `state.json` under the directory's
+    /// advisory lock, and absorbs the merged union back into this
+    /// service's caches — N servers behind one `--state-dir`
+    /// cooperatively warm each other (ISSUE 5; see [`snapshot`]).
+    pub fn save_state_tagged(
+        &self,
+        dir: &std::path::Path,
+        tag: &str,
+    ) -> Result<std::path::PathBuf, String> {
+        self.save_state_stamped(dir, tag).map(|(path, _)| path)
+    }
+
+    /// [`PlannerService::save_state_tagged`], additionally returning
+    /// the written `state.json`'s lock-captured identity
+    /// ([`snapshot::MergedStamp`]) — the server's snapshot tick uses it
+    /// as a race-free "did a sibling publish since?" dirty signal.
+    pub fn save_state_stamped(
+        &self,
+        dir: &std::path::Path,
+        tag: &str,
+    ) -> Result<(std::path::PathBuf, snapshot::MergedStamp), String> {
+        let report = snapshot::save(self, dir, tag)?;
+        let (new_frontiers, new_bases) = report.absorbed;
+        self.totals.snapshots_written.fetch_add(1, Ordering::Relaxed);
+        self.totals.persisted_frontiers_loaded.fetch_add(new_frontiers, Ordering::Relaxed);
+        self.totals.persisted_bases_loaded.fetch_add(new_bases, Ordering::Relaxed);
+        Ok((report.path, report.stamp))
+    }
+
+    /// Restore persisted state from `dir`, merging the combined
+    /// `state.json` with every sibling generation file, if any
+    /// validates. A missing, version-mismatched or corrupt snapshot
+    /// degrades to a cold start ([`LoadOutcome::ColdStart`]) — never to
+    /// an error that blocks serving, and never to wrong plans: entries
+    /// are content-keyed, so stale state simply never hits.
     pub fn load_state(&self, dir: &std::path::Path) -> LoadOutcome {
         let out = snapshot::load(self, dir);
         if let LoadOutcome::Loaded { frontiers, bases } = &out {
@@ -642,6 +693,23 @@ impl PlannerService {
             self.totals.persisted_bases_loaded.fetch_add(*bases, Ordering::Relaxed);
         }
         out
+    }
+
+    /// The service's current persisted caches as a mergeable
+    /// [`Snapshot`] value — what the `sync` frame serves to peers.
+    pub fn export_snapshot(&self) -> Snapshot {
+        Snapshot::from_service(self, &PlannerService::process_tag())
+    }
+
+    /// Merge a snapshot (a peer's export, or one read from disk) into
+    /// this service's caches. Existing entries always win — a merge can
+    /// extend warmth, never change it. Returns the `(frontiers, bases)`
+    /// newly added, which also feed the `persisted_*_loaded` counters.
+    pub fn merge_snapshot(&self, snap: &Snapshot) -> (usize, usize) {
+        let (new_frontiers, new_bases) = snap.apply_to(self);
+        self.totals.persisted_frontiers_loaded.fetch_add(new_frontiers, Ordering::Relaxed);
+        self.totals.persisted_bases_loaded.fetch_add(new_bases, Ordering::Relaxed);
+        (new_frontiers, new_bases)
     }
 }
 

@@ -31,7 +31,13 @@
 //! * **persistence** — with a `state_dir`, the frontier memo and the
 //!   cost-base cache are snapshotted atomically on shutdown and on a
 //!   periodic tick, skipped while the caches are unchanged
-//!   ([`super::snapshot`]).
+//!   ([`super::snapshot`]). Since ISSUE 5 a tick also merges sibling
+//!   generation files, so co-located servers warm each other;
+//! * **state sync** (ISSUE 5) — a `{"op":"sync"}` frame is answered
+//!   with the server's exported state snapshot (one `uniap-state`
+//!   document on one line). [`fetch_snapshot`] is the client half:
+//!   `uniap serve --sync-from <addr>` pulls a peer's snapshot and
+//!   merges it, which is how warm caches cross machines.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -41,9 +47,45 @@ use std::time::{Duration, Instant};
 
 use crate::util::cancel::CancelToken;
 use crate::util::json::Json;
-use crate::util::net::{drain_frame, read_frame, write_frame, FrameError, DEFAULT_MAX_FRAME_BYTES};
+use crate::util::net::{
+    drain_frame, read_frame, request_response, write_frame, FrameError, DEFAULT_MAX_FRAME_BYTES,
+    OP_KEY, OP_SYNC,
+};
 
-use super::{PlanRequest, PlanResponse, PlannerService};
+use super::{PlanRequest, PlanResponse, PlannerService, Snapshot};
+
+/// Reply cap a sync puller accepts for the peer's snapshot document:
+/// far beyond any real planner state, small enough to bound a hostile
+/// peer (the request direction keeps the normal frame cap).
+pub const DEFAULT_MAX_SYNC_BYTES: usize = 1 << 30;
+
+/// Default bound on one whole `sync` pull (connect + write + reply).
+/// Generous for a multi-megabyte snapshot over a WAN; small enough that
+/// a wedged peer delays a booting server, never wedges it.
+pub const DEFAULT_SYNC_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Pull a peer server's exported state snapshot over the `sync` frame,
+/// bounded end to end by `timeout` (see [`DEFAULT_SYNC_TIMEOUT`]). The
+/// reply is validated like any snapshot (format, version, checksum,
+/// shapes), so a confused, wedged or hostile peer yields a typed error,
+/// never a poisoned cache or a hung caller.
+pub fn fetch_snapshot(
+    addr: &str,
+    max_reply_bytes: usize,
+    timeout: Duration,
+) -> Result<Snapshot, String> {
+    let frame = Json::obj().field(OP_KEY, OP_SYNC).to_string();
+    let reply = request_response(addr, &frame, max_reply_bytes, timeout)?;
+    let doc = Json::parse(&reply).map_err(|e| format!("peer sent a malformed reply: {e}"))?;
+    // a server that doesn't speak the op answers with a typed error
+    if doc.get("status").and_then(Json::as_str) == Some("error") {
+        return Err(format!(
+            "peer refused the sync: {}",
+            doc.get("error").and_then(Json::as_str).unwrap_or("unknown error")
+        ));
+    }
+    Snapshot::from_json(&doc).map_err(|e| format!("peer snapshot rejected: {e}"))
+}
 
 /// SIGINT (ctrl-c) → graceful-shutdown flag. Hand-rolled through the
 /// C runtime's `signal` (the `libc`/`ctrlc` crates are unavailable
@@ -158,10 +200,16 @@ impl Server {
             .map_err(|e| format!("cannot poll listener: {e}"))?;
         let active = AtomicUsize::new(0);
         let mut last_snapshot = Instant::now();
-        // dirty signal: skip ticks when the persisted caches are unchanged
-        // (an idle server must not re-serialize + fsync its whole state
-        // every tick forever)
-        let mut last_saved_entries: Option<(usize, usize)> = None;
+        // dirty signal: skip ticks while *both* our own cache counts and
+        // the shared state.json are unchanged since our last save. The
+        // second half matters for cooperative warming (ISSUE 5): a
+        // sibling's save bumps state.json, and an idle server must still
+        // run its merge to absorb those entries — but an idle server in
+        // an idle directory must not re-serialize + fsync forever. The
+        // recorded stamp is the one the save captured *under the lock*,
+        // so a sibling write landing right after our rename still reads
+        // as dirty on the next tick.
+        let mut last_saved: Option<((usize, usize), super::snapshot::MergedStamp)> = None;
         std::thread::scope(|scope| {
             loop {
                 if opts.watch_sigint && sigint::triggered() {
@@ -192,10 +240,20 @@ impl Server {
                     if opts.snapshot_secs > 0.0
                         && last_snapshot.elapsed().as_secs_f64() >= opts.snapshot_secs
                     {
-                        let entries = service.persistable_entries();
-                        if last_saved_entries != Some(entries) {
-                            match service.save_state(dir) {
-                                Ok(_) => last_saved_entries = Some(entries),
+                        let stamp =
+                            (service.persistable_entries(), super::snapshot::merged_stamp(dir));
+                        if last_saved != Some(stamp) {
+                            let tag = PlannerService::process_tag();
+                            match service.save_state_stamped(dir, &tag) {
+                                // record the lock-captured stamp of the
+                                // file the save left behind, but the
+                                // *pre*-save entry count: an entry cached
+                                // concurrently while the snapshot was
+                                // being captured must read as dirty on
+                                // the next tick, not as already saved
+                                // (the follow-up save is a cheap no-op
+                                // when nothing actually changed)
+                                Ok((_, written)) => last_saved = Some((stamp.0, written)),
                                 Err(e) => eprintln!("snapshot tick failed: {e}"),
                             }
                         }
@@ -240,7 +298,7 @@ fn handle_connection(
             Ok(None) => break, // clean EOF or shutdown
             Ok(Some(line)) if line.trim().is_empty() => continue, // keepalive blank line
             Ok(Some(line)) => {
-                let out = serve_frame(service, &line, shutdown, active);
+                let out = serve_frame(service, &line, shutdown, active.load(Ordering::Relaxed));
                 if write_frame(&mut writer, &out).is_err() {
                     break; // client disconnected (possibly mid-solve)
                 }
@@ -275,12 +333,15 @@ fn handle_connection(
 }
 
 /// Turn one frame into one response line. Never panics outward: planner
-/// bugs surface as typed `error` responses.
-fn serve_frame(
+/// bugs surface as typed `error` responses. `active` is the number of
+/// live connections the thread policy divides across. Public so the
+/// fuzz battery (`rust/tests/serve_socket.rs`) can hammer the exact
+/// code path the socket loop runs, without a socket per case.
+pub fn serve_frame(
     service: &PlannerService,
     line: &str,
     shutdown: &CancelToken,
-    active: &AtomicUsize,
+    active: usize,
 ) -> String {
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         serve_frame_inner(service, line, shutdown, active)
@@ -297,7 +358,7 @@ fn serve_frame_inner(
     service: &PlannerService,
     line: &str,
     shutdown: &CancelToken,
-    active: &AtomicUsize,
+    active: usize,
 ) -> String {
     let doc = match Json::parse(line) {
         Ok(doc) => doc,
@@ -309,6 +370,19 @@ fn serve_frame_inner(
     };
     // echo the caller's correlation id even on invalid requests
     let id = doc.get("id").and_then(Json::as_str).unwrap_or("").to_string();
+    // protocol operations (only `sync` so far) are flagged by the "op"
+    // field, which request objects never carry
+    if let Some(op) = doc.get(OP_KEY).and_then(Json::as_str) {
+        return match op {
+            OP_SYNC => service.export_snapshot().to_json().to_string(),
+            other => PlanResponse::error(
+                &id,
+                format!("unknown op {other:?}; this server understands op \"sync\""),
+            )
+            .to_json()
+            .to_string(),
+        };
+    }
     match doc {
         Json::Arr(items) => {
             // map the already-parsed elements — no second parse of the frame
@@ -340,8 +414,7 @@ fn serve_frame_inner(
                 if req.threads.is_none() {
                     // divide the machine across live connections, exactly
                     // like the batch drain divides across its workers
-                    req.threads =
-                        Some(service.threads_per_request(active.load(Ordering::Relaxed)));
+                    req.threads = Some(service.threads_per_request(active));
                 }
                 service.plan_cancellable(&req, shutdown, None).to_json().to_string()
             }
@@ -375,8 +448,7 @@ mod tests {
     fn serve_frame_maps_bad_input_to_typed_errors() {
         let svc = PlannerService::with_threads(2);
         let shutdown = CancelToken::new();
-        let active = AtomicUsize::new(1);
-        let out = serve_frame(&svc, "{ nope", &shutdown, &active);
+        let out = serve_frame(&svc, "{ nope", &shutdown, 1);
         let resp = PlanResponse::parse(&out).expect("error responses are still valid frames");
         assert_eq!(resp.status, crate::service::Status::Error);
         assert!(resp.error.unwrap().contains("malformed"));
@@ -385,15 +457,30 @@ mod tests {
             &svc,
             r#"{"id":"x1","model":"bert","env":"EnvB","batch":16,"deadline_secs":-5}"#,
             &shutdown,
-            &active,
+            1,
         );
         let resp = PlanResponse::parse(&out).unwrap();
         assert_eq!(resp.id, "x1");
         assert_eq!(resp.status, crate::service::Status::Error);
         // batch frames answer with an array
-        let out = serve_frame(&svc, r#"[{"model":"bert","env":"EnvB"}]"#, &shutdown, &active);
+        let out = serve_frame(&svc, r#"[{"model":"bert","env":"EnvB"}]"#, &shutdown, 1);
         let resp = PlanResponse::parse(&out).unwrap();
         assert_eq!(resp.status, crate::service::Status::Error);
         assert!(resp.error.unwrap().contains("batch"));
+    }
+
+    #[test]
+    fn sync_frames_export_the_snapshot_and_unknown_ops_error() {
+        let svc = PlannerService::with_threads(2);
+        let shutdown = CancelToken::new();
+        // an empty service still answers with a valid (empty) snapshot
+        let out = serve_frame(&svc, r#"{"op":"sync"}"#, &shutdown, 1);
+        let snap = Snapshot::parse(&out).expect("sync reply must be a valid snapshot");
+        assert!(snap.is_empty());
+        // unknown ops are typed errors naming the supported one
+        let out = serve_frame(&svc, r#"{"op":"gossip"}"#, &shutdown, 1);
+        let resp = PlanResponse::parse(&out).unwrap();
+        assert_eq!(resp.status, crate::service::Status::Error);
+        assert!(resp.error.unwrap().contains("sync"));
     }
 }

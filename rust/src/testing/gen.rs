@@ -1,0 +1,236 @@
+//! Shared randomized generators for the test battery (ISSUE 5
+//! satellite): the random chain / plan / request builders that
+//! `chain_equivalence.rs` and `service_api.rs` each used to carry
+//! private copies of, plus the snapshot generator the merge property
+//! tests run on. One seeded source means every suite draws from the
+//! same distribution and a counterexample seed reproduces anywhere.
+
+use std::sync::Arc;
+
+use crate::baselines::BaselineKind;
+use crate::cluster::ClusterEnv;
+use crate::cost::{CostBase, Schedule};
+use crate::graph::{Dtype, Graph, Layer, LayerKind};
+use crate::planner::memo::MemFrontier;
+use crate::planner::{Engine, Plan};
+use crate::profiling::Profile;
+use crate::service::{
+    workload_fingerprint, PlanRequest, PlanResponse, Snapshot, SnapshotMeta, Timings,
+};
+use crate::strategy::strategies_for;
+
+use super::Rng;
+
+/// A heterogeneous random chain: every layer gets its own type key and
+/// randomized FLOPs/params/activations, so objective ties (which would
+/// make "bit-identical plan" ill-posed across tie-breaking orders) have
+/// probability zero.
+pub fn random_chain(rng: &mut Rng, n: usize) -> Graph {
+    let layers = (0..n)
+        .map(|i| Layer {
+            name: format!("l{i}"),
+            type_key: format!("t{i}"),
+            kind: LayerKind::Other,
+            flops_fwd: rng.f64_in(5e10, 3e12),
+            params: rng.f64_in(5e6, 6e7),
+            act_out_bytes: rng.f64_in(5e5, 8e6),
+            act_store_bytes: rng.f64_in(1e6, 2e7),
+        })
+        .collect();
+    Graph::chain("rand", layers, Dtype::Fp32, 128)
+}
+
+/// A structurally valid random plan: contiguous stages over a chain,
+/// in-bounds strategy choices, a real strategy dictionary.
+pub fn random_plan(rng: &mut Rng) -> Plan {
+    let pp = *rng.pick(&[1usize, 2, 4]);
+    let layers = rng.usize_in(pp, pp + 8);
+    let stage_devices = *rng.pick(&[1usize, 2, 4]);
+    let strategies = strategies_for(stage_devices);
+    // contiguous placement: pp non-empty stage sizes summing to `layers`
+    let mut sizes = vec![1usize; pp];
+    for _ in 0..layers - pp {
+        let i = rng.usize_in(0, pp);
+        sizes[i] += 1;
+    }
+    let mut placement = Vec::with_capacity(layers);
+    for (s, &len) in sizes.iter().enumerate() {
+        placement.extend(std::iter::repeat(s).take(len));
+    }
+    let choice = (0..layers).map(|_| rng.usize_in(0, strategies.len())).collect();
+    Plan {
+        pp_size: pp,
+        num_micro: *rng.pick(&[1usize, 2, 4, 8]),
+        batch: *rng.pick(&[8usize, 16, 64]),
+        placement,
+        choice,
+        strategies,
+        est_tpi: rng.f64_in(1e-4, 10.0),
+    }
+}
+
+/// A random (valid) service request over the model zoo and environment
+/// presets, with every optional knob drawn half the time.
+pub fn random_request(rng: &mut Rng) -> PlanRequest {
+    let mut req = PlanRequest::new(
+        &format!("req-{}", rng.usize_in(0, 1000)),
+        rng.pick(&["bert", "t5", "vit", "swin", "llama-7b"]),
+        rng.pick(&["EnvA", "EnvB", "EnvC", "EnvD", "EnvE"]),
+        *rng.pick(&[8usize, 16, 32, 128]),
+    );
+    req.method = *rng.pick(&[
+        BaselineKind::UniAP,
+        BaselineKind::Galvatron,
+        BaselineKind::Alpa,
+        BaselineKind::IntraOnly,
+    ]);
+    req.engine = *rng.pick(&[Engine::Auto, Engine::Chain, Engine::Miqp]);
+    req.schedule = *rng.pick(&[Schedule::GPipe, Schedule::OneF1B]);
+    if rng.bool(0.5) {
+        req.deadline_secs = Some(rng.f64_in(0.1, 60.0));
+    }
+    if rng.bool(0.5) {
+        req.max_pp = Some(*rng.pick(&[1usize, 2, 4, 8]));
+    }
+    if rng.bool(0.5) {
+        req.threads = Some(rng.usize_in(1, 9));
+    }
+    req
+}
+
+/// A random state snapshot whose entries are *real* derived payloads
+/// under their true content keys — cost bases built from random chains
+/// and the memory frontiers of their materialised matrices. Content
+/// keying is what makes snapshot merging a plain union, so the merge
+/// property tests must draw from generators that honour it: two
+/// snapshots that happen to draw the same workload agree on the payload
+/// under the shared key, exactly like two real servers would.
+pub fn random_snapshot(rng: &mut Rng) -> Snapshot {
+    let mut snap = Snapshot::with_meta(SnapshotMeta {
+        writer: format!("w{}", rng.usize_in(0, 8)),
+        seq: rng.usize_in(0, 100),
+    });
+    let env = ClusterEnv::env_b();
+    for _ in 0..rng.usize_in(1, 4) {
+        let n = rng.usize_in(3, 6);
+        let g = random_chain(rng, n);
+        let profile = Profile::analytic(&env, &g);
+        let pp = *rng.pick(&[1usize, 2]);
+        let base = Arc::new(CostBase::new(&profile, &g, pp));
+        let costs = base.materialize(*rng.pick(&[8usize, 16]), 2, Schedule::GPipe);
+        snap.insert_base(workload_fingerprint(&env, &g), base);
+        snap.insert_frontier(
+            MemFrontier::fingerprint(&costs.m, costs.mem_limit),
+            Arc::new(MemFrontier::build(&costs.m, costs.mem_limit)),
+        );
+    }
+    snap
+}
+
+/// Apply one byte-level corpus mutation — flip (`op` 0), overwrite (1),
+/// insert (2), delete (3), truncate (4+) — at `pos` (callers draw
+/// `pos < bytes.len()`). One operator shared by the snapshot-file and
+/// NDJSON-frame fuzz batteries, so a new mutation class lands in every
+/// suite at once.
+pub fn mutate_bytes(bytes: &mut Vec<u8>, op: usize, pos: usize, byte: u8) {
+    match op {
+        0 => bytes[pos] ^= byte | 1, // always changes at least one bit
+        1 => bytes[pos] = byte,
+        2 => bytes.insert(pos, byte),
+        3 => {
+            bytes.remove(pos);
+        }
+        _ => bytes.truncate(pos),
+    }
+}
+
+/// Canonical comparison form of a [`PlanResponse`]: the wall-clock
+/// fields (`timings`, per-candidate `solve_secs`) zeroed, everything
+/// else byte-exact. This is what the golden-response fixtures and the
+/// warmed-vs-cold equivalence tests compare — two solves of one request
+/// must agree on every deterministic byte, and only the clock readings
+/// are not.
+pub fn canonical_response_json(resp: &PlanResponse) -> String {
+    let mut canon = resp.clone();
+    canon.timings = Timings::default();
+    for entry in &mut canon.log {
+        entry.solve_secs = 0.0;
+    }
+    canon.to_json().to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let draw = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let chain = random_chain(&mut rng, 5);
+            let plan = random_plan(&mut rng);
+            let req = random_request(&mut rng);
+            (format!("{chain:?}"), format!("{plan:?}"), format!("{req:?}"))
+        };
+        assert_eq!(draw(7), draw(7));
+        assert_ne!(draw(7), draw(8));
+    }
+
+    #[test]
+    fn random_snapshots_roundtrip_and_are_keyed_consistently() {
+        let mut rng = Rng::new(42);
+        let snap = random_snapshot(&mut rng);
+        assert!(!snap.is_empty());
+        let text = snap.to_json().to_string();
+        let back = Snapshot::parse(&text).unwrap();
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.counts(), snap.counts());
+    }
+
+    #[test]
+    fn mutate_bytes_applies_every_operator() {
+        let orig = b"hello world".to_vec();
+        for op in 0..5 {
+            let mut mutated = orig.clone();
+            mutate_bytes(&mut mutated, op, 3, 0x55);
+            assert_ne!(mutated, orig, "op {op} must change the bytes");
+        }
+        // shape expectations per operator
+        let mut b = orig.clone();
+        mutate_bytes(&mut b, 2, 3, 0x55);
+        assert_eq!(b.len(), orig.len() + 1);
+        let mut b = orig.clone();
+        mutate_bytes(&mut b, 3, 3, 0x55);
+        assert_eq!(b.len(), orig.len() - 1);
+        let mut b = orig.clone();
+        mutate_bytes(&mut b, 4, 3, 0x55);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn canonical_response_zeroes_only_the_clock_fields() {
+        let mut rng = Rng::new(3);
+        let plan = random_plan(&mut rng);
+        let mut resp = PlanResponse {
+            id: "x".into(),
+            status: crate::service::Status::Ok,
+            error: None,
+            plan: Some(plan),
+            log: vec![crate::planner::uop::CandidateLog {
+                pp_size: 2,
+                num_micro: 4,
+                tpi: Some(1.5),
+                solve_secs: 0.25,
+            }],
+            timings: Timings { total_secs: 1.0, profile_secs: 0.5, solve_secs: 0.25 },
+            cache: Default::default(),
+        };
+        let a = canonical_response_json(&resp);
+        resp.timings.total_secs = 9.0;
+        resp.log[0].solve_secs = 7.0;
+        let b = canonical_response_json(&resp);
+        assert_eq!(a, b, "clock fields must not leak into the canonical form");
+        resp.log[0].tpi = Some(2.5);
+        assert_ne!(a, canonical_response_json(&resp), "real drift must show");
+    }
+}

@@ -50,6 +50,195 @@ pub fn write_atomic(path: &Path, contents: &str) -> Result<(), String> {
     })
 }
 
+/// Advisory exclusive lock over a shared state directory (ISSUE 5;
+/// DESIGN.md §Snapshot merging & multi-process state).
+///
+/// N planner servers pointed at one `--state-dir` each write their own
+/// generation file without contention, but the read-merge-write of the
+/// combined `state.json` must not interleave between processes — two
+/// concurrent mergers could each fold in a different sibling and the
+/// rename race would drop one's entries (never corrupt them: renames
+/// stay atomic, so the loss is one round of warmth, not wrong bytes —
+/// the lock exists to close even that gap).
+///
+/// On unix the lock is `flock(2)` on a dedicated `.state.lock` file:
+/// kernel-owned, blocking, and — the property that matters for a
+/// serving fleet — **released automatically when the process dies**, so
+/// a crashed server can never wedge its siblings. Elsewhere a
+/// create-new lock file stands in, with a staleness bound (a lock older
+/// than [`DirLock::STALE_SECS`] is broken) as the crash story.
+#[derive(Debug)]
+pub struct DirLock {
+    /// Held open for the lifetime of the lock: on unix dropping it
+    /// releases the `flock`; on the fallback it is the created file.
+    /// `Option` so Drop can close the handle *before* removing the file
+    /// — removing first would leave a delete-pending file on Windows
+    /// that makes a contender's `create_new` fail spuriously.
+    _file: Option<std::fs::File>,
+    /// Fallback only: the lock file to remove on drop, plus the unique
+    /// token written into it — Drop re-reads the file and removes it
+    /// only while it still carries our token, so a holder whose lock
+    /// was stale-broken can never delete the breaker's fresh lock.
+    /// (`None` on unix — the `.state.lock` file itself persists, the
+    /// kernel lock doesn't.)
+    remove_on_drop: Option<(PathBuf, String)>,
+}
+
+/// Name of the lock file inside a state directory. Dot-prefixed so the
+/// `state*.json` generation glob can never pick it up.
+pub const LOCK_FILE: &str = ".state.lock";
+
+#[cfg(unix)]
+mod flock_sys {
+    use std::os::unix::io::AsRawFd;
+
+    const LOCK_EX: i32 = 2;
+
+    extern "C" {
+        fn flock(fd: i32, operation: i32) -> i32;
+    }
+
+    /// Block until an exclusive `flock` is held on `file`.
+    pub fn lock_exclusive(file: &std::fs::File) -> std::io::Result<()> {
+        loop {
+            if unsafe { flock(file.as_raw_fd(), LOCK_EX) } == 0 {
+                return Ok(());
+            }
+            let e = std::io::Error::last_os_error();
+            if e.kind() != std::io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        }
+    }
+}
+
+impl DirLock {
+    /// Fallback-mode staleness bound, seconds: a create-new lock file
+    /// older than this is presumed orphaned by a crash and broken.
+    pub const STALE_SECS: u64 = 60;
+
+    /// Acquire the exclusive lock for `dir`, blocking until it is held.
+    /// Creates the directory (and the lock file) on first use.
+    pub fn acquire(dir: &Path) -> Result<DirLock, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+        let path = dir.join(LOCK_FILE);
+        #[cfg(unix)]
+        {
+            let file = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .map_err(|e| format!("cannot open lock {}: {e}", path.display()))?;
+            flock_sys::lock_exclusive(&file)
+                .map_err(|e| format!("cannot lock {}: {e}", path.display()))?;
+            Ok(DirLock { _file: Some(file), remove_on_drop: None })
+        }
+        #[cfg(not(unix))]
+        {
+            // Unique holder token, written into the lock file so Drop can
+            // verify ownership. Residual risk, documented: a *live* holder
+            // that stays in the critical section past STALE_SECS can still
+            // be broken — the merged-file write stays atomic (rename), so
+            // the damage is one dropped round of sibling entries, not
+            // corruption; keep critical sections short.
+            // "-"-separated: the token doubles as a file-name suffix in
+            // the stale-break rename, so it must avoid characters that
+            // are invalid in Windows paths (":" notably)
+            static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+            let token = format!(
+                "{}-{}",
+                std::process::id(),
+                SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+            );
+            loop {
+                match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                    Ok(mut file) => {
+                        use std::io::Write as _;
+                        let _ = file.write_all(token.as_bytes());
+                        let _ = file.sync_all();
+                        return Ok(DirLock {
+                            _file: Some(file),
+                            remove_on_drop: Some((path, token)),
+                        });
+                    }
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            // AlreadyExists: someone holds it. Permission
+                            // denied: on Windows, a just-removed lock can
+                            // linger delete-pending and create_new fails
+                            // with ACCESS_DENIED — transient, so retry.
+                            std::io::ErrorKind::AlreadyExists
+                                | std::io::ErrorKind::PermissionDenied
+                        ) =>
+                    {
+                        // break locks orphaned by a crashed holder —
+                        // atomically, via rename to a waiter-unique name:
+                        // of N waiters racing on the same stale file,
+                        // exactly one rename succeeds (the source is gone
+                        // for the rest)
+                        let stale = std::fs::metadata(&path)
+                            .and_then(|m| m.modified())
+                            .ok()
+                            .and_then(|t| t.elapsed().ok())
+                            .map_or(false, |age| age.as_secs() >= DirLock::STALE_SECS);
+                        if stale {
+                            let graveyard =
+                                path.with_file_name(format!("{LOCK_FILE}.broken.{token}"));
+                            if std::fs::rename(&path, &graveyard).is_ok() {
+                                // stat-after-capture is race-free for the
+                                // captured file: if what we grabbed turns
+                                // out to be *fresh* (the stale one was
+                                // replaced between our stat and rename),
+                                // put it back instead of killing a live
+                                // holder's lock; a failed restore (path
+                                // recreated meanwhile) is the documented
+                                // residual two-holder window of this
+                                // best-effort fallback — merged-file
+                                // writes stay atomic, so the cost is one
+                                // dropped round of sibling entries.
+                                let fresh = std::fs::metadata(&graveyard)
+                                    .and_then(|m| m.modified())
+                                    .ok()
+                                    .and_then(|t| t.elapsed().ok())
+                                    .map_or(false, |age| age.as_secs() < DirLock::STALE_SECS);
+                                let restored =
+                                    fresh && std::fs::rename(&graveyard, &path).is_ok();
+                                if !restored {
+                                    let _ = std::fs::remove_file(&graveyard);
+                                }
+                            }
+                            continue;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                    Err(e) => {
+                        return Err(format!("cannot lock {}: {e}", path.display()));
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        // close the handle first: removing an open file on Windows
+        // leaves it delete-pending, which fails contenders' create_new
+        drop(self._file.take());
+        if let Some((path, token)) = &self.remove_on_drop {
+            // remove only our own lock file: if a sibling broke our lock
+            // as stale and created its own, leave theirs in place
+            if std::fs::read_to_string(path).map(|s| s == *token).unwrap_or(false) {
+                let _ = std::fs::remove_file(path);
+            }
+        }
+        // unix: dropping `_file` closes the descriptor, which releases
+        // the flock; the lock file itself stays (it carries no state)
+    }
+}
+
 /// Exact bit encoding of an `f64` as 16 lowercase hex digits.
 pub fn f64_to_hex(x: f64) -> String {
     format!("{:016x}", x.to_bits())
@@ -112,6 +301,45 @@ mod tests {
         let path = dir.join("deep/state.json");
         write_atomic(&path, "x").unwrap();
         assert_eq!(std::fs::read_to_string(&path).unwrap(), "x");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dir_lock_serializes_critical_sections() {
+        let dir = temp_path("lockdir");
+        let _ = std::fs::remove_dir_all(&dir);
+        // two threads contend for the lock while bumping a shared
+        // counter file; the lock must make read-modify-write atomic
+        let dir_ref = &dir;
+        std::fs::create_dir_all(dir_ref).unwrap();
+        std::fs::write(dir_ref.join("counter"), "0").unwrap();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(move || {
+                    for _ in 0..25 {
+                        let _lock = DirLock::acquire(dir_ref).unwrap();
+                        let n: u64 = std::fs::read_to_string(dir_ref.join("counter"))
+                            .unwrap()
+                            .trim()
+                            .parse()
+                            .unwrap();
+                        std::fs::write(dir_ref.join("counter"), format!("{}", n + 1)).unwrap();
+                    }
+                });
+            }
+        });
+        let total: u64 =
+            std::fs::read_to_string(dir.join("counter")).unwrap().trim().parse().unwrap();
+        assert_eq!(total, 100, "lost updates — the lock did not exclude");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dir_lock_is_reacquirable_after_release() {
+        let dir = temp_path("relock");
+        let _ = std::fs::remove_dir_all(&dir);
+        drop(DirLock::acquire(&dir).unwrap());
+        drop(DirLock::acquire(&dir).unwrap());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -18,11 +18,20 @@
 //!   (piped clients often omit the trailing newline), and a clean EOF
 //!   between frames reads as `Ok(None)`.
 
-use std::io::{BufRead, ErrorKind, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
 
 /// Default cap on one frame, bytes. Generous for request batches (a
 /// `PlanRequest` is ~200 bytes), far below anything that hurts.
 pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Field that marks a frame as a protocol operation rather than a
+/// `PlanRequest` (request objects never carry it): `{"op":"sync"}`.
+pub const OP_KEY: &str = "op";
+
+/// The one operation defined so far (ISSUE 5): ask the server for its
+/// exported state snapshot, answered with a full `uniap-state` document
+/// on one line. `uniap serve --sync-from <addr>` is the client.
+pub const OP_SYNC: &str = "sync";
 
 /// Why a frame could not be read.
 #[derive(Debug)]
@@ -157,6 +166,68 @@ pub fn write_frame<W: Write>(writer: &mut W, frame: &str) -> Result<(), String> 
         writer.flush()
     };
     put().map_err(|e| format!("cannot write frame: {e}"))
+}
+
+/// One-shot client exchange: connect to `addr`, send one frame, block
+/// for one reply frame (bounded by `max_reply_bytes`). The transport of
+/// the `sync` pull and other fire-and-collect clients.
+///
+/// Every stage is bounded by `timeout`: connect uses
+/// `TcpStream::connect_timeout`, and the reply read polls a deadline
+/// across a short socket read timeout (the same mechanism the server's
+/// graceful shutdown uses). A peer that accepts the connection and then
+/// never replies therefore costs the caller `timeout`, not forever —
+/// which is what lets `serve --sync-from` promise "a dead peer costs
+/// warmth, never availability".
+pub fn request_response(
+    addr: &str,
+    frame: &str,
+    max_reply_bytes: usize,
+    timeout: std::time::Duration,
+) -> Result<String, String> {
+    use std::net::ToSocketAddrs as _;
+    // one budget for the WHOLE exchange: every stage spends from the
+    // same clock, so connect + write + reply together stay ≤ `timeout`
+    // (connect_timeout rejects a zero duration, hence the 1 ms floor)
+    let t0 = std::time::Instant::now();
+    let remaining = || {
+        timeout.saturating_sub(t0.elapsed()).max(std::time::Duration::from_millis(1))
+    };
+    let addrs = addr.to_socket_addrs().map_err(|e| format!("cannot resolve {addr:?}: {e}"))?;
+    let mut last_err: Option<std::io::Error> = None;
+    let mut stream: Option<std::net::TcpStream> = None;
+    for a in addrs {
+        match std::net::TcpStream::connect_timeout(&a, remaining()) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    let stream = stream.ok_or_else(|| {
+        let why = last_err.map_or_else(|| "no addresses resolved".to_string(), |e| e.to_string());
+        format!("cannot connect to {addr:?}: {why}")
+    })?;
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(100)))
+        .map_err(|e| format!("cannot set read timeout: {e}"))?;
+    stream
+        .set_write_timeout(Some(remaining()))
+        .map_err(|e| format!("cannot set write timeout: {e}"))?;
+    let read_half = stream.try_clone().map_err(|e| format!("cannot clone stream: {e}"))?;
+    let mut writer = BufWriter::new(stream);
+    write_frame(&mut writer, frame)?;
+    let give_up = || t0.elapsed() >= timeout;
+    let mut reader = BufReader::new(read_half);
+    match read_frame(&mut reader, max_reply_bytes, &give_up) {
+        Ok(Some(line)) => Ok(line),
+        Ok(None) => Err(format!(
+            "{addr} sent no reply within {:.0?} (or closed the connection)",
+            timeout
+        )),
+        Err(e) => Err(format!("no reply from {addr}: {e}")),
+    }
 }
 
 #[cfg(test)]

@@ -12,30 +12,10 @@ use std::sync::atomic::AtomicU64;
 
 use uniap::cluster::ClusterEnv;
 use uniap::cost::cost_modeling;
-use uniap::graph::{Dtype, Graph, Layer, LayerKind};
 use uniap::planner::memo::FrontierMemo;
 use uniap::planner::{chain, chain_dense, PlannerConfig};
 use uniap::profiling::Profile;
-use uniap::testing;
-
-/// A heterogeneous random chain: every layer gets its own type key and
-/// randomized FLOPs/params/activations, so objective ties (which would
-/// make "bit-identical plan" ill-posed across tie-breaking orders) have
-/// probability zero.
-fn random_chain(rng: &mut testing::Rng, n: usize) -> Graph {
-    let layers = (0..n)
-        .map(|i| Layer {
-            name: format!("l{i}"),
-            type_key: format!("t{i}"),
-            kind: LayerKind::Other,
-            flops_fwd: rng.f64_in(5e10, 3e12),
-            params: rng.f64_in(5e6, 6e7),
-            act_out_bytes: rng.f64_in(5e5, 8e6),
-            act_store_bytes: rng.f64_in(1e6, 2e7),
-        })
-        .collect();
-    Graph::chain("rand", layers, Dtype::Fp32, 128)
-}
+use uniap::testing::{self, gen::random_chain};
 
 #[test]
 fn sparse_chain_is_bit_identical_to_miqp_on_random_chains() {

@@ -5,6 +5,13 @@
 //! snapshot. Everything must come back as typed responses, never as a
 //! panic, and socket-served plans must be byte-identical to direct
 //! `PlannerService::plan` calls.
+//!
+//! ISSUE 5 extends the battery to the shared-state layer: the `sync`
+//! frame exports a mergeable snapshot over the wire, randomly mutated
+//! NDJSON frames (the fuzz corpus includes the sync frame) always earn
+//! a typed reply, and a state dir littered with truncated / spliced /
+//! binary-garbage multi-writer generation files still loads whatever
+//! validates and serves normally.
 
 use std::io::{BufReader, BufWriter, Write as _};
 use std::net::{SocketAddr, TcpStream};
@@ -12,10 +19,13 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
+use uniap::service::server::{fetch_snapshot, serve_frame};
 use uniap::service::{
     plan_to_json, CancelToken, PlanRequest, PlanResponse, PlannerService, Server, ServerOptions,
-    Status,
+    Snapshot, Status,
 };
+use uniap::testing;
+use uniap::util::json::Json;
 use uniap::util::net::{read_frame, write_frame, FrameError};
 
 /// A server running on an ephemeral loopback port, shut down (and
@@ -242,6 +252,143 @@ fn batch_frames_reuse_serve_cancellable_and_keep_request_order() {
     assert_eq!((first.id.as_str(), second.id.as_str()), ("first", "second"));
     assert!(first.status == Status::Ok && second.status == Status::Ok);
     server.stop().expect("clean shutdown");
+}
+
+#[test]
+fn sync_frame_exports_a_snapshot_that_warms_a_peer_byte_identically() {
+    // generation 1: a warm server on machine "A"
+    let service = Arc::new(PlannerService::with_threads(2));
+    let warm = service.plan(&bert_req("warm-up"));
+    assert_eq!(warm.status, Status::Ok);
+    let want = plan_to_json(warm.plan.as_ref().unwrap()).to_string();
+    let mut server = TestServer::start(service.clone(), ServerOptions::default());
+
+    // raw wire check: one sync frame in, one snapshot document out,
+    // and the same connection still serves plan requests afterwards
+    let (mut reader, mut writer) = server.connect();
+    write_frame(&mut writer, r#"{"op":"sync"}"#).expect("send sync");
+    let never = || false;
+    let line = read_frame(&mut reader, 1 << 30, &never).expect("read").expect("reply");
+    let snap = Snapshot::parse(&line).expect("sync reply must validate as a snapshot");
+    let (frontiers, bases) = snap.counts();
+    assert!(frontiers > 0 && bases > 0, "warm server must export its caches");
+    let resp = round_trip(&mut reader, &mut writer, &bert_req("after-sync").to_json().to_string());
+    assert_eq!(resp.status, Status::Ok, "connection survives a sync frame");
+
+    // client helper ("machine B"): pull + merge, then solve fully warm
+    let peer = fetch_snapshot(&server.addr.to_string(), 1 << 30, Duration::from_secs(60))
+        .expect("fetch_snapshot");
+    assert_eq!(peer.counts(), snap.counts());
+    let fresh = PlannerService::with_threads(2);
+    let (new_f, new_b) = fresh.merge_snapshot(&peer);
+    assert_eq!((new_f, new_b), (frontiers, bases));
+    let warmed = fresh.plan(&bert_req("via-peer"));
+    assert_eq!(warmed.status, Status::Ok);
+    assert_eq!(warmed.cache.base_misses, 0, "peer state covers the sweep: {:?}", warmed.cache);
+    assert_eq!(
+        plan_to_json(warmed.plan.as_ref().unwrap()).to_string(),
+        want,
+        "a server warmed purely from a peer's snapshot must return identical plan bytes"
+    );
+    assert!(fresh.stats().persisted_frontier_hits > 0);
+    server.stop().expect("clean shutdown");
+}
+
+#[test]
+fn mutated_frames_always_earn_a_parseable_reply_and_never_panic() {
+    // Fuzz the exact per-frame entry point the socket loop runs
+    // (serve_frame is shared with the connection handler), over a corpus
+    // of valid frames: a request, a batch, the sync op, and an error
+    // response masquerading as a request. Mutations that break UTF-8 are
+    // repaired lossily — the framing layer's NotUtf8 path has its own
+    // test — so every case exercises the JSON/dispatch layers.
+    let corpus: Vec<String> = vec![
+        bert_req("fuzz").to_json().to_string(),
+        format!(
+            "[{},{}]",
+            bert_req("f1").to_json().to_string(),
+            bert_req("f2").to_json().to_string()
+        ),
+        r#"{"op":"sync"}"#.to_string(),
+        r#"{"op":"gossip","id":"x"}"#.to_string(),
+        r#"{"id":"y","status":"error","error":"echo"}"#.to_string(),
+    ];
+    let svc = PlannerService::with_threads(1);
+    let shutdown = CancelToken::new();
+    testing::check(
+        "ndjson_frame_mutations",
+        60,
+        |rng| {
+            let which = rng.usize_in(0, corpus.len());
+            let op = rng.usize_in(0, 5);
+            let pos = rng.usize_in(0, corpus[which].len());
+            let byte = (rng.next_u32() & 0xff) as u8;
+            (which, op, pos, byte)
+        },
+        |&(which, op, pos, byte)| {
+            let mut bytes = corpus[which].clone().into_bytes();
+            testing::gen::mutate_bytes(&mut bytes, op, pos, byte);
+            let line = String::from_utf8_lossy(&bytes).into_owned();
+            let out = serve_frame(&svc, &line, &shutdown, 1);
+            // whatever happened, the reply must be one parseable JSON
+            // document: a response object, a response array, or (for a
+            // sync frame that survived mutation) a snapshot document
+            Json::parse(&out).map(|_| ()).map_err(|e| {
+                format!("unparseable reply to mutated frame {line:?}: {e}")
+            })
+        },
+    );
+}
+
+#[test]
+fn truncated_and_spliced_generation_files_never_block_serving() {
+    let dir = temp_dir("littered");
+    // one good writer
+    let writer = Arc::new(PlannerService::with_threads(2));
+    let good = writer.plan(&bert_req("good"));
+    assert_eq!(good.status, Status::Ok);
+    writer.save_state_tagged(&dir, "good").expect("save");
+    let good_text = std::fs::read_to_string(dir.join("state.good.json")).unwrap();
+    let (want_f, want_b) =
+        (writer.stats().cached_frontiers, writer.stats().cached_bases);
+
+    // litter the dir with every multi-writer failure mode: a torn
+    // (truncated) generation, two writers' bytes spliced mid-file as if
+    // interleaved through a non-atomic write, and binary garbage
+    std::fs::write(dir.join("state.torn.json"), &good_text[..good_text.len() / 2]).unwrap();
+    let splice = format!(
+        "{}{}",
+        &good_text[..good_text.len() / 3],
+        &good_text[good_text.len() / 2..]
+    );
+    std::fs::write(dir.join("state.spliced.json"), splice).unwrap();
+    std::fs::write(dir.join("state.bin.json"), [0xffu8, 0xfe, 0x00, 0x7b]).unwrap();
+
+    // a restarting server loads exactly the valid state and serves
+    let service = Arc::new(PlannerService::with_threads(2));
+    match service.load_state(&dir) {
+        uniap::service::LoadOutcome::Loaded { frontiers, bases } => {
+            assert_eq!((frontiers, bases), (want_f, want_b), "only the valid file counts");
+        }
+        other => panic!("valid generation must rescue the load, got {other:?}"),
+    }
+    let opts = ServerOptions { state_dir: Some(dir.clone()), ..Default::default() };
+    let mut server = TestServer::start(service, opts);
+    let (mut reader, mut writer_io) = server.connect();
+    let resp =
+        round_trip(&mut reader, &mut writer_io, &bert_req("survivor").to_json().to_string());
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(
+        plan_to_json(resp.plan.as_ref().unwrap()).to_string(),
+        plan_to_json(good.plan.as_ref().unwrap()).to_string(),
+        "litter must not change plan bytes"
+    );
+    server.stop().expect("clean shutdown despite the littered state dir");
+    // the shutdown merge rewrote state.json from whatever validated
+    let merged = std::fs::read_to_string(dir.join("state.json")).unwrap();
+    let snap = Snapshot::parse(&merged).expect("merged state.json must validate");
+    assert_eq!(snap.counts(), (want_f, want_b));
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -3,73 +3,18 @@
 //! warm-vs-cold cache equivalence guarantee, and batch serving with
 //! per-request deadlines.
 
-use uniap::baselines::BaselineKind;
 use uniap::cost::Schedule;
 use uniap::planner::uop::CandidateLog;
-use uniap::planner::{Engine, Plan, PlannerConfig};
+use uniap::planner::PlannerConfig;
 use uniap::service::{
     plan_from_json, plan_to_json, CacheStats, CancelToken, PlanRequest, PlanResponse,
     PlannerService, Status, Timings,
 };
-use uniap::strategy::strategies_for;
-use uniap::testing::{self, Rng};
+use uniap::testing::{
+    self,
+    gen::{random_plan, random_request},
+};
 use uniap::util::json::Json;
-
-/// A structurally valid random plan: contiguous stages over a chain,
-/// in-bounds strategy choices, a real strategy dictionary.
-fn random_plan(rng: &mut Rng) -> Plan {
-    let pp = *rng.pick(&[1usize, 2, 4]);
-    let layers = rng.usize_in(pp, pp + 8);
-    let stage_devices = *rng.pick(&[1usize, 2, 4]);
-    let strategies = strategies_for(stage_devices);
-    // contiguous placement: pp non-empty stage sizes summing to `layers`
-    let mut sizes = vec![1usize; pp];
-    for _ in 0..layers - pp {
-        let i = rng.usize_in(0, pp);
-        sizes[i] += 1;
-    }
-    let mut placement = Vec::with_capacity(layers);
-    for (s, &len) in sizes.iter().enumerate() {
-        placement.extend(std::iter::repeat(s).take(len));
-    }
-    let choice = (0..layers).map(|_| rng.usize_in(0, strategies.len())).collect();
-    Plan {
-        pp_size: pp,
-        num_micro: *rng.pick(&[1usize, 2, 4, 8]),
-        batch: *rng.pick(&[8usize, 16, 64]),
-        placement,
-        choice,
-        strategies,
-        est_tpi: rng.f64_in(1e-4, 10.0),
-    }
-}
-
-fn random_request(rng: &mut Rng) -> PlanRequest {
-    let mut req = PlanRequest::new(
-        &format!("req-{}", rng.usize_in(0, 1000)),
-        rng.pick(&["bert", "t5", "vit", "swin", "llama-7b"]),
-        rng.pick(&["EnvA", "EnvB", "EnvC", "EnvD", "EnvE"]),
-        *rng.pick(&[8usize, 16, 32, 128]),
-    );
-    req.method = *rng.pick(&[
-        BaselineKind::UniAP,
-        BaselineKind::Galvatron,
-        BaselineKind::Alpa,
-        BaselineKind::IntraOnly,
-    ]);
-    req.engine = *rng.pick(&[Engine::Auto, Engine::Chain, Engine::Miqp]);
-    req.schedule = *rng.pick(&[Schedule::GPipe, Schedule::OneF1B]);
-    if rng.bool(0.5) {
-        req.deadline_secs = Some(rng.f64_in(0.1, 60.0));
-    }
-    if rng.bool(0.5) {
-        req.max_pp = Some(*rng.pick(&[1usize, 2, 4, 8]));
-    }
-    if rng.bool(0.5) {
-        req.threads = Some(rng.usize_in(1, 9));
-    }
-    req
-}
 
 #[test]
 fn plan_json_roundtrip_property() {

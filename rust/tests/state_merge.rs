@@ -1,0 +1,290 @@
+//! The shared-state test battery (ISSUE 5): snapshot merging is a
+//! *lawful* union — commutative, associative, idempotent on the emitted
+//! bytes — and merged state can never change a plan's bytes, whether it
+//! arrives through a merge-order permutation, a sibling generation file
+//! in a shared `--state-dir`, or a peer's `sync` export. The fuzz half
+//! mutates valid snapshot files byte-by-byte and requires the loader to
+//! land in a typed cold start (or a benign load), never a panic.
+
+use std::path::PathBuf;
+
+use uniap::service::{
+    plan_to_json, LoadOutcome, PlanRequest, PlanResponse, PlannerService, Snapshot, Status,
+};
+use uniap::testing::{
+    self,
+    gen::{canonical_response_json, mutate_bytes, random_snapshot},
+};
+
+fn temp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("uniap-state-merge-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn bert_req(id: &str) -> PlanRequest {
+    let mut req = PlanRequest::new(id, "bert", "EnvB", 16);
+    req.max_pp = Some(2); // keep test sweeps small
+    req
+}
+
+fn enva_req(id: &str) -> PlanRequest {
+    let mut req = PlanRequest::new(id, "bert", "EnvA", 32);
+    req.max_pp = Some(2);
+    req
+}
+
+/// The deterministic bytes of a response: correlation id and cache
+/// counters zeroed on top of the shared canonical form (a
+/// snapshot-warmed solve legitimately reports hits where a cold one
+/// reports misses), everything the *planner* decided — status, plan,
+/// candidate log TPIs — byte-exact.
+fn solver_bytes(resp: &PlanResponse) -> String {
+    let mut canon = resp.clone();
+    canon.id = String::new();
+    canon.cache = Default::default();
+    canonical_response_json(&canon)
+}
+
+#[test]
+fn merge_is_commutative_associative_and_idempotent() {
+    testing::check(
+        "merge_laws_on_snapshot_bytes",
+        8,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = testing::Rng::new(seed);
+            let a = random_snapshot(&mut rng);
+            let b = random_snapshot(&mut rng);
+            let c = random_snapshot(&mut rng);
+            let bytes = |s: &Snapshot| s.to_json().to_string();
+
+            let ab = a.clone().merge(b.clone());
+            let ba = b.clone().merge(a.clone());
+            if bytes(&ab) != bytes(&ba) {
+                return Err("merge is not commutative".to_string());
+            }
+            let ab_c = ab.clone().merge(c.clone());
+            let a_bc = a.clone().merge(b.clone().merge(c.clone()));
+            if bytes(&ab_c) != bytes(&a_bc) {
+                return Err("merge is not associative".to_string());
+            }
+            if bytes(&a.clone().merge(a.clone())) != bytes(&a) {
+                return Err("merge is not idempotent".to_string());
+            }
+            // and the merged document still validates end to end
+            let back = Snapshot::parse(&bytes(&ab_c)).map_err(|e| format!("reparse: {e}"))?;
+            if back.to_json().to_string() != bytes(&ab_c) {
+                return Err("merged document lost emit∘parse identity".to_string());
+            }
+            if back.counts() != ab_c.counts() {
+                return Err("merged counts drifted across the wire".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The acceptance property: a service preloaded from *any* merge order
+/// of real snapshots answers byte-identically to a cold solve.
+#[test]
+fn any_merge_order_preloaded_yields_cold_solve_bytes() {
+    let req = bert_req("probe");
+    let cold = PlannerService::with_threads(2).plan(&req);
+    assert_eq!(cold.status, Status::Ok);
+    let want = solver_bytes(&cold);
+
+    // two writers with overlapping-but-different state: one knows the
+    // probe workload, the other a different environment
+    let writer_a = PlannerService::with_threads(2);
+    assert_eq!(writer_a.plan(&bert_req("warm-a")).status, Status::Ok);
+    let snap_a = writer_a.export_snapshot();
+    let writer_b = PlannerService::with_threads(2);
+    assert_eq!(writer_b.plan(&enva_req("warm-b")).status, Status::Ok);
+    let snap_b = writer_b.export_snapshot();
+
+    for (label, merged) in [
+        ("a∪b", snap_a.clone().merge(snap_b.clone())),
+        ("b∪a", snap_b.clone().merge(snap_a.clone())),
+        ("a∪a∪b", snap_a.clone().merge(snap_a.clone()).merge(snap_b.clone())),
+    ] {
+        let svc = PlannerService::with_threads(2);
+        let (new_f, new_b) = svc.merge_snapshot(&merged);
+        assert!(new_f > 0 && new_b > 0, "{label}: nothing preloaded");
+        let resp = svc.plan(&req);
+        assert_eq!(resp.status, Status::Ok, "{label}");
+        assert_eq!(solver_bytes(&resp), want, "{label}: merged state changed the bytes");
+        assert_eq!(resp.cache.base_misses, 0, "{label}: bases must come from the merge");
+        assert!(svc.stats().persisted_frontier_hits > 0, "{label}: frontiers unused");
+    }
+}
+
+/// Acceptance criterion: a server warmed *purely* from a peer's merged
+/// snapshot returns byte-identical responses to its own cold solve —
+/// the in-memory half of what the CI multi-process smoke job drives
+/// over real sockets.
+#[test]
+fn peer_snapshot_warms_a_cold_server_to_identical_bytes() {
+    let req = bert_req("peer-probe");
+    // the peer solved the workload and exports its snapshot (this is
+    // exactly what the `sync` frame serves)
+    let peer = PlannerService::with_threads(2);
+    let peer_resp = peer.plan(&req);
+    assert_eq!(peer_resp.status, Status::Ok);
+    let exported = peer.export_snapshot();
+
+    // wire round-trip: the sync frame carries the serialized document
+    let wired = Snapshot::parse(&exported.to_json().to_string()).expect("export validates");
+
+    let fresh = PlannerService::with_threads(2);
+    let (frontiers, bases) = fresh.merge_snapshot(&wired);
+    assert!(frontiers > 0 && bases > 0);
+    let warmed = fresh.plan(&req);
+    assert_eq!(warmed.status, Status::Ok);
+    assert_eq!(warmed.cache.base_misses, 0, "fully warm from the peer: {:?}", warmed.cache);
+    assert!(fresh.stats().persisted_frontier_hits > 0);
+
+    let cold = PlannerService::with_threads(2).plan(&req);
+    assert_eq!(
+        solver_bytes(&warmed),
+        solver_bytes(&cold),
+        "peer-warmed solve must be byte-identical to a cold solve"
+    );
+    assert_eq!(
+        plan_to_json(warmed.plan.as_ref().unwrap()).to_string(),
+        plan_to_json(cold.plan.as_ref().unwrap()).to_string(),
+    );
+}
+
+/// Multi-process serving behind one state dir, in miniature: two tagged
+/// writers save into one directory; a third service loads the union and
+/// serves both workloads fully warm, byte-identical to cold solves.
+#[test]
+fn shared_state_dir_converges_to_the_union_of_writers() {
+    let dir = temp_dir("union");
+    let req_b = bert_req("envb");
+    let req_a = enva_req("enva");
+
+    let writer_1 = PlannerService::with_threads(2);
+    let cold_b = writer_1.plan(&req_b);
+    assert_eq!(cold_b.status, Status::Ok);
+    writer_1.save_state_tagged(&dir, "w1").expect("save w1");
+
+    let writer_2 = PlannerService::with_threads(2);
+    let cold_a = writer_2.plan(&req_a);
+    assert_eq!(cold_a.status, Status::Ok);
+    writer_2.save_state_tagged(&dir, "w2").expect("save w2");
+
+    // writer 2's save absorbed writer 1's generation (cooperative
+    // warming): it now serves the other workload without a base build
+    let cross = writer_2.plan(&bert_req("cross"));
+    assert_eq!(cross.status, Status::Ok);
+    assert_eq!(cross.cache.base_misses, 0, "{:?}", cross.cache);
+    assert_eq!(solver_bytes(&cross), solver_bytes(&cold_b));
+
+    // a restarted third process sees the union through state.json
+    let restarted = PlannerService::with_threads(2);
+    let LoadOutcome::Loaded { frontiers, bases } = restarted.load_state(&dir) else {
+        panic!("union state dir must load");
+    };
+    assert!(frontiers > 0 && bases > 0);
+    for (req, want) in [(&req_b, solver_bytes(&cold_b)), (&req_a, solver_bytes(&cold_a))] {
+        let resp = restarted.plan(req);
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(resp.cache.base_misses, 0, "{:?}", resp.cache);
+        assert_eq!(solver_bytes(&resp), want, "union state changed plan bytes");
+    }
+    assert!(restarted.stats().persisted_frontier_hits > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Fuzz corpus over the snapshot file bytes: flip, overwrite, insert,
+/// delete, truncate and splice random positions of a valid snapshot —
+/// the loader must always return a `LoadOutcome` (typed cold start or a
+/// benign load), never panic, and must never report *more* state than
+/// the pristine file held.
+#[test]
+fn mutated_snapshot_files_never_panic_the_loader() {
+    let dir = temp_dir("fuzz");
+    let svc = PlannerService::with_threads(2);
+    assert_eq!(svc.plan(&bert_req("fuzz-seed")).status, Status::Ok);
+    let path = svc.save_state(&dir).expect("save");
+    let pristine = std::fs::read(&path).expect("read snapshot bytes");
+    let (max_f, max_b) = (svc.stats().cached_frontiers, svc.stats().cached_bases);
+    // fuzz a single-file directory: the mutation must be the only input
+    let fuzz_dir = temp_dir("fuzz-case");
+    std::fs::create_dir_all(&fuzz_dir).unwrap();
+    let fuzz_path = fuzz_dir.join("state.json");
+
+    testing::check(
+        "snapshot_byte_mutations",
+        60,
+        |rng| {
+            let op = rng.usize_in(0, 5);
+            let pos = rng.usize_in(0, pristine.len());
+            let byte = (rng.next_u32() & 0xff) as u8;
+            (op, pos, byte)
+        },
+        |&(op, pos, byte)| {
+            let mut bytes = pristine.clone();
+            mutate_bytes(&mut bytes, op, pos, byte);
+            std::fs::write(&fuzz_path, &bytes).map_err(|e| e.to_string())?;
+            let fresh = PlannerService::with_threads(1);
+            // must not panic; a benign mutation (e.g. whitespace-free
+            // equivalence) may still load, but never *grow* the state
+            match fresh.load_state(&fuzz_dir) {
+                LoadOutcome::ColdStart { .. } => Ok(()),
+                LoadOutcome::Loaded { frontiers, bases } => {
+                    if frontiers <= max_f && bases <= max_b {
+                        Ok(())
+                    } else {
+                        Err(format!(
+                            "mutation conjured state: {frontiers}/{bases} vs {max_f}/{max_b}"
+                        ))
+                    }
+                }
+            }
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&fuzz_dir);
+}
+
+/// A second fuzz pass at the *merge* layer: two valid snapshot texts
+/// spliced at random boundaries. Splices either fail validation (typed
+/// error) or — when they happen to form a valid document — merge
+/// losslessly with a real snapshot.
+#[test]
+fn spliced_snapshot_documents_fail_closed() {
+    let a_svc = PlannerService::with_threads(2);
+    assert_eq!(a_svc.plan(&bert_req("splice-a")).status, Status::Ok);
+    let a = a_svc.export_snapshot().to_json().to_string().into_bytes();
+    let b_svc = PlannerService::with_threads(2);
+    assert_eq!(b_svc.plan(&enva_req("splice-b")).status, Status::Ok);
+    let b = b_svc.export_snapshot().to_json().to_string().into_bytes();
+    let real = a_svc.export_snapshot();
+
+    testing::check(
+        "snapshot_splices",
+        40,
+        |rng| (rng.usize_in(0, a.len()), rng.usize_in(0, b.len())),
+        |&(cut_a, cut_b)| {
+            let mut spliced = a[..cut_a].to_vec();
+            spliced.extend_from_slice(&b[cut_b..]);
+            let Ok(text) = String::from_utf8(spliced) else {
+                return Ok(()); // not even UTF-8: the reader rejects it earlier
+            };
+            match Snapshot::parse(&text) {
+                Err(_) => Ok(()), // typed rejection — the expected outcome
+                Ok(snap) => {
+                    // the astronomically rare valid splice must still
+                    // merge lawfully
+                    let merged = real.clone().merge(snap);
+                    Snapshot::parse(&merged.to_json().to_string())
+                        .map(|_| ())
+                        .map_err(|e| format!("valid splice broke the merge: {e}"))
+                }
+            }
+        },
+    );
+}
