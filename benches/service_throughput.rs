@@ -34,6 +34,11 @@
 //! delta to the cold row is what cross-machine state sync buys a
 //! just-booted server; `peer_warm_speedup` records the ratio.
 //!
+//! ISSUE 6 adds the **load-shed** row: a zero-slot server answering
+//! `busy` over the same loopback path. Shedding must be cheaper than
+//! serving (`shed_latency_vs_warm_socket` > 1) or admission control
+//! would protect nothing.
+//!
 //! Run: `cargo bench --bench service_throughput`
 //! CI smoke: `UNIAP_BENCH_SMOKE=1` shrinks rows to single unwarmed
 //! samples.
@@ -233,6 +238,53 @@ fn main() {
         .join()
         .expect("server thread must not panic")
         .expect("server run() must exit cleanly");
+
+    // --- load-shed latency (ISSUE 6) -------------------------------------
+    // Admission control's bound: a server with zero in-flight slots must
+    // answer `busy` *faster* than a healthy server plans a warm repeat —
+    // shedding that costs more than serving would be no protection at
+    // all. `shed_latency_vs_warm_socket` records warm-time / shed-time
+    // (gate: > 1).
+    section("load shedding (admission control, max_inflight 0)");
+    let shed_server = Server::bind("127.0.0.1:0").expect("ephemeral bind");
+    let shed_addr = shed_server.local_addr();
+    let shed_shutdown = CancelToken::new();
+    let shed_thread = {
+        let svc = svc.clone();
+        let shutdown = shed_shutdown.clone();
+        let opts = ServerOptions { max_inflight: 0, ..Default::default() };
+        std::thread::spawn(move || shed_server.run(&svc, &opts, &shutdown))
+    };
+    let stream = TcpStream::connect(shed_addr).expect("connect to shed server");
+    let read_half = stream.try_clone().expect("clone stream");
+    let mut shed_reader = BufReader::new(read_half);
+    let mut shed_writer = BufWriter::new(stream);
+    let mut shed_round = || -> PlanResponse {
+        write_frame(&mut shed_writer, &frame).expect("send");
+        let line = read_frame(&mut shed_reader, 1 << 24, &never)
+            .expect("read")
+            .expect("server alive");
+        PlanResponse::parse(&line).expect("typed response")
+    };
+    let shed = shed_round();
+    assert_eq!(shed.status, Status::Busy, "zero slots must shed every request");
+    rep.bench("busy shed over socket (max_inflight 0)", w(2), s(10), || {
+        std::hint::black_box(shed_round());
+    });
+    if let Some(ratio) = rep.speedup(
+        "service warm over socket (strict repeat, loopback)",
+        "busy shed over socket (max_inflight 0)",
+    ) {
+        println!("shed latency vs warm socket serve: {ratio:.1}× faster to shed");
+        rep.note("shed_latency_vs_warm_socket", ratio);
+    }
+    drop(shed_writer);
+    drop(shed_reader);
+    shed_shutdown.cancel();
+    shed_thread
+        .join()
+        .expect("shed server thread must not panic")
+        .expect("shed server run() must exit cleanly");
 
     match rep.write() {
         Ok(path) => println!("wrote {}", path.display()),

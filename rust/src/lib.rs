@@ -27,8 +27,8 @@
 //! | [`cost`] | time + memory cost models → A, R, R′, M matrices (§3.2) |
 //! | [`miqp`] | general MIQP solver: linearisation, simplex, branch & bound + per-stage dominance pruning (§3.3) |
 //! | [`planner`] | chain-exact solver (row-parallel interval DP), QIP intra-only, cross-candidate frontier memo, UOP (Alg. 1) |
-//! | [`service`] | planner-as-a-service: typed PlanRequest/PlanResponse, cross-request profile + batch-generic cost-base + frontier caches, LRU-bounded outcome replay, cancellation/deadlines, batch drain, `serve --listen` socket server + persistent state snapshots, snapshot merging for multi-process state dirs and cross-machine `sync` pulls |
-//! | [`util`] | divisors/stats helpers, hand-rolled JSON (with non-finite sentinels), FNV content hashing, cancel tokens, process-wide thread budget + row fan-out pool, NDJSON socket framing, atomic file IO + state-dir advisory lock |
+//! | [`service`] | planner-as-a-service: typed PlanRequest/PlanResponse, cross-request profile + batch-generic cost-base + frontier caches, LRU-bounded outcome replay, cancellation/deadlines, batch drain, `serve --listen` socket server + persistent state snapshots, snapshot merging for multi-process state dirs and cross-machine `sync` pulls, admission control with typed `busy` load shedding + health probes + background peer re-sync |
+//! | [`util`] | divisors/stats helpers, hand-rolled JSON (with non-finite sentinels), FNV content hashing, cancel tokens, process-wide thread budget + row fan-out pool, NDJSON socket framing + capped-exponential retry backoff, atomic file IO (fsynced) + state-dir advisory lock, scriptable fault injection (`UNIAP_FAULTS`) |
 //! | [`baselines`] | Galvatron, Alpa-like, Megatron grid, DeepSpeed, inter-/intra-only |
 //! | [`sim`] | discrete-event GPipe pipeline simulator (ground truth) |
 //! | `runtime` | PJRT artifact loading + execution (feature `pjrt`) |

@@ -44,13 +44,17 @@ COMMANDS:
              drains the request file through one shared PlannerService
              --listen <host:port> [--state-dir DIR] [--snapshot-secs N]
              [--max-frame-bytes N] [--sync-from <host:port>]
+             [--max-connections N] [--max-inflight N] [--resync-secs N]
              long-running socket mode: one JSON request (or array) per
              line in, one response line out; ctrl-c shuts down gracefully
              and, with --state-dir, persists the planner caches for the
              next start. Several servers may share one --state-dir (each
              writes its own generation file and they merge). --sync-from
              additionally pulls a peer server's snapshot at startup and
-             merges it, warming this server from another machine
+             merges it, warming this server from another machine; a peer
+             that is down at boot degrades to a background re-sync every
+             --resync-secs. Load beyond --max-connections/--max-inflight
+             is shed with a typed \"busy\" response
              --connect <host:port> --requests <file.json> [--pretty]
              client mode: send the request file to a listening server
              --sync-from <host:port> --state-dir DIR
@@ -246,6 +250,12 @@ fn cmd_serve_listen(args: &Args) -> Result<(), String> {
         max_frame_bytes: args
             .get_usize("max-frame-bytes", uniap::util::net::DEFAULT_MAX_FRAME_BYTES)?,
         watch_sigint: true,
+        max_connections: args
+            .get_usize("max-connections", uniap::service::server::DEFAULT_MAX_CONNECTIONS)?,
+        max_inflight: args
+            .get_usize("max-inflight", uniap::service::server::DEFAULT_MAX_INFLIGHT)?,
+        sync_from: args.opt("sync-from").map(str::to_string),
+        resync_secs: args.get_f64("resync-secs", 300.0)?,
     };
     let service = PlannerService::new();
     if let Some(dir) = &opts.state_dir {
@@ -263,17 +273,45 @@ fn cmd_serve_listen(args: &Args) -> Result<(), String> {
     }
     if let Some(peer) = args.opt("sync-from") {
         // warm from a peer machine before accepting traffic; a dead or
-        // confused peer costs warmth, never availability
-        match uniap::service::server::fetch_snapshot(
-            peer,
-            uniap::service::server::DEFAULT_MAX_SYNC_BYTES,
-            uniap::service::server::DEFAULT_SYNC_TIMEOUT,
-        ) {
-            Ok(snap) => {
-                let (frontiers, bases) = service.merge_snapshot(&snap);
-                eprintln!("synced from {peer}: merged {frontiers} new frontiers, {bases} new cost bases");
+        // confused peer costs warmth, never availability (ISSUE 6): a
+        // cheap health probe decides whether the full pull is worth
+        // retrying at boot at all, transient failures back off and
+        // retry within the sync budget, and a peer that stays down
+        // degrades to the server's background re-sync tick
+        match uniap::service::server::probe_health(peer, std::time::Duration::from_secs(2)) {
+            Ok(()) => {
+                let mut retries = 0usize;
+                let sync = uniap::service::server::fetch_snapshot_retrying(
+                    peer,
+                    uniap::service::server::DEFAULT_MAX_SYNC_BYTES,
+                    uniap::service::server::DEFAULT_SYNC_TIMEOUT,
+                    &mut |attempt, err| {
+                        retries += 1;
+                        eprintln!("sync from {peer} attempt {attempt} failed ({err}) — retrying");
+                    },
+                );
+                service.note_sync_retries(retries);
+                match sync {
+                    Ok(snap) => {
+                        let (frontiers, bases) = service.merge_snapshot(&snap);
+                        eprintln!(
+                            "synced from {peer}: merged {frontiers} new frontiers, \
+                             {bases} new cost bases"
+                        );
+                    }
+                    Err(e) => eprintln!(
+                        "sync from {peer} failed ({e}) — starting with local state \
+                         and re-syncing in the background"
+                    ),
+                }
             }
-            Err(e) => eprintln!("sync from {peer} failed ({e}) — continuing with local state"),
+            Err(e) => {
+                service.note_sync_retries(1);
+                eprintln!(
+                    "peer {peer} is not answering ({e}) — starting with local state \
+                     and re-syncing in the background"
+                );
+            }
         }
     }
     let server = uniap::service::Server::bind(&addr)?;
@@ -289,12 +327,17 @@ fn cmd_serve_listen(args: &Args) -> Result<(), String> {
     let stats = service.stats();
     eprintln!(
         "shut down after {} connections, {} requests ({} plan-cache hits, \
-         {} persisted-frontier hits, {} snapshots written)",
+         {} persisted-frontier hits, {} snapshots written; \
+         {} requests shed, {} accept errors, {} sync retries, {} faults injected)",
         stats.connections,
         stats.requests,
         stats.plan_hits,
         stats.persisted_frontier_hits,
         stats.snapshots_written,
+        stats.requests_shed,
+        stats.accept_errors,
+        stats.sync_retries,
+        stats.faults_injected,
     );
     Ok(())
 }
@@ -325,15 +368,19 @@ fn cmd_serve_connect(args: &Args) -> Result<(), String> {
         .ok_or("server closed the connection without responding")?;
     let parsed = Json::parse(&reply)?;
     println!("{}", if args.flag("pretty") { parsed.to_pretty() } else { parsed.to_string() });
-    // frame-level failures (oversized frame, malformed batch) come back
-    // as a single error *object*, not an array — exit non-zero for both
-    let is_error = |r: &Json| r.get("status").and_then(Json::as_str) == Some("error");
+    // frame-level failures (oversized frame, malformed batch, load shed)
+    // come back as a single *object*, not an array — exit non-zero for
+    // both; a "busy" shed is a failure for a one-shot client too (the
+    // caller owns the retry policy, and a script must see the miss)
+    let is_error = |r: &Json| {
+        matches!(r.get("status").and_then(Json::as_str), Some("error") | Some("busy"))
+    };
     let n_err = match parsed.as_arr() {
         Some(items) => items.iter().filter(|r| is_error(r)).count(),
         None => is_error(&parsed) as usize,
     };
     if n_err > 0 {
-        return Err(format!("{n_err} response(s) came back with status \"error\""));
+        return Err(format!("{n_err} response(s) came back with status \"error\" or \"busy\""));
     }
     Ok(())
 }
@@ -353,10 +400,13 @@ fn cmd_serve_sync(args: &Args) -> Result<(), String> {
     if let uniap::service::LoadOutcome::Loaded { frontiers, bases } = service.load_state(&dir) {
         eprintln!("local state: {frontiers} frontiers, {bases} cost bases");
     }
-    let snap = uniap::service::server::fetch_snapshot(
+    let snap = uniap::service::server::fetch_snapshot_retrying(
         &peer,
         uniap::service::server::DEFAULT_MAX_SYNC_BYTES,
         uniap::service::server::DEFAULT_SYNC_TIMEOUT,
+        &mut |attempt, err| {
+            eprintln!("sync from {peer} attempt {attempt} failed ({err}) — retrying")
+        },
     )?;
     let (frontiers, bases) = service.merge_snapshot(&snap);
     let path = service.save_state(&dir)?;

@@ -226,6 +226,12 @@ struct Totals {
     /// Entries restored from a persisted `--state-dir` snapshot.
     persisted_frontiers_loaded: AtomicUsize,
     persisted_bases_loaded: AtomicUsize,
+    /// Requests/connections shed by admission control (ISSUE 6).
+    requests_shed: AtomicUsize,
+    /// Accept-loop errors absorbed by the backoff path.
+    accept_errors: AtomicUsize,
+    /// Sync attempts that failed and were retried (boot + background).
+    sync_retries: AtomicUsize,
 }
 
 /// Snapshot of the service's lifetime statistics.
@@ -258,6 +264,16 @@ pub struct ServiceStats {
     /// …and how often the restored frontiers actually served a solve —
     /// the counter that proves a restart warm-started (ISSUE 4).
     pub persisted_frontier_hits: usize,
+    /// Requests/connections shed with a typed `busy` response (ISSUE 6).
+    pub requests_shed: usize,
+    /// Accept-loop errors absorbed by the capped backoff path.
+    pub accept_errors: usize,
+    /// Failed-then-retried sync attempts (boot probe + background tick).
+    pub sync_retries: usize,
+    /// Faults injected by an armed `UNIAP_FAULTS` plan. Process-global
+    /// (the fault layer predates any service), surfaced here so chaos
+    /// runs can assert their plan actually fired; 0 in production.
+    pub faults_injected: usize,
 }
 
 /// The long-lived planner front end (see module docs). Cheap to share by
@@ -343,12 +359,35 @@ impl PlannerService {
                 .load(Ordering::Relaxed),
             persisted_bases_loaded: self.totals.persisted_bases_loaded.load(Ordering::Relaxed),
             persisted_frontier_hits: self.frontiers.persisted_hits(),
+            requests_shed: self.totals.requests_shed.load(Ordering::Relaxed),
+            accept_errors: self.totals.accept_errors.load(Ordering::Relaxed),
+            sync_retries: self.totals.sync_retries.load(Ordering::Relaxed),
+            faults_injected: crate::util::fault::injected_total(),
         }
     }
 
     /// Record one accepted socket connection (called by [`Server`]).
     pub(crate) fn note_connection(&self) {
         self.totals.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one load-shed (`busy`) response (called by [`Server`]).
+    pub(crate) fn note_shed(&self) {
+        self.totals.requests_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one accept-loop error (called by [`Server`]'s backoff path).
+    pub(crate) fn note_accept_error(&self) {
+        self.totals.accept_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` failed-then-retried sync attempts. Public: the CLI's
+    /// boot-time sync path counts its own retries into the serving
+    /// service so the shutdown summary reflects them.
+    pub fn note_sync_retries(&self, n: usize) {
+        if n > 0 {
+            self.totals.sync_retries.fetch_add(n, Ordering::Relaxed);
+        }
     }
 
     /// Entry counts of the two persisted caches — the snapshot tick's

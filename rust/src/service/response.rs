@@ -25,6 +25,10 @@ pub enum Status {
     DeadlineExceeded,
     /// The request itself was invalid (unknown model/env, parse error…).
     Error,
+    /// The server shed this request under overload (ISSUE 6): nothing
+    /// was planned, nothing was cached — retry later with backoff. The
+    /// typed load-shed contract: overload is an answer, not a hang.
+    Busy,
 }
 
 impl Status {
@@ -36,6 +40,7 @@ impl Status {
             Status::Cancelled => "cancelled",
             Status::DeadlineExceeded => "deadline",
             Status::Error => "error",
+            Status::Busy => "busy",
         }
     }
 
@@ -47,6 +52,7 @@ impl Status {
             "cancelled" => Some(Status::Cancelled),
             "deadline" => Some(Status::DeadlineExceeded),
             "error" => Some(Status::Error),
+            "busy" => Some(Status::Busy),
             _ => None,
         }
     }
@@ -202,6 +208,21 @@ impl PlanResponse {
         PlanResponse {
             id: id.to_string(),
             status: Status::Error,
+            error: Some(message),
+            plan: None,
+            log: Vec::new(),
+            timings: Timings::default(),
+            cache: CacheStats::default(),
+        }
+    }
+
+    /// A load-shed response (ISSUE 6): the server is over its admission
+    /// limits and did not plan this request. Shed before parsing, the
+    /// frame's id is unknown — an empty `id` is part of the contract.
+    pub fn busy(id: &str, message: String) -> PlanResponse {
+        PlanResponse {
+            id: id.to_string(),
+            status: Status::Busy,
             error: Some(message),
             plan: None,
             log: Vec::new(),
@@ -405,10 +426,22 @@ mod tests {
             Status::Cancelled,
             Status::DeadlineExceeded,
             Status::Error,
+            Status::Busy,
         ] {
             assert_eq!(Status::by_key(s.key()), Some(s));
         }
         assert_eq!(Status::by_key("nope"), None);
+    }
+
+    #[test]
+    fn busy_response_roundtrip() {
+        // shed happens before request parsing, so the id may be empty
+        let resp = PlanResponse::busy("", "server at max_inflight (64), retry later".to_string());
+        let back = PlanResponse::parse(&resp.to_json().to_string()).unwrap();
+        assert_eq!(back.status, Status::Busy);
+        assert_eq!(back.id, "");
+        assert!(back.error.unwrap().contains("retry"));
+        assert!(back.plan.is_none());
     }
 
     #[test]

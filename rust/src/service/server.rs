@@ -37,19 +37,33 @@
 //!   with the server's exported state snapshot (one `uniap-state`
 //!   document on one line). [`fetch_snapshot`] is the client half:
 //!   `uniap serve --sync-from <addr>` pulls a peer's snapshot and
-//!   merges it, which is how warm caches cross machines.
+//!   merges it, which is how warm caches cross machines;
+//! * **admission control** (ISSUE 6) — at most `max_connections` live
+//!   connections and `max_inflight` frames being served at once; excess
+//!   load is shed with a typed `busy` response in bounded time instead
+//!   of queueing unboundedly. `{"op":"health"}` answers a tiny
+//!   readiness frame without touching the planner, and the accept
+//!   loop's error path backs off with a capped sleep (EMFILE and
+//!   friends used to spin hot);
+//! * **graceful degradation** (ISSUE 6) — a `sync_from` peer that is
+//!   down costs warmth, never availability: the boot path logs and
+//!   continues cold, and a background re-sync tick keeps retrying with
+//!   capped backoff until the peer answers.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::util::cancel::CancelToken;
+use crate::util::fault::{self, Injected, Site};
+use crate::util::hash::Fnv;
 use crate::util::json::Json;
 use crate::util::net::{
-    drain_frame, read_frame, request_response, write_frame, FrameError, DEFAULT_MAX_FRAME_BYTES,
-    OP_KEY, OP_SYNC,
+    drain_frame, read_frame, request_response, write_frame, Backoff, FrameError,
+    DEFAULT_MAX_FRAME_BYTES, OP_HEALTH, OP_KEY, OP_SYNC,
 };
 
 use super::{PlanRequest, PlanResponse, PlannerService, Snapshot};
@@ -64,6 +78,26 @@ pub const DEFAULT_MAX_SYNC_BYTES: usize = 1 << 30;
 /// a wedged peer delays a booting server, never wedges it.
 pub const DEFAULT_SYNC_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// Default cap on concurrently live connections (ISSUE 6). Beyond it an
+/// accepted socket gets one `busy` frame and an immediate close —
+/// bounded thread count, bounded memory, typed refusal.
+pub const DEFAULT_MAX_CONNECTIONS: usize = 256;
+
+/// Default cap on frames being served at once across all connections
+/// (ISSUE 6). A frame arriving with every slot taken is answered `busy`
+/// without being parsed; the connection stays open for a later retry.
+pub const DEFAULT_MAX_INFLIGHT: usize = 64;
+
+/// Bound on one background re-sync pull. Tighter than
+/// [`DEFAULT_SYNC_TIMEOUT`]: the tick retries forever anyway, and the
+/// server's shutdown join must not wait half a minute on a wedged peer.
+const BG_SYNC_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Backoff schedule for the background re-sync tick while the peer
+/// keeps failing (capped; jittered per peer address).
+const RESYNC_BACKOFF: Backoff =
+    Backoff { initial: Duration::from_millis(500), max: Duration::from_secs(60) };
+
 /// Pull a peer server's exported state snapshot over the `sync` frame,
 /// bounded end to end by `timeout` (see [`DEFAULT_SYNC_TIMEOUT`]). The
 /// reply is validated like any snapshot (format, version, checksum,
@@ -76,15 +110,82 @@ pub fn fetch_snapshot(
 ) -> Result<Snapshot, String> {
     let frame = Json::obj().field(OP_KEY, OP_SYNC).to_string();
     let reply = request_response(addr, &frame, max_reply_bytes, timeout)?;
-    let doc = Json::parse(&reply).map_err(|e| format!("peer sent a malformed reply: {e}"))?;
-    // a server that doesn't speak the op answers with a typed error
-    if doc.get("status").and_then(Json::as_str) == Some("error") {
-        return Err(format!(
-            "peer refused the sync: {}",
-            doc.get("error").and_then(Json::as_str).unwrap_or("unknown error")
-        ));
+    parse_sync_reply(&reply)
+}
+
+/// Validate one `sync` reply line into a [`Snapshot`]. Typed refusals
+/// (`error` from a server that doesn't speak the op, `busy` from one
+/// shedding load) become errors here — snapshot documents themselves
+/// never carry a `status` field.
+fn parse_sync_reply(reply: &str) -> Result<Snapshot, String> {
+    let doc = Json::parse(reply).map_err(|e| format!("peer sent a malformed reply: {e}"))?;
+    let detail =
+        |doc: &Json| doc.get("error").and_then(Json::as_str).unwrap_or("unknown error").to_string();
+    match doc.get("status").and_then(Json::as_str) {
+        Some("error") => Err(format!("peer refused the sync: {}", detail(&doc))),
+        Some("busy") => Err(format!("peer is shedding load: {}", detail(&doc))),
+        _ => Snapshot::from_json(&doc).map_err(|e| format!("peer snapshot rejected: {e}")),
     }
-    Snapshot::from_json(&doc).map_err(|e| format!("peer snapshot rejected: {e}"))
+}
+
+/// [`fetch_snapshot`] with capped-backoff retries under one wall-clock
+/// `budget` (ISSUE 6). Retries transport failures AND typed `busy`
+/// refusals (the peer will free up); gives up with the last error and
+/// the attempt count once the next backoff pause would overrun the
+/// budget. `on_retry(attempt, err)` fires before each pause so callers
+/// can log and count (`ServiceStats::sync_retries`).
+pub fn fetch_snapshot_retrying(
+    addr: &str,
+    max_reply_bytes: usize,
+    budget: Duration,
+    on_retry: &mut dyn FnMut(u32, &str),
+) -> Result<Snapshot, String> {
+    let frame = Json::obj().field(OP_KEY, OP_SYNC).to_string();
+    let t0 = Instant::now();
+    let backoff = Backoff::default();
+    let salt = {
+        let mut h = Fnv::new();
+        h.str(addr);
+        h.finish()
+    };
+    let mut attempt: u32 = 0;
+    loop {
+        let left = budget.saturating_sub(t0.elapsed());
+        let res = request_response(addr, &frame, max_reply_bytes, left)
+            .and_then(|reply| parse_sync_reply(&reply));
+        match res {
+            Ok(snap) => return Ok(snap),
+            Err(e) => {
+                let delay = backoff.delay(attempt, salt);
+                if budget.saturating_sub(t0.elapsed()) <= delay {
+                    let n = attempt + 1;
+                    return Err(format!(
+                        "{e} (gave up after {n} attempt(s) in {:?})",
+                        t0.elapsed()
+                    ));
+                }
+                on_retry(attempt, &e);
+                std::thread::sleep(delay);
+                attempt += 1;
+            }
+        }
+    }
+}
+
+/// Readiness probe (ISSUE 6): one `{"op":"health"}` exchange, bounded
+/// by `timeout`. `Ok` means the peer is up and speaking the protocol —
+/// a `busy` reply still counts as alive (the whole point of shedding is
+/// that an overloaded server keeps answering). Boot-time `--sync-from`
+/// probes before committing to a potentially large snapshot pull.
+pub fn probe_health(addr: &str, timeout: Duration) -> Result<(), String> {
+    let frame = Json::obj().field(OP_KEY, OP_HEALTH).to_string();
+    let reply = request_response(addr, &frame, 1 << 16, timeout)?;
+    let doc = Json::parse(&reply).map_err(|e| format!("peer sent a malformed health reply: {e}"))?;
+    match doc.get("status").and_then(Json::as_str) {
+        Some("ok") | Some("busy") => Ok(()),
+        Some(other) => Err(format!("peer is not ready: status {other:?}")),
+        None => Err("peer is not ready: health reply carries no status".to_string()),
+    }
 }
 
 /// SIGINT (ctrl-c) → graceful-shutdown flag. Hand-rolled through the
@@ -147,6 +248,21 @@ pub struct ServerOptions {
     /// Poll the process SIGINT flag in the accept loop (the CLI sets
     /// this; tests drive shutdown through the token instead).
     pub watch_sigint: bool,
+    /// Admission control (ISSUE 6): cap on live connections. An accept
+    /// beyond it gets one `busy` frame and a close.
+    pub max_connections: usize,
+    /// Admission control (ISSUE 6): cap on frames being served at once
+    /// across all connections. A frame beyond it is answered `busy`
+    /// without being parsed; the connection survives.
+    pub max_inflight: usize,
+    /// Peer to re-sync from in the background (ISSUE 6). The boot-time
+    /// pull lives in the CLI; this keeps a warm-later promise when that
+    /// pull failed, and keeps co-serving fleets converging.
+    pub sync_from: Option<String>,
+    /// Seconds between successful background re-syncs; `<= 0` disables
+    /// the tick entirely. After a failed pull the next attempt follows
+    /// [`RESYNC_BACKOFF`] rather than this interval.
+    pub resync_secs: f64,
 }
 
 impl Default for ServerOptions {
@@ -156,6 +272,10 @@ impl Default for ServerOptions {
             snapshot_secs: 30.0,
             max_frame_bytes: DEFAULT_MAX_FRAME_BYTES,
             watch_sigint: false,
+            max_connections: DEFAULT_MAX_CONNECTIONS,
+            max_inflight: DEFAULT_MAX_INFLIGHT,
+            sync_from: None,
+            resync_secs: 0.0,
         }
     }
 }
@@ -199,6 +319,22 @@ impl Server {
             .set_nonblocking(true)
             .map_err(|e| format!("cannot poll listener: {e}"))?;
         let active = AtomicUsize::new(0);
+        let inflight = AtomicUsize::new(0);
+        // accept-error backoff (ISSUE 6): persistent errors like EMFILE
+        // used to busy-loop eprintln at 10 Hz; now each consecutive
+        // error doubles the pause up to a cap, and a success resets it
+        let mut accept_pause = Duration::from_millis(25);
+        const ACCEPT_PAUSE_MAX: Duration = Duration::from_secs(1);
+        // background re-sync tick (ISSUE 6): armed when a peer is
+        // configured; `busy` keeps at most one pull in flight
+        let resync = opts.sync_from.as_deref().filter(|_| opts.resync_secs > 0.0).map(|peer| {
+            let salt = {
+                let mut h = Fnv::new();
+                h.str(peer);
+                h.finish()
+            };
+            (peer, salt, Mutex::new(ResyncState { due: Instant::now(), failures: 0, busy: false }))
+        });
         let mut last_snapshot = Instant::now();
         // dirty signal: skip ticks while *both* our own cache counts and
         // the shared state.json are unchanged since our last save. The
@@ -220,11 +356,21 @@ impl Server {
                 }
                 match self.listener.accept() {
                     Ok((stream, _peer)) => {
+                        accept_pause = Duration::from_millis(25);
                         service.note_connection();
+                        // connection cap: shed on the accepting thread —
+                        // one best-effort busy frame, then close. Bounded
+                        // time (no planner work), bounded threads.
+                        if active.load(Ordering::Relaxed) >= opts.max_connections {
+                            service.note_shed();
+                            shed_connection(stream, opts.max_connections, "connections");
+                            continue;
+                        }
                         active.fetch_add(1, Ordering::Relaxed);
                         let active = &active;
+                        let inflight = &inflight;
                         scope.spawn(move || {
-                            handle_connection(service, stream, opts, shutdown, active);
+                            handle_connection(service, stream, opts, shutdown, active, inflight);
                             active.fetch_sub(1, Ordering::Relaxed);
                         });
                     }
@@ -232,8 +378,60 @@ impl Server {
                         std::thread::sleep(Duration::from_millis(20));
                     }
                     Err(e) => {
-                        eprintln!("accept error: {e}");
-                        std::thread::sleep(Duration::from_millis(100));
+                        // persistent errors (EMFILE, ENFILE…) back off
+                        // with a doubling, capped pause (ISSUE 6) — the
+                        // old fixed 100 ms sleep spun the log hot
+                        service.note_accept_error();
+                        eprintln!("accept error: {e}; retrying in {accept_pause:?}");
+                        std::thread::sleep(accept_pause);
+                        accept_pause = (accept_pause * 2).min(ACCEPT_PAUSE_MAX);
+                    }
+                }
+                if let Some((peer, salt, state)) = &resync {
+                    let start = {
+                        let mut st = state.lock().unwrap_or_else(|e| e.into_inner());
+                        let start = !st.busy && Instant::now() >= st.due;
+                        if start {
+                            st.busy = true;
+                        }
+                        start
+                    };
+                    if start {
+                        scope.spawn(move || {
+                            // bounded by BG_SYNC_TIMEOUT, so the shutdown
+                            // join never waits longer than that on a
+                            // wedged peer; failures are logged warmth
+                            // loss, never availability loss
+                            match fetch_snapshot(peer, DEFAULT_MAX_SYNC_BYTES, BG_SYNC_TIMEOUT) {
+                                Ok(snap) => {
+                                    let (frontiers, bases) = service.merge_snapshot(&snap);
+                                    if frontiers > 0 || bases > 0 {
+                                        eprintln!(
+                                            "background sync from {peer}: merged {frontiers} \
+                                             new frontiers, {bases} new cost bases"
+                                        );
+                                    }
+                                    let mut st =
+                                        state.lock().unwrap_or_else(|e| e.into_inner());
+                                    st.failures = 0;
+                                    st.due = Instant::now()
+                                        + Duration::from_secs_f64(opts.resync_secs.max(0.0));
+                                    st.busy = false;
+                                }
+                                Err(e) => {
+                                    service.note_sync_retries(1);
+                                    eprintln!(
+                                        "background sync from {peer} failed (will retry): {e}"
+                                    );
+                                    let mut st =
+                                        state.lock().unwrap_or_else(|e| e.into_inner());
+                                    let delay = RESYNC_BACKOFF.delay(st.failures, *salt);
+                                    st.failures = st.failures.saturating_add(1);
+                                    st.due = Instant::now() + delay;
+                                    st.busy = false;
+                                }
+                            }
+                        });
                     }
                 }
                 if let Some(dir) = &opts.state_dir {
@@ -266,10 +464,67 @@ impl Server {
             // is bounded
         });
         if let Some(dir) = &opts.state_dir {
-            service.save_state(dir)?;
+            // availability over durability (ISSUE 6): a failed final
+            // snapshot (disk full, torn write) costs the next boot some
+            // warmth — the periodic ticks already persisted most of it —
+            // and must not turn a clean shutdown into an error exit.
+            // `write_atomic` guarantees the directory still holds the
+            // previous good snapshot.
+            if let Err(e) = service.save_state(dir) {
+                eprintln!("final snapshot failed (state dir keeps the previous one): {e}");
+            }
         }
         Ok(())
     }
+}
+
+/// Book-keeping of the background re-sync tick (one per server run).
+#[derive(Debug)]
+struct ResyncState {
+    /// Next time a pull may start.
+    due: Instant,
+    /// Consecutive failures (drives [`RESYNC_BACKOFF`]).
+    failures: u32,
+    /// A pull is in flight — never start a second.
+    busy: bool,
+}
+
+/// RAII in-flight slot: dropping it releases the slot.
+struct Permit<'a>(&'a AtomicUsize);
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Claim an in-flight slot under `cap`, or `None` when saturated (CAS
+/// loop — the counter never overshoots the cap, so a burst of frames on
+/// many connections cannot stampede past admission control).
+fn acquire_permit(inflight: &AtomicUsize, cap: usize) -> Option<Permit<'_>> {
+    let mut current = inflight.load(Ordering::SeqCst);
+    loop {
+        if current >= cap {
+            return None;
+        }
+        match inflight.compare_exchange(current, current + 1, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(_) => return Some(Permit(inflight)),
+            Err(seen) => current = seen,
+        }
+    }
+}
+
+/// Refuse one over-cap connection: a single best-effort `busy` frame,
+/// then drop (close). The client sees a typed refusal, not a RST race.
+fn shed_connection(stream: TcpStream, cap: usize, what: &str) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let mut writer = BufWriter::new(stream);
+    let resp = PlanResponse::busy(
+        "",
+        format!("server is at its {what} cap ({cap}); retry with backoff"),
+    );
+    let _ = write_frame(&mut writer, &resp.to_json().to_string());
 }
 
 /// Serve one accepted connection to completion (see module docs).
@@ -279,6 +534,7 @@ fn handle_connection(
     opts: &ServerOptions,
     shutdown: &CancelToken,
     active: &AtomicUsize,
+    inflight: &AtomicUsize,
 ) {
     // accepted sockets inherit O_NONBLOCK from the listener on some
     // platforms — undo it, the connection loop blocks on the timeout
@@ -298,6 +554,26 @@ fn handle_connection(
             Ok(None) => break, // clean EOF or shutdown
             Ok(Some(line)) if line.trim().is_empty() => continue, // keepalive blank line
             Ok(Some(line)) => {
+                // admission control (ISSUE 6): claim an in-flight slot
+                // BEFORE parsing — parsing a hostile megabyte frame is
+                // already work worth shedding. No slot ⇒ typed `busy`
+                // in bounded time, connection stays open for a retry.
+                // (Health probes get `busy` too; probe_health treats
+                // that as "alive", which is the readiness semantics.)
+                let Some(_permit) = acquire_permit(inflight, opts.max_inflight) else {
+                    service.note_shed();
+                    let resp = PlanResponse::busy(
+                        "",
+                        format!(
+                            "server is at its in-flight cap ({}); retry with backoff",
+                            opts.max_inflight
+                        ),
+                    );
+                    if write_frame(&mut writer, &resp.to_json().to_string()).is_err() {
+                        break;
+                    }
+                    continue;
+                };
                 let out = serve_frame(service, &line, shutdown, active.load(Ordering::Relaxed));
                 if write_frame(&mut writer, &out).is_err() {
                     break; // client disconnected (possibly mid-solve)
@@ -343,6 +619,22 @@ pub fn serve_frame(
     shutdown: &CancelToken,
     active: usize,
 ) -> String {
+    // fault seam: stall one request (saturation tests lean on this to
+    // hold an in-flight slot) or fail it with a *typed* error — even
+    // injected chaos must never produce a non-typed frame
+    if let Some(injected) = fault::check(Site::Serve) {
+        match injected {
+            Injected::Stall(d) => std::thread::sleep(d),
+            other => {
+                return PlanResponse::error(
+                    "",
+                    format!("injected fault while serving: {}", other.into_io_error()),
+                )
+                .to_json()
+                .to_string()
+            }
+        }
+    }
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         serve_frame_inner(service, line, shutdown, active)
     }));
@@ -370,14 +662,21 @@ fn serve_frame_inner(
     };
     // echo the caller's correlation id even on invalid requests
     let id = doc.get("id").and_then(Json::as_str).unwrap_or("").to_string();
-    // protocol operations (only `sync` so far) are flagged by the "op"
+    // protocol operations (`sync`, `health`) are flagged by the "op"
     // field, which request objects never carry
     if let Some(op) = doc.get(OP_KEY).and_then(Json::as_str) {
         return match op {
             OP_SYNC => service.export_snapshot().to_json().to_string(),
+            // readiness probe: a tiny fixed-shape frame, no planner work
+            OP_HEALTH => Json::obj()
+                .field(OP_KEY, OP_HEALTH)
+                .field("status", "ok")
+                .field("connections", active)
+                .field("requests", service.stats().requests)
+                .to_string(),
             other => PlanResponse::error(
                 &id,
-                format!("unknown op {other:?}; this server understands op \"sync\""),
+                format!("unknown op {other:?}; this server understands ops \"sync\" and \"health\""),
             )
             .to_json()
             .to_string(),
@@ -477,10 +776,34 @@ mod tests {
         let out = serve_frame(&svc, r#"{"op":"sync"}"#, &shutdown, 1);
         let snap = Snapshot::parse(&out).expect("sync reply must be a valid snapshot");
         assert!(snap.is_empty());
-        // unknown ops are typed errors naming the supported one
+        // unknown ops are typed errors naming the supported ones
         let out = serve_frame(&svc, r#"{"op":"gossip"}"#, &shutdown, 1);
         let resp = PlanResponse::parse(&out).unwrap();
         assert_eq!(resp.status, crate::service::Status::Error);
-        assert!(resp.error.unwrap().contains("sync"));
+        let msg = resp.error.unwrap();
+        assert!(msg.contains("sync") && msg.contains("health"), "{msg}");
+    }
+
+    #[test]
+    fn health_frames_answer_readiness_without_planner_work() {
+        let svc = PlannerService::with_threads(2);
+        let shutdown = CancelToken::new();
+        let out = serve_frame(&svc, r#"{"op":"health"}"#, &shutdown, 3);
+        let doc = Json::parse(&out).unwrap();
+        assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+        assert_eq!(doc.get("connections").and_then(Json::as_usize), Some(3));
+        assert_eq!(doc.get("requests").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn inflight_permits_cap_and_release() {
+        let inflight = AtomicUsize::new(0);
+        let a = acquire_permit(&inflight, 2).expect("slot 1");
+        let _b = acquire_permit(&inflight, 2).expect("slot 2");
+        assert!(acquire_permit(&inflight, 2).is_none(), "cap holds");
+        drop(a);
+        assert!(acquire_permit(&inflight, 2).is_some(), "released slot is reusable");
+        // cap 0 sheds everything (the bench's shed-latency row uses it)
+        assert!(acquire_permit(&inflight, 0).is_none());
     }
 }

@@ -100,6 +100,21 @@ fn generation_files(dir: &Path) -> Vec<PathBuf> {
 
 /// Read + validate one snapshot file. `Ok(None)` = file absent.
 fn read_snapshot(path: &Path) -> Result<Option<Snapshot>, String> {
+    // fault seam: scripted load failures (the chaos battery's "state dir
+    // on a sick disk" case) — downstream handling already treats any
+    // invalid file as a cold start, which is the invariant under test
+    if let Some(injected) = crate::util::fault::check(crate::util::fault::Site::SnapLoad) {
+        match injected {
+            crate::util::fault::Injected::Stall(d) => std::thread::sleep(d),
+            other => {
+                return Err(format!(
+                    "cannot read {}: {}",
+                    path.display(),
+                    other.into_io_error()
+                ))
+            }
+        }
+    }
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
         Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),

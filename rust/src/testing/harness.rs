@@ -1,0 +1,94 @@
+//! Shared socket-test harness (ISSUE 6): the in-process loopback server
+//! the integration batteries (`serve_socket.rs`, `chaos.rs`) drive real
+//! TCP traffic through. Lives in the library's testing module so every
+//! test target uses the identical lifecycle — ephemeral port, graceful
+//! shutdown on drop, a joined thread that surfaces server panics.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::service::{
+    CancelToken, PlanRequest, PlanResponse, PlannerService, Server, ServerOptions,
+};
+use crate::util::net::{read_frame, write_frame};
+
+/// A server running on an ephemeral loopback port, shut down (and
+/// joined) on drop so a failing test cannot leak its thread past the
+/// harness.
+pub struct TestServer {
+    pub addr: SocketAddr,
+    pub service: Arc<PlannerService>,
+    pub shutdown: CancelToken,
+    pub thread: Option<std::thread::JoinHandle<Result<(), String>>>,
+}
+
+impl TestServer {
+    /// Bind `127.0.0.1:0` and serve `service` with `opts` on a
+    /// background thread until [`TestServer::stop`] (or drop).
+    pub fn start(service: Arc<PlannerService>, opts: ServerOptions) -> TestServer {
+        let server = Server::bind("127.0.0.1:0").expect("ephemeral bind");
+        let addr = server.local_addr();
+        let shutdown = CancelToken::new();
+        let thread = {
+            let service = service.clone();
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || server.run(&service, &opts, &shutdown))
+        };
+        TestServer { addr, service, shutdown, thread: Some(thread) }
+    }
+
+    /// One connected client: buffered reader/writer halves with a long
+    /// read timeout (tests assert on frames, not on socket latency).
+    pub fn connect(&self) -> (BufReader<TcpStream>, BufWriter<TcpStream>) {
+        let stream = TcpStream::connect(self.addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let read_half = stream.try_clone().unwrap();
+        (BufReader::new(read_half), BufWriter::new(stream))
+    }
+
+    /// Cancel, join, and return the server thread's result. Idempotent.
+    pub fn stop(&mut self) -> Result<(), String> {
+        self.shutdown.cancel();
+        match self.thread.take() {
+            Some(t) => t.join().expect("server thread must not panic"),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        let _ = self.stop();
+    }
+}
+
+/// Send one frame, read one frame, parse it as a response.
+pub fn round_trip(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    frame: &str,
+) -> PlanResponse {
+    write_frame(writer, frame).expect("send");
+    let never = || false;
+    let line = read_frame(reader, 1 << 24, &never)
+        .expect("read")
+        .expect("server closed unexpectedly");
+    PlanResponse::parse(&line).expect("typed response")
+}
+
+/// The batteries' stock request: small model, small sweep, cacheable.
+pub fn bert_req(id: &str) -> PlanRequest {
+    let mut req = PlanRequest::new(id, "bert", "EnvB", 16);
+    req.max_pp = Some(2); // keep test sweeps small
+    req
+}
+
+/// A fresh (pre-removed) per-process temp directory for state-dir tests.
+pub fn temp_dir(prefix: &str, name: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("uniap-{prefix}-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}

@@ -1,0 +1,559 @@
+//! Deterministic, scriptable fault injection (ISSUE 6; DESIGN.md
+//! §Fault injection & admission control).
+//!
+//! Robustness claims ("a torn snapshot write never corrupts the state
+//! dir", "a peer that resets mid-reply costs one retry, never the
+//! caller's budget") are only testable if the faults themselves are
+//! reproducible. This module arms a **fault plan** — an ordered list of
+//! rules, each naming an injection [`Site`] and an action — that the
+//! existing I/O seams consult:
+//!
+//! | site            | seam                                            |
+//! |-----------------|-------------------------------------------------|
+//! | `net.read`      | `util::net::read_frame` (socket reads)          |
+//! | `net.write`     | `util::net::write_frame` (socket writes)        |
+//! | `fs.write`      | `util::fsio::write_atomic` temp-file write      |
+//! | `fs.rename`     | `util::fsio::write_atomic` publish rename       |
+//! | `fs.lock`       | `util::fsio::DirLock::acquire`                  |
+//! | `snapshot.load` | `service::snapshot` file reads                  |
+//! | `serve.frame`   | `service::server::serve_frame` (per request)    |
+//!
+//! ## Plan grammar (`UNIAP_FAULTS`)
+//!
+//! Semicolon-separated clauses, each `site:action[:arg][:modifier…]`:
+//!
+//! ```text
+//! UNIAP_FAULTS='net.read:reset; fs.write:torn:24:x2; serve.frame:stall:500:p50; seed:42'
+//! ```
+//!
+//! Actions: `fail` (generic I/O error), `reset` (connection-reset-shaped
+//! error), `full` (disk-full-shaped error), `stall:MS` (sleep MS
+//! milliseconds, then proceed), `torn:N` (writes only: persist N bytes,
+//! then fail). Modifiers: `xN` fires the rule N times (default 1), `x*`
+//! forever, `+N` skips the first N hits of the site, `pN` fires with
+//! probability N% — **deterministically**, hashed from `(seed, rule,
+//! hit index)`, so a seeded plan replays identically. A `seed:N` clause
+//! sets that seed. Rules are tried in spec order; the first that fires
+//! wins the hit.
+//!
+//! ## Cost when unset
+//!
+//! [`check`] is a `Once` fast path plus one relaxed atomic load — no
+//! lock, no allocation — so production binaries pay nothing. The plan
+//! is process-global (the point is to script a *binary*, env-first);
+//! tests arm plans programmatically through [`install`], whose guard
+//! also serializes fault-using tests within one test binary (they run
+//! on parallel threads and would otherwise contaminate each other —
+//! fault-free tests that cross the same seams take [`quiesce`]).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, Once, OnceLock};
+use std::time::Duration;
+
+use crate::util::hash::Fnv;
+
+/// An injection point — one of the I/O seams listed in the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Socket frame reads (`util::net::read_frame`).
+    NetRead,
+    /// Socket frame writes (`util::net::write_frame`).
+    NetWrite,
+    /// The temp-file write inside `util::fsio::write_atomic`.
+    FsWrite,
+    /// The publishing rename inside `util::fsio::write_atomic`.
+    FsRename,
+    /// State-directory lock acquisition (`util::fsio::DirLock`).
+    FsLock,
+    /// Snapshot file reads (`service::snapshot`).
+    SnapLoad,
+    /// Per-frame request serving (`service::server::serve_frame`).
+    Serve,
+}
+
+impl Site {
+    /// Every site, in documentation order.
+    pub const ALL: [Site; 7] = [
+        Site::NetRead,
+        Site::NetWrite,
+        Site::FsWrite,
+        Site::FsRename,
+        Site::FsLock,
+        Site::SnapLoad,
+        Site::Serve,
+    ];
+
+    /// Canonical plan-grammar key.
+    pub fn key(self) -> &'static str {
+        match self {
+            Site::NetRead => "net.read",
+            Site::NetWrite => "net.write",
+            Site::FsWrite => "fs.write",
+            Site::FsRename => "fs.rename",
+            Site::FsLock => "fs.lock",
+            Site::SnapLoad => "snapshot.load",
+            Site::Serve => "serve.frame",
+        }
+    }
+
+    /// Inverse of [`Site::key`].
+    pub fn by_key(key: &str) -> Option<Site> {
+        Site::ALL.into_iter().find(|s| s.key() == key)
+    }
+}
+
+/// What a fired rule does.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Action {
+    Fail,
+    Reset,
+    Full,
+    Stall(Duration),
+    Torn(usize),
+}
+
+/// What the seam must simulate when [`check`] fires.
+#[derive(Debug)]
+pub enum Injected {
+    /// Fail with this error (reset / disk-full / generic, per the plan).
+    Error(std::io::Error),
+    /// Sleep this long, then proceed normally.
+    Stall(Duration),
+    /// Write sites only: emit exactly this many bytes, then fail.
+    Torn(usize),
+}
+
+impl Injected {
+    /// Collapse into an `io::Error` for seams that cannot stall or tear
+    /// (every injected variant still reads as a failure there).
+    pub fn into_io_error(self) -> std::io::Error {
+        match self {
+            Injected::Error(e) => e,
+            Injected::Stall(d) => {
+                std::io::Error::new(std::io::ErrorKind::Other, format!("injected stall ({d:?})"))
+            }
+            Injected::Torn(n) => std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!("injected torn write after {n} bytes"),
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for Injected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Injected::Error(e) => write!(f, "{e}"),
+            Injected::Stall(d) => write!(f, "injected stall ({d:?})"),
+            Injected::Torn(n) => write!(f, "injected torn write after {n} bytes"),
+        }
+    }
+}
+
+/// One parsed clause.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Rule {
+    site: Site,
+    action: Action,
+    /// Site hits to let through before the rule becomes eligible (`+N`).
+    skip: usize,
+    /// Eligible hits the rule consumes; `None` = unlimited (`x*`).
+    count: Option<usize>,
+    /// Fire probability in percent (`pN`), decided deterministically.
+    percent: u8,
+}
+
+/// A parsed fault plan (see the module docs for the grammar).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+    seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse a plan spec. Empty/whitespace specs yield an empty plan;
+    /// malformed clauses are errors naming the clause and the fix.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        let mut seed = 0u64;
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let mut toks = clause.split(':').map(str::trim);
+            let head = toks.next().unwrap_or_default();
+            if head == "seed" {
+                let v = toks
+                    .next()
+                    .ok_or_else(|| format!("{clause:?}: seed needs a value (seed:N)"))?;
+                seed = v
+                    .parse()
+                    .map_err(|_| format!("{clause:?}: seed must be an unsigned integer"))?;
+                if toks.next().is_some() {
+                    return Err(format!("{clause:?}: seed takes exactly one value"));
+                }
+                continue;
+            }
+            let site = Site::by_key(head).ok_or_else(|| {
+                let known: Vec<&str> = Site::ALL.iter().map(|s| s.key()).collect();
+                format!("{clause:?}: unknown site {head:?} (known: {})", known.join(", "))
+            })?;
+            let action_tok =
+                toks.next().ok_or_else(|| format!("{clause:?}: missing action (site:action)"))?;
+            let mut rest = toks;
+            let action = match action_tok {
+                "fail" => Action::Fail,
+                "reset" => Action::Reset,
+                "full" => Action::Full,
+                "stall" => {
+                    let ms = rest.next().ok_or_else(|| {
+                        format!("{clause:?}: stall needs milliseconds (stall:MS)")
+                    })?;
+                    let ms: u64 = ms.parse().map_err(|_| {
+                        format!("{clause:?}: stall milliseconds must be an integer")
+                    })?;
+                    Action::Stall(Duration::from_millis(ms))
+                }
+                "torn" => {
+                    let n = rest.next().ok_or_else(|| {
+                        format!("{clause:?}: torn needs a byte count (torn:N)")
+                    })?;
+                    let n: usize = n
+                        .parse()
+                        .map_err(|_| format!("{clause:?}: torn byte count must be an integer"))?;
+                    Action::Torn(n)
+                }
+                other => {
+                    return Err(format!(
+                        "{clause:?}: unknown action {other:?} (fail|reset|full|stall:MS|torn:N)"
+                    ))
+                }
+            };
+            if matches!(action, Action::Torn(_))
+                && !matches!(site, Site::NetWrite | Site::FsWrite)
+            {
+                return Err(format!(
+                    "{clause:?}: torn applies to write sites only (net.write, fs.write)"
+                ));
+            }
+            let mut skip = 0usize;
+            let mut count = Some(1usize);
+            let mut percent = 100u8;
+            for m in rest {
+                if let Some(n) = m.strip_prefix('x') {
+                    count = if n == "*" {
+                        None
+                    } else {
+                        Some(n.parse().map_err(|_| {
+                            format!("{clause:?}: repeat count must be xN or x*")
+                        })?)
+                    };
+                } else if let Some(n) = m.strip_prefix('+') {
+                    skip = n
+                        .parse()
+                        .map_err(|_| format!("{clause:?}: skip offset must be +N"))?;
+                } else if let Some(n) = m.strip_prefix('p') {
+                    let p: u8 = n
+                        .parse()
+                        .map_err(|_| format!("{clause:?}: percent must be pN with N in 1..=100"))?;
+                    if p == 0 || p > 100 {
+                        return Err(format!(
+                            "{clause:?}: percent must be pN with N in 1..=100"
+                        ));
+                    }
+                    percent = p;
+                } else {
+                    return Err(format!("{clause:?}: unknown modifier {m:?} (xN|x*|+N|pN)"));
+                }
+            }
+            rules.push(Rule { site, action, skip, count, percent });
+        }
+        Ok(FaultPlan { rules, seed })
+    }
+
+    /// `true` when the plan holds no rules (arming it is a no-op).
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+/// A plan armed at runtime: the rules plus per-rule hit counters.
+#[derive(Debug)]
+struct ArmedPlan {
+    plan: FaultPlan,
+    hits: Vec<AtomicUsize>,
+}
+
+impl ArmedPlan {
+    fn new(plan: FaultPlan) -> ArmedPlan {
+        let hits = plan.rules.iter().map(|_| AtomicUsize::new(0)).collect();
+        ArmedPlan { plan, hits }
+    }
+
+    /// One hit at `site`: the first eligible rule (spec order) fires.
+    fn fire(&self, site: Site) -> Option<Injected> {
+        for (i, rule) in self.plan.rules.iter().enumerate() {
+            if rule.site != site {
+                continue;
+            }
+            let hit = self.hits[i].fetch_add(1, Ordering::SeqCst);
+            if hit < rule.skip {
+                continue;
+            }
+            if let Some(count) = rule.count {
+                if hit - rule.skip >= count {
+                    continue;
+                }
+            }
+            if rule.percent < 100 {
+                // deterministic coin: hashed, not sampled, so a seeded
+                // plan injects the same faults on every run
+                let mut h = Fnv::new();
+                h.u64(self.plan.seed);
+                h.usize(i);
+                h.usize(hit);
+                if (h.finish() % 100) >= rule.percent as u64 {
+                    continue;
+                }
+            }
+            INJECTED_TOTAL.fetch_add(1, Ordering::Relaxed);
+            return Some(match &rule.action {
+                Action::Fail => Injected::Error(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "injected fault",
+                )),
+                Action::Reset => Injected::Error(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    "injected connection reset",
+                )),
+                Action::Full => Injected::Error(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "injected disk full (no space left on device)",
+                )),
+                Action::Stall(d) => Injected::Stall(*d),
+                Action::Torn(n) => Injected::Torn(*n),
+            });
+        }
+        None
+    }
+}
+
+/// Fast-path flag: `false` ⇒ [`check`] returns `None` after one load.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+/// The armed plan (swapped by [`install`]/[`quiesce`]/guard drops).
+static ARMED: Mutex<Option<Arc<ArmedPlan>>> = Mutex::new(None);
+/// Serializes fault-owning scopes across test threads.
+static EXCL: Mutex<()> = Mutex::new(());
+/// Lifetime count of injected faults (feeds `ServiceStats`).
+static INJECTED_TOTAL: AtomicUsize = AtomicUsize::new(0);
+/// One-shot `UNIAP_FAULTS` parse.
+static ENV_INIT: Once = Once::new();
+/// The env-derived plan, restored whenever a programmatic guard drops.
+static ENV_PLAN: OnceLock<Option<Arc<ArmedPlan>>> = OnceLock::new();
+
+fn arm(plan: Option<Arc<ArmedPlan>>) {
+    let mut slot = ARMED.lock().unwrap_or_else(|e| e.into_inner());
+    ACTIVE.store(plan.is_some(), Ordering::SeqCst);
+    *slot = plan;
+}
+
+fn init_from_env() {
+    let plan = match std::env::var("UNIAP_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => match FaultPlan::parse(&spec) {
+            Ok(plan) if !plan.is_empty() => Some(Arc::new(ArmedPlan::new(plan))),
+            Ok(_) => None,
+            Err(e) => {
+                // loud but non-fatal: a library must not abort the host
+                // process over an env typo, and chaos scripts grep logs
+                eprintln!("UNIAP_FAULTS ignored (parse error): {e}");
+                None
+            }
+        },
+        _ => None,
+    };
+    let _ = ENV_PLAN.set(plan.clone());
+    if plan.is_some() {
+        arm(plan);
+    }
+}
+
+fn env_plan() -> Option<Arc<ArmedPlan>> {
+    ENV_PLAN.get().cloned().flatten()
+}
+
+/// Consult the armed fault plan at `site`. `None` (the overwhelmingly
+/// common case) means proceed normally; `Some` tells the seam what to
+/// simulate. With no plan armed this is one atomic load.
+pub fn check(site: Site) -> Option<Injected> {
+    ENV_INIT.call_once(init_from_env);
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return None;
+    }
+    let armed = ARMED.lock().unwrap_or_else(|e| e.into_inner()).clone()?;
+    armed.fire(site)
+}
+
+/// Lifetime count of faults injected in this process (monotonic; the
+/// serving front end surfaces it as `ServiceStats::faults_injected`).
+pub fn injected_total() -> usize {
+    INJECTED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Exclusive fault-plan ownership for one scope (see [`install`] /
+/// [`quiesce`]). Dropping the guard disarms the scope's plan and
+/// restores whatever `UNIAP_FAULTS` configured.
+pub struct FaultGuard {
+    _excl: MutexGuard<'static, ()>,
+}
+
+impl FaultGuard {
+    /// Swap the armed plan without giving up exclusivity — lets one
+    /// test walk through several fault scenarios back to back.
+    pub fn set(&self, plan: FaultPlan) {
+        arm(Some(Arc::new(ArmedPlan::new(plan))));
+    }
+
+    /// Disarm while keeping exclusivity (the fault-free phases of a
+    /// multi-scenario test).
+    pub fn clear(&self) {
+        arm(None);
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        arm(env_plan());
+    }
+}
+
+/// Arm `plan` for the lifetime of the returned guard. Guards are
+/// process-exclusive: a second `install` (or [`quiesce`]) blocks until
+/// the first guard drops, which is what keeps parallel test threads
+/// from injecting faults into each other.
+pub fn install(plan: FaultPlan) -> FaultGuard {
+    ENV_INIT.call_once(init_from_env);
+    let excl = EXCL.lock().unwrap_or_else(|e| e.into_inner());
+    arm(Some(Arc::new(ArmedPlan::new(plan))));
+    FaultGuard { _excl: excl }
+}
+
+/// Hold the exclusivity guard with **no** plan armed: for tests that
+/// must observe fault-free behavior without racing a sibling test's
+/// armed plan.
+pub fn quiesce() -> FaultGuard {
+    ENV_INIT.call_once(init_from_env);
+    let excl = EXCL.lock().unwrap_or_else(|e| e.into_inner());
+    arm(None);
+    FaultGuard { _excl: excl }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these unit tests exercise parsing and `ArmedPlan::fire`
+    // directly, WITHOUT arming the process-global plan — the lib test
+    // binary runs its tests on parallel threads, and a globally armed
+    // net/fs fault here would leak into unrelated unit tests. The
+    // global install/guard semantics are covered by rust/tests/chaos.rs
+    // (its own process, every test holding the guard).
+
+    #[test]
+    fn grammar_parses_sites_actions_and_modifiers() {
+        let plan = FaultPlan::parse(
+            "net.read:reset; fs.write:torn:24:x2; serve.frame:stall:500:p50:+3; \
+             fs.rename:fail:x*; seed:42",
+        )
+        .unwrap();
+        assert_eq!(plan.rules.len(), 4);
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.rules[0], Rule {
+            site: Site::NetRead,
+            action: Action::Reset,
+            skip: 0,
+            count: Some(1),
+            percent: 100,
+        });
+        assert_eq!(plan.rules[1].action, Action::Torn(24));
+        assert_eq!(plan.rules[1].count, Some(2));
+        assert_eq!(plan.rules[2].action, Action::Stall(Duration::from_millis(500)));
+        assert_eq!((plan.rules[2].skip, plan.rules[2].percent), (3, 50));
+        assert_eq!(plan.rules[3].count, None, "x* is unlimited");
+        // empty and whitespace specs are empty plans, not errors
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ;; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn grammar_rejects_malformed_clauses_loudly() {
+        for (spec, needle) in [
+            ("gpu.melt:fail", "unknown site"),
+            ("net.read:explode", "unknown action"),
+            ("net.read:stall", "stall needs milliseconds"),
+            ("net.read:stall:soon", "must be an integer"),
+            ("net.write:torn", "torn needs a byte count"),
+            ("net.read:torn:4", "write sites only"),
+            ("net.read:fail:y3", "unknown modifier"),
+            ("net.read:fail:p0", "1..=100"),
+            ("net.read:fail:p101", "1..=100"),
+            ("seed:abc", "unsigned integer"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            assert!(err.contains(needle), "{spec:?} → {err}");
+        }
+    }
+
+    #[test]
+    fn site_keys_roundtrip() {
+        for site in Site::ALL {
+            assert_eq!(Site::by_key(site.key()), Some(site));
+        }
+        assert_eq!(Site::by_key("nope"), None);
+    }
+
+    #[test]
+    fn rules_fire_in_spec_order_with_skip_and_count() {
+        let armed =
+            ArmedPlan::new(FaultPlan::parse("net.read:reset:+1:x2; net.read:fail:x*").unwrap());
+        // hit 0: first rule skips, second catches
+        assert!(matches!(armed.fire(Site::NetRead), Some(Injected::Error(e))
+            if e.to_string().contains("injected fault")));
+        // hits 1–2: first rule fires (reset), consuming its budget
+        for _ in 0..2 {
+            assert!(matches!(armed.fire(Site::NetRead), Some(Injected::Error(e))
+                if e.kind() == std::io::ErrorKind::ConnectionReset));
+        }
+        // hit 3: first rule exhausted, unlimited fallback again
+        assert!(matches!(armed.fire(Site::NetRead), Some(Injected::Error(e))
+            if e.to_string().contains("injected fault")));
+        // other sites never fire
+        assert!(armed.fire(Site::FsWrite).is_none());
+    }
+
+    #[test]
+    fn probabilistic_rules_are_deterministic_per_seed() {
+        let fires = |seed: u64| -> Vec<bool> {
+            let armed = ArmedPlan::new(
+                FaultPlan::parse(&format!("serve.frame:fail:p40:x*; seed:{seed}")).unwrap(),
+            );
+            (0..64).map(|_| armed.fire(Site::Serve).is_some()).collect()
+        };
+        let a = fires(7);
+        assert_eq!(a, fires(7), "same seed ⇒ same injection schedule");
+        assert_ne!(a, fires(8), "different seed ⇒ different schedule");
+        let rate = a.iter().filter(|&&f| f).count();
+        assert!((10..=40).contains(&rate), "p40 over 64 hits fired {rate} times");
+    }
+
+    #[test]
+    fn torn_and_stall_surface_their_parameters() {
+        let armed = ArmedPlan::new(FaultPlan::parse("fs.write:torn:7").unwrap());
+        assert!(matches!(armed.fire(Site::FsWrite), Some(Injected::Torn(7))));
+        let armed = ArmedPlan::new(FaultPlan::parse("fs.lock:stall:250").unwrap());
+        assert!(matches!(
+            armed.fire(Site::FsLock),
+            Some(Injected::Stall(d)) if d == Duration::from_millis(250)
+        ));
+    }
+}

@@ -38,11 +38,51 @@ pub fn write_atomic(path: &Path, contents: &str) -> Result<(), String> {
         None => PathBuf::from(format!(".{file_name}.tmp.{}", std::process::id())),
     };
     let write = || -> std::io::Result<()> {
+        use crate::util::fault::{self, Injected, Site};
         use std::io::Write as _;
         let mut f = std::fs::File::create(&tmp)?;
+        // fault seam: a scripted plan can tear this write (persist a
+        // strict prefix, then fail), stall it, or fail it outright — the
+        // chaos battery's "crash mid-snapshot" and "disk full" cases
+        if let Some(injected) = fault::check(Site::FsWrite) {
+            match injected {
+                Injected::Stall(d) => std::thread::sleep(d),
+                Injected::Torn(n) => {
+                    let k = n.min(contents.len());
+                    f.write_all(&contents.as_bytes()[..k])?;
+                    f.sync_all()?;
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        format!("injected torn write after {k} bytes"),
+                    ));
+                }
+                Injected::Error(e) => return Err(e),
+            }
+        }
         f.write_all(contents.as_bytes())?;
         f.sync_all()?;
-        std::fs::rename(&tmp, path)
+        // fault seam: fail between the durable temp file and the publish
+        if let Some(injected) = fault::check(Site::FsRename) {
+            match injected {
+                Injected::Stall(d) => std::thread::sleep(d),
+                other => return Err(other.into_io_error()),
+            }
+        }
+        std::fs::rename(&tmp, path)?;
+        // Durability (ISSUE 6): the rename is atomic but not durable
+        // until the *directory* entry is synced — without this, a crash
+        // shortly after "successful" save can roll the file back to the
+        // old version or, on some filesystems, a zero-length entry.
+        // Best-effort: read-only dir handles can't fsync everywhere, and
+        // the atomicity guarantee (old-or-new, never torn) holds anyway.
+        #[cfg(unix)]
+        {
+            let dir_path = dir.unwrap_or_else(|| Path::new("."));
+            if let Ok(d) = std::fs::File::open(dir_path) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
     };
     write().map_err(|e| {
         let _ = std::fs::remove_file(&tmp); // best-effort cleanup
@@ -122,6 +162,19 @@ impl DirLock {
     pub fn acquire(dir: &Path) -> Result<DirLock, String> {
         std::fs::create_dir_all(dir)
             .map_err(|e| format!("cannot create {}: {e}", dir.display()))?;
+        // fault seam: scripted lock failures/stalls (a wedged sibling)
+        if let Some(injected) = crate::util::fault::check(crate::util::fault::Site::FsLock) {
+            match injected {
+                crate::util::fault::Injected::Stall(d) => std::thread::sleep(d),
+                other => {
+                    return Err(format!(
+                        "cannot lock {}: {}",
+                        dir.join(LOCK_FILE).display(),
+                        other.into_io_error()
+                    ))
+                }
+            }
+        }
         let path = dir.join(LOCK_FILE);
         #[cfg(unix)]
         {

@@ -1,11 +1,13 @@
 //! Small shared utilities: math helpers, factorisation, JSON, content
-//! hashing, the cooperative cancellation primitive, and the process-wide
-//! worker-thread budget.
+//! hashing, the cooperative cancellation primitive, the process-wide
+//! worker-thread budget, and deterministic fault injection for the
+//! chaos battery.
 //!
 //! The environment's crate registry is offline, so we avoid serde and
 //! hand-roll JSON where machine-readable input/output is needed.
 
 pub mod cancel;
+pub mod fault;
 pub mod fsio;
 pub mod hash;
 pub mod json;

@@ -28,10 +28,16 @@ pub const DEFAULT_MAX_FRAME_BYTES: usize = 1 << 20;
 /// `PlanRequest` (request objects never carry it): `{"op":"sync"}`.
 pub const OP_KEY: &str = "op";
 
-/// The one operation defined so far (ISSUE 5): ask the server for its
-/// exported state snapshot, answered with a full `uniap-state` document
-/// on one line. `uniap serve --sync-from <addr>` is the client.
+/// The first operation (ISSUE 5): ask the server for its exported state
+/// snapshot, answered with a full `uniap-state` document on one line.
+/// `uniap serve --sync-from <addr>` is the client.
 pub const OP_SYNC: &str = "sync";
+
+/// Readiness probe (ISSUE 6): `{"op":"health"}` is answered with a tiny
+/// status frame without touching the planner, so clients can tell "peer
+/// is up but busy" from "peer is down" before committing to an
+/// expensive exchange. Cheap enough to answer even while shedding load.
+pub const OP_HEALTH: &str = "health";
 
 /// Why a frame could not be read.
 #[derive(Debug)]
@@ -66,6 +72,14 @@ pub fn read_frame<R: BufRead>(
     max_bytes: usize,
     should_stop: &dyn Fn() -> bool,
 ) -> Result<Option<String>, FrameError> {
+    // fault seam: a scripted plan can reset/fail/stall this read (the
+    // chaos battery's "peer dies mid-frame"); no-op when nothing is armed
+    if let Some(injected) = crate::util::fault::check(crate::util::fault::Site::NetRead) {
+        match injected {
+            crate::util::fault::Injected::Stall(d) => std::thread::sleep(d),
+            other => return Err(FrameError::Io(other.into_io_error().to_string())),
+        }
+    }
     let mut buf: Vec<u8> = Vec::new();
     loop {
         if should_stop() {
@@ -160,6 +174,22 @@ pub fn drain_frame<R: BufRead>(reader: &mut R, should_stop: &dyn Fn() -> bool) -
 /// Write one frame: the document, a newline, and a flush (responses must
 /// not sit in the buffer while the client blocks on them).
 pub fn write_frame<W: Write>(writer: &mut W, frame: &str) -> Result<(), String> {
+    // fault seam: torn writes flush a strict prefix and then fail, which
+    // is exactly what a reset mid-reply looks like to the peer
+    if let Some(injected) = crate::util::fault::check(crate::util::fault::Site::NetWrite) {
+        match injected {
+            crate::util::fault::Injected::Stall(d) => std::thread::sleep(d),
+            crate::util::fault::Injected::Torn(n) => {
+                let k = n.min(frame.len());
+                let _ = writer.write_all(&frame.as_bytes()[..k]);
+                let _ = writer.flush();
+                return Err(format!("cannot write frame: injected torn write after {k} bytes"));
+            }
+            crate::util::fault::Injected::Error(e) => {
+                return Err(format!("cannot write frame: {e}"));
+            }
+        }
+    }
     let put = || -> std::io::Result<()> {
         writer.write_all(frame.as_bytes())?;
         writer.write_all(b"\n")?;
@@ -227,6 +257,93 @@ pub fn request_response(
             timeout
         )),
         Err(e) => Err(format!("no reply from {addr}: {e}")),
+    }
+}
+
+/// Capped exponential backoff with deterministic jitter (ISSUE 6;
+/// DESIGN.md §Fault injection & admission control — backoff policy).
+///
+/// `delay(attempt, salt)` doubles `initial` per attempt, caps at `max`,
+/// then scales by a jitter factor in `[0.5, 1.0)` hashed from
+/// `(salt, attempt)` — FNV, not a RNG, so a given peer's retry schedule
+/// is reproducible (chaos tests assert on it) while distinct peers
+/// still decorrelate, which is the thundering-herd half of jitter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Backoff {
+    /// Delay before the first retry (pre-jitter).
+    pub initial: std::time::Duration,
+    /// Ceiling on the pre-jitter delay.
+    pub max: std::time::Duration,
+}
+
+impl Default for Backoff {
+    fn default() -> Backoff {
+        Backoff {
+            initial: std::time::Duration::from_millis(100),
+            max: std::time::Duration::from_secs(5),
+        }
+    }
+}
+
+impl Backoff {
+    /// The pause before retry number `attempt` (0-based), jittered by
+    /// `salt` (callers hash the peer address).
+    pub fn delay(&self, attempt: u32, salt: u64) -> std::time::Duration {
+        // clamp the shift so huge attempt counts can't overflow; the
+        // min() against max dominates long before 2^20 anyway
+        let base = self
+            .initial
+            .saturating_mul(1u32.checked_shl(attempt.min(20)).unwrap_or(u32::MAX))
+            .min(self.max);
+        let mut h = crate::util::hash::Fnv::new();
+        h.u64(salt);
+        h.u64(attempt as u64);
+        let jitter = 0.5 + (h.finish() % 512) as f64 / 1024.0; // [0.5, 1.0)
+        base.mul_f64(jitter)
+    }
+}
+
+/// [`request_response`] with retries under one wall-clock budget.
+///
+/// Each attempt gets whatever remains of `budget`; transport-level
+/// failures (connect refused, reset mid-reply, silent peer) trigger a
+/// [`Backoff`]-paced retry, and the loop gives up — with the last error
+/// and the attempt count — as soon as the next delay would not fit in
+/// the budget. Total time therefore stays within `budget` plus at most
+/// one backoff pause. `on_retry(attempt, err)` fires before each pause
+/// (logging, counters); typed `busy`/`error` replies are NOT retried
+/// here — they are valid frames, and the caller owns that policy.
+pub fn request_response_retrying(
+    addr: &str,
+    frame: &str,
+    max_reply_bytes: usize,
+    budget: std::time::Duration,
+    backoff: Backoff,
+    on_retry: &mut dyn FnMut(u32, &str),
+) -> Result<String, String> {
+    let t0 = std::time::Instant::now();
+    let salt = {
+        let mut h = crate::util::hash::Fnv::new();
+        h.str(addr);
+        h.finish()
+    };
+    let mut attempt: u32 = 0;
+    loop {
+        let left = budget.saturating_sub(t0.elapsed());
+        match request_response(addr, frame, max_reply_bytes, left) {
+            Ok(reply) => return Ok(reply),
+            Err(e) => {
+                let delay = backoff.delay(attempt, salt);
+                let left = budget.saturating_sub(t0.elapsed());
+                if left <= delay {
+                    let n = attempt + 1;
+                    return Err(format!("{e} (gave up after {n} attempt(s) in {:?})", t0.elapsed()));
+                }
+                on_retry(attempt, &e);
+                std::thread::sleep(delay);
+                attempt += 1;
+            }
+        }
     }
 }
 
@@ -309,5 +426,23 @@ mod tests {
         let mut out: Vec<u8> = Vec::new();
         write_frame(&mut out, "{\"ok\":true}").unwrap();
         assert_eq!(out, b"{\"ok\":true}\n");
+    }
+
+    #[test]
+    fn backoff_is_capped_deterministic_and_jittered() {
+        use std::time::Duration;
+        let b = Backoff { initial: Duration::from_millis(100), max: Duration::from_secs(2) };
+        for attempt in 0..30 {
+            let d = b.delay(attempt, 7);
+            assert_eq!(d, b.delay(attempt, 7), "same (attempt, salt) ⇒ same delay");
+            // jitter keeps the delay in [0.5, 1.0) of the capped base
+            let base = Duration::from_millis(100)
+                .saturating_mul(1u32.checked_shl(attempt.min(20)).unwrap_or(u32::MAX))
+                .min(Duration::from_secs(2));
+            assert!(d >= base.mul_f64(0.5) && d < base, "attempt {attempt}: {d:?} vs {base:?}");
+            assert!(d < Duration::from_secs(2), "cap holds");
+        }
+        // different salts decorrelate at least once over a few attempts
+        assert!((0..8).any(|a| b.delay(a, 1) != b.delay(a, 2)));
     }
 }

@@ -1,0 +1,539 @@
+//! Chaos battery (ISSUE 6): scripted fault plans drive the serving
+//! stack through peer resets, stalls, torn snapshot writes, disk-full
+//! saves, kill-under-load and overload — asserting the standing
+//! invariants the fault layer exists to pin:
+//!
+//! * **no panic** — every server thread joins `Ok`;
+//! * **no corrupt state dir** — a failed save leaves the previous good
+//!   snapshot (or nothing), never a torn/zero-length `state.json`;
+//! * **no non-typed frame** — whatever goes wrong, clients read a
+//!   parseable JSON document with a known `status`;
+//! * **bounded time** — silent peers cost the caller's budget, an
+//!   overloaded server sheds `busy` promptly instead of queueing;
+//! * **byte identity** — plans served after recovery equal the plans
+//!   served before the fault, bit for bit.
+//!
+//! Every test holds a [`fault::FaultGuard`] — either an armed plan via
+//! `install` or an explicit `quiesce` — because the plan is process
+//! global and the test threads of this binary run concurrently.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use uniap::service::server::{probe_health, serve_frame};
+use uniap::service::{
+    plan_to_json, CancelToken, LoadOutcome, PlannerService, ServerOptions, Snapshot, Status,
+};
+use uniap::testing::harness::{bert_req, round_trip, temp_dir, TestServer};
+use uniap::util::fault::{self, FaultPlan};
+use uniap::util::fsio::write_atomic;
+use uniap::util::json::Json;
+use uniap::util::net::{
+    read_frame, request_response, request_response_retrying, write_frame, Backoff, FrameError,
+};
+
+fn plan(spec: &str) -> FaultPlan {
+    FaultPlan::parse(spec).expect(spec)
+}
+
+fn no_stop() -> bool {
+    false
+}
+
+// ---------------------------------------------------------------- inert
+
+#[test]
+fn quiesced_faults_are_completely_inert() {
+    let _guard = fault::quiesce();
+    let before = fault::injected_total();
+    // fs seam untouched
+    let path = temp_dir("chaos", "inert").join("state.txt");
+    write_atomic(&path, "payload").expect("quiesced write_atomic");
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), "payload");
+    // net seams untouched
+    let mut out: Vec<u8> = Vec::new();
+    write_frame(&mut out, "{\"ok\":1}").unwrap();
+    let mut r = BufReader::new(&b"{\"ok\":1}\n"[..]);
+    assert_eq!(read_frame(&mut r, 64, &no_stop).unwrap().unwrap(), "{\"ok\":1}");
+    // serve seam untouched
+    let svc = PlannerService::with_threads(1);
+    let out = serve_frame(&svc, r#"{"op":"health"}"#, &CancelToken::new(), 1);
+    assert_eq!(Json::parse(&out).unwrap().get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(fault::injected_total(), before, "nothing may fire while quiesced");
+    let _ = std::fs::remove_dir_all(path.parent().unwrap());
+}
+
+// ------------------------------------------------------------ net seams
+
+#[test]
+fn scripted_resets_and_stalls_hit_read_frame() {
+    let guard = fault::install(plan("net.read:reset:x2"));
+    let input = b"hello\n".as_slice();
+    for _ in 0..2 {
+        let mut r = BufReader::new(input);
+        match read_frame(&mut r, 64, &no_stop) {
+            Err(FrameError::Io(e)) => assert!(e.contains("injected connection reset"), "{e}"),
+            other => panic!("expected injected reset, got {other:?}"),
+        }
+    }
+    // budget exhausted (x2) — the third read goes through untouched
+    let mut r = BufReader::new(input);
+    assert_eq!(read_frame(&mut r, 64, &no_stop).unwrap().unwrap(), "hello");
+
+    // a stall delays the read, then proceeds normally
+    guard.set(plan("net.read:stall:150"));
+    let t0 = Instant::now();
+    let mut r = BufReader::new(input);
+    assert_eq!(read_frame(&mut r, 64, &no_stop).unwrap().unwrap(), "hello");
+    assert!(t0.elapsed() >= Duration::from_millis(150), "stall must delay");
+}
+
+#[test]
+fn torn_net_write_emits_a_strict_prefix_then_fails() {
+    let guard = fault::install(plan("net.write:torn:5"));
+    let mut out: Vec<u8> = Vec::new();
+    let err = write_frame(&mut out, "{\"id\":\"x\"}").unwrap_err();
+    assert!(err.contains("torn write after 5 bytes"), "{err}");
+    assert_eq!(out, b"{\"id\"", "exactly the torn prefix reaches the wire");
+    // cleared: the same writer completes the frame
+    guard.clear();
+    out.clear();
+    write_frame(&mut out, "{\"id\":\"x\"}").unwrap();
+    assert_eq!(out, b"{\"id\":\"x\"}\n");
+}
+
+// --------------------------------------------- client budgets & retries
+
+#[test]
+fn silent_peer_costs_the_caller_budget_not_forever() {
+    let _guard = fault::quiesce();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let silent = std::thread::spawn(move || {
+        // accept, then never reply; hold the socket past the budgets
+        let (stream, _) = listener.accept().unwrap();
+        std::thread::sleep(Duration::from_millis(1500));
+        drop(stream);
+    });
+    let t0 = Instant::now();
+    let err = request_response(&addr, "{\"op\":\"sync\"}", 1 << 16, Duration::from_millis(300))
+        .unwrap_err();
+    let elapsed = t0.elapsed();
+    assert!(err.contains("no reply"), "{err}");
+    assert!(elapsed >= Duration::from_millis(290), "budget is the floor: {elapsed:?}");
+    assert!(elapsed < Duration::from_secs(2), "budget is (about) the ceiling: {elapsed:?}");
+    silent.join().unwrap();
+}
+
+#[test]
+fn retrying_exchange_stays_within_budget_against_a_silent_peer() {
+    let _guard = fault::quiesce();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let silent = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        std::thread::sleep(Duration::from_millis(2000));
+        drop(stream);
+    });
+    let t0 = Instant::now();
+    let mut retries = 0u32;
+    let err = request_response_retrying(
+        &addr,
+        "{\"op\":\"health\"}",
+        1 << 16,
+        Duration::from_millis(600),
+        Backoff::default(),
+        &mut |_, _| retries += 1,
+    )
+    .unwrap_err();
+    let elapsed = t0.elapsed();
+    // the silent peer eats the whole budget in one attempt; the loop
+    // must refuse to start a pause that cannot fit and report the count
+    assert!(err.contains("gave up after 1 attempt(s)"), "{err}");
+    assert_eq!(retries, 0, "no pause fits after a budget-long attempt");
+    assert!(elapsed < Duration::from_millis(2500), "bounded: {elapsed:?}");
+    silent.join().unwrap();
+}
+
+#[test]
+fn reset_then_recover_peer_costs_one_retry() {
+    let _guard = fault::quiesce();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let peer = std::thread::spawn(move || {
+        // first connection: dropped without a byte (reset-shaped)
+        let (stream, _) = listener.accept().unwrap();
+        drop(stream);
+        // second connection: a real reply
+        let (stream, _) = listener.accept().unwrap();
+        let read_half = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(read_half);
+        let got = read_frame(&mut reader, 1 << 16, &no_stop).unwrap().unwrap();
+        assert!(got.contains("health"), "{got}");
+        let mut writer = BufWriter::new(stream);
+        write_frame(&mut writer, "pong").unwrap();
+    });
+    let mut retries = 0u32;
+    let reply = request_response_retrying(
+        &addr,
+        "{\"op\":\"health\"}",
+        1 << 16,
+        Duration::from_secs(5),
+        Backoff { initial: Duration::from_millis(40), max: Duration::from_millis(100) },
+        &mut |_, _| retries += 1,
+    )
+    .expect("second attempt must succeed");
+    assert_eq!(reply, "pong");
+    assert_eq!(retries, 1, "exactly one retry for one dropped connection");
+    peer.join().unwrap();
+}
+
+#[test]
+fn dead_port_gives_up_within_budget_after_several_attempts() {
+    let _guard = fault::quiesce();
+    // bind then drop: nothing listens on this port anymore
+    let addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let t0 = Instant::now();
+    let mut retries = 0u32;
+    let err = request_response_retrying(
+        &addr,
+        "{\"op\":\"health\"}",
+        1 << 16,
+        Duration::from_millis(400),
+        Backoff { initial: Duration::from_millis(20), max: Duration::from_millis(60) },
+        &mut |_, _| retries += 1,
+    )
+    .unwrap_err();
+    let elapsed = t0.elapsed();
+    assert!(err.contains("gave up after"), "{err}");
+    assert!(retries >= 2, "refused connects are cheap, several attempts fit: {retries}");
+    assert!(elapsed < Duration::from_secs(2), "bounded: {elapsed:?}");
+}
+
+// -------------------------------------------------- admission & shedding
+
+#[test]
+fn overloaded_server_sheds_busy_in_bounded_time_and_recovers() {
+    // one in-flight slot; the scripted stall makes its holder slow
+    let guard = fault::install(plan("serve.frame:stall:1200"));
+    let service = Arc::new(PlannerService::with_threads(2));
+    let opts = ServerOptions { max_inflight: 1, ..Default::default() };
+    let mut server = TestServer::start(service.clone(), opts);
+
+    // client A occupies the only slot (its frame stalls 1.2 s)
+    let addr = server.addr;
+    let slow = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let read_half = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(read_half);
+        let mut writer = BufWriter::new(stream);
+        round_trip(&mut reader, &mut writer, &bert_req("slow").to_json().to_string())
+    });
+    std::thread::sleep(Duration::from_millis(300)); // let A claim the slot
+
+    // client B must be shed promptly with a typed busy frame
+    let (mut reader, mut writer) = server.connect();
+    let t0 = Instant::now();
+    let resp = round_trip(&mut reader, &mut writer, &bert_req("shed-me").to_json().to_string());
+    assert_eq!(resp.status, Status::Busy, "{resp:?}");
+    assert!(resp.error.unwrap().contains("in-flight cap"), "names the cap");
+    assert!(t0.elapsed() < Duration::from_secs(1), "shed in bounded time: {:?}", t0.elapsed());
+
+    // the slow client still gets its real answer, and the connection B
+    // used stays usable once the slot frees up
+    let slow_resp = slow.join().expect("client thread");
+    assert_eq!(slow_resp.status, Status::Ok, "{slow_resp:?}");
+    guard.clear();
+    let resp = round_trip(&mut reader, &mut writer, &bert_req("after-shed").to_json().to_string());
+    assert_eq!(resp.status, Status::Ok);
+
+    server.stop().expect("clean shutdown");
+    let stats = service.stats();
+    assert!(stats.requests_shed >= 1, "{stats:?}");
+    assert!(stats.faults_injected >= 1, "the stall plan must actually have fired: {stats:?}");
+}
+
+#[test]
+fn connection_cap_sheds_with_one_busy_frame_then_closes() {
+    let _guard = fault::quiesce();
+    let opts = ServerOptions { max_connections: 0, ..Default::default() };
+    let service = Arc::new(PlannerService::with_threads(1));
+    let mut server = TestServer::start(service.clone(), opts);
+    let stream = TcpStream::connect(server.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut reader = BufReader::new(stream);
+    // the server speaks first: one busy frame, then a close
+    let line = read_frame(&mut reader, 1 << 16, &no_stop).expect("read").expect("busy frame");
+    let resp = uniap::service::PlanResponse::parse(&line).expect("typed busy");
+    assert_eq!(resp.status, Status::Busy);
+    assert!(resp.error.unwrap().contains("connections cap"), "names the cap");
+    match read_frame(&mut reader, 1 << 16, &no_stop) {
+        Ok(None) | Err(FrameError::Io(_)) => {} // closed (EOF or RST race)
+        other => panic!("connection must be closed after the shed, got {other:?}"),
+    }
+    server.stop().expect("clean shutdown");
+    assert!(service.stats().requests_shed >= 1);
+}
+
+// ------------------------------------------------------ snapshot faults
+
+#[test]
+fn failed_saves_never_corrupt_the_state_dir() {
+    let guard = fault::quiesce();
+    let svc = PlannerService::with_threads(2);
+    let req = bert_req("persist");
+    let want = plan_to_json(svc.plan(&req).plan.as_ref().unwrap()).to_string();
+
+    for spec in ["fs.write:torn:20", "fs.write:full", "fs.rename:fail"] {
+        let dir = temp_dir("chaos", &format!("save-{}", spec.replace([':', '.'], "-")));
+        guard.set(plan(spec));
+        let err = svc.save_state(&dir).expect_err(spec);
+        assert!(err.contains("injected"), "{spec}: {err}");
+        // nothing half-written: no merged snapshot, no temp litter
+        assert!(!dir.join("state.json").exists(), "{spec}: torn state.json left behind");
+        let litter: Vec<String> = std::fs::read_dir(&dir)
+            .map(|entries| {
+                entries
+                    .filter_map(|e| e.ok())
+                    .map(|e| e.file_name().to_string_lossy().into_owned())
+                    .filter(|n| n.contains(".tmp."))
+                    .collect()
+            })
+            .unwrap_or_default();
+        assert!(litter.is_empty(), "{spec}: temp litter {litter:?}");
+
+        // cleared: the very same dir accepts a clean save, and a fresh
+        // service recovers byte-identical plans from it
+        guard.clear();
+        svc.save_state(&dir).expect("clean save after fault");
+        let fresh = PlannerService::with_threads(2);
+        assert!(matches!(fresh.load_state(&dir), LoadOutcome::Loaded { .. }));
+        let resp = fresh.plan(&req);
+        assert_eq!(resp.cache.base_misses, 0, "{spec}: recovered state must cover the sweep");
+        assert_eq!(
+            plan_to_json(resp.plan.as_ref().unwrap()).to_string(),
+            want,
+            "{spec}: byte-identical after recovery"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn torn_resave_preserves_the_previous_good_snapshot() {
+    let guard = fault::quiesce();
+    let dir = temp_dir("chaos", "resave");
+    let svc = PlannerService::with_threads(2);
+    assert_eq!(svc.plan(&bert_req("v1")).status, Status::Ok);
+    svc.save_state(&dir).expect("baseline save");
+    let v1 = std::fs::read_to_string(dir.join("state.json")).unwrap();
+    let v1_counts = Snapshot::parse(&v1).expect("baseline validates").counts();
+
+    // grow the state so the next save is not skipped as unchanged, then
+    // tear every write: the published snapshot must remain the old one
+    let mut bigger = bert_req("v2");
+    bigger.batch = 32;
+    assert_eq!(svc.plan(&bigger).status, Status::Ok);
+    guard.set(plan("fs.write:torn:10:x*"));
+    let err = svc.save_state(&dir).expect_err("torn save must fail");
+    assert!(err.contains("torn"), "{err}");
+    let after = std::fs::read_to_string(dir.join("state.json")).expect("state.json still there");
+    assert_eq!(after, v1, "old-or-new: a torn save may not touch the published bytes");
+    assert_eq!(Snapshot::parse(&after).unwrap().counts(), v1_counts);
+
+    // cleared: the grown state publishes
+    guard.clear();
+    svc.save_state(&dir).expect("clean save");
+    let v2_counts = Snapshot::parse(&std::fs::read_to_string(dir.join("state.json")).unwrap())
+        .unwrap()
+        .counts();
+    assert!(v2_counts.0 >= v1_counts.0 && v2_counts.1 >= v1_counts.1, "state only grows");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn injected_load_failures_degrade_to_a_cold_start_not_a_crash() {
+    let guard = fault::quiesce();
+    let dir = temp_dir("chaos", "load");
+    let svc = PlannerService::with_threads(2);
+    assert_eq!(svc.plan(&bert_req("seed")).status, Status::Ok);
+    svc.save_state(&dir).expect("save");
+
+    guard.set(plan("snapshot.load:fail:x*"));
+    let fresh = PlannerService::with_threads(2);
+    match fresh.load_state(&dir) {
+        LoadOutcome::ColdStart { reason: Some(why) } => {
+            assert!(why.contains("injected"), "{why}")
+        }
+        other => panic!("sick disk must degrade to a reasoned cold start, got {other:?}"),
+    }
+    // the same directory loads fine once the disk recovers
+    guard.clear();
+    assert!(matches!(fresh.load_state(&dir), LoadOutcome::Loaded { .. }));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------- kill under load
+
+#[test]
+fn kill_under_load_restarts_clean_despite_a_truncated_sibling() {
+    let _guard = fault::quiesce();
+    let dir = temp_dir("chaos", "kill");
+    let opts = ServerOptions { state_dir: Some(dir.clone()), ..Default::default() };
+
+    // generation 1: capture reference bytes, then die mid-load
+    let reference;
+    {
+        let mut server =
+            TestServer::start(Arc::new(PlannerService::with_threads(2)), opts.clone());
+        let (mut reader, mut writer) = server.connect();
+        let resp = round_trip(&mut reader, &mut writer, &bert_req("ref").to_json().to_string());
+        assert_eq!(resp.status, Status::Ok);
+        reference = plan_to_json(resp.plan.as_ref().unwrap()).to_string();
+
+        // three clients hammer valid + garbage frames while we cancel
+        let addr = server.addr;
+        let hammers: Vec<_> = (0..3)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let Ok(stream) = TcpStream::connect(addr) else { return };
+                    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+                    let Ok(read_half) = stream.try_clone() else { return };
+                    let mut reader = BufReader::new(read_half);
+                    let mut writer = BufWriter::new(stream);
+                    for n in 0..50 {
+                        let frame = match (i + n) % 3 {
+                            0 => bert_req(&format!("h{i}-{n}")).to_json().to_string(),
+                            1 => "{ mangled".to_string(),
+                            _ => r#"{"op":"health"}"#.to_string(),
+                        };
+                        if write_frame(&mut writer, &frame).is_err() {
+                            return; // server went away mid-load: expected
+                        }
+                        // replies may be typed responses, health docs, or
+                        // never arrive (cancelled) — anything but a panic
+                        let _ = read_frame(&mut reader, 1 << 24, &no_stop);
+                    }
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(300));
+        server.shutdown.cancel(); // the "kill", mid-load
+        assert!(server.stop().is_ok(), "killed-under-load server must join cleanly");
+        for h in hammers {
+            h.join().expect("hammer thread must not panic");
+        }
+        assert!(dir.join("state.json").exists(), "shutdown snapshot written");
+    }
+
+    // corrupt the directory the way a crashed sibling would: a torn
+    // generation file next to the good merged snapshot
+    let good = std::fs::read_to_string(dir.join("state.json")).unwrap();
+    std::fs::write(dir.join("state.crashed.json"), &good[..good.len() / 2]).unwrap();
+
+    // generation 2: clean restart, warm, byte-identical
+    let service = Arc::new(PlannerService::with_threads(2));
+    assert!(matches!(service.load_state(&dir), LoadOutcome::Loaded { .. }));
+    let mut server = TestServer::start(service.clone(), opts);
+    let (mut reader, mut writer) = server.connect();
+    let resp = round_trip(&mut reader, &mut writer, &bert_req("gen2").to_json().to_string());
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(
+        plan_to_json(resp.plan.as_ref().unwrap()).to_string(),
+        reference,
+        "recovery must serve the exact bytes from before the kill"
+    );
+    server.stop().expect("clean shutdown");
+    assert!(service.stats().persisted_frontier_hits > 0, "{:?}", service.stats());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------- health & resync
+
+#[test]
+fn health_probe_distinguishes_up_from_down() {
+    let _guard = fault::quiesce();
+    let mut server =
+        TestServer::start(Arc::new(PlannerService::with_threads(1)), ServerOptions::default());
+    let addr = server.addr.to_string();
+    probe_health(&addr, Duration::from_secs(2)).expect("live server is ready");
+
+    // raw frame shape: status/connections/requests
+    let (mut reader, mut writer) = server.connect();
+    write_frame(&mut writer, r#"{"op":"health"}"#).unwrap();
+    let line = read_frame(&mut reader, 1 << 16, &no_stop).unwrap().unwrap();
+    let doc = Json::parse(&line).unwrap();
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+    assert!(doc.get("connections").and_then(Json::as_usize).is_some());
+    assert!(doc.get("requests").and_then(Json::as_usize).is_some());
+    server.stop().expect("clean shutdown");
+
+    // a dead port fails fast, within the probe timeout
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let t0 = Instant::now();
+    assert!(probe_health(&dead, Duration::from_secs(2)).is_err());
+    assert!(t0.elapsed() < Duration::from_secs(2), "refused connect is fast");
+}
+
+#[test]
+fn background_resync_tick_warms_a_server_from_its_peer() {
+    let _guard = fault::quiesce();
+    // peer A: warm before B boots
+    let a_service = Arc::new(PlannerService::with_threads(2));
+    let req = bert_req("warm");
+    let want = plan_to_json(a_service.plan(&req).plan.as_ref().unwrap()).to_string();
+    let mut a = TestServer::start(a_service, ServerOptions::default());
+
+    // B: no boot sync (that's the CLI's job) — only the background tick
+    let b_service = Arc::new(PlannerService::with_threads(2));
+    let opts = ServerOptions {
+        sync_from: Some(a.addr.to_string()),
+        resync_secs: 0.05,
+        ..Default::default()
+    };
+    let mut b = TestServer::start(b_service.clone(), opts);
+    let t0 = Instant::now();
+    while b_service.stats().persisted_frontiers_loaded == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "tick never pulled the peer snapshot");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // warmed purely in the background: same bytes, no rebuild
+    let resp = b_service.plan(&req);
+    assert_eq!(resp.cache.base_misses, 0, "{:?}", resp.cache);
+    assert_eq!(plan_to_json(resp.plan.as_ref().unwrap()).to_string(), want);
+    b.stop().expect("clean shutdown");
+    a.stop().expect("clean shutdown");
+}
+
+#[test]
+fn resync_tick_backs_off_while_the_peer_is_down_and_keeps_serving() {
+    let _guard = fault::quiesce();
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let service = Arc::new(PlannerService::with_threads(2));
+    let opts =
+        ServerOptions { sync_from: Some(dead), resync_secs: 0.05, ..Default::default() };
+    let mut server = TestServer::start(service.clone(), opts);
+    let t0 = Instant::now();
+    while service.stats().sync_retries == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "failed pulls must be counted");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // a down peer costs warmth, never availability
+    let (mut reader, mut writer) = server.connect();
+    let resp = round_trip(&mut reader, &mut writer, &bert_req("alive").to_json().to_string());
+    assert_eq!(resp.status, Status::Ok);
+    server.stop().expect("clean shutdown despite the dead peer");
+    assert!(service.stats().sync_retries >= 1);
+}

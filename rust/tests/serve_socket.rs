@@ -14,89 +14,22 @@
 //! validates and serves normally.
 
 use std::io::{BufReader, BufWriter, Write as _};
-use std::net::{SocketAddr, TcpStream};
+use std::net::TcpStream;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
 use uniap::service::server::{fetch_snapshot, serve_frame};
 use uniap::service::{
-    plan_to_json, CancelToken, PlanRequest, PlanResponse, PlannerService, Server, ServerOptions,
-    Snapshot, Status,
+    plan_to_json, CancelToken, PlanResponse, PlannerService, ServerOptions, Snapshot, Status,
 };
 use uniap::testing;
+use uniap::testing::harness::{bert_req, round_trip, TestServer};
 use uniap::util::json::Json;
 use uniap::util::net::{read_frame, write_frame, FrameError};
 
-/// A server running on an ephemeral loopback port, shut down (and
-/// joined) on drop so a failing test cannot leak its thread past the
-/// harness.
-struct TestServer {
-    addr: SocketAddr,
-    service: Arc<PlannerService>,
-    shutdown: CancelToken,
-    thread: Option<std::thread::JoinHandle<Result<(), String>>>,
-}
-
-impl TestServer {
-    fn start(service: Arc<PlannerService>, opts: ServerOptions) -> TestServer {
-        let server = Server::bind("127.0.0.1:0").expect("ephemeral bind");
-        let addr = server.local_addr();
-        let shutdown = CancelToken::new();
-        let thread = {
-            let service = service.clone();
-            let shutdown = shutdown.clone();
-            std::thread::spawn(move || server.run(&service, &opts, &shutdown))
-        };
-        TestServer { addr, service, shutdown, thread: Some(thread) }
-    }
-
-    fn connect(&self) -> (BufReader<TcpStream>, BufWriter<TcpStream>) {
-        let stream = TcpStream::connect(self.addr).expect("connect");
-        stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
-        let read_half = stream.try_clone().unwrap();
-        (BufReader::new(read_half), BufWriter::new(stream))
-    }
-
-    fn stop(&mut self) -> Result<(), String> {
-        self.shutdown.cancel();
-        match self.thread.take() {
-            Some(t) => t.join().expect("server thread must not panic"),
-            None => Ok(()),
-        }
-    }
-}
-
-impl Drop for TestServer {
-    fn drop(&mut self) {
-        let _ = self.stop();
-    }
-}
-
-fn bert_req(id: &str) -> PlanRequest {
-    let mut req = PlanRequest::new(id, "bert", "EnvB", 16);
-    req.max_pp = Some(2); // keep test sweeps small
-    req
-}
-
-/// Send one frame, read one frame, parse it as a response.
-fn round_trip(
-    reader: &mut BufReader<TcpStream>,
-    writer: &mut BufWriter<TcpStream>,
-    frame: &str,
-) -> PlanResponse {
-    write_frame(writer, frame).expect("send");
-    let never = || false;
-    let line = read_frame(reader, 1 << 24, &never)
-        .expect("read")
-        .expect("server closed unexpectedly");
-    PlanResponse::parse(&line).expect("typed response")
-}
-
 fn temp_dir(name: &str) -> PathBuf {
-    let dir = std::env::temp_dir().join(format!("uniap-serve-{}-{name}", std::process::id()));
-    let _ = std::fs::remove_dir_all(&dir);
-    dir
+    testing::harness::temp_dir("serve", name)
 }
 
 #[test]
