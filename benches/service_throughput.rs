@@ -39,6 +39,12 @@
 //! serving (`shed_latency_vs_warm_socket` > 1) or admission control
 //! would protect nothing.
 //!
+//! ISSUE 7 adds the **DAG front-end** rows: linearizing the UNet
+//! operator DAG into virtual layers, and a cold end-to-end DAG solve.
+//! The gate is `dag_linearize_overhead` ≤ 0.05 — linearization must
+//! stay under 5% of a cold chain solve, or the front-end would tax
+//! every branching request noticeably.
+//!
 //! Run: `cargo bench --bench service_throughput`
 //! CI smoke: `UNIAP_BENCH_SMOKE=1` shrinks rows to single unwarmed
 //! samples.
@@ -49,6 +55,8 @@ use std::net::TcpStream;
 use std::sync::Arc;
 
 use uniap::cost::Schedule;
+use uniap::dag::linearize;
+use uniap::graph::models;
 use uniap::report::bench::{section, BenchReport};
 use uniap::service::{
     plan_to_json, CancelToken, PlanRequest, PlanResponse, PlannerService, Server, ServerOptions,
@@ -188,6 +196,39 @@ fn main() {
     rep.bench("serve 6 requests, concurrency 2 (warm service)", 0, s(3), || {
         std::hint::black_box(svc.serve(&file, 2));
     });
+
+    // --- DAG front-end linearization overhead (ISSUE 7) ------------------
+    // The front-end's whole cost is one linearize() per cold request
+    // (warm requests replay the plan cache and never touch it). Measure
+    // it against the cold chain solve it precedes: the fraction is the
+    // tax a branching model pays for entering through the DAG IR.
+    section("operator-DAG front-end (linearize + plan)");
+    let unet = models::dag_by_name("unet").expect("zoo model");
+    let (_, unet_report) = linearize(&unet).expect("unet linearizes");
+    rep.note("dag_model", "UNet-4-64");
+    rep.note("dag_ops", unet_report.num_ops);
+    rep.note("dag_virtual_layers", unet_report.virtual_layers.len());
+    rep.note("dag_skip_edges", unet_report.skip_edges);
+    rep.bench("linearize unet (ops -> virtual layers)", w(10), s(200), || {
+        std::hint::black_box(linearize(&unet).expect("unet linearizes"));
+    });
+    let mut dag_req = PlanRequest::new_dag("dag-cold", unet.clone(), "EnvB", 16);
+    dag_req.max_pp = Some(2);
+    rep.bench("service cold (unet DAG, fresh caches per request)", w(1), s(3), || {
+        let svc = PlannerService::new();
+        let resp = svc.plan(&dag_req);
+        assert_eq!(resp.status, Status::Ok, "{:?}", resp.error);
+        std::hint::black_box(resp);
+    });
+    if let Some(ratio) = rep.speedup(
+        "service cold (fresh caches per request)",
+        "linearize unet (ops -> virtual layers)",
+    ) {
+        let overhead = 1.0 / ratio;
+        println!("linearize/cold-solve fraction: {overhead:.5} (gate: <= 0.05)");
+        rep.note("dag_linearize_overhead", overhead);
+        rep.note("dag_linearize_overhead_target", 0.05);
+    }
 
     // --- socket-served warm requests (ISSUE 4) ---------------------------
     // The long-running `serve --listen` path: the same warm strict-repeat

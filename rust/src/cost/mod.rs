@@ -232,6 +232,12 @@ pub struct CostBase {
     act_store: Vec<f64>,
     /// Per-edge source-layer output bytes per sample:
     /// `bytes(e, B, c) = edge_act[e]·B/c`.
+    ///
+    /// This is the seam the operator-DAG front-end folds into: a lowered
+    /// DAG chain ([`crate::dag::linearize`]) sets each virtual layer's
+    /// `act_out_bytes` to the *total* bytes crossing that chain hop —
+    /// branch fan-outs and skip tensors included — so the R/R′ resharding
+    /// matrices price cross-cluster traffic with no solver changes.
     edge_act: Vec<f64>,
 }
 
@@ -248,6 +254,17 @@ impl CostBase {
     /// out of bounds.
     pub fn num_edges(&self) -> usize {
         self.edge_act.len()
+    }
+
+    /// Byte volume the resharding model prices for edge `e` at mini-batch
+    /// `batch` split into `num_micro` micro-batches — the `bytes_full`
+    /// that `materialize` evaluates the per-edge R/R′ affines at
+    /// (`edge_act[e]·B/c`). Public so front ends and tests can audit what
+    /// the communication model will charge — e.g. that a lowered DAG's
+    /// folded skip-tensor bytes actually reached the cost model.
+    pub fn edge_bytes(&self, e: usize, batch: usize, num_micro: usize) -> f64 {
+        // same association order as `materialize`, for bit-equal audits
+        (self.edge_act[e] * batch as f64) * (1.0 / num_micro as f64)
     }
 
     /// Build the `(B, c)`-independent cost structure for one `pp_size` —
@@ -1156,5 +1173,51 @@ mod tests {
         let choice = vec![dp8; g.num_layers()];
         let mem = stage_memory(&g, &c, &placement, &choice);
         assert!(mem[0] > c.mem_limit, "replicated 672M-param FP32 must OOM 12GB");
+    }
+
+    #[test]
+    fn lowered_dag_skip_bytes_reach_the_resharding_model() {
+        // Two DAGs identical except one has a skip edge a → c. After
+        // linearization, every chain hop the skip rides must price more
+        // bytes in the cost base — the fold is visible to R/R′, not just
+        // to the report.
+        use crate::dag::{linearize, OpDag, OpEdge, OpNode};
+        let op = |name: &str| OpNode {
+            name: name.to_string(),
+            type_key: name.to_string(),
+            kind: crate::graph::LayerKind::Other,
+            flops_fwd: 1e11,
+            params: 1e7,
+            act_out_bytes: 4e6,
+            act_store_bytes: 8e6,
+        };
+        let e = |s: usize, d: usize| OpEdge { src: s, dst: d, shape: vec![] };
+        let base_dag = OpDag {
+            name: "nsk".into(),
+            ops: vec![op("a"), op("b"), op("c")],
+            edges: vec![e(0, 1), e(1, 2)],
+            dtype: crate::graph::Dtype::Fp32,
+            seq_len: 1,
+        };
+        let mut skip_dag = base_dag.clone();
+        skip_dag.name = "sk".into();
+        skip_dag.edges.push(e(0, 2));
+
+        let env = ClusterEnv::env_b();
+        let (g_plain, _) = linearize(&base_dag).unwrap();
+        let (g_skip, report) = linearize(&skip_dag).unwrap();
+        assert_eq!(report.skip_edges, 1);
+        let b_plain = CostBase::new(&Profile::analytic(&env, &g_plain), &g_plain, 2);
+        let b_skip = CostBase::new(&Profile::analytic(&env, &g_skip), &g_skip, 2);
+        assert_eq!(b_plain.num_edges(), b_skip.num_edges());
+        for edge in 0..b_plain.num_edges() {
+            let plain = b_plain.edge_bytes(edge, 16, 4);
+            let skip = b_skip.edge_bytes(edge, 16, 4);
+            // the 4e6-byte skip tensor rides both hops: +4e6·B/c each
+            assert!(
+                (skip - (plain + 4e6 * 16.0 / 4.0)).abs() < 1e-3,
+                "hop {edge}: {plain} vs {skip}"
+            );
+        }
     }
 }

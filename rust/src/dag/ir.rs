@@ -1,0 +1,548 @@
+//! Operator-DAG IR: vertices with cost-model annotations, shaped edges.
+//!
+//! [`OpDag`] is the front-end twin of [`crate::graph::Graph`]: each
+//! [`OpNode`] carries exactly the per-sample descriptors a
+//! [`crate::graph::Layer`] does, while an [`OpEdge`] additionally carries the
+//! *tensor shape* flowing along it, so cross-cluster resharding bytes can be
+//! derived per edge instead of assuming "the producer's whole output". An
+//! empty shape means exactly that fallback — the edge carries the producer's
+//! full `act_out_bytes` — which is also what makes a chain-shaped DAG lower
+//! to a bit-identical chain graph.
+//!
+//! Unlike `Graph` (whose invariant is indices-in-topological-order), an
+//! `OpDag` accepts vertices and edges in **any** order; [`OpDag::validate`]
+//! proves acyclicity and weak connectivity with typed errors, never panics,
+//! and the linearizer produces the same clustering for any input permutation
+//! (pinned by `rust/tests/dag_linearize.rs`).
+
+use crate::graph::{Dtype, Graph, LayerKind};
+use crate::util::json::Json;
+
+/// One operator: the planning-granularity unit of a branching model.
+///
+/// Field meanings are identical to [`crate::graph::Layer`]; all per-sample
+/// quantities are for a single training sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpNode {
+    /// Unique (within the DAG) human-readable name.
+    pub name: String,
+    /// Profiling key: ops sharing a key share profiled times (§3.1).
+    pub type_key: String,
+    /// Layer family.
+    pub kind: LayerKind,
+    /// Forward-pass FLOPs per sample.
+    pub flops_fwd: f64,
+    /// Trainable parameter count.
+    pub params: f64,
+    /// Bytes of the op's full output tensor per sample.
+    pub act_out_bytes: f64,
+    /// Bytes of activations stored for backward per sample.
+    pub act_store_bytes: f64,
+}
+
+/// A directed data edge `src → dst` with an optional tensor shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpEdge {
+    /// Producer op index.
+    pub src: usize,
+    /// Consumer op index.
+    pub dst: usize,
+    /// Element shape of the tensor on this edge (per sample). Empty means
+    /// "the producer's full output": the edge carries `src.act_out_bytes`.
+    pub shape: Vec<usize>,
+}
+
+/// An operator DAG plus model-level metadata (mirrors [`Graph`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpDag {
+    /// Model name (reporting, fingerprinting via the lowered graph).
+    pub name: String,
+    /// Operators, in any order.
+    pub ops: Vec<OpNode>,
+    /// Data edges, in any order.
+    pub edges: Vec<OpEdge>,
+    /// Training precision regime.
+    pub dtype: Dtype,
+    /// Sequence length (tokens per sample) — used for MFU accounting.
+    pub seq_len: usize,
+}
+
+impl OpDag {
+    /// Bytes per sample carried by `edge`: `∏shape × elem_bytes`, or the
+    /// producer's full `act_out_bytes` when the shape is empty.
+    pub fn edge_bytes(&self, edge: &OpEdge) -> f64 {
+        if edge.shape.is_empty() {
+            self.ops[edge.src].act_out_bytes
+        } else {
+            edge.shape.iter().map(|&d| d as f64).product::<f64>() * self.dtype.elem_bytes()
+        }
+    }
+
+    /// Full structural validation with typed errors (never panics): ops
+    /// present and uniquely named, edge indices in range, no self-edges or
+    /// duplicate edges, finite non-negative annotations, **acyclic**, and
+    /// **weakly connected**. Runs at every boundary a DAG can enter through
+    /// (request validation, the linearizer, the CLI), so cyclic or
+    /// disconnected inputs surface as error responses through the socket
+    /// path rather than panicking a worker.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ops.is_empty() {
+            return Err("dag has no ops".to_string());
+        }
+        if self.seq_len == 0 {
+            return Err("dag \"seq_len\" must be ≥ 1".to_string());
+        }
+        let mut names: Vec<&str> = self.ops.iter().map(|o| o.name.as_str()).collect();
+        names.sort_unstable();
+        for w in names.windows(2) {
+            if w[0] == w[1] {
+                return Err(format!("duplicate op name {:?}", w[0]));
+            }
+        }
+        for op in &self.ops {
+            if op.name.is_empty() {
+                return Err("op with empty name".to_string());
+            }
+            for (field, v) in [
+                ("flops_fwd", op.flops_fwd),
+                ("params", op.params),
+                ("act_out_bytes", op.act_out_bytes),
+                ("act_store_bytes", op.act_store_bytes),
+            ] {
+                if !(v.is_finite() && v >= 0.0) {
+                    return Err(format!("op {:?} has invalid {field} ({v})", op.name));
+                }
+            }
+        }
+        let n = self.ops.len();
+        let mut seen = std::collections::HashSet::new();
+        for e in &self.edges {
+            if e.src >= n || e.dst >= n {
+                return Err(format!("edge ({},{}) out of range", e.src, e.dst));
+            }
+            if e.src == e.dst {
+                return Err(format!(
+                    "self-edge on op {:?} (a 1-cycle)",
+                    self.ops[e.src].name
+                ));
+            }
+            if !seen.insert((e.src, e.dst)) {
+                return Err(format!(
+                    "duplicate edge {:?} → {:?}",
+                    self.ops[e.src].name, self.ops[e.dst].name
+                ));
+            }
+            for &d in &e.shape {
+                if d == 0 {
+                    return Err(format!(
+                        "edge {:?} → {:?} has a zero dimension in its shape",
+                        self.ops[e.src].name, self.ops[e.dst].name
+                    ));
+                }
+            }
+        }
+        // Acyclicity: Kahn's algorithm must consume every vertex.
+        let mut indeg = vec![0usize; n];
+        let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for e in &self.edges {
+            indeg[e.dst] += 1;
+            succ[e.src].push(e.dst);
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+        let mut consumed = 0usize;
+        while let Some(v) = queue.pop() {
+            consumed += 1;
+            for &s in &succ[v] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        if consumed != n {
+            return Err(format!(
+                "dag contains a cycle ({} of {n} ops unreachable from sources)",
+                n - consumed
+            ));
+        }
+        // Weak connectivity: one BFS over the undirected edge set. A
+        // disconnected "DAG" is two models, not one — reject it.
+        if n > 1 {
+            let mut und: Vec<Vec<usize>> = vec![Vec::new(); n];
+            for e in &self.edges {
+                und[e.src].push(e.dst);
+                und[e.dst].push(e.src);
+            }
+            let mut reached = vec![false; n];
+            let mut stack = vec![0usize];
+            reached[0] = true;
+            let mut count = 1usize;
+            while let Some(v) = stack.pop() {
+                for &w in &und[v] {
+                    if !reached[w] {
+                        reached[w] = true;
+                        count += 1;
+                        stack.push(w);
+                    }
+                }
+            }
+            if count != n {
+                return Err(format!(
+                    "dag is disconnected ({} of {n} ops unreachable from {:?})",
+                    n - count,
+                    self.ops[0].name
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Wrap an existing chain/DAG [`Graph`] as an `OpDag` (edges inherit the
+    /// producer's full output via empty shapes). The identity round trip —
+    /// `linearize(&OpDag::from_graph(&chain))` returning a graph
+    /// field-for-field equal to `chain` — is pinned by
+    /// `rust/tests/chain_equivalence.rs`.
+    pub fn from_graph(g: &Graph) -> OpDag {
+        OpDag {
+            name: g.name.clone(),
+            ops: g
+                .layers
+                .iter()
+                .map(|l| OpNode {
+                    name: l.name.clone(),
+                    type_key: l.type_key.clone(),
+                    kind: l.kind,
+                    flops_fwd: l.flops_fwd,
+                    params: l.params,
+                    act_out_bytes: l.act_out_bytes,
+                    act_store_bytes: l.act_store_bytes,
+                })
+                .collect(),
+            edges: g
+                .edges
+                .iter()
+                .map(|&(u, v)| OpEdge { src: u, dst: v, shape: Vec::new() })
+                .collect(),
+            dtype: g.dtype,
+            seq_len: g.seq_len,
+        }
+    }
+
+    /// Reindex ops by `perm` (`new_ops[i] = ops[perm[i]]`), remapping edge
+    /// endpoints accordingly. `perm` must be a permutation of `0..ops.len()`.
+    /// Test helper for pinning order-independence of the linearizer.
+    pub fn permuted(&self, perm: &[usize]) -> OpDag {
+        assert_eq!(perm.len(), self.ops.len(), "perm length mismatch");
+        let mut inverse = vec![usize::MAX; perm.len()];
+        for (new_i, &old_i) in perm.iter().enumerate() {
+            assert!(inverse[old_i] == usize::MAX, "perm is not a permutation");
+            inverse[old_i] = new_i;
+        }
+        OpDag {
+            name: self.name.clone(),
+            ops: perm.iter().map(|&i| self.ops[i].clone()).collect(),
+            edges: self
+                .edges
+                .iter()
+                .map(|e| OpEdge { src: inverse[e.src], dst: inverse[e.dst], shape: e.shape.clone() })
+                .collect(),
+            dtype: self.dtype,
+            seq_len: self.seq_len,
+        }
+    }
+
+    /// Serialize (deterministic field order; edge shapes always emitted so
+    /// emit∘parse is the identity).
+    pub fn to_json(&self) -> Json {
+        let ops = self
+            .ops
+            .iter()
+            .map(|o| {
+                Json::obj()
+                    .field("name", o.name.as_str())
+                    .field("type_key", o.type_key.as_str())
+                    .field("kind", o.kind.key())
+                    .field("flops_fwd", o.flops_fwd)
+                    .field("params", o.params)
+                    .field("act_out_bytes", o.act_out_bytes)
+                    .field("act_store_bytes", o.act_store_bytes)
+            })
+            .collect();
+        let edges = self
+            .edges
+            .iter()
+            .map(|e| {
+                Json::obj()
+                    .field("src", e.src)
+                    .field("dst", e.dst)
+                    .field(
+                        "shape",
+                        Json::Arr(e.shape.iter().map(|&d| Json::from(d)).collect()),
+                    )
+            })
+            .collect();
+        Json::obj()
+            .field("name", self.name.as_str())
+            .field("dtype", self.dtype.key())
+            .field("seq_len", self.seq_len)
+            .field("ops", Json::Arr(ops))
+            .field("edges", Json::Arr(edges))
+    }
+
+    /// Deserialize with typed errors. Per op, `name` and the four numeric
+    /// annotations are required; `type_key` defaults to the op name and
+    /// `kind` to `"other"`. Edge endpoints may be op indices *or* op names
+    /// (names are friendlier in hand-written request files); an absent /
+    /// `null` shape means "producer's full output". The parsed DAG is
+    /// [`OpDag::validate`]d before it is returned, so a cyclic or
+    /// disconnected wire payload is an error here, not a panic later.
+    pub fn from_json(j: &Json) -> Result<OpDag, String> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("dag needs a string field \"name\"")?
+            .to_string();
+        let dtype = match j.get("dtype").filter(|v| !v.is_null()) {
+            None => Dtype::Fp16Mixed,
+            Some(d) => {
+                let key = d.as_str().ok_or("dag \"dtype\" must be a string")?;
+                Dtype::by_key(key).ok_or_else(|| format!("unknown dtype {key:?}"))?
+            }
+        };
+        let seq_len = match j.get("seq_len").filter(|v| !v.is_null()) {
+            None => 1,
+            Some(s) => s
+                .as_usize()
+                .filter(|&s| s > 0)
+                .ok_or("dag \"seq_len\" must be a positive integer")?,
+        };
+        let op_items = j
+            .get("ops")
+            .and_then(Json::as_arr)
+            .ok_or("dag needs an array field \"ops\"")?;
+        let mut ops = Vec::with_capacity(op_items.len());
+        for (i, item) in op_items.iter().enumerate() {
+            ops.push(op_from_json(item).map_err(|e| format!("op [{i}]: {e}"))?);
+        }
+        let mut edges = Vec::new();
+        if let Some(edge_items) = j.get("edges").filter(|v| !v.is_null()) {
+            let edge_items = edge_items.as_arr().ok_or("dag \"edges\" must be an array")?;
+            for (i, item) in edge_items.iter().enumerate() {
+                edges.push(edge_from_json(item, &ops).map_err(|e| format!("edge [{i}]: {e}"))?);
+            }
+        }
+        let dag = OpDag { name, ops, edges, dtype, seq_len };
+        dag.validate()?;
+        Ok(dag)
+    }
+
+    /// Parse one DAG from JSON text.
+    pub fn parse(text: &str) -> Result<OpDag, String> {
+        OpDag::from_json(&Json::parse(text)?)
+    }
+}
+
+fn op_from_json(j: &Json) -> Result<OpNode, String> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or("op needs a string field \"name\"")?
+        .to_string();
+    let num = |key: &str| -> Result<f64, String> {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("op {name:?} needs a number field \"{key}\""))
+    };
+    let type_key = match j.get("type_key").filter(|v| !v.is_null()) {
+        None => name.clone(),
+        Some(t) => t.as_str().ok_or("op \"type_key\" must be a string")?.to_string(),
+    };
+    let kind = match j.get("kind").filter(|v| !v.is_null()) {
+        None => LayerKind::Other,
+        Some(k) => {
+            let key = k.as_str().ok_or("op \"kind\" must be a string")?;
+            LayerKind::by_key(key).ok_or_else(|| format!("unknown op kind {key:?}"))?
+        }
+    };
+    Ok(OpNode {
+        type_key,
+        kind,
+        flops_fwd: num("flops_fwd")?,
+        params: num("params")?,
+        act_out_bytes: num("act_out_bytes")?,
+        act_store_bytes: num("act_store_bytes")?,
+        name,
+    })
+}
+
+fn edge_from_json(j: &Json, ops: &[OpNode]) -> Result<OpEdge, String> {
+    let endpoint = |key: &str| -> Result<usize, String> {
+        let v = j.get(key).ok_or_else(|| format!("edge needs a field \"{key}\""))?;
+        if let Some(i) = v.as_usize() {
+            return Ok(i);
+        }
+        if let Some(name) = v.as_str() {
+            return ops
+                .iter()
+                .position(|o| o.name == name)
+                .ok_or_else(|| format!("edge \"{key}\" names unknown op {name:?}"));
+        }
+        Err(format!("edge \"{key}\" must be an op index or op name"))
+    };
+    let src = endpoint("src")?;
+    let dst = endpoint("dst")?;
+    let mut shape = Vec::new();
+    if let Some(s) = j.get("shape").filter(|v| !v.is_null()) {
+        let dims = s.as_arr().ok_or("edge \"shape\" must be an array of integers")?;
+        for d in dims {
+            shape.push(
+                d.as_usize()
+                    .filter(|&d| d > 0)
+                    .ok_or("edge \"shape\" dimensions must be positive integers")?,
+            );
+        }
+    }
+    Ok(OpEdge { src, dst, shape })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn op(name: &str) -> OpNode {
+        OpNode {
+            name: name.to_string(),
+            type_key: name.to_string(),
+            kind: LayerKind::Other,
+            flops_fwd: 1e9,
+            params: 1e6,
+            act_out_bytes: 2e6,
+            act_store_bytes: 4e6,
+        }
+    }
+
+    fn diamond() -> OpDag {
+        OpDag {
+            name: "d".into(),
+            ops: vec![op("a"), op("b"), op("c"), op("d")],
+            edges: vec![
+                OpEdge { src: 0, dst: 1, shape: vec![] },
+                OpEdge { src: 0, dst: 2, shape: vec![] },
+                OpEdge { src: 1, dst: 3, shape: vec![] },
+                OpEdge { src: 2, dst: 3, shape: vec![] },
+            ],
+            dtype: Dtype::Fp32,
+            seq_len: 16,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_a_diamond_and_rejects_malformed_dags() {
+        assert!(diamond().validate().is_ok());
+
+        let mut cyclic = diamond();
+        cyclic.edges.push(OpEdge { src: 3, dst: 0, shape: vec![] });
+        assert!(cyclic.validate().unwrap_err().contains("cycle"));
+
+        let mut disconnected = diamond();
+        disconnected.ops.push(op("island"));
+        assert!(disconnected.validate().unwrap_err().contains("disconnected"));
+
+        let mut dup = diamond();
+        dup.ops[1].name = "a".into();
+        assert!(dup.validate().unwrap_err().contains("duplicate op name"));
+
+        let mut self_edge = diamond();
+        self_edge.edges.push(OpEdge { src: 2, dst: 2, shape: vec![] });
+        assert!(self_edge.validate().unwrap_err().contains("self-edge"));
+
+        let mut dup_edge = diamond();
+        dup_edge.edges.push(OpEdge { src: 0, dst: 1, shape: vec![7] });
+        assert!(dup_edge.validate().unwrap_err().contains("duplicate edge"));
+
+        let mut nan = diamond();
+        nan.ops[2].flops_fwd = f64::NAN;
+        assert!(nan.validate().unwrap_err().contains("invalid flops_fwd"));
+
+        assert!(OpDag { ops: vec![], ..diamond() }.validate().unwrap_err().contains("no ops"));
+    }
+
+    #[test]
+    fn edge_bytes_uses_shape_then_falls_back_to_producer_output() {
+        let mut d = diamond();
+        d.edges[0].shape = vec![8, 32];
+        // fp32: 8·32 elements × 4 bytes
+        assert_eq!(d.edge_bytes(&d.edges[0]), 8.0 * 32.0 * 4.0);
+        // empty shape → producer's full act_out_bytes, bit-exact
+        assert_eq!(d.edge_bytes(&d.edges[1]), d.ops[0].act_out_bytes);
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let mut d = diamond();
+        d.edges[2].shape = vec![4, 4, 2];
+        d.dtype = Dtype::Fp16Mixed;
+        let back = OpDag::parse(&d.to_json().to_string()).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn from_json_resolves_names_defaults_and_rejects_junk() {
+        let d = OpDag::parse(
+            r#"{"name":"t","ops":[
+                {"name":"x","flops_fwd":1,"params":1,"act_out_bytes":1,"act_store_bytes":1},
+                {"name":"y","flops_fwd":1,"params":1,"act_out_bytes":1,"act_store_bytes":1}],
+                "edges":[{"src":"x","dst":"y"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(d.edges, vec![OpEdge { src: 0, dst: 1, shape: vec![] }]);
+        assert_eq!(d.ops[0].type_key, "x"); // defaults to the op name
+        assert_eq!(d.ops[0].kind, LayerKind::Other);
+        assert_eq!(d.dtype, Dtype::Fp16Mixed);
+        assert_eq!(d.seq_len, 1);
+
+        assert!(OpDag::parse(r#"{"ops":[]}"#).is_err()); // no name
+        assert!(OpDag::parse(r#"{"name":"t","ops":[{"name":"x"}]}"#)
+            .unwrap_err()
+            .contains("flops_fwd"));
+        assert!(OpDag::parse(
+            r#"{"name":"t","ops":[
+                {"name":"x","flops_fwd":1,"params":1,"act_out_bytes":1,"act_store_bytes":1}],
+                "edges":[{"src":"x","dst":"nope"}]}"#,
+        )
+        .unwrap_err()
+        .contains("unknown op"));
+    }
+
+    #[test]
+    fn from_graph_preserves_every_layer_field() {
+        let g = models::by_name("bert").unwrap();
+        let d = OpDag::from_graph(&g);
+        assert_eq!(d.ops.len(), g.layers.len());
+        assert_eq!(d.edges.len(), g.edges.len());
+        for (o, l) in d.ops.iter().zip(&g.layers) {
+            assert_eq!(o.name, l.name);
+            assert_eq!(o.type_key, l.type_key);
+            assert_eq!(o.flops_fwd, l.flops_fwd);
+            assert_eq!(o.act_out_bytes, l.act_out_bytes);
+            assert_eq!(o.act_store_bytes, l.act_store_bytes);
+        }
+        assert!(d.validate().is_ok());
+    }
+
+    #[test]
+    fn permuted_remaps_edges_consistently() {
+        let d = diamond();
+        let p = d.permuted(&[3, 1, 0, 2]);
+        assert!(p.validate().is_ok());
+        for e in &p.edges {
+            // every permuted edge connects the same op *names* as some original
+            let names = (p.ops[e.src].name.clone(), p.ops[e.dst].name.clone());
+            assert!(d
+                .edges
+                .iter()
+                .any(|o| (d.ops[o.src].name.clone(), d.ops[o.dst].name.clone()) == names));
+        }
+    }
+}

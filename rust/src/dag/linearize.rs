@@ -1,0 +1,324 @@
+//! Deterministic topological clustering: an [`OpDag`] → a chain [`Graph`].
+//!
+//! ## Clustering rule
+//!
+//! Every op is assigned its **longest-path depth** from the DAG's sources
+//! (`level(v) = 0` for sources, else `1 + max over predecessors`); all ops
+//! sharing a level form one **virtual layer**. This rule is:
+//!
+//! - *chainable*: every edge satisfies `level(src) < level(dst)`, so the
+//!   clusters form a linear order with all data flowing forward;
+//! - *identity on chains*: a chain-shaped DAG gets one singleton cluster per
+//!   op, and the lowered graph is field-for-field identical to the original
+//!   chain (same names, type keys, and bit-exact floats) — so plans are
+//!   byte-identical to the chain planner's;
+//! - *order-independent*: `level` is a function of the graph, not of the
+//!   op/edge input order, and all f64 accumulation happens in a canonical
+//!   (name-sorted) order.
+//!
+//! ## Lowering
+//!
+//! Each cluster becomes one [`Layer`]. Singletons keep their op's name,
+//! `type_key` and kind (so profiling results are shared with the chain world
+//! and the identity property holds). Merged clusters sum FLOPs/params over
+//! name-sorted members, take `kind = Other`, a `+`-joined name, and a
+//! content-derived `type_key` (`vl` + FNV of the member annotations) —
+//! type keys index the shared profile table ([`crate::profiling::Profile`]),
+//! so two merged layers share a key iff their members are identical.
+//!
+//! Cross-cluster edges are folded by [`crate::dag::reshard`]: hop byte
+//! totals become each layer's `act_out_bytes` (which
+//! [`crate::cost::CostBase`] turns into the R/R′ resharding matrices), and
+//! skip tensors buffered by intermediate clusters are added to
+//! `act_store_bytes` so the memory model sees them.
+
+use super::ir::OpDag;
+use super::reshard;
+use crate::graph::{Graph, Layer, LayerKind};
+use crate::util::hash::Fnv;
+
+/// What the linearizer did — surfaced in `uniap plan` output and exercised
+/// by the determinism property tests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinearizeReport {
+    /// Member op names per virtual layer, in chain order (members
+    /// name-sorted). `virtual_layers.len()` is the lowered chain length.
+    pub virtual_layers: Vec<Vec<String>>,
+    /// Ops in the input DAG.
+    pub num_ops: usize,
+    /// Edges spanning more than one chain hop.
+    pub skip_edges: usize,
+    /// Per-sample bytes those skip edges ride across all spanned hops.
+    pub skip_bytes: f64,
+}
+
+impl LinearizeReport {
+    /// Clusters with more than one member.
+    pub fn merged_clusters(&self) -> usize {
+        self.virtual_layers.iter().filter(|c| c.len() > 1).count()
+    }
+
+    /// One human-readable line for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "linearized {} ops -> {} virtual layers ({} merged), {} skip edge(s), {:.2} MB/sample resharding",
+            self.num_ops,
+            self.virtual_layers.len(),
+            self.merged_clusters(),
+            self.skip_edges,
+            self.skip_bytes / 1e6,
+        )
+    }
+}
+
+/// Linearize a validated DAG into a chain [`Graph`] the existing planners
+/// consume unchanged. Returns a typed error (never panics) for cyclic,
+/// disconnected or otherwise malformed inputs.
+pub fn linearize(dag: &OpDag) -> Result<(Graph, LinearizeReport), String> {
+    dag.validate()?;
+    let n = dag.ops.len();
+
+    // Longest-path depth via Kahn's algorithm (acyclicity just validated).
+    let mut indeg = vec![0usize; n];
+    let mut succ: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for e in &dag.edges {
+        indeg[e.dst] += 1;
+        succ[e.src].push(e.dst);
+    }
+    let mut level = vec![0usize; n];
+    let mut queue: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+    while let Some(v) = queue.pop() {
+        for &s in &succ[v] {
+            level[s] = level[s].max(level[v] + 1);
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                queue.push(s);
+            }
+        }
+    }
+    let num_levels = level.iter().max().copied().unwrap_or(0) + 1;
+
+    // Group by level; canonical member order = op name (names are unique).
+    let mut clusters: Vec<Vec<usize>> = vec![Vec::new(); num_levels];
+    for v in 0..n {
+        clusters[level[v]].push(v);
+    }
+    for c in &mut clusters {
+        c.sort_by(|&a, &b| dag.ops[a].name.cmp(&dag.ops[b].name));
+    }
+
+    let fold = reshard::fold(dag, &level, num_levels);
+
+    let mut layers = Vec::with_capacity(num_levels);
+    for (k, members) in clusters.iter().enumerate() {
+        let mut layer = if let [single] = members[..] {
+            // Singleton: preserve the op verbatim — this is what makes
+            // chain-as-DAG lower to the identity.
+            let o = &dag.ops[single];
+            Layer {
+                name: o.name.clone(),
+                type_key: o.type_key.clone(),
+                kind: o.kind,
+                flops_fwd: o.flops_fwd,
+                params: o.params,
+                act_out_bytes: o.act_out_bytes,
+                act_store_bytes: o.act_store_bytes,
+            }
+        } else {
+            let mut h = Fnv::new();
+            h.usize(members.len());
+            let (mut flops, mut params, mut act_out, mut act_store) = (0.0, 0.0, 0.0, 0.0);
+            for &i in members {
+                let o = &dag.ops[i];
+                h.str(&o.type_key);
+                h.f64(o.flops_fwd);
+                h.f64(o.params);
+                h.f64(o.act_out_bytes);
+                h.f64(o.act_store_bytes);
+                flops += o.flops_fwd;
+                params += o.params;
+                act_out += o.act_out_bytes;
+                act_store += o.act_store_bytes;
+            }
+            let name =
+                members.iter().map(|&i| dag.ops[i].name.as_str()).collect::<Vec<_>>().join("+");
+            Layer {
+                name,
+                type_key: format!("vl{:016x}", h.finish()),
+                kind: LayerKind::Other,
+                flops_fwd: flops,
+                params,
+                act_out_bytes: act_out,
+                act_store_bytes: act_store,
+            }
+        };
+        // Fold cross-edges in: the hop total replaces act_out_bytes (the
+        // chain cost model prices exactly one tensor per hop), and skip
+        // tensors buffered here land in act_store_bytes. The last cluster
+        // keeps its own act_out_bytes — it never feeds a hop.
+        if k < num_levels - 1 {
+            layer.act_out_bytes = fold.hop_bytes[k];
+        }
+        if fold.carry_store[k] > 0.0 {
+            layer.act_store_bytes += fold.carry_store[k];
+        }
+        layers.push(layer);
+    }
+
+    let report = LinearizeReport {
+        virtual_layers: clusters
+            .iter()
+            .map(|c| c.iter().map(|&i| dag.ops[i].name.clone()).collect())
+            .collect(),
+        num_ops: n,
+        skip_edges: fold.skip_edges,
+        skip_bytes: fold.skip_bytes,
+    };
+    let graph = Graph::chain(&dag.name, layers, dag.dtype, dag.seq_len);
+    debug_assert!(graph.is_chain() || graph.num_layers() == 1);
+    Ok((graph, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::ir::{OpEdge, OpNode};
+    use crate::graph::{models, Dtype};
+
+    fn op(name: &str, act_out: f64) -> OpNode {
+        OpNode {
+            name: name.to_string(),
+            type_key: name.to_string(),
+            kind: LayerKind::Other,
+            flops_fwd: 1e9,
+            params: 1e6,
+            act_out_bytes: act_out,
+            act_store_bytes: 1e6,
+        }
+    }
+
+    #[test]
+    fn chain_shaped_dag_lowers_to_the_identity() {
+        let g = models::by_name("t5").unwrap(); // heterogeneous chain
+        let (lowered, report) = linearize(&OpDag::from_graph(&g)).unwrap();
+        // Field-for-field identical, floats bit-exact: Debug formatting of
+        // f64 is shortest-roundtrip, so any bit difference would show.
+        assert_eq!(format!("{lowered:?}"), format!("{g:?}"));
+        assert_eq!(report.num_ops, g.num_layers());
+        assert!(report.virtual_layers.iter().all(|c| c.len() == 1));
+        assert_eq!(report.skip_edges, 0);
+        assert_eq!(report.skip_bytes, 0.0);
+    }
+
+    #[test]
+    fn diamond_merges_the_branches_into_one_virtual_layer() {
+        let dag = OpDag {
+            name: "diamond".into(),
+            ops: vec![op("a", 10.0), op("b", 20.0), op("c", 30.0), op("d", 5.0)],
+            edges: vec![
+                OpEdge { src: 0, dst: 1, shape: vec![] },
+                OpEdge { src: 0, dst: 2, shape: vec![] },
+                OpEdge { src: 1, dst: 3, shape: vec![] },
+                OpEdge { src: 2, dst: 3, shape: vec![] },
+            ],
+            dtype: Dtype::Fp32,
+            seq_len: 4,
+        };
+        let (g, report) = linearize(&dag).unwrap();
+        assert!(g.is_chain());
+        assert_eq!(g.num_layers(), 3);
+        assert_eq!(report.virtual_layers, vec![vec!["a"], vec!["b", "c"], vec!["d"]]);
+        assert_eq!(report.merged_clusters(), 1);
+        let mid = &g.layers[1];
+        assert_eq!(mid.name, "b+c");
+        assert!(mid.type_key.starts_with("vl"));
+        assert_eq!(mid.flops_fwd, 2e9);
+        assert_eq!(mid.params, 2e6);
+        // hop 0 carries a's output twice (once per branch input)
+        assert_eq!(g.layers[0].act_out_bytes, 20.0);
+        // hop 1 carries both branch outputs
+        assert_eq!(mid.act_out_bytes, 50.0);
+        // sink keeps its own output (never feeds a hop)
+        assert_eq!(g.layers[2].act_out_bytes, 5.0);
+        assert_eq!(report.skip_edges, 0);
+    }
+
+    #[test]
+    fn skip_edges_add_store_bytes_to_intermediate_layers() {
+        // a → b → c with a skip a → c: b must buffer a's tensor.
+        let dag = OpDag {
+            name: "skip".into(),
+            ops: vec![op("a", 100.0), op("b", 7.0), op("c", 1.0)],
+            edges: vec![
+                OpEdge { src: 0, dst: 1, shape: vec![] },
+                OpEdge { src: 1, dst: 2, shape: vec![] },
+                OpEdge { src: 0, dst: 2, shape: vec![] },
+            ],
+            dtype: Dtype::Fp32,
+            seq_len: 1,
+        };
+        let (g, report) = linearize(&dag).unwrap();
+        assert_eq!(g.num_layers(), 3);
+        assert_eq!(g.layers[0].act_out_bytes, 200.0); // a→b plus skip
+        assert_eq!(g.layers[1].act_out_bytes, 107.0); // b→c plus skip
+        assert_eq!(g.layers[1].act_store_bytes, 1e6 + 100.0); // buffers skip
+        assert_eq!(report.skip_edges, 1);
+        assert_eq!(report.skip_bytes, 200.0);
+    }
+
+    #[test]
+    fn linearization_is_permutation_invariant() {
+        let dag = OpDag {
+            name: "p".into(),
+            ops: vec![op("a", 1.25e6), op("b", 2.5e6), op("c", 3.75e6), op("d", 5e5)],
+            edges: vec![
+                OpEdge { src: 0, dst: 1, shape: vec![] },
+                OpEdge { src: 0, dst: 2, shape: vec![16, 32] },
+                OpEdge { src: 1, dst: 3, shape: vec![] },
+                OpEdge { src: 2, dst: 3, shape: vec![] },
+                OpEdge { src: 0, dst: 3, shape: vec![8] },
+            ],
+            dtype: Dtype::Fp16Mixed,
+            seq_len: 8,
+        };
+        let (g0, r0) = linearize(&dag).unwrap();
+        for perm in [[3, 1, 0, 2], [2, 3, 1, 0], [1, 0, 3, 2]] {
+            let (g1, r1) = linearize(&dag.permuted(&perm)).unwrap();
+            assert_eq!(format!("{g1:?}"), format!("{g0:?}"));
+            assert_eq!(r1, r0);
+        }
+    }
+
+    #[test]
+    fn malformed_dags_get_typed_errors() {
+        let mut cyclic = OpDag {
+            name: "cyc".into(),
+            ops: vec![op("a", 1.0), op("b", 1.0)],
+            edges: vec![
+                OpEdge { src: 0, dst: 1, shape: vec![] },
+                OpEdge { src: 1, dst: 0, shape: vec![] },
+            ],
+            dtype: Dtype::Fp32,
+            seq_len: 1,
+        };
+        assert!(linearize(&cyclic).unwrap_err().contains("cycle"));
+        cyclic.edges.pop();
+        cyclic.ops.push(op("island", 1.0));
+        assert!(linearize(&cyclic).unwrap_err().contains("disconnected"));
+    }
+
+    #[test]
+    fn single_op_dag_is_a_one_layer_graph() {
+        let dag = OpDag {
+            name: "one".into(),
+            ops: vec![op("solo", 3.0)],
+            edges: vec![],
+            dtype: Dtype::Fp32,
+            seq_len: 1,
+        };
+        let (g, report) = linearize(&dag).unwrap();
+        assert_eq!(g.num_layers(), 1);
+        assert_eq!(g.layers[0].act_out_bytes, 3.0); // no hop to override it
+        assert_eq!(report.virtual_layers, vec![vec!["solo"]]);
+    }
+}

@@ -1,0 +1,34 @@
+//! Operator-DAG front-end: plan branching models with the chain planner.
+//!
+//! The planner core ([`crate::planner`], [`crate::cost`], [`crate::miqp`])
+//! models a network as a layer *chain* — which covers every model in the
+//! paper's evaluation but excludes branching architectures (UNet, diamond /
+//! multi-branch blocks, mixture models). This module adds the missing
+//! front-end, following Alpa's recipe of clustering an operator graph into a
+//! linear sequence of stages (PAPERS.md, arxiv 2201.12023) and the op-level
+//! DAG formulation of She et al. 2025 (arxiv 2503.09357):
+//!
+//! 1. [`ir`] — an operator-DAG IR ([`OpDag`]): vertices carry the same
+//!    FLOP/param/activation annotations as [`crate::graph::Layer`], edges
+//!    carry tensor shapes (bytes derived from shape × dtype).
+//! 2. [`linearize`] — a deterministic topological clustering that groups ops
+//!    into **virtual layers** (one cluster per longest-path depth level), in
+//!    a canonical order that is independent of op/edge input order.
+//! 3. [`reshard`] — cross-edge folding: every DAG edge that crosses virtual
+//!    layers becomes explicit bytes on the chain hops it spans, so the
+//!    existing inter-layer communication model (`CostBase::edge_act` → the
+//!    R/R′ resharding matrices) prices it with zero solver changes.
+//!
+//! The output of [`linearize`] is an ordinary [`crate::graph::Graph`] chain,
+//! so the Pareto-sparse interval DP, the MIQP engine, memoisation, caches,
+//! snapshots and the socket server all work unchanged. A DAG that is already
+//! a chain linearizes to the *identity*: the lowered graph is field-for-field
+//! identical to the equivalent chain graph, and plans are byte-identical
+//! (pinned by `rust/tests/chain_equivalence.rs`).
+
+pub mod ir;
+pub mod linearize;
+pub mod reshard;
+
+pub use ir::{OpDag, OpEdge, OpNode};
+pub use linearize::{linearize, LinearizeReport};

@@ -1,0 +1,159 @@
+//! Cross-edge reshard folding: DAG edges → chain-hop byte totals.
+//!
+//! After clustering (see [`crate::dag::linearize`]) every op sits in exactly
+//! one virtual layer; every DAG edge either stays inside a cluster (free —
+//! the ops are co-located by construction, levels strictly order edge
+//! endpoints so this never happens here) or crosses from cluster `cu` to
+//! cluster `cv > cu`. The chain cost model prices exactly one tensor per
+//! chain hop (`CostBase::edge_act[k]`, materialised into the R/R′ resharding
+//! matrices), so we *fold* each cross-edge into the hops it spans:
+//!
+//! - its bytes are added to `hop_bytes[h]` for every hop `h ∈ [cu, cv)` — a
+//!   skip tensor physically rides every pipeline hop between its producer's
+//!   stage and its consumer's stage (GPipe-style point-to-point forwarding,
+//!   as in Alpa's stage-adjacent resharding);
+//! - for a *skip* edge (`cv > cu + 1`) the intermediate clusters buffer the
+//!   tensor while forwarding it, so its bytes are also added to
+//!   `carry_store[w]` for `w ∈ (cu, cv)` and counted in the report.
+//!
+//! Bytes are accumulated in a canonical order — edges sorted by (producer
+//! name, consumer name) — because f64 addition is order-dependent and the
+//! linearizer promises byte-identical output for any input permutation.
+
+use super::ir::OpDag;
+
+/// Per-cluster byte totals produced by folding every cross-edge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fold {
+    /// `hop_bytes[k]`: per-sample bytes crossing chain hop `k → k+1`
+    /// (length `num_levels - 1`). Becomes the lowered layer `k`'s
+    /// `act_out_bytes`, hence `CostBase::edge_act[k]`.
+    pub hop_bytes: Vec<f64>,
+    /// `carry_store[k]`: per-sample bytes cluster `k` must buffer for skip
+    /// tensors passing through it (length `num_levels`). Added to the
+    /// lowered layer's `act_store_bytes`.
+    pub carry_store: Vec<f64>,
+    /// Number of skip edges (edges spanning more than one hop).
+    pub skip_edges: usize,
+    /// Total per-sample bytes the skip edges contribute across all the hops
+    /// they ride (Σ over skip edges of `bytes × hops_spanned`).
+    pub skip_bytes: f64,
+}
+
+/// Fold every DAG edge into chain-hop byte totals, given each op's cluster
+/// `level` and the number of clusters. Deterministic for any op/edge input
+/// order. Callers guarantee `level[src] < level[dst]` for every edge (true
+/// for any level assignment that respects edges, e.g. longest-path depth).
+pub fn fold(dag: &OpDag, level: &[usize], num_levels: usize) -> Fold {
+    let mut hop_bytes = vec![0.0; num_levels.saturating_sub(1)];
+    let mut carry_store = vec![0.0; num_levels];
+    let mut skip_edges = 0usize;
+    let mut skip_bytes = 0.0f64;
+
+    // Canonical accumulation order: op names are unique (validated), so
+    // (src name, dst name) totally orders the edges.
+    let mut order: Vec<usize> = (0..dag.edges.len()).collect();
+    order.sort_unstable_by(|&a, &b| {
+        let ea = &dag.edges[a];
+        let eb = &dag.edges[b];
+        (dag.ops[ea.src].name.as_str(), dag.ops[ea.dst].name.as_str())
+            .cmp(&(dag.ops[eb.src].name.as_str(), dag.ops[eb.dst].name.as_str()))
+    });
+
+    for i in order {
+        let e = &dag.edges[i];
+        let (cu, cv) = (level[e.src], level[e.dst]);
+        debug_assert!(cu < cv, "level assignment must respect edges");
+        let b = dag.edge_bytes(e);
+        for h in hop_bytes.iter_mut().take(cv).skip(cu) {
+            *h += b;
+        }
+        if cv > cu + 1 {
+            skip_edges += 1;
+            skip_bytes += b * (cv - cu) as f64;
+            for w in carry_store.iter_mut().take(cv).skip(cu + 1) {
+                *w += b;
+            }
+        }
+    }
+
+    Fold { hop_bytes, carry_store, skip_edges, skip_bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::ir::{OpEdge, OpNode};
+    use crate::graph::{Dtype, LayerKind};
+
+    fn op(name: &str, act_out: f64) -> OpNode {
+        OpNode {
+            name: name.to_string(),
+            type_key: name.to_string(),
+            kind: LayerKind::Other,
+            flops_fwd: 1e9,
+            params: 1e6,
+            act_out_bytes: act_out,
+            act_store_bytes: 1e6,
+        }
+    }
+
+    #[test]
+    fn chain_fold_is_exactly_the_producer_outputs() {
+        // a → b → c, empty shapes: hop k carries exactly op k's act_out.
+        let dag = OpDag {
+            name: "chain".into(),
+            ops: vec![op("a", 10.0), op("b", 20.0), op("c", 30.0)],
+            edges: vec![
+                OpEdge { src: 0, dst: 1, shape: vec![] },
+                OpEdge { src: 1, dst: 2, shape: vec![] },
+            ],
+            dtype: Dtype::Fp32,
+            seq_len: 1,
+        };
+        let f = fold(&dag, &[0, 1, 2], 3);
+        assert_eq!(f.hop_bytes, vec![10.0, 20.0]);
+        assert_eq!(f.carry_store, vec![0.0, 0.0, 0.0]);
+        assert_eq!(f.skip_edges, 0);
+        assert_eq!(f.skip_bytes, 0.0);
+    }
+
+    #[test]
+    fn skip_edge_rides_every_hop_and_is_buffered_between() {
+        // a → b → c → d plus a skip a → d (levels 0,1,2,3).
+        let dag = OpDag {
+            name: "skip".into(),
+            ops: vec![op("a", 10.0), op("b", 20.0), op("c", 30.0), op("d", 5.0)],
+            edges: vec![
+                OpEdge { src: 0, dst: 1, shape: vec![] },
+                OpEdge { src: 1, dst: 2, shape: vec![] },
+                OpEdge { src: 2, dst: 3, shape: vec![] },
+                OpEdge { src: 0, dst: 3, shape: vec![] }, // skip, 10 bytes
+            ],
+            dtype: Dtype::Fp32,
+            seq_len: 1,
+        };
+        let f = fold(&dag, &[0, 1, 2, 3], 4);
+        // hops: (a→b)+skip, (b→c)+skip, (c→d)+skip
+        assert_eq!(f.hop_bytes, vec![20.0, 30.0, 40.0]);
+        // b and c buffer the 10-byte skip tensor
+        assert_eq!(f.carry_store, vec![0.0, 10.0, 10.0, 0.0]);
+        assert_eq!(f.skip_edges, 1);
+        assert_eq!(f.skip_bytes, 30.0); // 10 bytes × 3 hops
+    }
+
+    #[test]
+    fn accumulation_is_input_order_independent() {
+        let mk = |edges: Vec<OpEdge>| OpDag {
+            name: "x".into(),
+            ops: vec![op("a", 1.5e6), op("b", 2.5e6), op("c", 3.5e6), op("d", 1.0)],
+            edges,
+            dtype: Dtype::Fp16Mixed,
+            seq_len: 1,
+        };
+        let e = |s: usize, d: usize| OpEdge { src: s, dst: d, shape: vec![] };
+        let fwd = mk(vec![e(0, 1), e(1, 2), e(2, 3), e(0, 3), e(1, 3)]);
+        let rev = mk(vec![e(1, 3), e(0, 3), e(2, 3), e(1, 2), e(0, 1)]);
+        assert_eq!(fold(&fwd, &[0, 1, 2, 3], 4), fold(&rev, &[0, 1, 2, 3], 4));
+    }
+}

@@ -41,6 +41,23 @@ impl Dtype {
             Dtype::Fp16Mixed => 8.0,
         }
     }
+
+    /// Stable wire key (DAG request payloads).
+    pub fn key(self) -> &'static str {
+        match self {
+            Dtype::Fp32 => "fp32",
+            Dtype::Fp16Mixed => "fp16",
+        }
+    }
+
+    /// Inverse of [`Dtype::key`].
+    pub fn by_key(key: &str) -> Option<Dtype> {
+        match key {
+            "fp32" => Some(Dtype::Fp32),
+            "fp16" => Some(Dtype::Fp16Mixed),
+            _ => None,
+        }
+    }
 }
 
 /// Broad layer family — used for reporting and for strategy legality.
@@ -58,6 +75,33 @@ pub enum LayerKind {
     Head,
     /// Anything else (tests, synthetic graphs).
     Other,
+}
+
+impl LayerKind {
+    /// Stable wire key (DAG request payloads).
+    pub fn key(self) -> &'static str {
+        match self {
+            LayerKind::Embedding => "embedding",
+            LayerKind::EncoderBlock => "encoder_block",
+            LayerKind::DecoderBlock => "decoder_block",
+            LayerKind::WindowBlock => "window_block",
+            LayerKind::Head => "head",
+            LayerKind::Other => "other",
+        }
+    }
+
+    /// Inverse of [`LayerKind::key`].
+    pub fn by_key(key: &str) -> Option<LayerKind> {
+        match key {
+            "embedding" => Some(LayerKind::Embedding),
+            "encoder_block" => Some(LayerKind::EncoderBlock),
+            "decoder_block" => Some(LayerKind::DecoderBlock),
+            "window_block" => Some(LayerKind::WindowBlock),
+            "head" => Some(LayerKind::Head),
+            "other" => Some(LayerKind::Other),
+            _ => None,
+        }
+    }
 }
 
 /// One planning-granularity layer with its cost-model descriptors.
@@ -295,6 +339,25 @@ mod tests {
         // Both come to 16 bytes of model states per parameter.
         assert_eq!(Dtype::Fp32.c_dtype() * Dtype::Fp32.elem_bytes(), 16.0);
         assert_eq!(Dtype::Fp16Mixed.c_dtype() * Dtype::Fp16Mixed.elem_bytes(), 16.0);
+    }
+
+    #[test]
+    fn dtype_and_kind_keys_roundtrip() {
+        for d in [Dtype::Fp32, Dtype::Fp16Mixed] {
+            assert_eq!(Dtype::by_key(d.key()), Some(d));
+        }
+        for k in [
+            LayerKind::Embedding,
+            LayerKind::EncoderBlock,
+            LayerKind::DecoderBlock,
+            LayerKind::WindowBlock,
+            LayerKind::Head,
+            LayerKind::Other,
+        ] {
+            assert_eq!(LayerKind::by_key(k.key()), Some(k));
+        }
+        assert_eq!(Dtype::by_key("fp8"), None);
+        assert_eq!(LayerKind::by_key("conv"), None);
     }
 
     #[test]

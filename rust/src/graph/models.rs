@@ -9,6 +9,7 @@
 //! scaled by the element size).
 
 use super::{Dtype, Graph, Layer, LayerKind};
+use crate::dag::{OpDag, OpEdge, OpNode};
 
 /// Configuration of a homogeneous transformer encoder stack.
 #[derive(Debug, Clone)]
@@ -361,6 +362,147 @@ pub fn by_name(name: &str) -> Option<Graph> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Branching (operator-DAG) models — planned through `crate::dag::linearize`.
+// ---------------------------------------------------------------------------
+
+/// A [`Layer`] repackaged as a DAG operator (the descriptors are identical).
+fn op_of(l: Layer) -> OpNode {
+    OpNode {
+        name: l.name,
+        type_key: l.type_key,
+        kind: l.kind,
+        flops_fwd: l.flops_fwd,
+        params: l.params,
+        act_out_bytes: l.act_out_bytes,
+        act_store_bytes: l.act_store_bytes,
+    }
+}
+
+/// One UNet stage (two 3×3 convs, `c_in → c_out`) over `hw` pixels.
+/// MACs: `9·hw·c_in·c_out + 9·hw·c_out²`; both conv outputs are stored.
+fn conv_block(
+    name: String,
+    type_key: String,
+    hw: usize,
+    c_in: usize,
+    c_out: usize,
+    dtype: Dtype,
+) -> OpNode {
+    let (hwf, ci, co) = (hw as f64, c_in as f64, c_out as f64);
+    let macs = 9.0 * hwf * ci * co + 9.0 * hwf * co * co;
+    OpNode {
+        name,
+        type_key,
+        kind: LayerKind::Other,
+        flops_fwd: 2.0 * macs,
+        params: 9.0 * ci * co + 9.0 * co * co + 2.0 * co,
+        act_out_bytes: hwf * co * dtype.elem_bytes(),
+        act_store_bytes: 2.0 * hwf * co * dtype.elem_bytes(),
+    }
+}
+
+/// UNet-style encoder/decoder with skip connections (the branching model of
+/// the Alpa benchmark suite — SNIPPETS.md §3): `levels` conv stages
+/// downsampling 2× per side (4× pixels), a bottleneck, the mirrored decoder
+/// path, and a 1×1 segmentation head. Skip edges `enc.i → dec.i` carry the
+/// explicit shape `[hw_i, c_i]`; downsample/upsample edges carry the
+/// post-resample shape (smaller than the producer's full output).
+///
+/// `hw0` is the pixel count at full resolution (e.g. `4096` = 64×64).
+pub fn unet(levels: usize, base_c: usize, hw0: usize, name: &str) -> OpDag {
+    assert!(levels >= 1, "unet needs at least one level");
+    let dtype = Dtype::Fp32;
+    let hw = |i: usize| (hw0 >> (2 * i)).max(1);
+    let ch = |i: usize| base_c << i;
+    let mut ops = Vec::new();
+    let mut edges = Vec::new();
+    // Encoder path: enc.i at ops index i.
+    for i in 0..levels {
+        let c_in = if i == 0 { 3 } else { ch(i - 1) };
+        ops.push(conv_block(format!("enc.{i}"), format!("unet_enc{i}"), hw(i), c_in, ch(i), dtype));
+        if i > 0 {
+            // 2×2 max-pool between stages: the edge carries the pooled map.
+            edges.push(OpEdge { src: i - 1, dst: i, shape: vec![hw(i), ch(i - 1)] });
+        }
+    }
+    // Bottleneck.
+    let mid = ops.len();
+    ops.push(conv_block(
+        "mid".to_string(),
+        "unet_mid".to_string(),
+        hw(levels),
+        ch(levels - 1),
+        ch(levels),
+        dtype,
+    ));
+    edges.push(OpEdge { src: mid - 1, dst: mid, shape: vec![hw(levels), ch(levels - 1)] });
+    // Decoder path, deep to shallow; each stage consumes the upsampled deep
+    // features concatenated with the mirror encoder stage's skip tensor.
+    let mut prev = mid;
+    for i in (0..levels).rev() {
+        let idx = ops.len();
+        ops.push(conv_block(
+            format!("dec.{i}"),
+            format!("unet_dec{i}"),
+            hw(i),
+            ch(i + 1) + ch(i),
+            ch(i),
+            dtype,
+        ));
+        edges.push(OpEdge { src: prev, dst: idx, shape: vec![hw(i), ch(i + 1)] });
+        edges.push(OpEdge { src: i, dst: idx, shape: vec![hw(i), ch(i)] });
+        prev = idx;
+    }
+    // 1×1 conv to 2 classes.
+    let head = ops.len();
+    ops.push(OpNode {
+        name: "head".to_string(),
+        type_key: "unet_head".to_string(),
+        kind: LayerKind::Head,
+        flops_fwd: 2.0 * hw0 as f64 * ch(0) as f64 * 2.0,
+        params: ch(0) as f64 * 2.0 + 2.0,
+        act_out_bytes: hw0 as f64 * 2.0 * dtype.elem_bytes(),
+        act_store_bytes: hw0 as f64 * ch(0) as f64 * dtype.elem_bytes(),
+    });
+    edges.push(OpEdge { src: prev, dst: head, shape: vec![] });
+    OpDag { name: name.to_string(), ops, edges, dtype, seq_len: hw0 }
+}
+
+/// Four-op branching toy: a transformer stem feeding two parallel
+/// half-blocks that rejoin at a head. The two branches share a longest-path
+/// level, so linearization genuinely *merges* them into one virtual layer
+/// (`branch.a+branch.b`) — the smallest model that exercises cluster
+/// merging rather than just skip-edge folding.
+pub fn diamond() -> OpDag {
+    let dtype = Dtype::Fp32;
+    let (s, h, heads) = (128usize, 512usize, 8usize);
+    let ops = vec![
+        op_of(embedding("stem", s, h, 1000, dtype)),
+        op_of(encoder_block("branch.a".into(), "diamond_a".into(), s, h, heads, 4 * h, s, dtype)),
+        op_of(encoder_block("branch.b".into(), "diamond_b".into(), s, h, heads, 4 * h, s, dtype)),
+        op_of(lm_head("join", s, h, 1000, dtype)),
+    ];
+    let edges = vec![
+        OpEdge { src: 0, dst: 1, shape: vec![] },
+        OpEdge { src: 0, dst: 2, shape: vec![] },
+        OpEdge { src: 1, dst: 3, shape: vec![] },
+        OpEdge { src: 2, dst: 3, shape: vec![] },
+    ];
+    OpDag { name: "Diamond".into(), ops, edges, dtype, seq_len: s }
+}
+
+/// Look a DAG model up by its CLI name (the branching half of the zoo;
+/// chain models stay in [`by_name`]).
+pub fn dag_by_name(name: &str) -> Option<OpDag> {
+    match name.to_ascii_lowercase().as_str() {
+        "unet" | "unet-4" => Some(unet(4, 64, 4096, "UNet-4-64")),
+        "unet-small" => Some(unet(2, 8, 256, "UNet-small")),
+        "diamond" => Some(diamond()),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -427,5 +569,41 @@ mod tests {
             assert!(by_name(n).is_some(), "{n}");
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn dag_by_name_resolves_the_branching_zoo_and_all_validate() {
+        for n in ["unet", "unet-small", "diamond"] {
+            let dag = dag_by_name(n).unwrap_or_else(|| panic!("{n}"));
+            assert!(dag.validate().is_ok(), "{n}: {:?}", dag.validate());
+        }
+        assert!(dag_by_name("bert").is_none()); // chains stay in by_name
+        assert!(by_name("unet").is_none()); // DAGs stay in dag_by_name
+    }
+
+    #[test]
+    fn unet_linearizes_to_singletons_with_one_skip_per_level() {
+        let levels = 4;
+        let dag = unet(levels, 64, 4096, "UNet-test");
+        let (g, report) = crate::dag::linearize(&dag).unwrap();
+        // enc.0..enc.3, mid, dec.3..dec.0, head — all on the longest path.
+        assert_eq!(g.num_layers(), 2 * levels + 2);
+        assert!(g.is_chain());
+        assert!(report.virtual_layers.iter().all(|c| c.len() == 1));
+        assert_eq!(report.skip_edges, levels);
+        assert!(report.skip_bytes > 0.0);
+        // The hop out of `mid` carries the upsample tensor plus every
+        // still-in-flight skip tensor, so it exceeds mid's own output share.
+        let dec_top = &g.layers[levels + 1];
+        assert!(dec_top.act_store_bytes > 0.0);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn diamond_linearizes_with_a_merged_middle() {
+        let (g, report) = crate::dag::linearize(&diamond()).unwrap();
+        assert_eq!(g.num_layers(), 3);
+        assert_eq!(report.merged_clusters(), 1);
+        assert_eq!(g.layers[1].name, "branch.a+branch.b");
     }
 }

@@ -25,6 +25,7 @@
 //! | [`profiling`] | analytic + PJRT-measured profilers (§3.1) |
 //! | [`strategy`] | intra-layer strategy space (DP/TP/FSDP) + resharding |
 //! | [`cost`] | time + memory cost models → A, R, R′, M matrices (§3.2) |
+//! | [`dag`] | operator-DAG front-end: branching-model IR, deterministic topological clustering into virtual layers, cross-edge reshard folding, lowering to a chain `Graph` the planners consume unchanged |
 //! | [`miqp`] | general MIQP solver: linearisation, simplex, branch & bound + per-stage dominance pruning (§3.3) |
 //! | [`planner`] | chain-exact solver (row-parallel interval DP), QIP intra-only, cross-candidate frontier memo, UOP (Alg. 1) |
 //! | [`service`] | planner-as-a-service: typed PlanRequest/PlanResponse, cross-request profile + batch-generic cost-base + frontier caches, LRU-bounded outcome replay, cancellation/deadlines, batch drain, `serve --listen` socket server + persistent state snapshots, snapshot merging for multi-process state dirs and cross-machine `sync` pulls, admission control with typed `busy` load shedding + health probes + background peer re-sync |
@@ -41,6 +42,7 @@ pub mod baselines;
 pub mod cli;
 pub mod cluster;
 pub mod cost;
+pub mod dag;
 pub mod exec;
 pub mod graph;
 pub mod metrics;

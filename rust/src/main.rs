@@ -20,10 +20,11 @@ use uniap::baselines::BaselineKind;
 use uniap::cli::Args;
 use uniap::cluster::ClusterEnv;
 use uniap::cost::Schedule;
-use uniap::graph::models;
 use uniap::planner::Engine;
 use uniap::profiling::Profile;
-use uniap::service::{PlanRequest, PlanResponse, PlannerService, Status};
+use uniap::service::{
+    resolve_model, resolve_workload, PlanRequest, PlanResponse, PlannerService, Status,
+};
 use uniap::sim::{simulate_plan, SimConfig};
 use uniap::util::json::Json;
 
@@ -33,8 +34,12 @@ uniap — UniAP automatic-parallelism planner (paper reproduction)
 USAGE: uniap <command> [options]
 
 COMMANDS:
-  plan       --model <bert|t5|t5-16|vit|swin|llama-7b|llama-13b>
+  plan       --model <bert|t5|t5-16|vit|swin|llama-7b|llama-13b
+                      |unet|unet-small|diamond>
              --env <EnvA|EnvB|EnvC|EnvD|EnvE> --batch <B>
+             (unet/diamond are operator DAGs, linearized into virtual
+             layers before planning; request files may also inline a
+             \"dag\" object — see examples/requests_dag.json)
              [--method <uniap|galvatron|alpa|inter|intra|megatron|deepspeed>]
              [--engine <auto|chain|miqp>] [--schedule <gpipe|1f1b>]
              [--deadline SECS] [--max-pp N] [--threads N] [--json] [--quiet]
@@ -128,8 +133,14 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
     ok_or_cli_error(&resp)?;
     // names resolved successfully above, so these lookups cannot fail
     let env = ClusterEnv::by_name(&req.env).unwrap();
-    let graph = models::by_name(&req.model).unwrap();
+    let workload = resolve_workload(&req)?;
+    let graph = workload.graph;
     println!("# {} · {} · B={} · {}", req.method.label(), graph.name, req.batch, env.name);
+    if let Some(report) = &workload.linearization {
+        // DAG front-end: say what the planner actually solved — the
+        // virtual layers named in the per-stage lines below
+        println!("{}", report.summary());
+    }
     println!("strategy optimization time: {}", uniap::util::fmt_secs(resp.timings.solve_secs));
     match &resp.plan {
         None => {
@@ -147,7 +158,10 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
                     println!("  stage {i}: {}", labels.join(" "));
                 }
             }
-            let profile = service.profile(&env, &graph); // cached by the plan() call
+            // cached by the plan() call for chain workloads; rebuilt (a
+            // pure function of env + lowered graph) for DAG ones, whose
+            // cache entries live under the dag: fingerprint domain
+            let profile = service.profile(&env, &graph);
             let sim = simulate_plan(&graph, &profile, plan, &SimConfig::default());
             println!(
                 "simulated: {:.2} ± {:.2} samples/s (tpi {:.4}s, MFU {:.1}%, bubble {:.1}%{})",
@@ -216,8 +230,9 @@ fn validate_responses(
         let Some(plan) = &resp.plan else { continue };
         let req = &reqs[i];
         let env = ClusterEnv::by_name(&req.env).ok_or(format!("unknown env {:?}", req.env))?;
-        let graph =
-            models::by_name(&req.model).ok_or(format!("unknown model {:?}", req.model))?;
+        // DAG workloads validate against the *lowered* chain — the graph
+        // the plan was actually solved over
+        let graph = resolve_workload(req)?.graph;
         let profile = service.profile(&env, &graph);
         let costs = uniap::cost::cost_modeling_sched(
             &profile,
@@ -459,9 +474,13 @@ fn cmd_profile(args: &Args) -> Result<(), String> {
     let env_name = args.get("env", "EnvA");
     let model_name = args.get("model", "bert");
     let env = ClusterEnv::by_name(&env_name).ok_or(format!("unknown env {env_name}"))?;
-    let graph = models::by_name(&model_name).ok_or(format!("unknown model {model_name}"))?;
+    let workload = resolve_model(&model_name)?;
+    let graph = workload.graph;
     let profile = Profile::analytic(&env, &graph);
     println!("# profile of {} on {}", graph.name, env.name);
+    if let Some(report) = &workload.linearization {
+        println!("{}", report.summary());
+    }
     println!("devices: {} × {} ({} GiB)", env.total_devices(), env.device.name, env.device.mem_bytes / 1e9);
     let mut seen = std::collections::BTreeSet::new();
     let mut table = uniap::report::Table::new(&["layer type", "tp=1 (ms/sample)", "tp=2", "tp=4"]);

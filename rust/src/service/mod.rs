@@ -78,18 +78,104 @@ use std::time::{Duration, Instant};
 use crate::baselines::{Baseline, BaselineKind};
 use crate::cluster::ClusterEnv;
 use crate::cost::{CostBase, Schedule};
+use crate::dag::{linearize, LinearizeReport};
 use crate::graph::{models, Dtype, Graph};
 use crate::planner::memo::FrontierMemo;
 use crate::planner::{uop_with, CandidateLog, Engine, Plan, PlanEvent, PlannerConfig, SolveHooks};
 use crate::profiling::Profile;
 use crate::util::hash::Fnv;
 
+/// Which front-end a workload entered through. The kind prefixes the
+/// workload fingerprint (`chain:` / `dag:`) so a DAG workload can never
+/// alias a chain workload in the profile/base/outcome caches or in merged
+/// snapshots — even if a lowering bug ever produced a graph whose hashed
+/// fields coincide with a zoo chain's. Old (version-1) snapshots carry
+/// untagged fingerprints, so the snapshot format version is bumped with a
+/// logged cold-start fallback ([`snapshot::SNAPSHOT_VERSION`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// A chain model (the zoo of [`models::by_name`], or any `Graph`).
+    Chain,
+    /// An operator DAG, linearized into virtual layers before planning.
+    Dag,
+}
+
+impl WorkloadKind {
+    /// Fingerprint domain tag.
+    pub fn tag(self) -> &'static str {
+        match self {
+            WorkloadKind::Chain => "chain:",
+            WorkloadKind::Dag => "dag:",
+        }
+    }
+}
+
+/// A request's workload resolved to something the planner can consume: the
+/// (possibly lowered) chain graph, the cache-domain kind, and — for DAG
+/// workloads — the linearization report front ends surface to users.
+#[derive(Debug, Clone)]
+pub struct ResolvedWorkload {
+    /// Fingerprint domain.
+    pub kind: WorkloadKind,
+    /// The graph the planner actually solves.
+    pub graph: Graph,
+    /// `Some` iff the workload was an operator DAG.
+    pub linearization: Option<LinearizeReport>,
+}
+
+/// Resolve a request's workload: an inline `dag` payload wins, then the
+/// chain zoo ([`models::by_name`]), then the branching zoo
+/// ([`models::dag_by_name`], lowered through [`linearize`]). Typed errors
+/// (never panics) — cyclic/disconnected DAGs, unknown names — surface as
+/// error responses at every boundary, including the socket path.
+pub fn resolve_workload(req: &PlanRequest) -> Result<ResolvedWorkload, String> {
+    if let Some(dag) = &req.dag {
+        let (graph, report) = linearize(dag).map_err(|e| format!("invalid dag: {e}"))?;
+        return Ok(ResolvedWorkload {
+            kind: WorkloadKind::Dag,
+            graph,
+            linearization: Some(report),
+        });
+    }
+    resolve_model(&req.model)
+}
+
+/// Name-only resolution (no inline payload) — shared by `uniap plan`,
+/// `uniap profile` and request validation tooling.
+pub fn resolve_model(name: &str) -> Result<ResolvedWorkload, String> {
+    if let Some(graph) = models::by_name(name) {
+        return Ok(ResolvedWorkload { kind: WorkloadKind::Chain, graph, linearization: None });
+    }
+    if let Some(dag) = models::dag_by_name(name) {
+        let (graph, report) =
+            linearize(&dag).map_err(|e| format!("invalid dag model {name:?}: {e}"))?;
+        return Ok(ResolvedWorkload {
+            kind: WorkloadKind::Dag,
+            graph,
+            linearization: Some(report),
+        });
+    }
+    Err(format!("unknown model {name:?}"))
+}
+
 /// Content fingerprint of one `(env, graph)` workload — every field the
 /// analytic profiler and the cost models read. Two workloads with equal
 /// fingerprints produce bit-identical profiles and cost bases, which is
 /// what keys both service caches.
+///
+/// Chain-domain shorthand for [`workload_fingerprint_tagged`] (every
+/// pre-DAG call site was a chain workload).
 pub fn workload_fingerprint(env: &ClusterEnv, graph: &Graph) -> u64 {
+    workload_fingerprint_tagged(WorkloadKind::Chain, env, graph)
+}
+
+/// [`workload_fingerprint`] with an explicit front-end domain tag. The tag
+/// is hashed first, so the `chain:` and `dag:` key spaces are disjoint by
+/// construction (pinned in the tests below): a DAG whose *lowered* graph
+/// hashes like a zoo chain still gets its own profile/base/outcome entries.
+pub fn workload_fingerprint_tagged(kind: WorkloadKind, env: &ClusterEnv, graph: &Graph) -> u64 {
     let mut h = Fnv::new();
+    h.str(kind.tag());
     h.str(&env.name);
     h.usize(env.nodes);
     h.usize(env.gpus_per_node);
@@ -453,10 +539,16 @@ impl PlannerService {
         let Some(env) = ClusterEnv::by_name(&req.env) else {
             return PlanResponse::error(&req.id, format!("unknown env {:?}", req.env));
         };
-        let Some(graph) = models::by_name(&req.model) else {
-            return PlanResponse::error(&req.id, format!("unknown model {:?}", req.model));
+        // Inline DAGs and the branching zoo lower to a chain graph here;
+        // everything downstream (profiles, cost bases, solvers, caches,
+        // snapshots) consumes the lowered graph unchanged. The fingerprint
+        // carries the front-end kind so the two domains can never alias.
+        let resolved = match resolve_workload(req) {
+            Ok(r) => r,
+            Err(e) => return PlanResponse::error(&req.id, e),
         };
-        let fp = workload_fingerprint(&env, &graph);
+        let graph = resolved.graph;
+        let fp = workload_fingerprint_tagged(resolved.kind, &env, &graph);
 
         let t_prof = Instant::now();
         let (profile, prof_hit) = self.profile_for(fp, &env, &graph);
@@ -773,6 +865,63 @@ mod tests {
         let mut tweaked = g.clone();
         tweaked.layers[3].params *= 1.5;
         assert_ne!(a, workload_fingerprint(&env, &tweaked));
+    }
+
+    #[test]
+    fn fingerprint_domains_never_alias() {
+        // The same (env, graph) content hashes differently per front-end
+        // kind, so a DAG workload can never replay a chain workload's
+        // profile, cost base or outcome — even in merged snapshots.
+        let g = models::by_name("bert").unwrap();
+        let env = ClusterEnv::env_b();
+        let chain = workload_fingerprint_tagged(WorkloadKind::Chain, &env, &g);
+        let dag = workload_fingerprint_tagged(WorkloadKind::Dag, &env, &g);
+        assert_ne!(chain, dag);
+        // the untagged helper is the chain domain
+        assert_eq!(chain, workload_fingerprint(&env, &g));
+    }
+
+    #[test]
+    fn dag_workloads_plan_end_to_end_with_warm_replay() {
+        let svc = PlannerService::with_threads(2);
+        let mut req = PlanRequest::new("d1", "diamond", "EnvB", 8);
+        req.max_pp = Some(2);
+        let cold = svc.plan(&req);
+        assert_eq!(cold.status, Status::Ok, "{:?}", cold.error);
+        let plan = cold.plan.as_ref().unwrap();
+        // 4 ops lowered to 3 virtual layers; the plan covers all of them
+        assert_eq!(plan.placement.len(), 3);
+
+        // warm-equals-cold byte-identity holds for the DAG domain too
+        req.id = "d2".into();
+        let warm = svc.plan(&req);
+        assert_eq!(warm.cache.plan_hits, 1, "{:?}", warm.cache);
+        assert_eq!(
+            plan_to_json(cold.plan.as_ref().unwrap()).to_string(),
+            plan_to_json(warm.plan.as_ref().unwrap()).to_string(),
+        );
+
+        // inline payload takes the same path as the zoo name
+        let mut inline = PlanRequest::new_dag("d3", crate::graph::models::diamond(), "EnvB", 8);
+        inline.max_pp = Some(2);
+        let r = svc.plan(&inline);
+        assert_eq!(r.status, Status::Ok, "{:?}", r.error);
+        assert_eq!(
+            plan_to_json(cold.plan.as_ref().unwrap()).to_string(),
+            plan_to_json(r.plan.as_ref().unwrap()).to_string(),
+            "zoo-name and inline DAG requests share content, so plans match"
+        );
+    }
+
+    #[test]
+    fn malformed_inline_dag_is_a_typed_error_response() {
+        let svc = PlannerService::with_threads(2);
+        let mut dag = crate::graph::models::diamond();
+        dag.edges.push(crate::dag::OpEdge { src: 3, dst: 0, shape: vec![] });
+        let req = PlanRequest::new_dag("cyc", dag, "EnvB", 8);
+        let r = svc.plan(&req);
+        assert_eq!(r.status, Status::Error);
+        assert!(r.error.unwrap().contains("cycle"));
     }
 
     #[test]

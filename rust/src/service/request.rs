@@ -8,18 +8,23 @@
 
 use crate::baselines::BaselineKind;
 use crate::cost::Schedule;
+use crate::dag::OpDag;
 use crate::planner::Engine;
 use crate::util::json::Json;
 
 /// One planning request. `model`/`env` are resolved by name against the
-/// model zoo ([`crate::graph::models::by_name`]) and environment presets
+/// model zoo ([`crate::graph::models::by_name`], DAGs via
+/// [`crate::graph::models::dag_by_name`]) and environment presets
 /// ([`crate::cluster::ClusterEnv::by_name`]) at service time, so requests
-/// stay small and cacheable.
+/// stay small and cacheable. A request may instead carry an inline
+/// operator-DAG payload (`dag`), linearized into virtual layers at service
+/// time ([`crate::service::resolve_workload`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlanRequest {
     /// Caller correlation id, echoed verbatim in the response.
     pub id: String,
-    /// Model zoo name (`bert`, `t5`, `vit`, `swin`, `llama-7b`, …).
+    /// Model zoo name (`bert`, `t5`, `vit`, `swin`, `llama-7b`, …; DAG
+    /// models `unet`, `unet-small`, `diamond`). Ignored when `dag` is set.
     pub model: String,
     /// Environment preset name (`EnvA`…`EnvE`).
     pub env: String,
@@ -40,6 +45,10 @@ pub struct PlanRequest {
     /// Worker threads for this request's sweep. `None` lets the service
     /// apply its oversubscription policy (DESIGN.md §Service threads).
     pub threads: Option<usize>,
+    /// Inline operator-DAG workload. When present it wins over `model`:
+    /// the service validates and linearizes it into a chain of virtual
+    /// layers, then plans that chain exactly like any zoo model.
+    pub dag: Option<OpDag>,
 }
 
 /// Upper bound on a request deadline, seconds (~116 days). Far beyond any
@@ -62,7 +71,15 @@ impl PlanRequest {
             deadline_secs: None,
             max_pp: None,
             threads: None,
+            dag: None,
         }
+    }
+
+    /// A UniAP request for an inline operator DAG.
+    pub fn new_dag(id: &str, dag: OpDag, env: &str, batch: usize) -> PlanRequest {
+        let mut req = PlanRequest::new(id, "", env, batch);
+        req.dag = Some(dag);
+        req
     }
 
     /// Field-level sanity of a request, independent of name resolution.
@@ -95,6 +112,12 @@ impl PlanRequest {
         if self.threads == Some(0) {
             return Err("\"threads\" must be ≥ 1".to_string());
         }
+        if let Some(dag) = &self.dag {
+            // Full structural validation (acyclic, connected, finite
+            // annotations) here, so malformed DAGs become typed error
+            // responses at every seam — in-process, batch file, socket.
+            dag.validate().map_err(|e| format!("\"dag\": {e}"))?;
+        }
         Ok(())
     }
 
@@ -112,12 +135,13 @@ impl PlanRequest {
             .field("deadline_secs", self.deadline_secs.map_or(Json::Null, Json::Num))
             .field("max_pp", self.max_pp.map_or(Json::Null, Json::from))
             .field("threads", self.threads.map_or(Json::Null, Json::from))
+            .field("dag", self.dag.as_ref().map_or(Json::Null, OpDag::to_json))
     }
 
-    /// Deserialize. `model`, `env` and `batch` are required; everything
-    /// else falls back to [`PlanRequest::new`] defaults. Unknown enum keys
-    /// are errors (not silent defaults) so malformed request files fail
-    /// loudly.
+    /// Deserialize. `env` and `batch` are required, plus either `model` or
+    /// an inline `dag` object; everything else falls back to
+    /// [`PlanRequest::new`] defaults. Unknown enum keys are errors (not
+    /// silent defaults) so malformed request files fail loudly.
     pub fn from_json(j: &Json) -> Result<PlanRequest, String> {
         let req_str = |key: &str| -> Result<String, String> {
             j.get(key)
@@ -125,7 +149,16 @@ impl PlanRequest {
                 .map(str::to_string)
                 .ok_or_else(|| format!("request needs a string field \"{key}\""))
         };
-        let model = req_str("model")?;
+        let dag = match j.get("dag").filter(|v| !v.is_null()) {
+            None => None,
+            Some(d) => Some(OpDag::from_json(d).map_err(|e| format!("\"dag\": {e}"))?),
+        };
+        let model = if dag.is_some() {
+            // the inline payload wins; a name is allowed but not required
+            j.get("model").and_then(Json::as_str).unwrap_or("").to_string()
+        } else {
+            req_str("model")?
+        };
         let env = req_str("env")?;
         let batch = j
             .get("batch")
@@ -161,6 +194,7 @@ impl PlanRequest {
             let threads = t.as_usize().filter(|&t| t > 0);
             req.threads = Some(threads.ok_or("\"threads\" must be a positive integer")?);
         }
+        req.dag = dag;
         // field-type checks above, value-range checks here — notably the
         // non-finite deadlines that the sentinel-aware number parsing
         // (util::json) now lets through as real f64 values
@@ -280,6 +314,42 @@ mod tests {
         assert_eq!(many[1].schedule, Schedule::OneF1B);
         let bad = PlanRequest::parse_batch(r#"[{"model":"bert","env":"EnvB"}]"#);
         assert!(bad.unwrap_err().contains("request [0]"));
+    }
+
+    #[test]
+    fn dag_requests_roundtrip_and_validate() {
+        let mut req = PlanRequest::new_dag(
+            "d1",
+            crate::graph::models::diamond(),
+            "EnvB",
+            8,
+        );
+        req.max_pp = Some(2);
+        let back = PlanRequest::parse(&req.to_json().to_string()).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(back.model, "");
+
+        // a dag-carrying request doesn't need a model name on the wire
+        let parsed = PlanRequest::parse(
+            r#"{"env":"EnvB","batch":4,"dag":{"name":"t","ops":[
+                {"name":"x","flops_fwd":1e9,"params":1e6,"act_out_bytes":1e6,"act_store_bytes":1e6}]}}"#,
+        )
+        .unwrap();
+        assert!(parsed.dag.is_some());
+
+        // cyclic inline dags are typed parse errors, not panics
+        let cyclic = PlanRequest::parse(
+            r#"{"env":"EnvB","batch":4,"dag":{"name":"c","ops":[
+                {"name":"x","flops_fwd":1,"params":1,"act_out_bytes":1,"act_store_bytes":1},
+                {"name":"y","flops_fwd":1,"params":1,"act_out_bytes":1,"act_store_bytes":1}],
+                "edges":[{"src":0,"dst":1},{"src":1,"dst":0}]}}"#,
+        );
+        assert!(cyclic.unwrap_err().contains("cycle"));
+
+        // validate() catches a dag mutated after construction
+        let mut bad = PlanRequest::new_dag("b", crate::graph::models::diamond(), "EnvB", 8);
+        bad.dag.as_mut().unwrap().ops[1].name = "stem".into(); // duplicate name
+        assert!(bad.validate().unwrap_err().contains("duplicate op name"));
     }
 
     #[test]

@@ -54,7 +54,13 @@ use super::PlannerService;
 
 /// Snapshot format version — bump on any incompatible layout change
 /// (older files then cold-start, by design).
-pub const SNAPSHOT_VERSION: usize = 1;
+///
+/// History: **2** — workload fingerprints gained a front-end domain tag
+/// (`chain:` / `dag:`, [`super::workload_fingerprint_tagged`]), so every
+/// content key in a version-1 file hashes differently; loading one would
+/// be pure dead weight, and merging one could resurrect the aliasing the
+/// tag exists to prevent. Old files cold-start with a logged reason.
+pub const SNAPSHOT_VERSION: usize = 2;
 
 /// Merged snapshot file name inside `--state-dir`.
 pub const SNAPSHOT_FILE: &str = "state.json";
@@ -483,7 +489,7 @@ mod tests {
         ));
 
         // version from the future → cold start naming the version
-        let future = text.replacen("\"version\":1", "\"version\":999", 1);
+        let future = text.replacen("\"version\":2", "\"version\":999", 1);
         std::fs::write(&path, &future).unwrap();
         match fresh.load_state(&dir) {
             LoadOutcome::ColdStart { reason: Some(r) } => assert!(r.contains("999"), "{r}"),

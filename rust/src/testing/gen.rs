@@ -10,6 +10,7 @@ use std::sync::Arc;
 use crate::baselines::BaselineKind;
 use crate::cluster::ClusterEnv;
 use crate::cost::{CostBase, Schedule};
+use crate::dag::{OpDag, OpEdge, OpNode};
 use crate::graph::{Dtype, Graph, Layer, LayerKind};
 use crate::planner::memo::MemFrontier;
 use crate::planner::{Engine, Plan};
@@ -38,6 +39,62 @@ pub fn random_chain(rng: &mut Rng, n: usize) -> Graph {
         })
         .collect();
     Graph::chain("rand", layers, Dtype::Fp32, 128)
+}
+
+/// A heterogeneous random operator DAG (ISSUE 7 satellite): `n` ops
+/// with per-op type keys and randomized annotations, wired as a random
+/// spanning backbone (every non-source op consumes at least one earlier
+/// op, so the graph is weakly connected and acyclic by construction)
+/// plus extra random forward edges — the skip connections that exercise
+/// the resharding fold. Roughly half the edges carry an explicit tensor
+/// shape; the rest fall back to the producer's `act_out_bytes`.
+pub fn random_dag(rng: &mut Rng, n: usize) -> OpDag {
+    assert!(n >= 1, "random_dag needs at least one op");
+    let ops = (0..n)
+        .map(|i| OpNode {
+            name: format!("op{i}"),
+            type_key: format!("t{i}"),
+            kind: LayerKind::Other,
+            flops_fwd: rng.f64_in(5e10, 3e12),
+            params: rng.f64_in(5e6, 6e7),
+            act_out_bytes: rng.f64_in(5e5, 8e6),
+            act_store_bytes: rng.f64_in(1e6, 2e7),
+        })
+        .collect();
+    let mut edges = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    let mut push = |rng: &mut Rng, edges: &mut Vec<OpEdge>, src: usize, dst: usize| {
+        if seen.insert((src, dst)) {
+            let shape = if rng.bool(0.5) {
+                vec![rng.usize_in(1, 257), rng.usize_in(1, 1025)]
+            } else {
+                Vec::new()
+            };
+            edges.push(OpEdge { src, dst, shape });
+        }
+    };
+    // spanning backbone: op i consumes a uniformly random predecessor
+    for dst in 1..n {
+        let src = rng.usize_in(0, dst);
+        push(rng, &mut edges, src, dst);
+    }
+    // extra forward edges, duplicates silently skipped
+    if n >= 2 {
+        for _ in 0..rng.usize_in(0, n) {
+            let src = rng.usize_in(0, n - 1);
+            let dst = rng.usize_in(src + 1, n);
+            push(rng, &mut edges, src, dst);
+        }
+    }
+    let dag = OpDag {
+        name: "rand-dag".into(),
+        ops,
+        edges,
+        dtype: Dtype::Fp32,
+        seq_len: 128,
+    };
+    dag.validate().expect("random_dag must generate valid DAGs");
+    dag
 }
 
 /// A structurally valid random plan: contiguous stages over a chain,
@@ -170,10 +227,24 @@ mod tests {
             let chain = random_chain(&mut rng, 5);
             let plan = random_plan(&mut rng);
             let req = random_request(&mut rng);
-            (format!("{chain:?}"), format!("{plan:?}"), format!("{req:?}"))
+            let dag = random_dag(&mut rng, 6);
+            (format!("{chain:?}"), format!("{plan:?}"), format!("{req:?}"), format!("{dag:?}"))
         };
         assert_eq!(draw(7), draw(7));
         assert_ne!(draw(7), draw(8));
+    }
+
+    #[test]
+    fn random_dags_validate_across_seeds_and_sizes() {
+        for seed in 0..32 {
+            let mut rng = Rng::new(seed);
+            let n = rng.usize_in(1, 12);
+            let dag = random_dag(&mut rng, n); // validates internally
+            assert_eq!(dag.ops.len(), n);
+            if n >= 2 {
+                assert!(dag.edges.len() >= n - 1, "backbone must span all ops");
+            }
+        }
     }
 
     #[test]

@@ -7,11 +7,17 @@
 //! ISSUE 3 extends the guarantee to the parallel planner core: the
 //! row-parallel interval DP and the cross-candidate frontier memo must
 //! both leave plans bit-identical to the serial, memo-free path.
+//!
+//! ISSUE 7 extends it to the operator-DAG front-end: a chain-shaped
+//! DAG must linearize to the *identical* `Graph` (every cluster a
+//! singleton, every annotation byte preserved) and therefore plan
+//! bit-identically to the chain that never went through the DAG IR.
 
 use std::sync::atomic::AtomicU64;
 
 use uniap::cluster::ClusterEnv;
 use uniap::cost::cost_modeling;
+use uniap::dag::{linearize, OpDag};
 use uniap::planner::memo::FrontierMemo;
 use uniap::planner::{chain, chain_dense, PlannerConfig};
 use uniap::profiling::Profile;
@@ -170,6 +176,74 @@ fn row_parallel_and_memoised_solves_are_bit_identical_to_serial() {
                     a.is_some(),
                     b.is_some(),
                     w.is_some()
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn chain_as_dag_linearizes_to_identity_and_plans_bit_identically() {
+    // The DAG front-end's identity guarantee (ISSUE 7): round-tripping
+    // a chain through the operator-DAG IR is a no-op. The lowered graph
+    // must match field for field — same names, same type keys, same
+    // annotation bits — so the sparse chain engine, fed the same cost
+    // matrices, returns the same plan down to the objective bits.
+    testing::check(
+        "chain_as_dag_identity",
+        10,
+        |rng| {
+            let n = rng.usize_in(4, 9);
+            let pp = *rng.pick(&[2usize, 4]);
+            let c = *rng.pick(&[2usize, 4]);
+            let seed = rng.next_u64();
+            (n, pp, c, seed)
+        },
+        |&(n, pp, c, seed)| {
+            let mut grng = testing::Rng::new(seed);
+            let g = random_chain(&mut grng, n);
+            let (lowered, report) = linearize(&OpDag::from_graph(&g))
+                .map_err(|e| format!("linearize failed on a chain: {e}"))?;
+            if format!("{lowered:?}") != format!("{g:?}") {
+                return Err(format!(
+                    "lowering is not the identity:\n  chain {g:?}\n  lowered {lowered:?}"
+                ));
+            }
+            if report.merged_clusters() != 0 || report.skip_edges != 0 {
+                return Err(format!(
+                    "a chain must produce only singletons: {} merged, {} skips",
+                    report.merged_clusters(),
+                    report.skip_edges
+                ));
+            }
+            let profile = Profile::analytic(&ClusterEnv::env_b(), &g);
+            let costs = cost_modeling(&profile, &g, pp, 8, c);
+            let lowered_profile = Profile::analytic(&ClusterEnv::env_b(), &lowered);
+            let lowered_costs = cost_modeling(&lowered_profile, &lowered, pp, 8, c);
+            let cfg = PlannerConfig::default();
+            let direct = chain::solve_chain(&g, &costs, &cfg);
+            let via_dag = chain::solve_chain(&lowered, &lowered_costs, &cfg);
+            match (direct, via_dag) {
+                (Some(a), Some(b)) => {
+                    if a.placement != b.placement || a.choice != b.choice {
+                        return Err(format!(
+                            "plan mismatch: direct {:?}/{:?} vs via-dag {:?}/{:?}",
+                            a.placement, a.choice, b.placement, b.choice
+                        ));
+                    }
+                    if a.est_tpi.to_bits() != b.est_tpi.to_bits() {
+                        return Err(format!(
+                            "est_tpi not bit-identical: {} vs {}",
+                            a.est_tpi, b.est_tpi
+                        ));
+                    }
+                    Ok(())
+                }
+                (None, None) => Ok(()),
+                (a, b) => Err(format!(
+                    "feasibility mismatch: direct {:?} via-dag {:?}",
+                    a.is_some(),
+                    b.is_some()
                 )),
             }
         },

@@ -1,0 +1,144 @@
+//! Integration battery for the operator-DAG front-end (ISSUE 7): the
+//! linearizer must be a pure function of the DAG's *content* — same
+//! virtual layers and same lowered chain regardless of input order,
+//! run count, or planner thread count — and every malformed DAG must
+//! surface as a typed error through the same service path a healthy
+//! request takes, never as a panic.
+//!
+//! The chain-identity half of the guarantee (a chain-shaped DAG lowers
+//! to the *identical* `Graph` and plans bit-identically to the chain
+//! front-end) lives in `chain_equivalence.rs` next to the other
+//! bit-identity properties.
+
+use uniap::dag::{linearize, OpDag, OpEdge};
+use uniap::graph::models;
+use uniap::service::{plan_to_json, PlanRequest, PlannerService, Status};
+use uniap::testing::{self, gen::random_dag};
+
+/// Fisher–Yates shuffle of `0..n` — the op orders we feed `permuted`.
+fn random_perm(rng: &mut testing::Rng, n: usize) -> Vec<usize> {
+    let mut perm: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        let j = rng.usize_in(0, i + 1);
+        perm.swap(i, j);
+    }
+    perm
+}
+
+fn dag_req(id: &str, dag: OpDag, batch: usize) -> PlanRequest {
+    let mut req = PlanRequest::new_dag(id, dag, "EnvB", batch);
+    req.max_pp = Some(2);
+    req
+}
+
+#[test]
+fn linearization_is_deterministic_and_order_independent() {
+    // Clustering is by longest-path depth and members sort by name, so
+    // neither a rerun nor *any* permutation of the op/edge arrays may
+    // change a byte of the lowered chain or the report.
+    testing::check(
+        "dag_linearize_order_independent",
+        20,
+        |rng| {
+            let n = rng.usize_in(2, 10);
+            let seed = rng.next_u64();
+            (n, seed)
+        },
+        |&(n, seed)| {
+            let mut grng = testing::Rng::new(seed);
+            let dag = random_dag(&mut grng, n);
+            let (g1, r1) = linearize(&dag).map_err(|e| format!("linearize: {e}"))?;
+            let (g2, r2) = linearize(&dag).map_err(|e| format!("re-linearize: {e}"))?;
+            if format!("{g1:?}") != format!("{g2:?}") || r1.virtual_layers != r2.virtual_layers {
+                return Err("two runs over one DAG disagreed".into());
+            }
+            for _ in 0..3 {
+                let perm = random_perm(&mut grng, n);
+                let (gp, rp) = linearize(&dag.permuted(&perm))
+                    .map_err(|e| format!("permuted linearize: {e}"))?;
+                if format!("{gp:?}") != format!("{g1:?}") {
+                    return Err(format!(
+                        "lowered chain depends on input order under perm {perm:?}"
+                    ));
+                }
+                if rp.virtual_layers != r1.virtual_layers {
+                    return Err(format!("report depends on input order under perm {perm:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dag_plans_are_independent_of_planner_thread_count() {
+    let mut rng = testing::Rng::new(11);
+    let dag = random_dag(&mut rng, 6);
+    let mut want = None;
+    for threads in [1usize, 2, 4] {
+        let svc = PlannerService::with_threads(threads);
+        let resp = svc.plan(&dag_req(&format!("t{threads}"), dag.clone(), 8));
+        assert_eq!(resp.status, Status::Ok, "threads={threads}: {:?}", resp.error);
+        let bytes = plan_to_json(resp.plan.as_ref().unwrap()).to_string();
+        match &want {
+            None => want = Some(bytes),
+            Some(w) => assert_eq!(&bytes, w, "plan bytes drift at threads={threads}"),
+        }
+    }
+}
+
+#[test]
+fn invalid_dags_earn_typed_errors_through_the_service_path() {
+    let svc = PlannerService::with_threads(1);
+
+    // a back edge closes a cycle through the diamond
+    let mut cyclic = models::diamond();
+    cyclic.edges.push(OpEdge { src: 3, dst: 0, shape: Vec::new() });
+    let resp = svc.plan(&dag_req("cyclic", cyclic, 8));
+    assert_eq!(resp.status, Status::Error);
+    let err = resp.error.expect("error body");
+    assert!(err.contains("cycle"), "must name the cycle: {err}");
+
+    // two ops, no edges: weakly disconnected
+    let mut split = models::diamond();
+    split.ops.truncate(2);
+    split.edges.clear();
+    let resp = svc.plan(&dag_req("split", split, 8));
+    assert_eq!(resp.status, Status::Error);
+    let err = resp.error.expect("error body");
+    assert!(err.contains("disconnected"), "must name the disconnect: {err}");
+
+    // the same service still solves a healthy request afterwards
+    let resp = svc.plan(&dag_req("healthy", models::diamond(), 8));
+    assert_eq!(resp.status, Status::Ok, "{:?}", resp.error);
+}
+
+#[test]
+fn bert_as_inline_dag_plans_byte_identically_to_the_chain_model() {
+    // The same workload entering through either front-end must leave
+    // with the same plan bytes — while the two requests live in
+    // disjoint fingerprint domains, so neither replays the other's
+    // plan cache entry.
+    let svc = PlannerService::with_threads(2);
+    let mut chain_req = PlanRequest::new("chain-side", "bert", "EnvB", 16);
+    chain_req.max_pp = Some(2);
+    let chain_resp = svc.plan(&chain_req);
+    assert_eq!(chain_resp.status, Status::Ok, "{:?}", chain_resp.error);
+
+    let dag = OpDag::from_graph(&models::by_name("bert").unwrap());
+    let mut dag_side = PlanRequest::new_dag("dag-side", dag, "EnvB", 16);
+    dag_side.max_pp = Some(2);
+    let dag_resp = svc.plan(&dag_side);
+    assert_eq!(dag_resp.status, Status::Ok, "{:?}", dag_resp.error);
+
+    assert_eq!(
+        plan_to_json(chain_resp.plan.as_ref().unwrap()).to_string(),
+        plan_to_json(dag_resp.plan.as_ref().unwrap()).to_string(),
+        "front-ends must agree on every plan byte"
+    );
+    assert_eq!(
+        svc.stats().plan_hits,
+        0,
+        "domain tags must keep the two plan-cache entries apart"
+    );
+}

@@ -19,9 +19,12 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
+use uniap::dag::OpEdge;
+use uniap::graph::models;
 use uniap::service::server::{fetch_snapshot, serve_frame};
 use uniap::service::{
-    plan_to_json, CancelToken, PlanResponse, PlannerService, ServerOptions, Snapshot, Status,
+    plan_to_json, CancelToken, PlanRequest, PlanResponse, PlannerService, ServerOptions, Snapshot,
+    Status,
 };
 use uniap::testing;
 use uniap::testing::harness::{bert_req, round_trip, TestServer};
@@ -71,6 +74,41 @@ fn malformed_frames_get_typed_errors_and_the_connection_survives() {
         plan_to_json(resp.plan.as_ref().unwrap()).to_string(),
         plan_to_json(direct.plan.as_ref().unwrap()).to_string(),
         "socket-served plan must equal the in-process plan"
+    );
+    server.stop().expect("clean shutdown");
+}
+
+#[test]
+fn invalid_inline_dag_frames_get_typed_errors_over_the_socket() {
+    // ISSUE 7: a request whose inline operator DAG has a cycle must come
+    // back as a typed error naming the cycle — through the same framing,
+    // validation and dispatch layers a healthy DAG request takes — and
+    // leave the connection serving.
+    let mut server =
+        TestServer::start(Arc::new(PlannerService::with_threads(2)), ServerOptions::default());
+    let (mut reader, mut writer) = server.connect();
+
+    let mut cyclic = models::diamond();
+    cyclic.edges.push(OpEdge { src: 3, dst: 0, shape: Vec::new() });
+    let mut req = PlanRequest::new_dag("cyclic", cyclic, "EnvB", 8);
+    req.max_pp = Some(2);
+    let resp = round_trip(&mut reader, &mut writer, &req.to_json().to_string());
+    assert_eq!(resp.status, Status::Error);
+    assert_eq!(resp.id, "cyclic");
+    let err = resp.error.expect("error body");
+    assert!(err.contains("cycle"), "must name the cycle: {err}");
+
+    // the same connection still plans the healthy version of the DAG,
+    // byte-identical to the in-process service
+    let mut req = PlanRequest::new_dag("healthy", models::diamond(), "EnvB", 8);
+    req.max_pp = Some(2);
+    let resp = round_trip(&mut reader, &mut writer, &req.to_json().to_string());
+    assert_eq!(resp.status, Status::Ok, "{:?}", resp.error);
+    let direct = PlannerService::with_threads(2).plan(&req);
+    assert_eq!(
+        plan_to_json(resp.plan.as_ref().unwrap()).to_string(),
+        plan_to_json(direct.plan.as_ref().unwrap()).to_string(),
+        "socket-served DAG plan must equal the in-process plan"
     );
     server.stop().expect("clean shutdown");
 }
