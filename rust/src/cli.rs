@@ -72,6 +72,23 @@ impl Args {
         }
     }
 
+    /// A seconds-valued option with default: finite and non-negative,
+    /// with 0 meaning "disabled" by the callers' convention. Typed
+    /// errors at parse time (ISSUE 8 satellite) — a negative or NaN
+    /// `--resync-secs`/`--snapshot-secs` used to be silently clamped
+    /// deep in the server loop instead of rejected where the user can
+    /// see it.
+    pub fn get_secs(&self, key: &str, default: f64) -> Result<f64, String> {
+        let v = self.get_f64(key, default)?;
+        if !v.is_finite() {
+            return Err(format!("--{key} expects a finite number of seconds, got {v}"));
+        }
+        if v < 0.0 {
+            return Err(format!("--{key} expects seconds >= 0 (use 0 to disable), got {v}"));
+        }
+        Ok(v)
+    }
+
     /// Boolean flag presence.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
@@ -123,5 +140,19 @@ mod tests {
     fn bad_numbers_error() {
         let a = Args::parse(&toks("plan --batch ten")).unwrap();
         assert!(a.get_usize("batch", 1).is_err());
+    }
+
+    #[test]
+    fn seconds_options_reject_negative_nan_and_infinite() {
+        let ok = Args::parse(&toks("serve --resync-secs 2.5")).unwrap();
+        assert_eq!(ok.get_secs("resync-secs", 300.0).unwrap(), 2.5);
+        assert_eq!(ok.get_secs("snapshot-secs", 30.0).unwrap(), 30.0, "default passes");
+        let zero = Args::parse(&toks("serve --resync-secs 0")).unwrap();
+        assert_eq!(zero.get_secs("resync-secs", 300.0).unwrap(), 0.0, "0 = disabled");
+        for bad in ["-1", "NaN", "inf", "-inf", "oops"] {
+            let a = Args::parse(&toks(&format!("serve --resync-secs {bad}"))).unwrap();
+            let err = a.get_secs("resync-secs", 300.0).unwrap_err();
+            assert!(err.contains("--resync-secs"), "{bad}: {err}");
+        }
     }
 }

@@ -28,7 +28,7 @@
 //! | [`dag`] | operator-DAG front-end: branching-model IR, deterministic topological clustering into virtual layers, cross-edge reshard folding, lowering to a chain `Graph` the planners consume unchanged |
 //! | [`miqp`] | general MIQP solver: linearisation, simplex, branch & bound + per-stage dominance pruning (§3.3) |
 //! | [`planner`] | chain-exact solver (row-parallel interval DP), QIP intra-only, cross-candidate frontier memo, UOP (Alg. 1) |
-//! | [`service`] | planner-as-a-service: typed PlanRequest/PlanResponse, cross-request profile + batch-generic cost-base + frontier caches, LRU-bounded outcome replay, cancellation/deadlines, batch drain, `serve --listen` socket server + persistent state snapshots, snapshot merging for multi-process state dirs and cross-machine `sync` pulls, admission control with typed `busy` load shedding + health probes + background peer re-sync |
+//! | [`service`] | planner-as-a-service: typed PlanRequest/PlanResponse, cross-request profile + batch-generic cost-base + frontier caches, LRU-bounded outcome replay, cancellation/deadlines, batch drain, `serve --listen` socket server + persistent state snapshots, snapshot merging for multi-process state dirs and cross-machine `sync` pulls, admission control with typed `busy` load shedding + health/stats probes, and a `--peers` fleet mode: consistent-hash routing of workload fingerprints, warm forwarding with outcome adoption, gossip anti-entropy with per-peer suspicion |
 //! | [`util`] | divisors/stats helpers, hand-rolled JSON (with non-finite sentinels), FNV content hashing, cancel tokens, process-wide thread budget + row fan-out pool, NDJSON socket framing + capped-exponential retry backoff, atomic file IO (fsynced) + state-dir advisory lock, scriptable fault injection (`UNIAP_FAULTS`) |
 //! | [`baselines`] | Galvatron, Alpa-like, Megatron grid, DeepSpeed, inter-/intra-only |
 //! | [`sim`] | discrete-event GPipe pipeline simulator (ground truth) |

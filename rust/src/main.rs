@@ -50,6 +50,8 @@ COMMANDS:
              --listen <host:port> [--state-dir DIR] [--snapshot-secs N]
              [--max-frame-bytes N] [--sync-from <host:port>]
              [--max-connections N] [--max-inflight N] [--resync-secs N]
+             [--peers <addr,addr,...>] [--advertise <host:port>]
+             [--max-sync-bytes N]
              long-running socket mode: one JSON request (or array) per
              line in, one response line out; ctrl-c shuts down gracefully
              and, with --state-dir, persists the planner caches for the
@@ -58,11 +60,17 @@ COMMANDS:
              additionally pulls a peer server's snapshot at startup and
              merges it, warming this server from another machine; a peer
              that is down at boot degrades to a background re-sync every
-             --resync-secs. Load beyond --max-connections/--max-inflight
-             is shed with a typed \"busy\" response
+             --resync-secs. --peers lists every fleet member (including
+             this node, identified by --advertise or the --listen addr):
+             each workload key gets a consistent-hash owner, misses are
+             warm-forwarded to it, and the background tick becomes gossip
+             anti-entropy across the ring. Load beyond
+             --max-connections/--max-inflight is shed with a typed
+             \"busy\" response; {\"op\":\"health\"} and {\"op\":\"stats\"}
+             probes are answered even while shedding
              --connect <host:port> --requests <file.json> [--pretty]
              client mode: send the request file to a listening server
-             --sync-from <host:port> --state-dir DIR
+             --sync-from <host:port> --state-dir DIR [--max-sync-bytes N]
              one-shot sync: pull the peer's snapshot, merge it into the
              state dir, and exit
   profile    --model <name> --env <name>
@@ -256,12 +264,20 @@ fn cmd_serve_listen(args: &Args) -> Result<(), String> {
     let addr = args.require("listen").map_err(|_| {
         "--listen needs an address (host:port, e.g. 127.0.0.1:7741; port 0 picks one)".to_string()
     })?;
+    let peers = match args.opt("peers") {
+        None if args.has("peers") => {
+            return Err("--peers needs a comma-separated address list (host:port,host:port,...)"
+                .to_string())
+        }
+        None => Vec::new(),
+        Some(raw) => uniap::service::parse_peer_list(raw)?,
+    };
     let opts = uniap::service::ServerOptions {
         state_dir: {
             let dir = args.get("state-dir", "");
             (!dir.is_empty()).then(|| std::path::PathBuf::from(dir))
         },
-        snapshot_secs: args.get_f64("snapshot-secs", 30.0)?,
+        snapshot_secs: args.get_secs("snapshot-secs", 30.0)?,
         max_frame_bytes: args
             .get_usize("max-frame-bytes", uniap::util::net::DEFAULT_MAX_FRAME_BYTES)?,
         watch_sigint: true,
@@ -270,7 +286,11 @@ fn cmd_serve_listen(args: &Args) -> Result<(), String> {
         max_inflight: args
             .get_usize("max-inflight", uniap::service::server::DEFAULT_MAX_INFLIGHT)?,
         sync_from: args.opt("sync-from").map(str::to_string),
-        resync_secs: args.get_f64("resync-secs", 300.0)?,
+        resync_secs: args.get_secs("resync-secs", 300.0)?,
+        peers,
+        advertise: args.opt("advertise").map(str::to_string),
+        max_sync_bytes: args
+            .get_usize("max-sync-bytes", uniap::service::server::DEFAULT_MAX_SYNC_BYTES)?,
     };
     let service = PlannerService::new();
     if let Some(dir) = &opts.state_dir {
@@ -298,7 +318,7 @@ fn cmd_serve_listen(args: &Args) -> Result<(), String> {
                 let mut retries = 0usize;
                 let sync = uniap::service::server::fetch_snapshot_retrying(
                     peer,
-                    uniap::service::server::DEFAULT_MAX_SYNC_BYTES,
+                    opts.max_sync_bytes,
                     uniap::service::server::DEFAULT_SYNC_TIMEOUT,
                     &mut |attempt, err| {
                         retries += 1;
@@ -343,7 +363,8 @@ fn cmd_serve_listen(args: &Args) -> Result<(), String> {
     eprintln!(
         "shut down after {} connections, {} requests ({} plan-cache hits, \
          {} persisted-frontier hits, {} snapshots written; \
-         {} requests shed, {} accept errors, {} sync retries, {} faults injected)",
+         {} requests shed, {} accept errors, {} sync retries, {} faults injected; \
+         {} forwards, {} forward fallbacks, {} gossip rounds, {} gossip-merged entries)",
         stats.connections,
         stats.requests,
         stats.plan_hits,
@@ -353,6 +374,10 @@ fn cmd_serve_listen(args: &Args) -> Result<(), String> {
         stats.accept_errors,
         stats.sync_retries,
         stats.faults_injected,
+        stats.forwards,
+        stats.forward_fallbacks,
+        stats.gossip_rounds,
+        stats.gossip_merged_entries,
     );
     Ok(())
 }
@@ -415,9 +440,11 @@ fn cmd_serve_sync(args: &Args) -> Result<(), String> {
     if let uniap::service::LoadOutcome::Loaded { frontiers, bases } = service.load_state(&dir) {
         eprintln!("local state: {frontiers} frontiers, {bases} cost bases");
     }
+    let cap =
+        args.get_usize("max-sync-bytes", uniap::service::server::DEFAULT_MAX_SYNC_BYTES)?;
     let snap = uniap::service::server::fetch_snapshot_retrying(
         &peer,
-        uniap::service::server::DEFAULT_MAX_SYNC_BYTES,
+        cap,
         uniap::service::server::DEFAULT_SYNC_TIMEOUT,
         &mut |attempt, err| {
             eprintln!("sync from {peer} attempt {attempt} failed ({err}) — retrying")

@@ -38,6 +38,15 @@
 //! down: any merge order preloaded into a service yields
 //! `PlanResponse`s byte-identical to a cold solve.
 //!
+//! These union laws are what make fleet gossip (ISSUE 8) trivially
+//! safe: every anti-entropy round is just "fetch a live peer's `sync`
+//! snapshot, `PlannerService::merge_snapshot` it in" — rounds may
+//! repeat, cross,
+//! arrive out of order, or pull from a peer that already pulled from
+//! us, and idempotent-commutative union guarantees the fleet converges
+//! to the same state regardless, with `gossip_merged_entries` counting
+//! exactly the genuinely-new entries.
+//!
 //! ## Document format
 //!
 //! The same versioned + checksummed envelope PR 4 introduced, with the

@@ -60,6 +60,7 @@
 pub mod merge;
 pub mod request;
 pub mod response;
+pub mod ring;
 pub mod server;
 pub mod snapshot;
 
@@ -67,6 +68,7 @@ pub use crate::util::cancel::{CancelCause, CancelToken};
 pub use merge::{Snapshot, SnapshotMeta};
 pub use request::PlanRequest;
 pub use response::{plan_from_json, plan_to_json, CacheStats, PlanResponse, Status, Timings};
+pub use ring::{parse_peer_list, Fleet, Ring};
 pub use server::{Server, ServerOptions};
 pub use snapshot::LoadOutcome;
 
@@ -292,6 +294,13 @@ impl OutcomeCache {
     fn len(&self) -> usize {
         self.map.len()
     }
+
+    /// Presence probe without the recency touch of [`OutcomeCache::get`]
+    /// — the fleet router asks "would this replay locally?" before
+    /// deciding to forward, and a probe must not perturb LRU order.
+    fn contains(&self, key: &OutcomeKey) -> bool {
+        self.map.contains_key(key)
+    }
 }
 
 /// Lifetime cache counters (all requests since construction).
@@ -318,6 +327,14 @@ struct Totals {
     accept_errors: AtomicUsize,
     /// Sync attempts that failed and were retried (boot + background).
     sync_retries: AtomicUsize,
+    /// Requests warm-forwarded to their ring owner and answered (ISSUE 8).
+    forwards: AtomicUsize,
+    /// Forwards that degraded to a local solve (owner down/busy).
+    forward_fallbacks: AtomicUsize,
+    /// Gossip anti-entropy ticks that completed an exchange.
+    gossip_rounds: AtomicUsize,
+    /// Frontier + base entries merged in over gossip exchanges.
+    gossip_merged_entries: AtomicUsize,
 }
 
 /// Snapshot of the service's lifetime statistics.
@@ -356,10 +373,56 @@ pub struct ServiceStats {
     pub accept_errors: usize,
     /// Failed-then-retried sync attempts (boot probe + background tick).
     pub sync_retries: usize,
+    /// Requests warm-forwarded to their ring owner and answered by it,
+    /// with the outcome adopted locally (ISSUE 8 fleet routing).
+    pub forwards: usize,
+    /// Forwards that degraded gracefully to a local solve because the
+    /// ring owner was down, busy, or unreachable.
+    pub forward_fallbacks: usize,
+    /// Gossip anti-entropy ticks that completed a snapshot exchange.
+    pub gossip_rounds: usize,
+    /// Frontier + cost-base entries merged in over gossip exchanges —
+    /// nonzero proves a restarted node re-warmed with no operator action.
+    pub gossip_merged_entries: usize,
     /// Faults injected by an armed `UNIAP_FAULTS` plan. Process-global
     /// (the fault layer predates any service), surfaced here so chaos
     /// runs can assert their plan actually fired; 0 in production.
     pub faults_injected: usize,
+}
+
+impl ServiceStats {
+    /// Canonical-JSON emission of every counter (deterministic field
+    /// order) — the payload of the `{"op":"stats"}` probe (ISSUE 8), so
+    /// fleet tests and operators can assert counters on a live server.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .field("requests", self.requests)
+            .field("profile_hits", self.profile_hits)
+            .field("profile_misses", self.profile_misses)
+            .field("base_hits", self.base_hits)
+            .field("base_misses", self.base_misses)
+            .field("plan_hits", self.plan_hits)
+            .field("plan_misses", self.plan_misses)
+            .field("cached_profiles", self.cached_profiles)
+            .field("cached_bases", self.cached_bases)
+            .field("cached_plans", self.cached_plans)
+            .field("cached_frontiers", self.cached_frontiers)
+            .field("frontier_hits", self.frontier_hits)
+            .field("outcome_evictions", self.outcome_evictions)
+            .field("connections", self.connections)
+            .field("snapshots_written", self.snapshots_written)
+            .field("persisted_frontiers_loaded", self.persisted_frontiers_loaded)
+            .field("persisted_bases_loaded", self.persisted_bases_loaded)
+            .field("persisted_frontier_hits", self.persisted_frontier_hits)
+            .field("requests_shed", self.requests_shed)
+            .field("accept_errors", self.accept_errors)
+            .field("sync_retries", self.sync_retries)
+            .field("forwards", self.forwards)
+            .field("forward_fallbacks", self.forward_fallbacks)
+            .field("gossip_rounds", self.gossip_rounds)
+            .field("gossip_merged_entries", self.gossip_merged_entries)
+            .field("faults_injected", self.faults_injected)
+    }
 }
 
 /// The long-lived planner front end (see module docs). Cheap to share by
@@ -448,6 +511,10 @@ impl PlannerService {
             requests_shed: self.totals.requests_shed.load(Ordering::Relaxed),
             accept_errors: self.totals.accept_errors.load(Ordering::Relaxed),
             sync_retries: self.totals.sync_retries.load(Ordering::Relaxed),
+            forwards: self.totals.forwards.load(Ordering::Relaxed),
+            forward_fallbacks: self.totals.forward_fallbacks.load(Ordering::Relaxed),
+            gossip_rounds: self.totals.gossip_rounds.load(Ordering::Relaxed),
+            gossip_merged_entries: self.totals.gossip_merged_entries.load(Ordering::Relaxed),
             faults_injected: crate::util::fault::injected_total(),
         }
     }
@@ -474,6 +541,22 @@ impl PlannerService {
         if n > 0 {
             self.totals.sync_retries.fetch_add(n, Ordering::Relaxed);
         }
+    }
+
+    /// Record one answered warm-forward to the ring owner (ISSUE 8).
+    pub(crate) fn note_forward(&self) {
+        self.totals.forwards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one forward that degraded to a local solve.
+    pub(crate) fn note_forward_fallback(&self) {
+        self.totals.forward_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one completed gossip exchange that merged `n` entries.
+    pub(crate) fn note_gossip(&self, n: usize) {
+        self.totals.gossip_rounds.fetch_add(1, Ordering::Relaxed);
+        self.totals.gossip_merged_entries.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Entry counts of the two persisted caches — the snapshot tick's
@@ -561,14 +644,7 @@ impl PlannerService {
 
         // Completed-outcome fast path: the planner is deterministic, so a
         // strictly repeated request replays the stored result.
-        let outcome_key = OutcomeKey {
-            fp,
-            batch: req.batch,
-            method: req.method,
-            engine: req.engine,
-            schedule: req.schedule,
-            max_pp: req.max_pp,
-        };
+        let outcome_key = PlannerService::outcome_key_for(fp, req);
         if let Some(hit) = self.outcomes.lock().unwrap().get(&outcome_key) {
             self.totals.plan_hits.fetch_add(1, Ordering::Relaxed);
             return PlanResponse {
@@ -842,6 +918,54 @@ impl PlannerService {
         self.totals.persisted_bases_loaded.fetch_add(new_bases, Ordering::Relaxed);
         (new_frontiers, new_bases)
     }
+
+    /// `true` when a strictly repeated request for `(fp, req)` would
+    /// replay from the completed-outcome cache. The fleet router
+    /// (ISSUE 8) consults this before forwarding: a locally warm key is
+    /// always served locally, whoever owns it on the ring. LRU order is
+    /// not perturbed.
+    pub fn outcome_is_cached(&self, fp: u64, req: &PlanRequest) -> bool {
+        self.outcomes.lock().unwrap().contains(&PlannerService::outcome_key_for(fp, req))
+    }
+
+    /// Adopt a peer-computed response into the completed-outcome cache,
+    /// so the *next* request for this key replays locally — the second
+    /// half of warm-forwarding (ISSUE 8). Mirrors the storage law of
+    /// [`PlannerService::plan_cancellable`]: only completed solves
+    /// (`Ok` / `Infeasible`) are stored; `busy`, errors and
+    /// deadline-truncated results never poison the cache. The planner is
+    /// deterministic and canonical-JSON round-trips are the identity, so
+    /// an adopted plan's bytes equal what a local solve would produce.
+    /// Returns whether the outcome was stored.
+    pub fn adopt_outcome(&self, fp: u64, req: &PlanRequest, resp: &PlanResponse) -> bool {
+        if !matches!(resp.status, Status::Ok | Status::Infeasible) {
+            return false;
+        }
+        self.outcomes.lock().unwrap().insert(
+            PlannerService::outcome_key_for(fp, req),
+            Outcome {
+                status: resp.status,
+                error: resp.error.clone(),
+                plan: resp.plan.clone(),
+                log: resp.log.clone(),
+            },
+        );
+        true
+    }
+
+    /// The completed-outcome cache key of `(fp, req)` — one definition
+    /// shared by the solve path, the router probe and adoption, so the
+    /// three can never disagree about what "the same request" means.
+    fn outcome_key_for(fp: u64, req: &PlanRequest) -> OutcomeKey {
+        OutcomeKey {
+            fp,
+            batch: req.batch,
+            method: req.method,
+            engine: req.engine,
+            schedule: req.schedule,
+            max_pp: req.max_pp,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1070,6 +1194,60 @@ mod tests {
         let again = svc.plan(&bert_req("one-again"));
         assert_eq!(again.cache.plan_hits, 0, "{:?}", again.cache);
         assert_eq!(again.cache.plan_misses, 1);
+    }
+
+    #[test]
+    fn adopted_outcomes_replay_like_local_solves() {
+        // the warm-forward adoption path (ISSUE 8): node A solves, node B
+        // adopts A's response, and B's next request replays byte-identically
+        let a = PlannerService::with_threads(2);
+        let b = PlannerService::with_threads(2);
+        let req = bert_req("fwd");
+        let solved = a.plan(&req);
+        assert_eq!(solved.status, Status::Ok);
+
+        let env = ClusterEnv::by_name(&req.env).unwrap();
+        let resolved = resolve_workload(&req).unwrap();
+        let fp = workload_fingerprint_tagged(resolved.kind, &env, &resolved.graph);
+        assert!(!b.outcome_is_cached(fp, &req));
+        assert!(b.adopt_outcome(fp, &req, &solved));
+        assert!(b.outcome_is_cached(fp, &req));
+
+        let replay = b.plan(&bert_req("fwd-replay"));
+        assert_eq!(replay.cache.plan_hits, 1, "{:?}", replay.cache);
+        assert_eq!(
+            plan_to_json(solved.plan.as_ref().unwrap()).to_string(),
+            plan_to_json(replay.plan.as_ref().unwrap()).to_string(),
+            "adopted plan bytes equal the owner's solve"
+        );
+
+        // non-completed responses are never adopted
+        let busy = PlanResponse::busy("x", "shed");
+        assert!(!b.adopt_outcome(fp, &req, &busy));
+        let err = PlanResponse::error("x", "boom");
+        assert!(!b.adopt_outcome(fp, &req, &err));
+    }
+
+    #[test]
+    fn stats_json_carries_every_counter() {
+        let svc = PlannerService::with_threads(2);
+        let _ = svc.plan(&bert_req("s"));
+        let s = svc.stats();
+        let j = s.to_json();
+        for key in [
+            "requests",
+            "plan_hits",
+            "plan_misses",
+            "requests_shed",
+            "sync_retries",
+            "forwards",
+            "forward_fallbacks",
+            "gossip_rounds",
+            "gossip_merged_entries",
+        ] {
+            assert!(j.get(key).is_some(), "stats json misses {key}");
+        }
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -49,6 +49,12 @@ pub struct PlanRequest {
     /// the service validates and linearizes it into a chain of virtual
     /// layers, then plans that chain exactly like any zoo model.
     pub dag: Option<OpDag>,
+    /// Fleet-internal marker (ISSUE 8): set by a node warm-forwarding
+    /// this request to its ring owner. A server never re-forwards a
+    /// relayed request, which makes forwarding loop-free even when two
+    /// nodes disagree about ring membership mid-churn. Defaults to
+    /// `false`; ordinary clients never set it.
+    pub relay: bool,
 }
 
 /// Upper bound on a request deadline, seconds (~116 days). Far beyond any
@@ -72,6 +78,7 @@ impl PlanRequest {
             max_pp: None,
             threads: None,
             dag: None,
+            relay: false,
         }
     }
 
@@ -136,6 +143,7 @@ impl PlanRequest {
             .field("max_pp", self.max_pp.map_or(Json::Null, Json::from))
             .field("threads", self.threads.map_or(Json::Null, Json::from))
             .field("dag", self.dag.as_ref().map_or(Json::Null, OpDag::to_json))
+            .field("relay", self.relay)
     }
 
     /// Deserialize. `env` and `batch` are required, plus either `model` or
@@ -194,6 +202,9 @@ impl PlanRequest {
             let threads = t.as_usize().filter(|&t| t > 0);
             req.threads = Some(threads.ok_or("\"threads\" must be a positive integer")?);
         }
+        if let Some(r) = j.get("relay").filter(|v| !v.is_null()) {
+            req.relay = r.as_bool().ok_or("\"relay\" must be a boolean")?;
+        }
         req.dag = dag;
         // field-type checks above, value-range checks here — notably the
         // non-finite deadlines that the sentinel-aware number parsing
@@ -238,8 +249,12 @@ mod tests {
         req.deadline_secs = Some(2.5);
         req.max_pp = Some(4);
         req.threads = Some(3);
+        req.relay = true;
         let back = PlanRequest::parse(&req.to_json().to_string()).unwrap();
         assert_eq!(back, req);
+        // absent on the wire (old clients) ⇒ default false
+        let plain = PlanRequest::parse(r#"{"model":"bert","env":"EnvB","batch":16}"#).unwrap();
+        assert!(!plain.relay);
     }
 
     #[test]

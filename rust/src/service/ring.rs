@@ -1,0 +1,396 @@
+//! Consistent-hash ring + fleet membership (ISSUE 8; DESIGN.md §Fleet
+//! topology).
+//!
+//! A planner fleet is N `serve --listen` processes that each own a slice
+//! of the workload-fingerprint key space ([`super::workload_fingerprint_tagged`]).
+//! The [`Ring`] maps a fingerprint to its owning member; a node that
+//! receives a request it does not own **warm-forwards** it to the owner
+//! over the ordinary plan frame and adopts the answer, so the key's
+//! solve happens once fleet-wide and every second hit is local.
+//!
+//! Two properties carry the whole design:
+//!
+//! * **determinism** — the ring is a pure function of the (sorted,
+//!   deduplicated) member list. Every node configured with the same
+//!   `--peers` list computes the same owner for every key, so routing
+//!   needs no coordination, no leader, and no membership protocol.
+//! * **consistency under churn** — members project `VNODES` FNV points
+//!   each onto the ring; removing a member deletes only its own points,
+//!   so keys owned by the survivors never move. A dead owner therefore
+//!   costs exactly its own key range (which degrades to local solves,
+//!   [`Fleet::is_available`]), never a fleet-wide reshuffle.
+//!
+//! [`Fleet`] wraps the ring with the node's own identity and per-peer
+//! health: consecutive-failure suspicion on the existing
+//! [`Backoff`] schedule, so a dead peer is routed around within one
+//! gossip tick and re-adopted (half-open) once its backoff expires.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::hash::Fnv;
+use crate::util::net::Backoff;
+
+/// Virtual points each member projects onto the ring. 64 keeps the
+/// largest/smallest owned arc within a small factor of fair for fleets
+/// of a few dozen nodes, while ring construction stays trivially cheap.
+pub const VNODES: usize = 64;
+
+/// Parse a `--peers` list: comma-separated `host:port` addresses.
+/// Typed errors (ISSUE 8 satellite): empty entries (trailing commas,
+/// `--peers ""`) and entries without a port are rejected at CLI parse
+/// time instead of surfacing later as connect errors mid-serving.
+pub fn parse_peer_list(raw: &str) -> Result<Vec<String>, String> {
+    let mut peers = Vec::new();
+    for item in raw.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            return Err(format!(
+                "--peers has an empty entry in {raw:?}; expected host:port[,host:port...]"
+            ));
+        }
+        if !item.contains(':') {
+            return Err(format!("--peers entry {item:?} is not host:port (no port)"));
+        }
+        peers.push(item.to_string());
+    }
+    Ok(peers)
+}
+
+/// A consistent-hash ring over fleet member addresses (see module docs).
+#[derive(Debug, Clone)]
+pub struct Ring {
+    /// Sorted, deduplicated member addresses.
+    members: Vec<String>,
+    /// `(point hash, member index)`, sorted. Ties (a 64-bit collision
+    /// between two members' points) break on the member index, which is
+    /// itself derived from the sorted member list — so even a collision
+    /// resolves identically on every node.
+    points: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    /// Build the ring for `members` (order-insensitive, duplicates and
+    /// empty strings dropped). Errors when no members remain — a ring
+    /// must always be able to name an owner.
+    pub fn new(members: &[String]) -> Result<Ring, String> {
+        let mut ms: Vec<String> =
+            members.iter().filter(|m| !m.is_empty()).cloned().collect();
+        ms.sort();
+        ms.dedup();
+        if ms.is_empty() {
+            return Err("a ring needs at least one member address".to_string());
+        }
+        let mut points = Vec::with_capacity(ms.len() * VNODES);
+        for (i, m) in ms.iter().enumerate() {
+            for v in 0..VNODES {
+                let mut h = Fnv::new();
+                h.str(m);
+                h.usize(v);
+                points.push((h.finish(), i));
+            }
+        }
+        points.sort_unstable();
+        Ok(Ring { members: ms, points })
+    }
+
+    /// The member owning `key` (a workload fingerprint): the first ring
+    /// point clockwise from the key's hash. Total — every key has
+    /// exactly one owner.
+    pub fn owner_of(&self, key: u64) -> &str {
+        let h = {
+            // re-hash the fingerprint so keys spread independently of
+            // any structure in the fingerprint space itself
+            let mut f = Fnv::new();
+            f.u64(key);
+            f.finish()
+        };
+        let idx = self.points.partition_point(|&(p, _)| p < h);
+        let (_, member) = self.points[if idx == self.points.len() { 0 } else { idx }];
+        &self.members[member]
+    }
+
+    /// Sorted, deduplicated member addresses.
+    pub fn members(&self) -> &[String] {
+        &self.members
+    }
+}
+
+/// Per-peer failure-suspicion record (see [`Fleet::note_failure`]).
+#[derive(Debug, Clone, Copy)]
+struct PeerHealth {
+    /// Consecutive failures since the last success.
+    failures: u32,
+    /// The peer is suspected down until this instant (half-open after).
+    due: Instant,
+}
+
+/// One node's view of the fleet: the shared ring, its own identity on
+/// it, and per-peer health. Shared by reference between the request
+/// path (warm-forwarding) and the gossip tick, so a forward failure
+/// and a gossip failure feed the same suspicion state.
+#[derive(Debug)]
+pub struct Fleet {
+    ring: Ring,
+    self_addr: String,
+    /// Ring members minus this node, in ring (sorted) order.
+    peers: Vec<String>,
+    health: Mutex<HashMap<String, PeerHealth>>,
+    /// Suspicion schedule: failure `n` suspends the peer for
+    /// `backoff.delay(n, fnv(peer))`.
+    backoff: Backoff,
+    /// Seed of the gossip rotation (hashed self address), so co-started
+    /// nodes fan out over different peers instead of stampeding one.
+    salt: u64,
+}
+
+impl Fleet {
+    /// Build this node's fleet view. `peers` may (and, by convention,
+    /// does) include `self_addr` — every node is handed the same full
+    /// membership list, which is what makes routing deterministic.
+    pub fn new(self_addr: &str, peers: &[String], backoff: Backoff) -> Result<Fleet, String> {
+        let mut members: Vec<String> = peers.to_vec();
+        members.push(self_addr.to_string());
+        let ring = Ring::new(&members)?;
+        let peers: Vec<String> =
+            ring.members().iter().filter(|m| m.as_str() != self_addr).cloned().collect();
+        let salt = {
+            let mut h = Fnv::new();
+            h.str(self_addr);
+            h.finish()
+        };
+        Ok(Fleet {
+            ring,
+            self_addr: self_addr.to_string(),
+            peers,
+            health: Mutex::new(HashMap::new()),
+            backoff,
+            salt,
+        })
+    }
+
+    /// This node's own ring address.
+    pub fn self_addr(&self) -> &str {
+        &self.self_addr
+    }
+
+    /// Ring members minus this node (may be empty in a 1-node "fleet").
+    pub fn peers(&self) -> &[String] {
+        &self.peers
+    }
+
+    /// The routing ring itself (tests recompute ownership with it).
+    pub fn ring(&self) -> &Ring {
+        &self.ring
+    }
+
+    /// The fleet member owning `key`.
+    pub fn owner_of(&self, key: u64) -> &str {
+        self.ring.owner_of(key)
+    }
+
+    /// `true` when this node itself owns `key` (no forward).
+    pub fn owns_locally(&self, key: u64) -> bool {
+        self.ring.owner_of(key) == self.self_addr
+    }
+
+    /// `true` unless the peer is inside a suspicion window. A peer
+    /// whose window has expired reads as available again (half-open):
+    /// the next exchange either clears it or re-suspends it for longer.
+    pub fn is_available(&self, peer: &str) -> bool {
+        let health = self.health.lock().unwrap_or_else(|e| e.into_inner());
+        match health.get(peer) {
+            None => true,
+            Some(h) => h.failures == 0 || Instant::now() >= h.due,
+        }
+    }
+
+    /// Consecutive-failure count for `peer` (0 = healthy). Test probe.
+    pub fn failures_of(&self, peer: &str) -> u32 {
+        let health = self.health.lock().unwrap_or_else(|e| e.into_inner());
+        health.get(peer).map_or(0, |h| h.failures)
+    }
+
+    /// A successful exchange re-adopts the peer unconditionally.
+    pub fn note_success(&self, peer: &str) {
+        let mut health = self.health.lock().unwrap_or_else(|e| e.into_inner());
+        health.remove(peer);
+    }
+
+    /// A failed exchange suspends the peer for the backoff schedule's
+    /// next delay (jittered per peer, so suspicion windows decorrelate).
+    pub fn note_failure(&self, peer: &str) {
+        let salt = {
+            let mut h = Fnv::new();
+            h.str(peer);
+            h.finish()
+        };
+        let mut health = self.health.lock().unwrap_or_else(|e| e.into_inner());
+        let entry = health
+            .entry(peer.to_string())
+            .or_insert(PeerHealth { failures: 0, due: Instant::now() });
+        entry.due = Instant::now() + self.backoff.delay(entry.failures, salt);
+        entry.failures = entry.failures.saturating_add(1);
+    }
+
+    /// The gossip tick's peer for `round`: a seeded FNV rotation over
+    /// the peer list, skipping suspects — so a dead peer is routed
+    /// around within one tick — and `None` when every peer is suspected
+    /// (the tick then backs off instead of spinning on a dead fleet).
+    pub fn gossip_peer(&self, round: u64) -> Option<String> {
+        if self.peers.is_empty() {
+            return None;
+        }
+        let n = self.peers.len();
+        let start = {
+            let mut h = Fnv::new();
+            h.u64(self.salt);
+            h.u64(round);
+            (h.finish() % n as u64) as usize
+        };
+        (0..n)
+            .map(|i| &self.peers[(start + i) % n])
+            .find(|p| self.is_available(p))
+            .cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:7741")).collect()
+    }
+
+    #[test]
+    fn ring_is_deterministic_across_member_orderings() {
+        let members = addrs(5);
+        let mut shuffled = members.clone();
+        shuffled.reverse();
+        shuffled.push(members[2].clone()); // duplicate entries collapse
+        let a = Ring::new(&members).unwrap();
+        let b = Ring::new(&shuffled).unwrap();
+        assert_eq!(a.members(), b.members());
+        for key in 0..1000u64 {
+            assert_eq!(a.owner_of(key), b.owner_of(key), "key {key}");
+        }
+    }
+
+    #[test]
+    fn every_member_owns_some_keys_and_owners_are_members() {
+        let ring = Ring::new(&addrs(3)).unwrap();
+        let mut owned = std::collections::HashMap::new();
+        for key in 0..1000u64 {
+            let owner = ring.owner_of(key).to_string();
+            assert!(ring.members().contains(&owner));
+            *owned.entry(owner).or_insert(0usize) += 1;
+        }
+        assert_eq!(owned.len(), 3, "64 vnodes spread 1000 keys over all 3: {owned:?}");
+    }
+
+    #[test]
+    fn removing_a_member_only_remaps_its_own_keys() {
+        // the consistent-hashing property the failover story rests on:
+        // keys owned by a survivor keep their owner when a member dies
+        let full = Ring::new(&addrs(3)).unwrap();
+        let survivors: Vec<String> = addrs(3).into_iter().take(2).collect();
+        let smaller = Ring::new(&survivors).unwrap();
+        for key in 0..1000u64 {
+            let owner = full.owner_of(key);
+            if survivors.iter().any(|s| s == owner) {
+                assert_eq!(smaller.owner_of(key), owner, "key {key} moved off a survivor");
+            } else {
+                assert!(
+                    survivors.iter().any(|s| s == smaller.owner_of(key)),
+                    "orphaned key {key} must land on a survivor"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_rejects_empty_membership() {
+        assert!(Ring::new(&[]).is_err());
+        assert!(Ring::new(&[String::new()]).is_err(), "empty strings are dropped first");
+    }
+
+    #[test]
+    fn parse_peer_list_accepts_and_rejects() {
+        let ps = parse_peer_list("127.0.0.1:7741, 127.0.0.1:7742").unwrap();
+        assert_eq!(ps, vec!["127.0.0.1:7741".to_string(), "127.0.0.1:7742".to_string()]);
+        for bad in ["", "a:1,,b:2", "a:1,", "noport"] {
+            let err = parse_peer_list(bad).unwrap_err();
+            assert!(err.contains("--peers"), "{bad:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn fleet_separates_self_from_peers_and_routes_consistently() {
+        let members = addrs(3);
+        let fleets: Vec<Fleet> = members
+            .iter()
+            .map(|m| Fleet::new(m, &members, Backoff::default()).unwrap())
+            .collect();
+        for f in &fleets {
+            assert_eq!(f.peers().len(), 2, "self is filtered out of peers");
+            assert!(!f.peers().contains(&f.self_addr().to_string()));
+        }
+        // every node names the same owner for every key, and exactly
+        // one node considers each key local
+        for key in 0..200u64 {
+            let owner = fleets[0].owner_of(key).to_string();
+            let locals =
+                fleets.iter().filter(|f| f.owns_locally(key)).count();
+            assert_eq!(locals, 1, "key {key}");
+            for f in &fleets {
+                assert_eq!(f.owner_of(key), owner);
+            }
+        }
+    }
+
+    #[test]
+    fn suspicion_skips_failed_peers_and_readopts_after_backoff() {
+        let members = addrs(3);
+        let tiny = Backoff {
+            initial: Duration::from_millis(1),
+            max: Duration::from_millis(2),
+        };
+        let fleet = Fleet::new(&members[0], &members, tiny).unwrap();
+        let dead = fleet.peers()[0].clone();
+        fleet.note_failure(&dead);
+        assert_eq!(fleet.failures_of(&dead), 1);
+        std::thread::sleep(Duration::from_millis(5)); // let the window expire
+        assert!(fleet.is_available(&dead), "half-open after the backoff");
+        fleet.note_success(&dead);
+        assert_eq!(fleet.failures_of(&dead), 0, "a success re-adopts fully");
+
+        // a long-backoff fleet pins the routed-around behaviour without
+        // racing the suspicion window
+        let slow = Backoff { initial: Duration::from_secs(60), max: Duration::from_secs(60) };
+        let fleet = Fleet::new(&members[0], &members, slow).unwrap();
+        let dead = fleet.peers()[0].clone();
+        let live = fleet.peers()[1].clone();
+        fleet.note_failure(&dead);
+        for round in 0..8 {
+            let picked = fleet.gossip_peer(round).expect("a live peer exists");
+            assert_eq!(picked, live, "round {round} must skip the suspect");
+        }
+        // all peers suspected -> None (the tick backs off, not spins)
+        fleet.note_failure(&live);
+        assert!(fleet.gossip_peer(0).is_none());
+    }
+
+    #[test]
+    fn gossip_rotation_covers_peers_over_rounds() {
+        let members = addrs(4);
+        let fleet = Fleet::new(&members[0], &members, Backoff::default()).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for round in 0..64 {
+            seen.insert(fleet.gossip_peer(round).unwrap());
+        }
+        assert_eq!(seen.len(), 3, "rotation reaches every peer: {seen:?}");
+    }
+}

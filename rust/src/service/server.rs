@@ -48,7 +48,18 @@
 //! * **graceful degradation** (ISSUE 6) — a `sync_from` peer that is
 //!   down costs warmth, never availability: the boot path logs and
 //!   continues cold, and a background re-sync tick keeps retrying with
-//!   capped backoff until the peer answers.
+//!   capped backoff until the peer answers;
+//! * **fleet topology** (ISSUE 8; DESIGN.md §Fleet topology) — with
+//!   `--peers`, the server joins a consistent-hash ring
+//!   ([`super::ring`]) over workload fingerprints: a plan request whose
+//!   key another node owns is **warm-forwarded** there over the
+//!   ordinary plan frame and the completed outcome adopted locally, so
+//!   a solve happens once fleet-wide and the second hit is local. The
+//!   single-peer re-sync tick generalizes to **gossip anti-entropy**:
+//!   each tick exchanges snapshots with one live ring peer (seeded FNV
+//!   rotation, per-peer failure suspicion). A dead or `busy` owner
+//!   degrades the forward to a local solve (logged + counted) — ring
+//!   membership changes who *computes* a response, never its bytes.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -62,11 +73,12 @@ use crate::util::fault::{self, Injected, Site};
 use crate::util::hash::Fnv;
 use crate::util::json::Json;
 use crate::util::net::{
-    drain_frame, read_frame, request_response, write_frame, Backoff, FrameError,
-    DEFAULT_MAX_FRAME_BYTES, OP_HEALTH, OP_KEY, OP_SYNC,
+    drain_frame, read_frame, request_response, request_response_retrying, write_frame, Backoff,
+    FrameError, DEFAULT_MAX_FRAME_BYTES, OP_HEALTH, OP_KEY, OP_STATS, OP_SYNC,
 };
 
-use super::{PlanRequest, PlanResponse, PlannerService, Snapshot};
+use super::ring::Fleet;
+use super::{PlanRequest, PlanResponse, PlannerService, Snapshot, Status};
 
 /// Reply cap a sync puller accepts for the peer's snapshot document:
 /// far beyond any real planner state, small enough to bound a hostile
@@ -93,10 +105,37 @@ pub const DEFAULT_MAX_INFLIGHT: usize = 64;
 /// server's shutdown join must not wait half a minute on a wedged peer.
 const BG_SYNC_TIMEOUT: Duration = Duration::from_secs(10);
 
-/// Backoff schedule for the background re-sync tick while the peer
-/// keeps failing (capped; jittered per peer address).
+/// Backoff schedule for the background gossip/re-sync tick while peers
+/// keep failing (capped; jittered per peer address). Doubles as the
+/// fleet's per-peer suspicion schedule ([`Fleet::note_failure`]): a peer
+/// that failed `n` consecutive exchanges is routed around for the same
+/// capped, jittered window before being re-probed half-open.
 const RESYNC_BACKOFF: Backoff =
     Backoff { initial: Duration::from_millis(500), max: Duration::from_secs(60) };
+
+/// Wall-clock ceiling on one warm-forward exchange (connect + solve on
+/// the owner + reply), retries included. Deliberately small next to a
+/// cold solve: past it the receiving node solves locally — the forward
+/// is an optimization, never an availability dependency. A request
+/// deadline tighter than this bounds the forward instead.
+const FORWARD_BUDGET: Duration = Duration::from_secs(3);
+
+/// Retry pacing inside [`FORWARD_BUDGET`] (transport failures only —
+/// typed `busy`/`error` replies fall back to a local solve immediately).
+const FORWARD_BACKOFF: Backoff =
+    Backoff { initial: Duration::from_millis(200), max: Duration::from_secs(1) };
+
+/// Reply cap for a forwarded plan response. Plans and candidate logs are
+/// kilobytes; 64 MiB bounds a confused peer without ever clipping a real
+/// response.
+const FORWARD_MAX_REPLY_BYTES: usize = 1 << 26;
+
+/// Largest frame the no-permit path will inspect for a probe op
+/// (ISSUE 8 satellite): `{"op":"health"}` / `{"op":"stats"}` are ~20
+/// bytes, so parsing up to this much while saturated is bounded work —
+/// a plan request (typically larger, and *always* planner work) is
+/// still shed unparsed.
+const MAX_UNPERMITTED_OP_BYTES: usize = 512;
 
 /// Pull a peer server's exported state snapshot over the `sync` frame,
 /// bounded end to end by `timeout` (see [`DEFAULT_SYNC_TIMEOUT`]). The
@@ -109,8 +148,20 @@ pub fn fetch_snapshot(
     timeout: Duration,
 ) -> Result<Snapshot, String> {
     let frame = Json::obj().field(OP_KEY, OP_SYNC).to_string();
-    let reply = request_response(addr, &frame, max_reply_bytes, timeout)?;
+    let reply = request_response(addr, &frame, max_reply_bytes, timeout)
+        .map_err(|e| oversize_sync_error(e, max_reply_bytes))?;
     parse_sync_reply(&reply)
+}
+
+/// Name the knob when a sync reply blows the puller's byte cap
+/// (ISSUE 8 satellite): the raw `FrameError::Oversized` text says what
+/// happened, this says what to do about it. Other errors pass through.
+fn oversize_sync_error(e: String, cap: usize) -> String {
+    if e.contains("frame exceeds cap") {
+        format!("{e}; the peer's snapshot exceeds this side's --max-sync-bytes ({cap}) — raise it")
+    } else {
+        e
+    }
 }
 
 /// Validate one `sync` reply line into a [`Snapshot`]. Typed refusals
@@ -152,6 +203,7 @@ pub fn fetch_snapshot_retrying(
     loop {
         let left = budget.saturating_sub(t0.elapsed());
         let res = request_response(addr, &frame, max_reply_bytes, left)
+            .map_err(|e| oversize_sync_error(e, max_reply_bytes))
             .and_then(|reply| parse_sync_reply(&reply));
         match res {
             Ok(snap) => return Ok(snap),
@@ -261,8 +313,25 @@ pub struct ServerOptions {
     pub sync_from: Option<String>,
     /// Seconds between successful background re-syncs; `<= 0` disables
     /// the tick entirely. After a failed pull the next attempt follows
-    /// [`RESYNC_BACKOFF`] rather than this interval.
+    /// [`RESYNC_BACKOFF`] rather than this interval. With `peers`, the
+    /// tick gossips across the ring instead of re-pulling one peer.
     pub resync_secs: f64,
+    /// Fleet membership (ISSUE 8): the full `--peers` list, by
+    /// convention identical on every node and including this node's own
+    /// advertised address — that is what makes ring routing
+    /// deterministic. Empty disables routing (single-node serving);
+    /// `sync_from` alone still gossips but never forwards (a warmth
+    /// source is not a key-range owner).
+    pub peers: Vec<String>,
+    /// The address this node claims on the ring (`--advertise`).
+    /// Defaults to the bound listen address, which is wrong exactly when
+    /// that is `0.0.0.0:...` or an ephemeral port — fleet configs should
+    /// advertise the address peers dial.
+    pub advertise: Option<String>,
+    /// Byte cap on one `sync` snapshot document, both serving (a larger
+    /// export is refused with a typed error) and fetching (a larger
+    /// reply aborts the read) — `--max-sync-bytes` (ISSUE 8 satellite).
+    pub max_sync_bytes: usize,
 }
 
 impl Default for ServerOptions {
@@ -276,6 +345,9 @@ impl Default for ServerOptions {
             max_inflight: DEFAULT_MAX_INFLIGHT,
             sync_from: None,
             resync_secs: 0.0,
+            peers: Vec::new(),
+            advertise: None,
+            max_sync_bytes: DEFAULT_MAX_SYNC_BYTES,
         }
     }
 }
@@ -325,15 +397,35 @@ impl Server {
         // error doubles the pause up to a cap, and a success resets it
         let mut accept_pause = Duration::from_millis(25);
         const ACCEPT_PAUSE_MAX: Duration = Duration::from_secs(1);
-        // background re-sync tick (ISSUE 6): armed when a peer is
-        // configured; `busy` keeps at most one pull in flight
-        let resync = opts.sync_from.as_deref().filter(|_| opts.resync_secs > 0.0).map(|peer| {
-            let salt = {
-                let mut h = Fnv::new();
-                h.str(peer);
-                h.finish()
-            };
-            (peer, salt, Mutex::new(ResyncState { due: Instant::now(), failures: 0, busy: false }))
+        // fleet view (ISSUE 8): --peers forms the routing ring. A lone
+        // --sync-from peer degenerates to a one-peer "ring" that gossips
+        // (the legacy re-sync tick, same semantics) but never owns keys —
+        // `route` gates warm-forwarding on explicit ring membership.
+        let self_addr = opts.advertise.clone().unwrap_or_else(|| self.local_addr.to_string());
+        let mut members = opts.peers.clone();
+        let route = !members.is_empty();
+        if members.is_empty() {
+            members.extend(opts.sync_from.iter().cloned());
+        }
+        let fleet = if members.is_empty() {
+            None
+        } else {
+            Some(
+                Fleet::new(&self_addr, &members, RESYNC_BACKOFF)
+                    .map_err(|e| format!("cannot form the fleet ring: {e}"))?,
+            )
+        };
+        // background gossip tick (ISSUE 6's single-peer re-sync,
+        // generalized to the ring in ISSUE 8): each tick exchanges
+        // snapshots with one live peer; `busy` keeps at most one
+        // exchange in flight
+        let gossip_salt = {
+            let mut h = Fnv::new();
+            h.str(&self_addr);
+            h.finish()
+        };
+        let gossip = (fleet.is_some() && opts.resync_secs > 0.0).then(|| {
+            Mutex::new(GossipState { due: Instant::now(), failures: 0, round: 0, busy: false })
         });
         let mut last_snapshot = Instant::now();
         // dirty signal: skip ticks while *both* our own cache counts and
@@ -369,8 +461,14 @@ impl Server {
                         active.fetch_add(1, Ordering::Relaxed);
                         let active = &active;
                         let inflight = &inflight;
+                        let ctx = ServeContext {
+                            max_sync_bytes: opts.max_sync_bytes,
+                            fleet: if route { fleet.as_ref() } else { None },
+                        };
                         scope.spawn(move || {
-                            handle_connection(service, stream, opts, shutdown, active, inflight);
+                            handle_connection(
+                                service, stream, opts, shutdown, active, inflight, ctx,
+                            );
                             active.fetch_sub(1, Ordering::Relaxed);
                         });
                     }
@@ -387,27 +485,46 @@ impl Server {
                         accept_pause = (accept_pause * 2).min(ACCEPT_PAUSE_MAX);
                     }
                 }
-                if let Some((peer, salt, state)) = &resync {
-                    let start = {
+                if let (Some(fleet_ref), Some(state)) = (fleet.as_ref(), gossip.as_ref()) {
+                    // pick this round's peer under the lock: a seeded FNV
+                    // rotation over live peers (suspects are skipped, so
+                    // a dead peer is routed around within one tick); all
+                    // peers suspected ⇒ the whole tick backs off instead
+                    // of spinning on a dead fleet
+                    let pick = {
                         let mut st = state.lock().unwrap_or_else(|e| e.into_inner());
-                        let start = !st.busy && Instant::now() >= st.due;
-                        if start {
-                            st.busy = true;
+                        if st.busy || Instant::now() < st.due {
+                            None
+                        } else {
+                            st.round = st.round.wrapping_add(1);
+                            match fleet_ref.gossip_peer(st.round) {
+                                Some(peer) => {
+                                    st.busy = true;
+                                    Some(peer)
+                                }
+                                None => {
+                                    let delay = RESYNC_BACKOFF.delay(st.failures, gossip_salt);
+                                    st.failures = st.failures.saturating_add(1);
+                                    st.due = Instant::now() + delay;
+                                    None
+                                }
+                            }
                         }
-                        start
                     };
-                    if start {
+                    if let Some(peer) = pick {
                         scope.spawn(move || {
                             // bounded by BG_SYNC_TIMEOUT, so the shutdown
                             // join never waits longer than that on a
                             // wedged peer; failures are logged warmth
                             // loss, never availability loss
-                            match fetch_snapshot(peer, DEFAULT_MAX_SYNC_BYTES, BG_SYNC_TIMEOUT) {
+                            match fetch_snapshot(&peer, opts.max_sync_bytes, BG_SYNC_TIMEOUT) {
                                 Ok(snap) => {
                                     let (frontiers, bases) = service.merge_snapshot(&snap);
+                                    service.note_gossip(frontiers + bases);
+                                    fleet_ref.note_success(&peer);
                                     if frontiers > 0 || bases > 0 {
                                         eprintln!(
-                                            "background sync from {peer}: merged {frontiers} \
+                                            "gossip sync from {peer}: merged {frontiers} \
                                              new frontiers, {bases} new cost bases"
                                         );
                                     }
@@ -415,17 +532,18 @@ impl Server {
                                         state.lock().unwrap_or_else(|e| e.into_inner());
                                     st.failures = 0;
                                     st.due = Instant::now()
-                                        + Duration::from_secs_f64(opts.resync_secs.max(0.0));
+                                        + Duration::from_secs_f64(opts.resync_secs);
                                     st.busy = false;
                                 }
                                 Err(e) => {
                                     service.note_sync_retries(1);
+                                    fleet_ref.note_failure(&peer);
                                     eprintln!(
-                                        "background sync from {peer} failed (will retry): {e}"
+                                        "gossip sync from {peer} failed (will retry): {e}"
                                     );
                                     let mut st =
                                         state.lock().unwrap_or_else(|e| e.into_inner());
-                                    let delay = RESYNC_BACKOFF.delay(st.failures, *salt);
+                                    let delay = RESYNC_BACKOFF.delay(st.failures, gossip_salt);
                                     st.failures = st.failures.saturating_add(1);
                                     st.due = Instant::now() + delay;
                                     st.busy = false;
@@ -478,14 +596,22 @@ impl Server {
     }
 }
 
-/// Book-keeping of the background re-sync tick (one per server run).
+/// Book-keeping of the background gossip tick (one per server run).
+/// The gossip interval `resync_secs` runs success-to-success; failures
+/// follow [`RESYNC_BACKOFF`] instead, and the armed condition
+/// (`resync_secs > 0.0`, checked at CLI parse time since ISSUE 8's
+/// typed `--resync-secs` validation) is what keeps the
+/// `Duration::from_secs_f64` below panic-free — no silent `.max(0.0)`
+/// clamp needed.
 #[derive(Debug)]
-struct ResyncState {
-    /// Next time a pull may start.
+struct GossipState {
+    /// Next time an exchange may start.
     due: Instant,
-    /// Consecutive failures (drives [`RESYNC_BACKOFF`]).
+    /// Consecutive tick-level failures (drives [`RESYNC_BACKOFF`]).
     failures: u32,
-    /// A pull is in flight — never start a second.
+    /// Rotation counter: seeds [`Fleet::gossip_peer`]'s peer choice.
+    round: u64,
+    /// An exchange is in flight — never start a second.
     busy: bool,
 }
 
@@ -535,6 +661,7 @@ fn handle_connection(
     shutdown: &CancelToken,
     active: &AtomicUsize,
     inflight: &AtomicUsize,
+    ctx: ServeContext<'_>,
 ) {
     // accepted sockets inherit O_NONBLOCK from the listener on some
     // platforms — undo it, the connection loop blocks on the timeout
@@ -558,9 +685,25 @@ fn handle_connection(
                 // BEFORE parsing — parsing a hostile megabyte frame is
                 // already work worth shedding. No slot ⇒ typed `busy`
                 // in bounded time, connection stays open for a retry.
-                // (Health probes get `busy` too; probe_health treats
-                // that as "alive", which is the readiness semantics.)
+                // Exception (ISSUE 8 satellite): tiny `health`/`stats`
+                // probe frames are answered even while saturated —
+                // bounded, planner-free work, and exactly what an
+                // operator needs to see *during* an overload. `sync`
+                // (a full snapshot serialization) is still shed.
                 let Some(_permit) = acquire_permit(inflight, opts.max_inflight) else {
+                    if line.len() <= MAX_UNPERMITTED_OP_BYTES && is_probe_frame(&line) {
+                        let out = serve_frame_with(
+                            service,
+                            &line,
+                            shutdown,
+                            active.load(Ordering::Relaxed),
+                            ctx,
+                        );
+                        if write_frame(&mut writer, &out).is_err() {
+                            break;
+                        }
+                        continue;
+                    }
                     service.note_shed();
                     let resp = PlanResponse::busy(
                         "",
@@ -574,7 +717,13 @@ fn handle_connection(
                     }
                     continue;
                 };
-                let out = serve_frame(service, &line, shutdown, active.load(Ordering::Relaxed));
+                let out = serve_frame_with(
+                    service,
+                    &line,
+                    shutdown,
+                    active.load(Ordering::Relaxed),
+                    ctx,
+                );
                 if write_frame(&mut writer, &out).is_err() {
                     break; // client disconnected (possibly mid-solve)
                 }
@@ -608,16 +757,60 @@ fn handle_connection(
     }
 }
 
-/// Turn one frame into one response line. Never panics outward: planner
-/// bugs surface as typed `error` responses. `active` is the number of
-/// live connections the thread policy divides across. Public so the
-/// fuzz battery (`rust/tests/serve_socket.rs`) can hammer the exact
-/// code path the socket loop runs, without a socket per case.
+/// Per-connection serving context (ISSUE 8): what [`serve_frame_with`]
+/// needs beyond the service itself — the sync byte cap and, when this
+/// server is part of a ring, the fleet view that drives warm-forwarding.
+/// `Copy` so the connection loop can hand it to every frame.
+#[derive(Clone, Copy)]
+pub struct ServeContext<'a> {
+    /// Cap on one served `sync` snapshot document (`--max-sync-bytes`).
+    pub max_sync_bytes: usize,
+    /// Ring membership; `None` disables forwarding (single-node mode).
+    pub fleet: Option<&'a Fleet>,
+}
+
+impl Default for ServeContext<'_> {
+    fn default() -> Self {
+        ServeContext { max_sync_bytes: DEFAULT_MAX_SYNC_BYTES, fleet: None }
+    }
+}
+
+/// `true` for the tiny probe ops (`health`/`stats`) the no-permit path
+/// answers even while shedding. Bounded: callers size-gate the line
+/// first ([`MAX_UNPERMITTED_OP_BYTES`]).
+fn is_probe_frame(line: &str) -> bool {
+    match Json::parse(line) {
+        Ok(doc) => matches!(
+            doc.get(OP_KEY).and_then(Json::as_str),
+            Some(OP_HEALTH) | Some(OP_STATS)
+        ),
+        Err(_) => false,
+    }
+}
+
+/// [`serve_frame_with`] under a default context (no fleet, default sync
+/// cap) — the single-node entry point, and what in-crate tests and the
+/// fuzz battery call.
 pub fn serve_frame(
     service: &PlannerService,
     line: &str,
     shutdown: &CancelToken,
     active: usize,
+) -> String {
+    serve_frame_with(service, line, shutdown, active, ServeContext::default())
+}
+
+/// Turn one frame into one response line. Never panics outward: planner
+/// bugs surface as typed `error` responses. `active` is the number of
+/// live connections the thread policy divides across. Public so the
+/// fuzz battery (`rust/tests/serve_socket.rs`) can hammer the exact
+/// code path the socket loop runs, without a socket per case.
+pub fn serve_frame_with(
+    service: &PlannerService,
+    line: &str,
+    shutdown: &CancelToken,
+    active: usize,
+    ctx: ServeContext<'_>,
 ) -> String {
     // fault seam: stall one request (saturation tests lean on this to
     // hold an in-flight slot) or fail it with a *typed* error — even
@@ -636,7 +829,7 @@ pub fn serve_frame(
         }
     }
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        serve_frame_inner(service, line, shutdown, active)
+        serve_frame_inner(service, line, shutdown, active, ctx)
     }));
     match result {
         Ok(out) => out,
@@ -651,6 +844,7 @@ fn serve_frame_inner(
     line: &str,
     shutdown: &CancelToken,
     active: usize,
+    ctx: ServeContext<'_>,
 ) -> String {
     let doc = match Json::parse(line) {
         Ok(doc) => doc,
@@ -662,11 +856,31 @@ fn serve_frame_inner(
     };
     // echo the caller's correlation id even on invalid requests
     let id = doc.get("id").and_then(Json::as_str).unwrap_or("").to_string();
-    // protocol operations (`sync`, `health`) are flagged by the "op"
-    // field, which request objects never carry
+    // protocol operations (`sync`, `health`, `stats`) are flagged by the
+    // "op" field, which request objects never carry
     if let Some(op) = doc.get(OP_KEY).and_then(Json::as_str) {
         return match op {
-            OP_SYNC => service.export_snapshot().to_json().to_string(),
+            OP_SYNC => {
+                let snapshot = service.export_snapshot().to_json().to_string();
+                // serving-side byte cap (ISSUE 8 satellite): a typed
+                // refusal naming the knob, instead of shipping a
+                // document the puller would reject unreadably
+                if snapshot.len() > ctx.max_sync_bytes {
+                    PlanResponse::error(
+                        &id,
+                        format!(
+                            "state snapshot is {} bytes, over this server's \
+                             --max-sync-bytes cap ({}); raise the cap on both sides",
+                            snapshot.len(),
+                            ctx.max_sync_bytes
+                        ),
+                    )
+                    .to_json()
+                    .to_string()
+                } else {
+                    snapshot
+                }
+            }
             // readiness probe: a tiny fixed-shape frame, no planner work
             OP_HEALTH => Json::obj()
                 .field(OP_KEY, OP_HEALTH)
@@ -674,9 +888,21 @@ fn serve_frame_inner(
                 .field("connections", active)
                 .field("requests", service.stats().requests)
                 .to_string(),
+            // counter probe (ISSUE 8 satellite): the full ServiceStats
+            // as canonical JSON — the live-server version of the
+            // shutdown summary
+            OP_STATS => Json::obj()
+                .field(OP_KEY, OP_STATS)
+                .field("status", "ok")
+                .field("connections", active)
+                .field("stats", service.stats().to_json())
+                .to_string(),
             other => PlanResponse::error(
                 &id,
-                format!("unknown op {other:?}; this server understands ops \"sync\" and \"health\""),
+                format!(
+                    "unknown op {other:?}; this server understands ops \
+                     \"sync\", \"health\" and \"stats\""
+                ),
             )
             .to_json()
             .to_string(),
@@ -684,6 +910,10 @@ fn serve_frame_inner(
     }
     match doc {
         Json::Arr(items) => {
+            // batch frames are never forwarded: the batch drain already
+            // divides the machine well, and splitting one frame across
+            // owners would break in-order response semantics — warmth
+            // still spreads via gossip
             // map the already-parsed elements — no second parse of the frame
             let reqs: Result<Vec<PlanRequest>, String> = items
                 .iter()
@@ -710,6 +940,15 @@ fn serve_frame_inner(
         }
         obj => match PlanRequest::from_json(&obj) {
             Ok(mut req) => {
+                // fleet routing (ISSUE 8): a key another node owns is
+                // warm-forwarded there and the outcome adopted; every
+                // fallback (relayed frame, local warmth, owner down or
+                // shedding) solves locally instead
+                if let Some(fleet) = ctx.fleet {
+                    if let Some(resp) = try_forward(service, fleet, &req) {
+                        return resp.to_json().to_string();
+                    }
+                }
                 if req.threads.is_none() {
                     // divide the machine across live connections, exactly
                     // like the batch drain divides across its workers
@@ -721,6 +960,87 @@ fn serve_frame_inner(
                 .to_json()
                 .to_string(),
         },
+    }
+}
+
+/// Warm-forward `req` to its ring owner, adopt the completed outcome,
+/// and return the owner's response — or `None`, meaning "solve
+/// locally". `None` covers every degraded path (tentpole (c)): relayed
+/// frames (loop guard), invalid requests (the local path produces the
+/// typed error), locally-owned or locally-warm keys, a suspected-down
+/// owner, a `busy`/`error` reply, and transport failure after
+/// [`FORWARD_BACKOFF`]-paced retries within [`FORWARD_BUDGET`]. The
+/// planner is deterministic and canonical JSON round-trips exactly, so
+/// who computes a response never changes its plan bytes.
+fn try_forward(
+    service: &PlannerService,
+    fleet: &Fleet,
+    req: &PlanRequest,
+) -> Option<PlanResponse> {
+    if req.relay || req.validate().is_err() {
+        return None;
+    }
+    let env = crate::cluster::ClusterEnv::by_name(&req.env)?;
+    let resolved = super::resolve_workload(req).ok()?;
+    let fp = super::workload_fingerprint_tagged(resolved.kind, &env, &resolved.graph);
+    if fleet.owns_locally(fp) || service.outcome_is_cached(fp, req) {
+        return None;
+    }
+    let owner = fleet.owner_of(fp).to_string();
+    if !fleet.is_available(&owner) {
+        // suspicion short-circuit: don't pay a connect timeout per
+        // request while the owner is down — fall back immediately, the
+        // gossip tick re-probes and re-adopts it
+        service.note_forward_fallback();
+        return None;
+    }
+    let mut relayed = req.clone();
+    relayed.relay = true;
+    let frame = relayed.to_json().to_string();
+    // a request deadline tighter than the forward budget bounds the
+    // forward too: the client would rather have a local attempt than a
+    // deadline spent waiting on the wire (validate() above guarantees
+    // the deadline is finite and positive)
+    let budget = match req.deadline_secs {
+        Some(d) => FORWARD_BUDGET.min(Duration::from_secs_f64(d)),
+        None => FORWARD_BUDGET,
+    };
+    match request_response_retrying(
+        &owner,
+        &frame,
+        FORWARD_MAX_REPLY_BYTES,
+        budget,
+        FORWARD_BACKOFF,
+        &mut |_attempt, _err| {},
+    ) {
+        Ok(reply) => match PlanResponse::parse(&reply) {
+            Ok(resp) if matches!(resp.status, Status::Ok | Status::Infeasible) => {
+                fleet.note_success(&owner);
+                // adoption is what makes the forward *warm*: the next
+                // request for this key replays locally, byte-identically
+                service.adopt_outcome(fp, req, &resp);
+                service.note_forward();
+                Some(resp)
+            }
+            Ok(_) => {
+                // typed busy/error: the owner is alive (shedding is the
+                // admission control working) — no suspicion penalty,
+                // degrade to a local solve
+                service.note_forward_fallback();
+                None
+            }
+            Err(_) => {
+                fleet.note_failure(&owner);
+                service.note_forward_fallback();
+                None
+            }
+        },
+        Err(e) => {
+            fleet.note_failure(&owner);
+            service.note_forward_fallback();
+            eprintln!("forward to ring owner {owner} failed; solving locally: {e}");
+            None
+        }
     }
 }
 
@@ -793,6 +1113,78 @@ mod tests {
         assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
         assert_eq!(doc.get("connections").and_then(Json::as_usize), Some(3));
         assert_eq!(doc.get("requests").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn stats_frames_answer_the_full_counter_set() {
+        let svc = PlannerService::with_threads(2);
+        let shutdown = CancelToken::new();
+        let out = serve_frame(&svc, r#"{"op":"stats"}"#, &shutdown, 2);
+        let doc = Json::parse(&out).unwrap();
+        assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+        assert_eq!(doc.get("connections").and_then(Json::as_usize), Some(2));
+        let stats = doc.get("stats").expect("stats payload");
+        for key in ["requests", "requests_shed", "forwards", "gossip_rounds", "sync_retries"] {
+            assert!(stats.get(key).is_some(), "stats misses {key}");
+        }
+        assert_eq!(stats.get("requests").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn sync_replies_respect_the_serving_side_byte_cap() {
+        let svc = PlannerService::with_threads(2);
+        let shutdown = CancelToken::new();
+        let tiny = ServeContext { max_sync_bytes: 10, fleet: None };
+        let out = serve_frame_with(&svc, r#"{"op":"sync"}"#, &shutdown, 1, tiny);
+        let resp = PlanResponse::parse(&out).expect("oversize refusal is a typed frame");
+        assert_eq!(resp.status, crate::service::Status::Error);
+        assert!(resp.error.unwrap().contains("--max-sync-bytes"));
+        // the default cap serves the document as before
+        let out = serve_frame(&svc, r#"{"op":"sync"}"#, &shutdown, 1);
+        assert!(Snapshot::parse(&out).is_ok());
+    }
+
+    #[test]
+    fn probe_frames_are_recognized_and_bounded() {
+        assert!(is_probe_frame(r#"{"op":"health"}"#));
+        assert!(is_probe_frame(r#"{"op":"stats"}"#));
+        assert!(!is_probe_frame(r#"{"op":"sync"}"#), "sync is real work — shed it");
+        assert!(!is_probe_frame(r#"{"model":"bert","env":"EnvB","batch":16}"#));
+        assert!(!is_probe_frame("{ nope"));
+        // probe frames fit the no-permit size gate with lots of slack
+        assert!(r#"{"op":"health"}"#.len() <= MAX_UNPERMITTED_OP_BYTES);
+    }
+
+    #[test]
+    fn oversize_sync_errors_name_the_knob() {
+        let raw = "no reply from x: frame exceeds cap (99 bytes buffered)".to_string();
+        let wrapped = oversize_sync_error(raw, 64);
+        assert!(wrapped.contains("--max-sync-bytes"), "{wrapped}");
+        assert!(wrapped.contains("64"), "{wrapped}");
+        let other = oversize_sync_error("connection refused".to_string(), 64);
+        assert_eq!(other, "connection refused", "non-oversize errors pass through");
+    }
+
+    #[test]
+    fn relayed_requests_are_never_reforwarded() {
+        // loop guard: a Fleet whose ring this node shares with a peer,
+        // and a relayed request for a key the peer owns, must still be
+        // solved locally (try_forward returns None without any I/O —
+        // the "peer" address is never dialed)
+        let members =
+            vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()];
+        let fleet = Fleet::new(&members[0], &members, Backoff::default()).unwrap();
+        let svc = PlannerService::with_threads(2);
+        let mut req = PlanRequest::new("r", "bert", "EnvB", 16);
+        req.max_pp = Some(2);
+        req.relay = true;
+        assert!(try_forward(&svc, &fleet, &req).is_none());
+        // invalid requests also stay local (the typed error is produced
+        // by the ordinary path)
+        let mut bad = req.clone();
+        bad.relay = false;
+        bad.deadline_secs = Some(-1.0);
+        assert!(try_forward(&svc, &fleet, &bad).is_none());
     }
 
     #[test]

@@ -15,6 +15,12 @@
 //! entries embed `Plan`s — keeping plans out of the snapshot keeps the
 //! "a snapshot can never change a plan" argument trivial).
 //!
+//! The same snapshot value also rides the wire twice: the `{"op":
+//! "sync"}` frame exports it to peers (one-shot `--sync-from` pulls,
+//! ISSUE 6), and the fleet's gossip anti-entropy tick (ISSUE 8) pulls
+//! and merges it round after round — which is why plans stay out: a
+//! gossiped snapshot can warm a peer's solve, never replace one.
+//!
 //! ## Files & protocol (multi-process, one `--state-dir`)
 //!
 //! ```text

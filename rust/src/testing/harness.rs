@@ -29,6 +29,17 @@ impl TestServer {
     /// background thread until [`TestServer::stop`] (or drop).
     pub fn start(service: Arc<PlannerService>, opts: ServerOptions) -> TestServer {
         let server = Server::bind("127.0.0.1:0").expect("ephemeral bind");
+        TestServer::start_on(service, opts, server)
+    }
+
+    /// Serve on a pre-bound [`Server`] — fleet tests (ISSUE 8) bind all
+    /// members first so every node can be told the full `--peers` list
+    /// (including its own advertised address) before any of them runs.
+    pub fn start_on(
+        service: Arc<PlannerService>,
+        opts: ServerOptions,
+        server: Server,
+    ) -> TestServer {
         let addr = server.local_addr();
         let shutdown = CancelToken::new();
         let thread = {

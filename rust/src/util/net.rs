@@ -39,6 +39,13 @@ pub const OP_SYNC: &str = "sync";
 /// expensive exchange. Cheap enough to answer even while shedding load.
 pub const OP_HEALTH: &str = "health";
 
+/// Counter probe (ISSUE 8): `{"op":"stats"}` is answered with the full
+/// [`crate::service::ServiceStats`] counter set as canonical JSON, so
+/// fleet tests and operators can assert shed/forward/gossip counters on
+/// a live server instead of SIGINT-ing it for the shutdown summary.
+/// Like `health`, it is answered even while the server sheds load.
+pub const OP_STATS: &str = "stats";
+
 /// Why a frame could not be read.
 #[derive(Debug)]
 pub enum FrameError {

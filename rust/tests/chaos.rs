@@ -245,6 +245,20 @@ fn overloaded_server_sheds_busy_in_bounded_time_and_recovers() {
     assert!(resp.error.unwrap().contains("in-flight cap"), "names the cap");
     assert!(t0.elapsed() < Duration::from_secs(1), "shed in bounded time: {:?}", t0.elapsed());
 
+    // while the stalled plan frame still holds the only permit, health
+    // and stats probes bypass admission control (ISSUE 8 satellite) —
+    // the ops an operator needs most while a node sheds load
+    for probe in [r#"{"op":"health"}"#, r#"{"op":"stats"}"#] {
+        write_frame(&mut writer, probe).unwrap();
+        let line = read_frame(&mut reader, 1 << 16, &no_stop).unwrap().unwrap();
+        let doc = Json::parse(&line).unwrap();
+        assert_eq!(
+            doc.get("status").and_then(Json::as_str),
+            Some("ok"),
+            "{probe} must answer while saturated: {line}"
+        );
+    }
+
     // the slow client still gets its real answer, and the connection B
     // used stays usable once the slot frees up
     let slow_resp = slow.join().expect("client thread");

@@ -1,0 +1,343 @@
+//! Fleet battery (ISSUE 8): several real `serve --listen` servers joined
+//! into one consistent-hash ring, driven over loopback TCP — asserting
+//! the standing invariants the fleet layer exists to pin:
+//!
+//! * **deterministic routing** — every node, whatever the order of its
+//!   `--peers` list, names the same owner for every key, so each key is
+//!   cold-solved exactly once fleet-wide;
+//! * **warm forwarding** — a non-owner answers a miss with the owner's
+//!   bytes and adopts them, so its second hit is local;
+//! * **failover** — a dead owner degrades the receiving node to a local
+//!   solve with the *same* bytes (membership changes who computes a
+//!   response, never the response);
+//! * **gossip convergence** — nodes converge via the anti-entropy tick
+//!   alone: a restarted (or late-started) node re-warms with no boot
+//!   sync and no client traffic, and a dead peer in the rotation never
+//!   stalls the live ones.
+//!
+//! No test here arms a fault plan, so no [`fault`] guard is needed —
+//! the chaos is real process/kill-level chaos, not injected I/O faults.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use uniap::cluster::ClusterEnv;
+use uniap::service::{
+    plan_to_json, resolve_workload, workload_fingerprint_tagged, PlanRequest, PlannerService,
+    Ring, Server, ServerOptions, Status,
+};
+use uniap::testing::harness::{bert_req, round_trip, TestServer};
+
+/// The fingerprint the ring routes on — recomputed exactly the way the
+/// serving path computes it.
+fn fp_of(req: &PlanRequest) -> u64 {
+    let env = ClusterEnv::by_name(&req.env).expect("test env");
+    let w = resolve_workload(req).expect("test workload");
+    workload_fingerprint_tagged(w.kind, &env, &w.graph)
+}
+
+/// Index (into `addrs`) of the node owning `fp`.
+fn owner_index(addrs: &[String], fp: u64) -> usize {
+    let ring = Ring::new(addrs).expect("ring");
+    let owner = ring.owner_of(fp).to_string();
+    addrs.iter().position(|a| *a == owner).expect("owner is a member")
+}
+
+/// `addrs` rotated by `k` — same membership set, different list order.
+fn rotated(addrs: &[String], k: usize) -> Vec<String> {
+    (0..addrs.len()).map(|i| addrs[(i + k) % addrs.len()].clone()).collect()
+}
+
+/// Bind `n` ephemeral listeners first (so every node can be told the
+/// full membership), then start them all as one fleet. Each node gets
+/// the peer list rotated by its own index: the battery's standing check
+/// that ring construction is order-insensitive.
+fn fleet_of(n: usize, resync_secs: f64) -> (Vec<TestServer>, Vec<String>) {
+    let servers: Vec<Server> =
+        (0..n).map(|_| Server::bind("127.0.0.1:0").expect("ephemeral bind")).collect();
+    let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+    let nodes = servers
+        .into_iter()
+        .enumerate()
+        .map(|(i, server)| {
+            let opts = ServerOptions {
+                peers: rotated(&addrs, i),
+                advertise: Some(addrs[i].clone()),
+                resync_secs,
+                ..Default::default()
+            };
+            TestServer::start_on(Arc::new(PlannerService::with_threads(2)), opts, server)
+        })
+        .collect();
+    (nodes, addrs)
+}
+
+/// One request over a fresh connection to `addr` (thread-friendly:
+/// everything owned).
+fn request_at(addr: std::net::SocketAddr, frame: &str) -> uniap::service::PlanResponse {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let read_half = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    round_trip(&mut reader, &mut writer, frame)
+}
+
+fn plan_bytes(resp: &uniap::service::PlanResponse) -> String {
+    plan_to_json(resp.plan.as_ref().expect("plan")).to_string()
+}
+
+fn stop_all(nodes: &mut [TestServer]) {
+    for n in nodes {
+        n.stop().expect("clean shutdown");
+    }
+}
+
+// ------------------------------------------------------- warm forwarding
+
+#[test]
+fn forwarded_miss_is_solved_by_the_owner_and_adopted() {
+    let (mut nodes, addrs) = fleet_of(3, 0.0); // routing only, no gossip
+    let req = bert_req("fleet-forward");
+    let frame = req.to_json().to_string();
+    let owner = owner_index(&addrs, fp_of(&req));
+    let receiver = (owner + 1) % nodes.len();
+
+    // the miss lands on a non-owner: answered with the owner's bytes
+    let resp = request_at(nodes[receiver].addr, &frame);
+    assert_eq!(resp.status, Status::Ok, "{resp:?}");
+    let want = plan_bytes(&resp);
+
+    let rs = nodes[receiver].service.stats();
+    let os = nodes[owner].service.stats();
+    assert_eq!(rs.forwards, 1, "the receiver forwarded, {rs:?}");
+    assert_eq!(rs.forward_fallbacks, 0, "{rs:?}");
+    assert_eq!(rs.plan_misses, 0, "the receiver adopted, it never solved: {rs:?}");
+    assert_eq!(os.plan_misses, 1, "exactly one cold solve, at the owner: {os:?}");
+
+    // the second hit on the same node replays the adopted outcome
+    let resp2 = request_at(nodes[receiver].addr, &frame);
+    assert_eq!(resp2.status, Status::Ok);
+    assert_eq!(plan_bytes(&resp2), want, "adoption preserves the exact bytes");
+    let rs2 = nodes[receiver].service.stats();
+    assert_eq!(rs2.forwards, 1, "no second forward for a warm key: {rs2:?}");
+    assert!(rs2.plan_hits >= 1, "{rs2:?}");
+
+    // the owner's own answer for the key: the same bytes
+    let resp3 = request_at(nodes[owner].addr, &frame);
+    assert_eq!(plan_bytes(&resp3), want);
+    stop_all(&mut nodes);
+}
+
+#[test]
+fn every_peer_ordering_routes_to_the_same_owner() {
+    // fleet_of already hands each node a differently-rotated peer list;
+    // with any disagreement about ownership, either two nodes solve the
+    // key (≥ 2 misses) or a forward bounces (relay solves locally, but
+    // forwards would exceed the fleet's non-owner count)
+    let (mut nodes, _addrs) = fleet_of(3, 0.0);
+    let req = bert_req("fleet-deterministic");
+    let frame = req.to_json().to_string();
+    let mut bytes = Vec::new();
+    for node in &nodes {
+        let resp = request_at(node.addr, &frame);
+        assert_eq!(resp.status, Status::Ok, "{resp:?}");
+        bytes.push(plan_bytes(&resp));
+    }
+    assert!(bytes.windows(2).all(|w| w[0] == w[1]), "one answer fleet-wide");
+    let misses: usize = nodes.iter().map(|n| n.service.stats().plan_misses).sum();
+    let forwards: usize = nodes.iter().map(|n| n.service.stats().forwards).sum();
+    assert_eq!(misses, 1, "exactly one node considered the key its own");
+    assert_eq!(forwards, nodes.len() - 1, "every non-owner forwarded exactly once");
+    stop_all(&mut nodes);
+}
+
+// ------------------------------------------------------------- failover
+
+#[test]
+fn dead_owner_degrades_to_a_local_solve_with_identical_bytes() {
+    let (mut nodes, addrs) = fleet_of(3, 0.0);
+    let req = bert_req("fleet-fallback");
+    let frame = req.to_json().to_string();
+    let owner = owner_index(&addrs, fp_of(&req));
+    let receiver = (owner + 1) % nodes.len();
+
+    // reference bytes from an offline service: the planner is
+    // deterministic, so "who computes it" must never change the answer
+    let reference =
+        plan_bytes(&PlannerService::with_threads(2).plan(&req));
+
+    nodes[owner].stop().expect("owner kill");
+    let t0 = Instant::now();
+    let resp = request_at(nodes[receiver].addr, &frame);
+    assert_eq!(resp.status, Status::Ok, "survivors must keep answering: {resp:?}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "fallback is bounded by the forward budget: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(plan_bytes(&resp), reference, "failover may not change the bytes");
+    let rs = nodes[receiver].service.stats();
+    assert!(rs.forward_fallbacks >= 1, "the degraded forward is counted: {rs:?}");
+    assert_eq!(rs.plan_misses, 1, "the receiver solved the key itself: {rs:?}");
+
+    // the suspicion window makes the *next* miss skip the dead owner
+    // without paying the connect budget again
+    let mut req2 = bert_req("fleet-fallback-2");
+    req2.batch = 32; // a different key, same (likely) owner or not — either
+    let resp2 = request_at(nodes[receiver].addr, &req2.to_json().to_string());
+    assert_eq!(resp2.status, Status::Ok);
+    stop_all(&mut nodes);
+}
+
+#[test]
+fn warm_fleet_survives_an_owner_kill_with_zero_cold_solves() {
+    let (mut nodes, addrs) = fleet_of(3, 0.0);
+    let req = bert_req("fleet-acceptance");
+    let frame = req.to_json().to_string();
+    let owner = owner_index(&addrs, fp_of(&req));
+
+    // warm-up: one request per node; the owner cold-solves exactly once
+    // and both non-owners adopt the forwarded bytes
+    let mut bytes = Vec::new();
+    for node in &nodes {
+        let resp = request_at(node.addr, &frame);
+        assert_eq!(resp.status, Status::Ok, "{resp:?}");
+        bytes.push(plan_bytes(&resp));
+    }
+    assert!(bytes.windows(2).all(|w| w[0] == w[1]), "one answer fleet-wide");
+    let want = bytes[0].clone();
+    let misses: usize = nodes.iter().map(|n| n.service.stats().plan_misses).sum();
+    assert_eq!(misses, 1, "warm-up costs exactly one cold solve fleet-wide");
+
+    // kill the owner abruptly, then load the survivors concurrently
+    nodes[owner].shutdown.cancel();
+    nodes[owner].stop().expect("killed owner joins");
+    let survivors: Vec<usize> =
+        (0..nodes.len()).filter(|&i| i != owner).collect();
+    let handles: Vec<_> = survivors
+        .iter()
+        .flat_map(|&i| {
+            let addr = nodes[i].addr;
+            let frame = frame.clone();
+            (0..3).map(move |_| {
+                let frame = frame.clone();
+                std::thread::spawn(move || request_at(addr, &frame))
+            })
+        })
+        .collect();
+    for h in handles {
+        let resp = h.join().expect("client thread");
+        assert_eq!(resp.status, Status::Ok, "survivor under load: {resp:?}");
+        assert_eq!(plan_bytes(&resp), want, "byte-identical after the kill");
+    }
+    for &i in &survivors {
+        let s = nodes[i].service.stats();
+        assert_eq!(s.plan_misses, 0, "zero cold solves on node {i} after warm-up: {s:?}");
+    }
+    stop_all(&mut nodes);
+}
+
+// ---------------------------------------------------- gossip anti-entropy
+
+#[test]
+fn gossip_warms_peers_and_catches_up_a_late_started_node() {
+    // bind all three first; C's address is on every ring from the start,
+    // but C itself boots late — the "restarted node" of the failover
+    // story, caught up by its own gossip tick alone
+    let servers: Vec<Server> =
+        (0..3).map(|_| Server::bind("127.0.0.1:0").expect("bind")).collect();
+    let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+    let opts_for = |i: usize| ServerOptions {
+        peers: rotated(&addrs, i),
+        advertise: Some(addrs[i].clone()),
+        resync_secs: 0.05,
+        ..Default::default()
+    };
+    let mut it = servers.into_iter();
+    let (sa, sb, sc) = (it.next().unwrap(), it.next().unwrap(), it.next().unwrap());
+    let mut a = TestServer::start_on(Arc::new(PlannerService::with_threads(2)), opts_for(0), sa);
+    let mut b = TestServer::start_on(Arc::new(PlannerService::with_threads(2)), opts_for(1), sb);
+
+    // warm A locally — no client ever talks to B or C in this test
+    let req = bert_req("fleet-gossip");
+    let resp = a.service.plan(&req);
+    assert_eq!(resp.status, Status::Ok);
+    let want = plan_bytes(&resp);
+
+    // B converges through the tick, with the still-dead C in rotation
+    let t0 = Instant::now();
+    while b.service.stats().gossip_merged_entries == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "B never converged via gossip");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let respb = b.service.plan(&req);
+    assert_eq!(respb.cache.base_misses, 0, "gossip must have carried the cost base");
+    assert_eq!(plan_bytes(&respb), want, "gossip-warmed bytes are identical");
+
+    // C boots late on its pre-bound socket and re-warms the same way
+    let mut c = TestServer::start_on(Arc::new(PlannerService::with_threads(2)), opts_for(2), sc);
+    let t0 = Instant::now();
+    while c.service.stats().gossip_merged_entries == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "late node never caught up");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(c.service.stats().gossip_rounds >= 1);
+    let respc = c.service.plan(&req);
+    assert_eq!(respc.cache.base_misses, 0, "a (re)started node re-warms by gossip alone");
+    assert_eq!(plan_bytes(&respc), want);
+    c.stop().expect("clean shutdown");
+    b.stop().expect("clean shutdown");
+    a.stop().expect("clean shutdown");
+}
+
+#[test]
+fn gossip_routes_around_a_dead_peer_and_keeps_serving() {
+    // two live nodes + one permanently dead address on the ring
+    let dead = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let servers: Vec<Server> =
+        (0..2).map(|_| Server::bind("127.0.0.1:0").expect("bind")).collect();
+    let mut addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+    addrs.push(dead);
+    let mut it = servers.into_iter();
+    let (sa, sb) = (it.next().unwrap(), it.next().unwrap());
+    let opts_for = |i: usize| ServerOptions {
+        peers: addrs.clone(),
+        advertise: Some(addrs[i].clone()),
+        resync_secs: 0.05,
+        ..Default::default()
+    };
+    let mut a = TestServer::start_on(Arc::new(PlannerService::with_threads(2)), opts_for(0), sa);
+    let mut b = TestServer::start_on(Arc::new(PlannerService::with_threads(2)), opts_for(1), sb);
+
+    let req = bert_req("fleet-dead-peer");
+    let resp = a.service.plan(&req);
+    assert_eq!(resp.status, Status::Ok);
+    let want = plan_bytes(&resp);
+
+    // B converges from A despite the dead member in its rotation — the
+    // suspicion window steers every later round at the live peer
+    let t0 = Instant::now();
+    while b.service.stats().gossip_merged_entries == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "dead peer stalled the rotation");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let respb = b.service.plan(&req);
+    assert_eq!(respb.cache.base_misses, 0);
+    assert_eq!(plan_bytes(&respb), want);
+
+    // and a dead ring member costs warmth of its key range only, never
+    // availability: B still answers sockets
+    let socket_resp = request_at(b.addr, &bert_req("fleet-dead-peer-live").to_json().to_string());
+    assert!(
+        matches!(socket_resp.status, Status::Ok | Status::Busy),
+        "typed response while gossiping around a dead peer: {socket_resp:?}"
+    );
+    b.stop().expect("clean shutdown");
+    a.stop().expect("clean shutdown");
+}

@@ -226,6 +226,71 @@ fn batch_frames_reuse_serve_cancellable_and_keep_request_order() {
 }
 
 #[test]
+fn health_and_stats_probes_bypass_a_saturated_inflight_cap() {
+    // ISSUE 8 satellite: liveness and counter probes must answer even
+    // while admission control sheds every plan frame — an operator
+    // diagnosing an overloaded fleet node needs exactly those two ops.
+    // `max_inflight: 0` is the deterministic saturation: no plan frame
+    // can ever hold a permit (the stalled-holder variant lives in the
+    // chaos battery, which owns the fault-plan guard discipline).
+    let opts = ServerOptions { max_inflight: 0, ..Default::default() };
+    let mut server = TestServer::start(Arc::new(PlannerService::with_threads(1)), opts);
+    let (mut reader, mut writer) = server.connect();
+
+    // plan frames are shed with a typed busy response...
+    let resp = round_trip(&mut reader, &mut writer, &bert_req("shed").to_json().to_string());
+    assert_eq!(resp.status, Status::Busy, "{resp:?}");
+
+    // ...while health and stats on the same connection are answered
+    let never = || false;
+    write_frame(&mut writer, r#"{"op":"health"}"#).unwrap();
+    let line = read_frame(&mut reader, 1 << 16, &never).unwrap().unwrap();
+    let doc = Json::parse(&line).unwrap();
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"), "{line}");
+
+    write_frame(&mut writer, r#"{"op":"stats"}"#).unwrap();
+    let line = read_frame(&mut reader, 1 << 16, &never).unwrap().unwrap();
+    let doc = Json::parse(&line).unwrap();
+    assert_eq!(doc.get("op").and_then(Json::as_str), Some("stats"));
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+    let shed = doc
+        .get("stats")
+        .and_then(|s| s.get("requests_shed"))
+        .and_then(Json::as_usize)
+        .expect("stats carries the shed counter");
+    assert!(shed >= 1, "the earlier shed plan frame must be counted: {line}");
+
+    // sync is NOT a probe: it moves whole snapshots, so it queues behind
+    // admission control like any real work and sheds here
+    write_frame(&mut writer, r#"{"op":"sync"}"#).unwrap();
+    let line = read_frame(&mut reader, 1 << 16, &never).unwrap().unwrap();
+    let resp = PlanResponse::parse(&line).expect("typed busy");
+    assert_eq!(resp.status, Status::Busy, "{line}");
+    server.stop().expect("clean shutdown");
+}
+
+#[test]
+fn stats_frame_returns_the_full_counter_document() {
+    let mut server =
+        TestServer::start(Arc::new(PlannerService::with_threads(2)), ServerOptions::default());
+    let (mut reader, mut writer) = server.connect();
+    let resp = round_trip(&mut reader, &mut writer, &bert_req("counted").to_json().to_string());
+    assert_eq!(resp.status, Status::Ok);
+
+    let never = || false;
+    write_frame(&mut writer, r#"{"op":"stats"}"#).unwrap();
+    let line = read_frame(&mut reader, 1 << 16, &never).unwrap().unwrap();
+    let doc = Json::parse(&line).unwrap();
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+    let stats = doc.get("stats").expect("stats object");
+    for key in ["requests", "plan_hits", "plan_misses", "forwards", "gossip_rounds"] {
+        assert!(stats.get(key).and_then(Json::as_usize).is_some(), "missing {key}: {line}");
+    }
+    assert_eq!(stats.get("requests").and_then(Json::as_usize), Some(1), "{line}");
+    server.stop().expect("clean shutdown");
+}
+
+#[test]
 fn sync_frame_exports_a_snapshot_that_warms_a_peer_byte_identically() {
     // generation 1: a warm server on machine "A"
     let service = Arc::new(PlannerService::with_threads(2));
@@ -281,6 +346,7 @@ fn mutated_frames_always_earn_a_parseable_reply_and_never_panic() {
             bert_req("f2").to_json().to_string()
         ),
         r#"{"op":"sync"}"#.to_string(),
+        r#"{"op":"stats"}"#.to_string(),
         r#"{"op":"gossip","id":"x"}"#.to_string(),
         r#"{"id":"y","status":"error","error":"echo"}"#.to_string(),
     ];
