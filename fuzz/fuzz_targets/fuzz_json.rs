@@ -1,0 +1,23 @@
+//! Fuzz `util::json`: parsing must never panic (the parser is
+//! depth-bounded by construction), and for any input that parses, the
+//! compact emission is a fixed point of parse ∘ emit — the property the
+//! snapshot checksums and golden-response tests stand on.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use uniap::util::json::Json;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(text) = std::str::from_utf8(data) else { return };
+    let Ok(v) = Json::parse(text) else { return };
+    let emitted = v.to_string();
+    let reparsed = Json::parse(&emitted).expect("compact emission must re-parse");
+    assert_eq!(reparsed.to_string(), emitted, "emission is a fixed point");
+    let pretty = v.to_pretty();
+    let from_pretty = Json::parse(&pretty).expect("pretty emission must re-parse");
+    assert_eq!(
+        from_pretty.to_string(),
+        emitted,
+        "pretty and compact forms agree on the canonical bytes"
+    );
+});

@@ -1,0 +1,32 @@
+//! Fuzz the NDJSON socket framing: `read_frame` over arbitrary bytes
+//! must never panic, every yielded frame respects the byte cap with its
+//! terminator stripped, and an oversized or non-UTF-8 stream surfaces as
+//! a typed error, not unbounded buffering.
+#![no_main]
+
+use std::io::BufReader;
+
+use libfuzzer_sys::fuzz_target;
+use uniap::util::net::read_frame;
+
+const CAP: usize = 128;
+
+fuzz_target!(|data: &[u8]| {
+    let mut reader = BufReader::new(data);
+    // Bounded loop: each iteration consumes ≥ 1 input byte or exits, but
+    // the explicit budget keeps a pathological reader from looping.
+    for _ in 0..data.len() + 1 {
+        match read_frame(&mut reader, CAP, &|| false) {
+            Ok(Some(frame)) => {
+                assert!(
+                    frame.len() <= CAP + 2,
+                    "frame exceeds cap: {} bytes",
+                    frame.len()
+                );
+                assert!(!frame.contains('\n'), "terminator must be stripped");
+            }
+            Ok(None) => break,     // clean EOF
+            Err(_) => break,       // typed error (oversized / not UTF-8)
+        }
+    }
+});

@@ -1,0 +1,22 @@
+//! Fuzz snapshot loading: `Snapshot::parse` over arbitrary text must
+//! never panic (damaged state files degrade to cold starts, they do not
+//! kill serving), and any snapshot that does validate round-trips and is
+//! idempotent under self-merge on the emitted bytes — the property the
+//! state_merge battery asserts for well-formed inputs.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use uniap::service::Snapshot;
+
+fuzz_target!(|data: &[u8]| {
+    let Ok(text) = std::str::from_utf8(data) else { return };
+    let Ok(snap) = Snapshot::parse(text) else { return };
+    let emitted = snap.to_json().to_string();
+    let reparsed = Snapshot::parse(&emitted).expect("emitted snapshot must re-parse");
+    let merged = snap.merge(reparsed);
+    assert_eq!(
+        merged.to_json().to_string(),
+        emitted,
+        "self-merge must be idempotent on the emitted bytes"
+    );
+});

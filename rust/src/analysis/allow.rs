@@ -1,0 +1,176 @@
+//! Allowlist for justified lint exceptions.
+//!
+//! The repo root carries a `lint.allow` file; each non-comment line is one
+//! entry suppressing diagnostics that match it:
+//!
+//! ```text
+//! rule path-pattern needle -- reason
+//! ```
+//!
+//! * `rule` — the rule id (`float-determinism`, `no-panic-serving`, …);
+//! * `path-pattern` — matches a diagnostic when the diagnostic's file path
+//!   starts with it (directory scope, e.g. `baselines/`) or ends with it
+//!   (file scope, e.g. `service/ring.rs`);
+//! * `needle` — substring the flagged *raw* source line must contain, so an
+//!   exception pins a specific construct, not a whole file (`*` = any line);
+//! * `reason` — mandatory free text after ` -- `; an entry without a reason
+//!   is a parse error. Exceptions are documentation, not escape hatches.
+//!
+//! `#`-prefixed lines and blank lines are ignored. Parsing and
+//! serialization round-trip (see the unit test), so tooling can rewrite
+//! the file without losing entries.
+
+/// One parsed allowlist entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub needle: String,
+    pub reason: String,
+}
+
+/// A parsed `lint.allow` file.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    /// Parse allowlist text. Returns `Err(line-number, message)` on the
+    /// first malformed entry.
+    pub fn parse(text: &str) -> Result<Allowlist, (usize, String)> {
+        let mut entries = Vec::new();
+        for (idx, line) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let trimmed = line.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            let (head, reason) = match trimmed.split_once(" -- ") {
+                Some((h, r)) if !r.trim().is_empty() => (h.trim(), r.trim()),
+                _ => {
+                    return Err((
+                        lineno,
+                        "entry needs a reason: `rule path needle -- reason`".to_string(),
+                    ))
+                }
+            };
+            let mut parts = head.split_whitespace();
+            let (rule, path, needle) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(r), Some(p), Some(n)) => (r, p, n),
+                _ => {
+                    return Err((
+                        lineno,
+                        "entry needs three fields before ` -- `: rule path needle".to_string(),
+                    ))
+                }
+            };
+            if parts.next().is_some() {
+                return Err((
+                    lineno,
+                    "too many fields before ` -- ` (needle may not contain spaces)".to_string(),
+                ));
+            }
+            entries.push(AllowEntry {
+                rule: rule.to_string(),
+                path: path.to_string(),
+                needle: needle.to_string(),
+                reason: reason.to_string(),
+            });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    /// Serialize back to file form (inverse of [`Allowlist::parse`] up to
+    /// comments and blank lines).
+    pub fn serialize(&self) -> String {
+        let mut out = String::new();
+        for e in &self.entries {
+            out.push_str(&format!("{} {} {} -- {}\n", e.rule, e.path, e.needle, e.reason));
+        }
+        out
+    }
+
+    /// Does any entry suppress a diagnostic of `rule` at `file`, whose
+    /// flagged raw line is `line_text`?
+    pub fn suppresses(&self, rule: &str, file: &str, line_text: &str) -> bool {
+        self.entries.iter().any(|e| {
+            e.rule == rule
+                && (file.starts_with(&e.path) || file.ends_with(&e.path))
+                && (e.needle == "*" || line_text.contains(&e.needle))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_serialize_round_trip() {
+        let text = "\
+# wall-clock exceptions
+wall-clock baselines/ Instant::now -- opt-time metric, reported not planned
+
+no-panic-serving service/ring.rs self.points -- idx bounded by binary_search contract
+";
+        let list = Allowlist::parse(text).expect("parses");
+        assert_eq!(list.entries.len(), 2);
+        let round = Allowlist::parse(&list.serialize()).expect("re-parses");
+        assert_eq!(list, round, "serialize → parse is the identity on entries");
+    }
+
+    #[test]
+    fn matching_is_rule_path_and_needle() {
+        let list = Allowlist::parse(
+            "wall-clock baselines/ Instant::now -- timing the optimizer itself\n",
+        )
+        .expect("parses");
+        assert!(list.suppresses("wall-clock", "baselines/mod.rs", "let t = Instant::now();"));
+        // wrong rule
+        assert!(!list.suppresses("sentinel-ban", "baselines/mod.rs", "let t = Instant::now();"));
+        // wrong path
+        assert!(!list.suppresses("wall-clock", "planner/uop.rs", "let t = Instant::now();"));
+        // wrong needle
+        assert!(!list.suppresses("wall-clock", "baselines/mod.rs", "SystemTime::now()"));
+    }
+
+    #[test]
+    fn wildcard_needle_matches_any_line() {
+        let list =
+            Allowlist::parse("sentinel-ban planner/legacy.rs * -- grandfathered\n").expect("ok");
+        assert!(list.suppresses("sentinel-ban", "planner/legacy.rs", "anything at all"));
+    }
+
+    #[test]
+    fn suffix_path_match_scopes_to_a_file() {
+        let list = Allowlist::parse(
+            "no-panic-serving service/ring.rs self.members -- bounded by construction\n",
+        )
+        .expect("ok");
+        assert!(list.suppresses(
+            "no-panic-serving",
+            "service/ring.rs",
+            "let m = &self.members[i];"
+        ));
+        assert!(!list.suppresses(
+            "no-panic-serving",
+            "service/mod.rs",
+            "let m = &self.members[i];"
+        ));
+    }
+
+    #[test]
+    fn missing_reason_is_an_error() {
+        let err = Allowlist::parse("wall-clock baselines/ Instant::now\n").unwrap_err();
+        assert_eq!(err.0, 1);
+        assert!(err.1.contains("reason"));
+    }
+
+    #[test]
+    fn extra_fields_are_an_error() {
+        let err =
+            Allowlist::parse("rule path needle extra -- why\n").unwrap_err();
+        assert!(err.1.contains("too many"));
+    }
+}

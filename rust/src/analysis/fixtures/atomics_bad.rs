@@ -1,0 +1,15 @@
+// Fixture: atomics-hygiene violations — an unjustified Relaxed RMW and a
+// relaxed load feeding control flow. Expected: 7:26 and 11:18 (the second
+// with the sharper control-flow message).
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(counter: &AtomicUsize) -> usize {
+    counter.fetch_add(1, Ordering::Relaxed)
+}
+
+pub fn gate(flag: &AtomicUsize) -> bool {
+    if flag.load(Ordering::Relaxed) > 0 {
+        return true;
+    }
+    false
+}

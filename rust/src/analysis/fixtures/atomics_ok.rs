@@ -1,0 +1,19 @@
+// Fixture: atomics-hygiene clean — the justification comment covers the
+// contiguous block below it. Expected: no diagnostics.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct Stats {
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl Stats {
+    pub fn note(&self, hit: bool) {
+        // relaxed: monotone counters; nothing is published through them.
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+// Fixture: float-determinism violation — `+=` fold over HashMap::values().
+// Expected: one diagnostic at 8:15.
+use std::collections::HashMap;
+
+pub fn total(map: &HashMap<String, f64>) -> f64 {
+    let mut total = 0.0;
+    for v in map.values() {
+        total += *v;
+    }
+    total
+}

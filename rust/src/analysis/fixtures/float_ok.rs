@@ -1,0 +1,9 @@
+// Fixture: float-determinism clean — collect-then-sort re-establishes a
+// canonical order before the fold. Expected: no diagnostics.
+use std::collections::HashMap;
+
+pub fn total(map: &HashMap<String, f64>) -> f64 {
+    let mut vals: Vec<f64> = map.values().copied().collect();
+    vals.sort_by(f64::total_cmp);
+    vals.iter().sum()
+}

@@ -1,0 +1,10 @@
+// Fixture: no-panic-serving violations — an unwrap and a direct index on
+// a serving path. Expected (under a service/ path): 4:31 and 9:11.
+pub fn reply(frames: &[String]) -> String {
+    let first = frames.first().unwrap();
+    first.clone()
+}
+
+pub fn nth(frames: &[String], i: usize) -> String {
+    frames[i].clone()
+}

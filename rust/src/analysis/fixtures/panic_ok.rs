@@ -1,0 +1,21 @@
+// Fixture: no-panic-serving clean — `.get()`/`.first()` with the miss
+// handled, panics confined to #[cfg(test)] code (mask-exempt).
+// Expected: no diagnostics.
+pub fn reply(frames: &[String]) -> Option<String> {
+    frames.first().cloned()
+}
+
+pub fn nth(frames: &[String], i: usize) -> Option<String> {
+    frames.get(i).cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v = vec!["a".to_string()];
+        assert_eq!(reply(&v).unwrap(), v[0]);
+    }
+}

@@ -1,0 +1,9 @@
+// Fixture: sentinel-ban violations — usize::MAX / f64::MAX sentinels in
+// planner code. Expected (under a planner/ path): 4:5 and 8:5.
+pub fn no_predecessor() -> usize {
+    usize::MAX
+}
+
+pub fn worst_cost() -> f64 {
+    f64::MAX
+}

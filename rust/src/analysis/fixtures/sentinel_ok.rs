@@ -1,0 +1,9 @@
+// Fixture: sentinel-ban clean — absence is a type, not a magic value.
+// Expected: no diagnostics.
+pub fn no_predecessor() -> Option<usize> {
+    None
+}
+
+pub fn worst_cost() -> Option<f64> {
+    None
+}

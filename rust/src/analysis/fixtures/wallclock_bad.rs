@@ -1,0 +1,8 @@
+// Fixture: wall-clock violation — a solver reading the clock. Expected
+// (under a planner/ path): one diagnostic at 6:14.
+use std::time::Instant;
+
+pub fn solve() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

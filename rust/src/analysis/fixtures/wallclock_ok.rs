@@ -1,0 +1,5 @@
+// Fixture: wall-clock clean — the budget arrives as an input, so the
+// result stays a pure function of its arguments. Expected: no diagnostics.
+pub fn solve(budget_secs: f64) -> f64 {
+    budget_secs * 0.5
+}

@@ -1,0 +1,231 @@
+//! `uniap-lint`: a determinism & concurrency static-analysis pass.
+//!
+//! The repo's crown invariant — plans are byte-identical across threads,
+//! restarts, peers, and fleet failovers — is guarded dynamically by the
+//! equivalence tests and the chaos battery. This module guards it
+//! *statically*: a dependency-free, hand-rolled Rust source scanner (same
+//! idiom as `util::json` — no syn, no proc-macro2) that walks `rust/src/`
+//! and enforces five repo invariants as typed path:line diagnostics:
+//!
+//! | rule id | invariant |
+//! |---|---|
+//! | `float-determinism` | no HashMap/HashSet iteration feeding order-sensitive folds |
+//! | `no-panic-serving` | no unwrap/expect/panic!/raw indexing on the request path |
+//! | `atomics-hygiene` | every `Ordering::Relaxed` carries a `// relaxed:` justification |
+//! | `wall-clock` | no `Instant::now`/`SystemTime::now` in solver/cost code |
+//! | `sentinel-ban` | no `usize::MAX`/`f64::MAX` sentinels in planner/baselines |
+//!
+//! Justified exceptions live in the repo-root `lint.allow` file
+//! ([`Allowlist`]), each with a mandatory reason. The `uniap_lint` binary
+//! exits nonzero on violations and has a `--json` report mode; CI runs it
+//! next to build/test. Deliberately-violating fixture files live under
+//! `analysis/fixtures/` (skipped by the tree walk, exercised by
+//! `rust/tests/lint.rs`).
+
+pub mod allow;
+pub mod rules;
+pub mod scrub;
+
+pub use allow::{AllowEntry, Allowlist};
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// The lint rules, as a closed enum so reports stay typed end to end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    FloatDeterminism,
+    NoPanicServing,
+    AtomicsHygiene,
+    WallClock,
+    SentinelBan,
+}
+
+impl Rule {
+    /// Stable string id (used in reports and `lint.allow` entries).
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::FloatDeterminism => "float-determinism",
+            Rule::NoPanicServing => "no-panic-serving",
+            Rule::AtomicsHygiene => "atomics-hygiene",
+            Rule::WallClock => "wall-clock",
+            Rule::SentinelBan => "sentinel-ban",
+        }
+    }
+}
+
+/// One finding: file path relative to `rust/src/`, 1-based line/column,
+/// the rule, a human message, and the trimmed offending source line.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub col: usize,
+    pub rule: Rule,
+    pub message: String,
+    pub snippet: String,
+}
+
+impl Diagnostic {
+    /// `path:line:col: [rule] message` — the compiler-style text form.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}:{}: [{}] {}\n    {}",
+            self.file,
+            self.line,
+            self.col,
+            self.rule.id(),
+            self.message,
+            self.snippet
+        )
+    }
+}
+
+/// Result of linting a tree: surviving diagnostics (post-allowlist),
+/// plus counts for the report footer.
+#[derive(Debug)]
+pub struct LintReport {
+    pub diagnostics: Vec<Diagnostic>,
+    pub files_checked: usize,
+    pub suppressed: usize,
+}
+
+impl LintReport {
+    /// Machine-readable report (reuses `util::json`; deterministic field
+    /// and diagnostic order).
+    pub fn to_json(&self) -> Json {
+        let diags: Vec<Json> = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                Json::obj()
+                    .field("file", d.file.as_str())
+                    .field("line", d.line)
+                    .field("col", d.col)
+                    .field("rule", d.rule.id())
+                    .field("message", d.message.as_str())
+                    .field("snippet", d.snippet.as_str())
+            })
+            .collect();
+        Json::obj()
+            .field("files_checked", self.files_checked)
+            .field("suppressed", self.suppressed)
+            .field("violations", self.diagnostics.len())
+            .field("diagnostics", Json::Arr(diags))
+    }
+
+    /// Compiler-style text report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "uniap-lint: {} file(s) checked, {} violation(s), {} suppressed by allowlist\n",
+            self.files_checked,
+            self.diagnostics.len(),
+            self.suppressed
+        ));
+        out
+    }
+}
+
+/// Lint one source file given its path relative to `rust/src/` (the path
+/// decides which rule scopes apply). Pure: no filesystem access.
+pub fn lint_source(rel_path: &str, text: &str) -> Vec<Diagnostic> {
+    let s = scrub::scrub(text);
+    rules::check_file(rel_path, &s)
+}
+
+/// Lint every `.rs` file under `src_root` (normally `rust/src/`),
+/// applying `allow`. The walk is sorted for deterministic output and
+/// skips any directory named `fixtures` (deliberately-violating lint
+/// fixtures live there).
+pub fn lint_tree(src_root: &Path, allow: &Allowlist) -> Result<LintReport, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(src_root, src_root, &mut files)?;
+    files.sort();
+    let mut diagnostics = Vec::new();
+    let mut suppressed = 0usize;
+    for rel in &files {
+        let rel_str = rel.to_string_lossy().replace('\\', "/");
+        let full = src_root.join(rel);
+        let text = std::fs::read_to_string(&full)
+            .map_err(|e| format!("read {}: {e}", full.display()))?;
+        for d in lint_source(&rel_str, &text) {
+            if allow.suppresses(d.rule.id(), &d.file, &d.snippet) {
+                suppressed += 1;
+            } else {
+                diagnostics.push(d);
+            }
+        }
+    }
+    Ok(LintReport { diagnostics, files_checked: files.len(), suppressed })
+}
+
+/// Collect `.rs` paths under `dir`, relative to `root`, skipping
+/// `fixtures` directories.
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().to_string();
+        if path.is_dir() {
+            if name == "fixtures" {
+                continue;
+            }
+            collect_rs(root, &path, out)?;
+        } else if name.ends_with(".rs") {
+            if let Ok(rel) = path.strip_prefix(root) {
+                out.push(rel.to_path_buf());
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagnostics_render_path_line_col() {
+        let src = "fn f(m: &std::collections::HashMap<u64, f64>) -> f64 {\n    let mut s = 0.0;\n    for (_, v) in m.iter() {\n        s += v;\n    }\n    s\n}\n";
+        let diags = lint_source("cost/mod.rs", src);
+        assert_eq!(diags.len(), 1, "one finding: {diags:?}");
+        let d = &diags[0];
+        assert_eq!(d.rule.id(), "float-determinism");
+        assert_eq!(d.line, 4, "flags the accumulation site");
+        assert!(d.render().starts_with("cost/mod.rs:4:"));
+    }
+
+    #[test]
+    fn json_report_is_parseable_and_typed() {
+        let src = "fn f(v: &[f64], i: usize) -> f64 { v[i] }\n";
+        let diags = lint_source("service/mod.rs", src);
+        assert_eq!(diags.len(), 1);
+        let report =
+            LintReport { diagnostics: diags, files_checked: 1, suppressed: 0 };
+        let text = report.to_json().to_string();
+        let back = Json::parse(&text).expect("report emits valid JSON");
+        assert_eq!(back.get("violations").and_then(Json::as_usize), Some(1));
+        let arr = back.get("diagnostics").and_then(Json::as_arr).expect("array");
+        assert_eq!(arr[0].get("rule").and_then(Json::as_str), Some("no-panic-serving"));
+    }
+
+    #[test]
+    fn allowlist_suppresses_by_snippet_needle() {
+        let src = "fn f(v: &[f64], i: usize) -> f64 { v[i] }\n";
+        let diags = lint_source("service/ring.rs", src);
+        assert_eq!(diags.len(), 1);
+        let allow = Allowlist::parse(
+            "no-panic-serving service/ring.rs v[i] -- i bounded by caller contract\n",
+        )
+        .expect("parses");
+        let d = &diags[0];
+        assert!(allow.suppresses(d.rule.id(), &d.file, &d.snippet));
+    }
+}

@@ -1,0 +1,529 @@
+//! The five lint rules (see `DESIGN.md` §Static analysis for the catalog
+//! and the rationale behind each scope decision).
+//!
+//! Every rule works on the scrubbed views from [`super::scrub`]: pattern
+//! scans run on the *code* view (never matching inside strings/comments),
+//! justification lookups run on the *comment* view, and lines under the
+//! test mask are exempt everywhere (tests unwrap and time things freely).
+//!
+//! These are lexical heuristics, not a type checker: they are tuned to
+//! this repo's idioms and err toward flagging, with `lint.allow` as the
+//! documented escape hatch. Determinism of the lint output itself matters
+//! (CI diffs): diagnostics are emitted in line order per file and the
+//! tree walk is sorted.
+
+use super::scrub::Scrubbed;
+use super::{Diagnostic, Rule};
+
+/// Run every rule over one scrubbed file. `path` is the file's path
+/// relative to `rust/src/`, with forward slashes (e.g. `service/mod.rs`).
+pub fn check_file(path: &str, s: &Scrubbed) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    float_determinism(path, s, &mut out);
+    no_panic_serving(path, s, &mut out);
+    atomics_hygiene(path, s, &mut out);
+    wall_clock(path, s, &mut out);
+    sentinel_ban(path, s, &mut out);
+    out.sort_by(|a, b| (a.line, a.col, a.rule.id()).cmp(&(b.line, b.col, b.rule.id())));
+    out
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Every byte offset where `pat` occurs in `line` with identifier
+/// boundaries on both sides (so `map` does not hit `remap`).
+fn word_positions(line: &str, pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let lb = line.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = line[from..].find(pat) {
+        let pos = from + rel;
+        let left_ok = pos == 0 || !is_ident_byte(lb[pos - 1]);
+        let end = pos + pat.len();
+        let right_ok = end >= lb.len() || !is_ident_byte(lb[end]);
+        if left_ok && right_ok {
+            out.push(pos);
+        }
+        from = pos + 1;
+    }
+    out
+}
+
+fn push(
+    out: &mut Vec<Diagnostic>,
+    path: &str,
+    s: &Scrubbed,
+    line: usize,
+    col: usize,
+    rule: Rule,
+    message: String,
+) {
+    out.push(Diagnostic {
+        file: path.to_string(),
+        line: line + 1,
+        col: col + 1,
+        rule,
+        message,
+        snippet: s.raw.get(line).map(|l| l.trim().to_string()).unwrap_or_default(),
+    });
+}
+
+// ---------------------------------------------------------------- rule 1
+
+/// Markers that turn an iteration into an order-sensitive fold. `.push(`
+/// is included because collecting in hash order and *not* sorting is the
+/// same bug one step removed (the collect-then-sort idiom is exempted).
+const SINKS: [&str; 6] = ["+=", ".sum", ".fold(", "min_by", "max_by", ".push("];
+
+/// Calls that start an iteration over a container.
+const ITER_CALLS: [&str; 5] = [".iter()", ".values()", ".keys()", ".drain(", ".into_iter()"];
+
+/// float-determinism: iterating a `HashMap`/`HashSet` must not feed an
+/// accumulation whose result depends on iteration order. Applies to the
+/// whole tree — the crown invariant (byte-identical plans) dies here
+/// first. Detection: collect identifiers declared with a hash-container
+/// type in this file, find `for … in` loops and iterator chains over
+/// them, and flag the first order-sensitive sink in the loop body /
+/// statement window. Collecting into a `Vec` that is then `.sort`ed is
+/// exempt (the sort re-establishes a canonical order).
+fn float_determinism(path: &str, s: &Scrubbed, out: &mut Vec<Diagnostic>) {
+    let idents = hash_idents(s);
+    if idents.is_empty() {
+        return;
+    }
+    for (i, code) in s.code.iter().enumerate() {
+        if s.test_mask[i] {
+            continue;
+        }
+        // `for pat in <expr> {` where <expr> mentions a hash ident
+        if let Some(for_pos) = word_positions(code, "for").first().copied() {
+            if let Some(in_rel) = code[for_pos..].find(" in ") {
+                let in_pos = for_pos + in_rel + 4;
+                let expr_end = code[in_pos..].find('{').map_or(code.len(), |p| in_pos + p);
+                let expr = &code[in_pos..expr_end];
+                if idents.iter().any(|id| !word_positions(expr, id).is_empty()) {
+                    flag_loop_body(path, s, i, out);
+                    continue;
+                }
+            }
+        }
+        // iterator chain: `ident.iter()` / `.values()` / `.keys()` /
+        // `.drain(` — or a trailing ident continuing as a builder chain
+        // on the next line (`self.map\n.iter()…`); the statement window
+        // then requires an iterator call before flagging
+        let chained = idents.iter().any(|id| {
+            word_positions(code, id).iter().any(|&p| {
+                let rest = &code[p + id.len()..];
+                ITER_CALLS.iter().any(|c| rest.starts_with(c)) || rest.trim().is_empty()
+            })
+        });
+        if chained {
+            flag_statement_window(path, s, i, out);
+        }
+    }
+}
+
+/// Identifiers declared in this file with a `HashMap`/`HashSet` type
+/// (let-bindings, fields, params) — plus anything typed with a local
+/// alias of one (`type DomStore = HashMap<…>`).
+fn hash_idents(s: &Scrubbed) -> Vec<String> {
+    let mut aliases: Vec<String> = Vec::new();
+    for code in &s.code {
+        let t = code.trim_start();
+        let after_type = t.strip_prefix("pub type ").or_else(|| t.strip_prefix("type "));
+        if let Some(rest) = after_type {
+            if code.contains("HashMap<") || code.contains("HashSet<") {
+                let name: String =
+                    rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+                if !name.is_empty() {
+                    aliases.push(name);
+                }
+            }
+        }
+    }
+    let mut idents: Vec<String> = Vec::new();
+    for code in &s.code {
+        let direct = code.contains("HashMap<")
+            || code.contains("HashSet<")
+            || code.contains("HashMap::")
+            || code.contains("HashSet::");
+        let via_alias = aliases.iter().any(|a| {
+            // the declaration itself (`type X = …`) is not a binding
+            !code.trim_start().starts_with("type ")
+                && !code.trim_start().starts_with("pub type ")
+                && !word_positions(code, a).is_empty()
+        });
+        if !direct && !via_alias {
+            continue;
+        }
+        // `let [mut] name = HashMap::new()` → ident before the `=`;
+        // `name: HashMap<…>` (field/param) → ident before the first `:`
+        let bind = code
+            .find(" = ")
+            .and_then(|p| ident_ending_at(code, p))
+            .or_else(|| code.find(':').and_then(|p| ident_ending_at(code, p)));
+        if let Some(name) = bind {
+            if name != "Some" && name != "Ok" {
+                idents.push(name);
+            }
+        }
+    }
+    idents.sort();
+    idents.dedup();
+    idents
+}
+
+/// The identifier whose last byte sits just before `pos` (skipping one
+/// run of spaces), if any.
+fn ident_ending_at(line: &str, pos: usize) -> Option<String> {
+    let b = line.as_bytes();
+    let mut end = pos;
+    while end > 0 && b[end - 1] == b' ' {
+        end -= 1;
+    }
+    let mut start = end;
+    while start > 0 && is_ident_byte(b[start - 1]) {
+        start -= 1;
+    }
+    if start == end {
+        None
+    } else {
+        Some(line[start..end].to_string())
+    }
+}
+
+/// Flag the first order-sensitive sink inside the loop body starting on
+/// line `start` (brace-matched on the code view, capped at 80 lines).
+fn flag_loop_body(path: &str, s: &Scrubbed, start: usize, out: &mut Vec<Diagnostic>) {
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    let mut end = (start + 80).min(s.code.len() - 1);
+    'scan: for (j, code) in s.code.iter().enumerate().take(end + 1).skip(start) {
+        for &b in code.as_bytes() {
+            match b {
+                b'{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                b'}' => {
+                    depth -= 1;
+                    if opened && depth <= 0 {
+                        end = j;
+                        break 'scan;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    // collect-then-sort exemption: a `.sort` in the body or within the
+    // five lines after it re-establishes canonical order for `.push(`
+    let sorted_after = (start..(end + 6).min(s.code.len()))
+        .any(|j| s.code[j].contains(".sort"));
+    for j in start..=end {
+        let code = &s.code[j];
+        for sink in SINKS {
+            if sink == ".push(" && sorted_after {
+                continue;
+            }
+            if let Some(col) = code.find(sink) {
+                push(
+                    out,
+                    path,
+                    s,
+                    j,
+                    col,
+                    Rule::FloatDeterminism,
+                    format!(
+                        "`{sink}` accumulates inside iteration over a HashMap/HashSet \
+                         (line {}): result depends on hash order — sort first or use \
+                         a BTreeMap",
+                        start + 1
+                    ),
+                );
+                return;
+            }
+        }
+        if let Some(col) = bare_assign(code) {
+            push(
+                out,
+                path,
+                s,
+                j,
+                col,
+                Rule::FloatDeterminism,
+                format!(
+                    "assignment inside iteration over a HashMap/HashSet (line {}): \
+                     last-writer depends on hash order — sort first or use a BTreeMap",
+                    start + 1
+                ),
+            );
+            return;
+        }
+    }
+}
+
+/// Flag an order-sensitive sink in the statement window beginning at
+/// `start` (up to the first `;`-terminated line, capped at 8 lines).
+fn flag_statement_window(path: &str, s: &Scrubbed, start: usize, out: &mut Vec<Diagnostic>) {
+    let mut end = start;
+    for j in start..(start + 8).min(s.code.len()) {
+        end = j;
+        if s.code[j].trim_end().ends_with(';') {
+            break;
+        }
+    }
+    let window_has = |pat: &str| (start..=end).any(|j| s.code[j].contains(pat));
+    if !ITER_CALLS.iter().any(|c| window_has(c)) {
+        return; // trailing ident never became an iteration
+    }
+    if window_has(".collect") {
+        let sorted_after =
+            (start..(end + 6).min(s.code.len())).any(|j| s.code[j].contains(".sort"));
+        if sorted_after {
+            return;
+        }
+    }
+    for j in start..=end {
+        for sink in [".sum", ".fold(", "min_by", "max_by"] {
+            if let Some(col) = s.code[j].find(sink) {
+                push(
+                    out,
+                    path,
+                    s,
+                    j,
+                    col,
+                    Rule::FloatDeterminism,
+                    format!(
+                        "`{sink}` folds an iterator over a HashMap/HashSet (line {}): \
+                         result depends on hash order — sort first or use a BTreeMap",
+                        start + 1
+                    ),
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// Column of a bare `=` assignment (not `==`/`<=`/compound/`let`), the
+/// shape of an order-dependent "best so far" overwrite.
+fn bare_assign(code: &str) -> Option<usize> {
+    let mut t = code.to_string();
+    for pat in [
+        "<<=", ">>=", "==", "!=", "<=", ">=", "=>", "+=", "-=", "*=", "/=", "%=", "&=", "|=",
+        "^=",
+    ] {
+        t = t.replace(pat, &" ".repeat(pat.len()));
+    }
+    let pos = t.find('=')?;
+    if t[..pos].contains("let ") {
+        return None; // fresh binding, not an accumulator overwrite
+    }
+    Some(pos)
+}
+
+// ---------------------------------------------------------------- rule 2
+
+/// no-panic-serving: panics are forbidden on the request path — a panic
+/// in a connection handler kills availability, and a panic while a lock
+/// is held poisons shared caches. Scope: `service/`, `dag/` (request
+/// parsing/lowering), `util/net.rs`, `util/fsio.rs`. The indexing
+/// sub-rule skips `dag/`: its indices are validated once at the IR
+/// boundary and re-checking every hop would drown the signal.
+fn no_panic_serving(path: &str, s: &Scrubbed, out: &mut Vec<Diagnostic>) {
+    let in_scope = path.starts_with("service/")
+        || path.starts_with("dag/")
+        || path == "util/net.rs"
+        || path == "util/fsio.rs";
+    if !in_scope {
+        return;
+    }
+    let index_scope = !path.starts_with("dag/");
+    const PANICS: [&str; 6] =
+        [".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+    for (i, code) in s.code.iter().enumerate() {
+        if s.test_mask[i] {
+            continue;
+        }
+        for pat in PANICS {
+            if let Some(col) = code.find(pat) {
+                push(
+                    out,
+                    path,
+                    s,
+                    i,
+                    col,
+                    Rule::NoPanicServing,
+                    format!(
+                        "`{pat}` on the serving path: return a typed error \
+                         (or `unwrap_or_else(|e| e.into_inner())` for mutex poison)"
+                    ),
+                );
+                break;
+            }
+        }
+        if index_scope {
+            if let Some(col) = indexing_site(code) {
+                push(
+                    out,
+                    path,
+                    s,
+                    i,
+                    col,
+                    Rule::NoPanicServing,
+                    "indexing can panic on the serving path: use `.get()` and handle \
+                     the miss (allowlist with the bound if provably in range)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// Column of the first `[` used as an index/slice operator: one directly
+/// following an identifier byte, `)` or `]` (so `#[attr]`, array types
+/// `[u8; 4]`, `vec![…]` and slice patterns don't match).
+fn indexing_site(code: &str) -> Option<usize> {
+    let b = code.as_bytes();
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'[' && i > 0 {
+            let p = b[i - 1];
+            if is_ident_byte(p) || p == b')' || p == b']' {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------- rule 3
+
+/// atomics-hygiene: every `Ordering::Relaxed` needs a `// relaxed:`
+/// justification in its contiguous comment/code block (same line or the
+/// unbroken non-blank run above, ≤ 40 lines — one comment can cover a
+/// whole counter block). A relaxed load feeding `if`/`while`/`assert`
+/// gets a sharper message: readback into control flow is where relaxed
+/// counters stop being harmless.
+fn atomics_hygiene(path: &str, s: &Scrubbed, out: &mut Vec<Diagnostic>) {
+    for (i, code) in s.code.iter().enumerate() {
+        if s.test_mask[i] {
+            continue;
+        }
+        if code.trim_start().starts_with("use ") {
+            continue;
+        }
+        let Some(col) = code.find("Ordering::Relaxed") else {
+            continue;
+        };
+        if relaxed_justified(s, i) {
+            continue;
+        }
+        let control = code.contains(".load(")
+            && (!word_positions(code, "if").is_empty()
+                || !word_positions(code, "while").is_empty()
+                || code.contains("assert"));
+        let message = if control {
+            "relaxed load feeds control flow: justify why the race is \
+             acceptable with a `// relaxed:` comment, or strengthen the ordering"
+                .to_string()
+        } else {
+            "`Ordering::Relaxed` without a `// relaxed:` justification comment \
+             in the surrounding block"
+                .to_string()
+        };
+        push(out, path, s, i, col, Rule::AtomicsHygiene, message);
+    }
+}
+
+/// Is there a `relaxed:` comment on this line or in the contiguous
+/// non-blank run of lines above it (capped at 40)?
+fn relaxed_justified(s: &Scrubbed, line: usize) -> bool {
+    let mut j = line;
+    loop {
+        if s.comments[j].contains("relaxed:") {
+            return true;
+        }
+        if j == 0 || line - j >= 40 {
+            return false;
+        }
+        if s.raw[j - 1].trim().is_empty() {
+            return false; // blank line ends the block
+        }
+        j -= 1;
+    }
+}
+
+// ---------------------------------------------------------------- rule 4
+
+/// wall-clock containment: the deterministic core (planner, cost model,
+/// MIQP, strategy space, graph/cluster/sim/dag, baselines) must not read
+/// the clock — plans must be pure functions of their inputs or resume /
+/// replay / cross-peer byte-identity all die. Deadline polling on the
+/// serving layer is fine; a solver that *reports* its own wall time must
+/// carry an allowlist entry explaining that the time never feeds the plan.
+fn wall_clock(path: &str, s: &Scrubbed, out: &mut Vec<Diagnostic>) {
+    const CORE: [&str; 9] = [
+        "planner/", "cost/", "miqp/", "strategy/", "graph/", "cluster/", "sim/", "dag/",
+        "baselines/",
+    ];
+    if !CORE.iter().any(|p| path.starts_with(p)) {
+        return;
+    }
+    for (i, code) in s.code.iter().enumerate() {
+        if s.test_mask[i] {
+            continue;
+        }
+        for pat in ["Instant::now", "SystemTime::now"] {
+            if let Some(col) = code.find(pat) {
+                push(
+                    out,
+                    path,
+                    s,
+                    i,
+                    col,
+                    Rule::WallClock,
+                    format!(
+                        "`{pat}` in deterministic solver/cost code: plans must be \
+                         pure functions of their inputs"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule 5
+
+/// sentinel-ban: no `usize::MAX` / `f64::MAX` sentinels in planner or
+/// baseline code — the PR 2/4 `Option`-pointer migration, enforced
+/// forever. A sentinel that escapes into arithmetic wraps silently;
+/// `Option` makes the "no predecessor" case a type.
+fn sentinel_ban(path: &str, s: &Scrubbed, out: &mut Vec<Diagnostic>) {
+    if !(path.starts_with("planner/") || path.starts_with("baselines/")) {
+        return;
+    }
+    for (i, code) in s.code.iter().enumerate() {
+        if s.test_mask[i] {
+            continue;
+        }
+        for pat in ["usize::MAX", "f64::MAX"] {
+            if let Some(col) = code.find(pat) {
+                push(
+                    out,
+                    path,
+                    s,
+                    i,
+                    col,
+                    Rule::SentinelBan,
+                    format!(
+                        "`{pat}` sentinel in planner/baseline code: encode absence \
+                         as `Option` (PR 2/4 migration, enforced)"
+                    ),
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,336 @@
+//! Source scrubbing: a small hand-rolled Rust lexer (same idiom as the
+//! `util::json` recursive-descent parser — no syn, no proc-macro2) that
+//! separates a `.rs` file into three aligned per-line views:
+//!
+//! * **code** — the original text with comment bodies and string/char
+//!   literal *interiors* blanked to spaces (delimiters kept), so rule
+//!   pattern scans can never match inside a string or a comment;
+//! * **comments** — the inverse view: comment text only, everything else
+//!   blanked, so justification markers (`// relaxed: …`) are found even
+//!   when the pattern also appears in code position elsewhere;
+//! * **test_mask** — per-line flags covering `#[cfg(test)]` items and
+//!   `#[test]` functions, where the panic/determinism rules do not apply
+//!   (tests unwrap and time things freely, by design).
+//!
+//! The lexer handles the token shapes that break naive scans: nested
+//! block comments, string escapes, raw strings (`r"…"`, `r#"…"#`, any
+//! hash depth, spanning lines), byte strings, char literals including
+//! `'\''`, and the char-vs-lifetime ambiguity (`'a'` is a literal,
+//! `'a` in `&'a str` is not). Byte-for-byte alignment is preserved —
+//! every diagnostic column indexes into the original line.
+
+/// The three aligned views of one source file (see module docs).
+#[derive(Debug)]
+pub struct Scrubbed {
+    /// Original source, split into lines.
+    pub raw: Vec<String>,
+    /// Code view: comments and literal interiors blanked.
+    pub code: Vec<String>,
+    /// Comment view: everything except comment text blanked.
+    pub comments: Vec<String>,
+    /// `true` for lines inside `#[cfg(test)]` items or `#[test]` fns.
+    pub test_mask: Vec<bool>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Scrub one source file into its aligned views.
+pub fn scrub(source: &str) -> Scrubbed {
+    let bytes = source.as_bytes();
+    let n = bytes.len();
+    let mut code = vec![b' '; n];
+    let mut comment = vec![b' '; n];
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < n {
+        let b = bytes[i];
+        if b == b'\n' {
+            // newlines always survive in both views so lines stay aligned
+            code[i] = b'\n';
+            comment[i] = b'\n';
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if b == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+                    comment[i] = b'/';
+                    comment[i + 1] = b'/';
+                    state = State::LineComment;
+                    i += 2;
+                } else if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    comment[i] = b'/';
+                    comment[i + 1] = b'*';
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if b == b'"' {
+                    code[i] = b'"';
+                    state = State::Str;
+                    i += 1;
+                } else if b == b'r' && (i == 0 || !is_ident(bytes[i - 1]) || bytes[i - 1] == b'b') {
+                    // possible raw string: r"…" or r#"…"# (any hash depth)
+                    let mut j = i + 1;
+                    while j < n && bytes[j] == b'#' {
+                        j += 1;
+                    }
+                    if j < n && bytes[j] == b'"' {
+                        for (k, slot) in code.iter_mut().enumerate().take(j + 1).skip(i) {
+                            *slot = bytes[k];
+                        }
+                        state = State::RawStr((j - i - 1) as u32);
+                        i = j + 1;
+                    } else {
+                        code[i] = b;
+                        i += 1;
+                    }
+                } else if b == b'\'' {
+                    // char literal vs lifetime
+                    if i + 1 < n && bytes[i + 1] == b'\\' {
+                        // escaped char literal: blank through the closing quote
+                        code[i] = b'\'';
+                        let mut j = i + 2; // the escaped character itself
+                        j += 1;
+                        while j < n && bytes[j] != b'\'' && bytes[j] != b'\n' {
+                            j += 1;
+                        }
+                        if j < n && bytes[j] == b'\'' {
+                            code[j] = b'\'';
+                            i = j + 1;
+                        } else {
+                            i = j; // malformed; resume at the newline/EOF
+                        }
+                    } else if i + 2 < n && bytes[i + 2] == b'\'' && bytes[i + 1] != b'\'' {
+                        // plain one-character literal 'x' (multi-byte chars
+                        // have no quote at i+2 and fall through to the
+                        // UTF-8 scan below)
+                        code[i] = b'\'';
+                        code[i + 2] = b'\'';
+                        i += 3;
+                    } else if i + 1 < n && !bytes[i + 1].is_ascii() {
+                        // non-ASCII char literal: scan to the closing quote
+                        code[i] = b'\'';
+                        let mut j = i + 1;
+                        while j < n && bytes[j] != b'\'' && bytes[j] != b'\n' {
+                            j += 1;
+                        }
+                        if j < n && bytes[j] == b'\'' {
+                            code[j] = b'\'';
+                            i = j + 1;
+                        } else {
+                            i = j;
+                        }
+                    } else {
+                        // lifetime ('a, '_, 'static): the quote is code
+                        code[i] = b'\'';
+                        i += 1;
+                    }
+                } else {
+                    code[i] = b;
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment[i] = b;
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if b == b'*' && i + 1 < n && bytes[i + 1] == b'/' {
+                    comment[i] = b'*';
+                    comment[i + 1] = b'/';
+                    state = if depth == 1 { State::Code } else { State::BlockComment(depth - 1) };
+                    i += 2;
+                } else if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    comment[i] = b'/';
+                    comment[i + 1] = b'*';
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment[i] = b;
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if b == b'\\' {
+                    // escaped byte stays blank — but an escaped newline
+                    // (line-continuation string) must keep its '\n' so the
+                    // line views stay aligned
+                    if i + 1 < n && bytes[i + 1] == b'\n' {
+                        code[i + 1] = b'\n';
+                        comment[i + 1] = b'\n';
+                    }
+                    i += 2;
+                } else if b == b'"' {
+                    code[i] = b'"';
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if b == b'"' {
+                    let h = hashes as usize;
+                    if i + h < n && bytes[i + 1..].iter().take(h).all(|&c| c == b'#') {
+                        for (k, slot) in code.iter_mut().enumerate().take(i + h + 1).skip(i) {
+                            *slot = bytes[k];
+                        }
+                        state = State::Code;
+                        i += h + 1;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    let split = |buf: Vec<u8>| -> Vec<String> {
+        String::from_utf8_lossy(&buf).split('\n').map(str::to_string).collect()
+    };
+    let raw: Vec<String> = source.split('\n').map(str::to_string).collect();
+    let code = split(code);
+    let comments = split(comment);
+    let test_mask = build_test_mask(&code);
+    Scrubbed { raw, code, comments, test_mask }
+}
+
+/// Mark the line ranges covered by `#[cfg(test)]` items and `#[test]`
+/// functions. The scan runs on the *code* view, so attribute-shaped text
+/// inside strings or comments never opens a region. An attribute marks
+/// everything through the matching close brace of the first block that
+/// follows it (or through the first `;` for bodiless items).
+fn build_test_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut line = 0;
+    while line < code.len() {
+        let text = &code[line];
+        let is_attr = text.contains("#[cfg(test)]") || text.contains("#[test]");
+        if !is_attr {
+            line += 1;
+            continue;
+        }
+        // scan forward from the attribute for the item's block
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut end = code.len() - 1;
+        'scan: for (j, l) in code.iter().enumerate().skip(line) {
+            // skip to after the attribute on its own line
+            let start_col =
+                if j == line { l.find("#[").map_or(0, |c| c + 1) } else { 0 };
+            for b in l.as_bytes().iter().skip(start_col) {
+                match b {
+                    b'{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    b'}' => {
+                        depth -= 1;
+                        if opened && depth <= 0 {
+                            end = j;
+                            break 'scan;
+                        }
+                    }
+                    b';' if !opened => {
+                        end = j;
+                        break 'scan;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for flag in mask.iter_mut().take(end + 1).skip(line) {
+            *flag = true;
+        }
+        line = end + 1;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_leave_the_code_view() {
+        let s = scrub("let x = 1; // trailing unwrap() note\n/* block */ let y = 2;\n");
+        assert!(s.code[0].contains("let x = 1;"));
+        assert!(!s.code[0].contains("unwrap"));
+        assert!(s.comments[0].contains("unwrap() note"));
+        assert!(!s.code[1].contains("block"));
+        assert!(s.code[1].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let s = scrub("/* a /* b */ still comment */ code();\n");
+        assert!(!s.code[0].contains("still"));
+        assert!(s.code[0].contains("code();"));
+    }
+
+    #[test]
+    fn string_interiors_are_blanked_but_delimiters_kept() {
+        let s = scrub("let p = \".unwrap() // not a comment\"; real();\n");
+        assert!(!s.code[0].contains("unwrap"));
+        assert!(s.comments[0].trim().is_empty(), "string content is not a comment");
+        assert!(s.code[0].contains("real();"));
+        assert!(s.code[0].contains('"'), "delimiters survive");
+    }
+
+    #[test]
+    fn raw_strings_span_lines() {
+        let s = scrub("let r = r#\"line one .unwrap()\nline two\"#; tail();\n");
+        assert!(!s.code[0].contains("unwrap"));
+        assert!(!s.code[1].contains("line two"));
+        assert!(s.code[1].contains("tail();"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_disambiguate() {
+        let s = scrub("fn f<'a>(x: &'a str) -> char { let q = '\\''; 'y' }\n");
+        let code = &s.code[0];
+        assert!(code.contains("fn f<'a>(x: &'a str)"), "lifetimes stay code: {code}");
+        assert!(!code.contains("\\'"), "escape interior blanked: {code}");
+        // escapes and the literal 'y' keep only their quotes
+        assert!(code.matches('\'').count() >= 4, "literal delimiters kept: {code}");
+    }
+
+    #[test]
+    fn cfg_test_blocks_are_masked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn also_live() {}\n";
+        let s = scrub(src);
+        assert!(!s.test_mask[0]);
+        assert!(s.test_mask[1] && s.test_mask[2] && s.test_mask[3] && s.test_mask[4]);
+        assert!(!s.test_mask[5]);
+    }
+
+    #[test]
+    fn test_attr_masks_one_fn() {
+        let src = "#[test]\nfn unit() {\n    boom();\n}\nfn live() {}\n";
+        let s = scrub(src);
+        assert!(s.test_mask[0] && s.test_mask[1] && s.test_mask[2] && s.test_mask[3]);
+        assert!(!s.test_mask[4]);
+    }
+
+    #[test]
+    fn attr_in_string_does_not_open_a_mask() {
+        let src = "let s = \"#[cfg(test)]\";\nfn live() { f(); }\n";
+        let s = scrub(src);
+        assert!(!s.test_mask[0] && !s.test_mask[1]);
+    }
+}

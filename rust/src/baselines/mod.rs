@@ -22,8 +22,10 @@ use crate::graph::Graph;
 use crate::planner::{chain, qip, Plan, PlannerConfig, SolveHooks};
 use crate::profiling::Profile;
 
-/// Identifies a baseline method.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Identifies a baseline method. `Ord` because it is part of the
+/// service's outcome-cache key, which lives in a deterministic ordered
+/// map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum BaselineKind {
     Galvatron,
     Alpa,

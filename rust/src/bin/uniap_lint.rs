@@ -1,0 +1,87 @@
+//! `uniap_lint` — run the determinism & concurrency lint over `rust/src/`.
+//!
+//! ```text
+//! cargo run --bin uniap_lint [-- --root <repo-root>] [--allow <file>] [--json]
+//! ```
+//!
+//! Exit codes: `0` clean, `1` violations found, `2` usage or I/O error.
+//! The allowlist defaults to `<root>/lint.allow`; a missing allowlist is
+//! an empty one (a malformed one is an error — exceptions must parse).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use uniap::analysis::{lint_tree, Allowlist};
+
+fn usage() -> String {
+    "usage: uniap_lint [--root <repo-root>] [--allow <file>] [--json]".to_string()
+}
+
+struct Opts {
+    root: PathBuf,
+    allow: Option<PathBuf>,
+    json: bool,
+}
+
+fn parse_args(args: &[String]) -> Result<Opts, String> {
+    let mut opts = Opts { root: PathBuf::from("."), allow: None, json: false };
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--json" => opts.json = true,
+            "--root" => {
+                let v = it.next().ok_or_else(|| format!("--root needs a value\n{}", usage()))?;
+                opts.root = PathBuf::from(v);
+            }
+            "--allow" => {
+                let v = it.next().ok_or_else(|| format!("--allow needs a value\n{}", usage()))?;
+                opts.allow = Some(PathBuf::from(v));
+            }
+            "--help" | "-h" => return Err(usage()),
+            other => return Err(format!("unknown argument {other:?}\n{}", usage())),
+        }
+    }
+    Ok(opts)
+}
+
+fn run(opts: &Opts) -> Result<bool, String> {
+    let src_root = opts.root.join("rust").join("src");
+    if !src_root.is_dir() {
+        return Err(format!("{} is not a directory (wrong --root?)", src_root.display()));
+    }
+    let allow_path = opts.allow.clone().unwrap_or_else(|| opts.root.join("lint.allow"));
+    let allow = match std::fs::read_to_string(&allow_path) {
+        Ok(text) => Allowlist::parse(&text)
+            .map_err(|(line, msg)| format!("{}:{line}: {msg}", allow_path.display()))?,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound && opts.allow.is_none() => {
+            Allowlist::default()
+        }
+        Err(e) => return Err(format!("read {}: {e}", allow_path.display())),
+    };
+    let report = lint_tree(&src_root, &allow)?;
+    if opts.json {
+        println!("{}", report.to_json().to_pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    Ok(report.diagnostics.is_empty())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = match parse_args(&args) {
+        Ok(o) => o,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    match run(&opts) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(msg) => {
+            eprintln!("uniap_lint: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -48,7 +48,7 @@ pub const MEM_SAFETY: f64 = 1.06;
 /// micro-batch activations in flight; synchronous 1F1B caps the in-flight
 /// count at the pipeline depth, shrinking the activation term of `M` by
 /// `min(c, pp)/c` while the time objective (2) is unchanged.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub enum Schedule {
     /// GPipe flush schedule (the paper's illustration choice).
     #[default]

@@ -20,6 +20,7 @@
 //!
 //! | module | role |
 //! |---|---|
+//! | [`analysis`] | `uniap-lint`: determinism & concurrency static analysis over this crate's own sources (see CONTRIBUTING below) |
 //! | [`graph`] | layer-graph IR + model zoo (BERT/T5/ViT/Swin/Llama) |
 //! | [`cluster`] | device/link/topology model, EnvA–EnvE presets |
 //! | [`profiling`] | analytic + PJRT-measured profilers (§3.1) |
@@ -37,7 +38,23 @@
 //! | [`metrics`] | TPI, throughput, REE, MFU, speedups |
 //! | [`report`] | markdown tables + hand-rolled bench harness |
 //! | [`testing`] | deterministic PRNG + mini property-testing harness + shared domain generators (`testing::gen`) |
+//!
+//! ## Contributing
+//!
+//! Before sending a change, run the repo's own static-analysis pass:
+//!
+//! ```text
+//! cargo run --bin uniap_lint
+//! ```
+//!
+//! It enforces the determinism and concurrency rules documented in
+//! DESIGN.md §Static analysis (no map-order-dependent float folds, no
+//! panics on serving paths, justified `Ordering::Relaxed`, no wall-clock
+//! reads in solver/cost code, no `usize::MAX`/`f64::MAX` sentinels in the
+//! planners). Justified exceptions go in the repo-root `lint.allow` with a
+//! reason; CI runs the same binary and fails on any new diagnostic.
 
+pub mod analysis;
 pub mod baselines;
 pub mod cli;
 pub mod cluster;

@@ -80,6 +80,7 @@ struct Search<'a> {
 /// `chain::solve_chain_bounded`).
 fn incumbent_cutoff(incumbent: Option<&AtomicU64>) -> f64 {
     incumbent.map_or(f64::INFINITY, |a| {
+        // relaxed: the incumbent is a monotone pruning hint; a stale read only weakens the cut, never correctness.
         f64::from_bits(a.load(Ordering::Relaxed)) * (1.0 + 1e-9)
     })
 }

@@ -271,12 +271,14 @@ fn interval_costs(
 }
 
 /// A frontier point with parent pointers, for assignment recovery.
+/// "No predecessor" (a layer-`l` entry node) is `prev: None`, not a
+/// sentinel index; `u32` keeps the struct at 24 bytes (strategy and
+/// frontier counts are far below 2³²).
 #[derive(Debug, Clone, Copy)]
 struct Node {
     mem: f64,
     cost: f64,
-    prev_k: usize,
-    prev_idx: usize,
+    prev: Option<(u32, u32)>,
 }
 
 /// Sparse forward DP over one layer interval `[l, r]`, keeping per-strategy
@@ -300,7 +302,7 @@ fn interval_dp_nodes(
         }
         let mem = costs.m[l][k];
         if mem <= limit {
-            slot.push(Node { mem, cost: costs.a[l][k], prev_k: usize::MAX, prev_idx: usize::MAX });
+            slot.push(Node { mem, cost: costs.a[l][k], prev: None });
         }
     }
     layers.push(first);
@@ -321,7 +323,11 @@ fn interval_dp_nodes(
                     if nm > limit {
                         break; // frontier memory ascending — the rest overflow
                     }
-                    cand.push(Node { mem: nm, cost: n.cost + trans, prev_k: kcur, prev_idx: idx });
+                    cand.push(Node {
+                        mem: nm,
+                        cost: n.cost + trans,
+                        prev: Some((kcur as u32, idx as u32)),
+                    });
                 }
             }
             // NaN-safe (see pareto_compact_into): NaNs sort last and the
@@ -349,8 +355,11 @@ fn backtrack_nodes(layers: &[Vec<Vec<Node>>], end_k: usize, end_idx: usize) -> V
         out[step] = k;
         if step > 0 {
             let n = layers[step][k][idx];
-            k = n.prev_k;
-            idx = n.prev_idx;
+            // non-entry nodes always carry a parent; a missing one would
+            // be a DP construction bug, so fall back to the entry shape
+            let (pk, pi) = n.prev.unwrap_or((0, 0));
+            k = pk as usize;
+            idx = pi as usize;
         }
     }
     out
@@ -374,16 +383,16 @@ fn interval_assignment(
 }
 
 /// A Pareto point in the pipeline DP with backtracking info.
+/// The first stage has no predecessor: `prev` is `None`, not a sentinel
+/// layer index (`u32` keeps the point compact — layer, strategy and
+/// frontier counts are far below 2³²).
 #[derive(Debug, Clone, Copy)]
 struct Point {
     sum: f64,
     mx: f64,
-    /// previous stage end layer (usize::MAX for the first stage)
-    prev_r: usize,
-    /// previous stage exit strategy
-    prev_kout: usize,
-    /// index of the predecessor point in `front[prev_r][prev_kout]`
-    prev_idx: usize,
+    /// `(prev_r, prev_kout, prev_idx)`: previous stage end layer, exit
+    /// strategy, and predecessor index in `front[prev_r][prev_kout]`
+    prev: Option<(u32, u32, u32)>,
     /// entry strategy of THIS stage
     kin: usize,
 }
@@ -455,6 +464,7 @@ pub fn solve_chain_with(
     // the incumbent — the returned optimum is provably unchanged.
     let cut = || {
         incumbent.map_or(INF, |a| {
+            // relaxed: the incumbent is a monotone pruning hint; a stale read only weakens the cut, never correctness.
             let inc = f64::from_bits(a.load(Ordering::Relaxed));
             inc * (1.0 + 1e-9)
         })
@@ -536,17 +546,7 @@ pub fn solve_chain_with(
                 }
             }
             if best.is_finite() && best + suffix_min[r + 1] + (c - 1.0) * best <= cut0 {
-                pareto_insert(
-                    front,
-                    Point {
-                        sum: best,
-                        mx: best,
-                        prev_r: usize::MAX,
-                        prev_kout: 0,
-                        prev_idx: 0,
-                        kin: best_kin,
-                    },
-                );
+                pareto_insert(front, Point { sum: best, mx: best, prev: None, kin: best_kin });
             }
         }
     }
@@ -582,9 +582,7 @@ pub fn solve_chain_with(
                                     Point {
                                         sum,
                                         mx,
-                                        prev_r: r,
-                                        prev_kout: kout,
-                                        prev_idx: pidx,
+                                        prev: Some((r as u32, kout as u32, pidx as u32)),
                                         kin: kin2,
                                     },
                                 );
@@ -617,12 +615,15 @@ pub fn solve_chain_with(
     let mut r = v - 1;
     for stage in (0..pp).rev() {
         let pt = history[stage][r][kout][idx];
-        let l = if stage == 0 { 0 } else { pt.prev_r + 1 };
+        let l = match pt.prev {
+            Some((pr, _, _)) => pr as usize + 1,
+            None => 0,
+        };
         bounds.push((l, r, pt.kin, kout));
-        if stage > 0 {
-            r = pt.prev_r;
-            kout = pt.prev_kout;
-            idx = pt.prev_idx;
+        if let Some((pr, pk, pi)) = pt.prev {
+            r = pr as usize;
+            kout = pk as usize;
+            idx = pi as usize;
         }
     }
     bounds.reverse();

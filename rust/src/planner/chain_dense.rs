@@ -172,7 +172,8 @@ impl<'a> ChainCtx<'a> {
         // dp[layer][kcur * nb + mem]
         let len = r - l + 1;
         let mut dp = vec![vec![INF; s * nb]; len];
-        let mut parent = vec![vec![(usize::MAX, usize::MAX); s * nb]; len];
+        // unreached states have no parent — Option, not a sentinel pair
+        let mut parent: Vec<Vec<Option<(u32, u32)>>> = vec![vec![None; s * nb]; len];
         dp[0][kin * nb + self.mb[l][kin]] = self.costs.a[l][kin];
         for (step, u) in (l + 1..=r).enumerate() {
             let edge = u - 1;
@@ -191,7 +192,7 @@ impl<'a> ChainCtx<'a> {
                         let nidx = knew * nb + nm;
                         if cost < dp[step + 1][nidx] {
                             dp[step + 1][nidx] = cost;
-                            parent[step + 1][nidx] = (kcur, mem);
+                            parent[step + 1][nidx] = Some((kcur as u32, mem as u32));
                         }
                     }
                 }
@@ -199,25 +200,25 @@ impl<'a> ChainCtx<'a> {
         }
         // best end state with kcur = kout
         let mut best = INF;
-        let mut best_mem = usize::MAX;
+        let mut best_mem: Option<usize> = None;
         for mem in 0..nb {
             let val = dp[len - 1][kout * nb + mem];
             if val < best {
                 best = val;
-                best_mem = mem;
+                best_mem = Some(mem);
             }
         }
-        if !best.is_finite() {
-            return None;
-        }
+        let mut mem = best_mem?; // None ⇒ no feasible end state
         let mut out = vec![0usize; len];
-        let (mut k, mut mem) = (kout, best_mem);
+        let mut k = kout;
         for step in (0..len).rev() {
             out[step] = k;
             if step > 0 {
-                let (pk, pm) = parent[step][k * nb + mem];
-                k = pk;
-                mem = pm;
+                // reached states always record their parent; fall back to
+                // the entry shape if the DP ever left one unset
+                let (pk, pm) = parent[step][k * nb + mem].unwrap_or((0, 0));
+                k = pk as usize;
+                mem = pm as usize;
             }
         }
         Some(out)
@@ -225,16 +226,15 @@ impl<'a> ChainCtx<'a> {
 }
 
 /// A Pareto point in the pipeline DP with backtracking info.
+/// The first stage has no predecessor: `prev` is `None`, not a sentinel
+/// layer index (mirrors `chain::Point`).
 #[derive(Debug, Clone, Copy)]
 struct Point {
     sum: f64,
     mx: f64,
-    /// previous stage end layer (usize::MAX for the first stage)
-    prev_r: usize,
-    /// previous stage exit strategy
-    prev_kout: usize,
-    /// index of the predecessor point in `front[prev_r][prev_kout]`
-    prev_idx: usize,
+    /// `(prev_r, prev_kout, prev_idx)`: previous stage end layer, exit
+    /// strategy, and predecessor index in `front[prev_r][prev_kout]`
+    prev: Option<(u32, u32, u32)>,
     /// entry strategy of THIS stage
     kin: usize,
 }
@@ -287,17 +287,7 @@ pub fn solve_chain_dense(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfi
                 }
             }
             if best.is_finite() {
-                pareto_insert(
-                    front,
-                    Point {
-                        sum: best,
-                        mx: best,
-                        prev_r: usize::MAX,
-                        prev_kout: 0,
-                        prev_idx: 0,
-                        kin: best_kin,
-                    },
-                );
+                pareto_insert(front, Point { sum: best, mx: best, prev: None, kin: best_kin });
             }
         }
     }
@@ -326,9 +316,7 @@ pub fn solve_chain_dense(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfi
                                     Point {
                                         sum,
                                         mx,
-                                        prev_r: r,
-                                        prev_kout: kout,
-                                        prev_idx: pidx,
+                                        prev: Some((r as u32, kout as u32, pidx as u32)),
                                         kin: kin2,
                                     },
                                 );
@@ -361,12 +349,15 @@ pub fn solve_chain_dense(graph: &Graph, costs: &CostMatrices, cfg: &PlannerConfi
     let mut r = v - 1;
     for stage in (0..pp).rev() {
         let pt = history[stage][r][kout][idx];
-        let l = if stage == 0 { 0 } else { pt.prev_r + 1 };
+        let l = match pt.prev {
+            Some((pr, _, _)) => pr as usize + 1,
+            None => 0,
+        };
         bounds.push((l, r, pt.kin, kout));
-        if stage > 0 {
-            r = pt.prev_r;
-            kout = pt.prev_kout;
-            idx = pt.prev_idx;
+        if let Some((pr, pk, pi)) = pt.prev {
+            r = pr as usize;
+            kout = pk as usize;
+            idx = pi as usize;
         }
     }
     bounds.reverse();

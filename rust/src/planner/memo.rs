@@ -198,6 +198,7 @@ impl FrontierMemo {
             // drive the DP out of bounds; a mismatched entry is rebuilt
             // and overwritten below instead.
             if entry.frontier.min_m.len() == costs.m.len() {
+                // relaxed: monotone hit/miss statistics; no memory is published through them.
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 if entry.preloaded {
                     self.persisted_hits.fetch_add(1, Ordering::Relaxed);
@@ -249,11 +250,13 @@ impl FrontierMemo {
 
     /// `(hits, misses)` since construction.
     pub fn stats(&self) -> (usize, usize) {
+        // relaxed: monotone hit/miss statistics; no memory is published through them.
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 
     /// Hits served by entries restored from a persisted snapshot.
     pub fn persisted_hits(&self) -> usize {
+        // relaxed: monotone hit/miss statistics; no memory is published through them.
         self.persisted_hits.load(Ordering::Relaxed)
     }
 

@@ -30,8 +30,10 @@ pub use uop::{uop, uop_with, CandidateLog, PlanEvent, SolveHooks, UopResult};
 use crate::cost::CostMatrices;
 use crate::strategy::IntraStrategy;
 
-/// Which solving engine the UOP dispatches to.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Which solving engine the UOP dispatches to. `Ord` because it is part
+/// of the service's outcome-cache key, which lives in a deterministic
+/// ordered map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Engine {
     /// Chain solver when the graph is a chain, MIQP otherwise.
     Auto,

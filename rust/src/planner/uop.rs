@@ -284,6 +284,7 @@ pub fn uop_with(
         for _ in 0..workers {
             scope.spawn(|| {
                 loop {
+                    // relaxed: pure ticket dispenser — each worker takes a unique index; results are published through the mutex.
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= prepared.len() {
                         break;
@@ -314,6 +315,8 @@ pub fn uop_with(
                     // NaN would stick) nor pollutes the incumbent.
                     let plan = plan.filter(|p| !p.est_tpi.is_nan());
                     if let Some(p) = &plan {
+                        // relaxed: the incumbent is a monotone pruning hint; a
+                        // stale read elsewhere only weakens the cut.
                         incumbent.fetch_min(p.est_tpi.to_bits(), Ordering::Relaxed);
                     }
                     let log = CandidateLog {

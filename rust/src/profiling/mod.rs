@@ -17,7 +17,7 @@
 #[cfg(feature = "pjrt")]
 pub mod measured;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::ClusterEnv;
 use crate::graph::{Dtype, Graph};
@@ -28,7 +28,11 @@ pub struct Profile {
     /// The environment the profile was taken on.
     pub env: ClusterEnv,
     /// Forward time per sample, by `(layer type_key, tp_size)` (seconds).
-    pub fwd_time: HashMap<(String, usize), f64>,
+    /// Deterministic map: [`Profile::fwd_time_per_sample`]'s nearest-degree
+    /// fallback iterates this table, and an equidistant tie (e.g. `tp=3`
+    /// between profiled 2 and 4) must resolve identically on every
+    /// machine or plan costs drift across peers.
+    pub fwd_time: BTreeMap<(String, usize), f64>,
     /// Computation–communication overlap coefficient in [0, 1]: the
     /// fraction of overlappable collective time hidden under compute.
     pub ccoc: f64,
@@ -55,7 +59,7 @@ impl Profile {
     /// Analytic profiling backend: synthesize the profiling tables from the
     /// cluster description and the graph's FLOP counts.
     pub fn analytic(env: &ClusterEnv, graph: &Graph) -> Profile {
-        let mut fwd_time = HashMap::new();
+        let mut fwd_time = BTreeMap::new();
         let n = env.total_devices();
         for layer in &graph.layers {
             let mut tp = 1usize;
@@ -95,7 +99,11 @@ impl Profile {
         if let Some(&t) = self.fwd_time.get(&(type_key.to_string(), tp)) {
             return t;
         }
-        // nearest profiled tp, scaled
+        // Nearest profiled tp, scaled. The table is a BTreeMap, so this
+        // scan visits keys in ascending order and the `<=` tie-break
+        // deterministically keeps the *smaller* of two equidistant
+        // degrees — under HashMap iteration the winner depended on hash
+        // order and equidistant ties produced different costs per process.
         let mut best: Option<(usize, f64)> = None;
         for ((k, ktp), &t) in &self.fwd_time {
             if k == type_key {

@@ -127,7 +127,7 @@ impl Snapshot {
         for (key, frontier) in service.frontiers.export() {
             snap.frontiers.insert(key, frontier);
         }
-        for (key, base) in service.bases.lock().unwrap().iter() {
+        for (key, base) in service.bases.lock().unwrap_or_else(|e| e.into_inner()).iter() {
             snap.bases.insert(*key, base.clone());
         }
         snap
@@ -145,7 +145,7 @@ impl Snapshot {
         }
         let mut new_bases = 0usize;
         {
-            let mut cache = service.bases.lock().unwrap();
+            let mut cache = service.bases.lock().unwrap_or_else(|e| e.into_inner());
             for (key, base) in &self.bases {
                 if let std::collections::hash_map::Entry::Vacant(e) = cache.entry(*key) {
                     e.insert(base.clone());

@@ -72,7 +72,7 @@ pub use ring::{parse_peer_list, Fleet, Ring};
 pub use server::{Server, ServerOptions};
 pub use snapshot::LoadOutcome;
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -215,8 +215,9 @@ pub fn workload_fingerprint_tagged(kind: WorkloadKind, env: &ClusterEnv, graph: 
 }
 
 /// Everything besides the workload content that determines a solve's
-/// outcome — the completed-outcome cache key.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// outcome — the completed-outcome cache key. `Ord` so the cache can use
+/// a deterministic ordered map (eviction scans iterate it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 struct OutcomeKey {
     fp: u64,
     batch: usize,
@@ -250,13 +251,18 @@ struct OutcomeCache {
     capacity: usize,
     /// Monotonic access clock; entries remember their last touch.
     tick: u64,
-    map: HashMap<OutcomeKey, (Outcome, u64)>,
+    /// Ordered map, not `HashMap`: the eviction scan below iterates all
+    /// entries, and with hash order the victim among policy-ties would
+    /// differ per process. (Touch ticks are unique, so ties cannot occur
+    /// today — the ordered map keeps that invariant-by-construction
+    /// rather than by accident, and satisfies `float-determinism`.)
+    map: BTreeMap<OutcomeKey, (Outcome, u64)>,
     evictions: usize,
 }
 
 impl OutcomeCache {
     fn new(capacity: usize) -> OutcomeCache {
-        OutcomeCache { capacity, tick: 0, map: HashMap::new(), evictions: 0 }
+        OutcomeCache { capacity, tick: 0, map: BTreeMap::new(), evictions: 0 }
     }
 
     /// Replay lookup; a hit refreshes the entry's recency.
@@ -487,6 +493,7 @@ impl PlannerService {
     pub fn stats(&self) -> ServiceStats {
         let (frontier_hits, _) = self.frontiers.stats();
         ServiceStats {
+            // relaxed: lifetime counters — each is independently monotone; the snapshot need not be a consistent cut.
             requests: self.totals.requests.load(Ordering::Relaxed),
             profile_hits: self.totals.profile_hits.load(Ordering::Relaxed),
             profile_misses: self.totals.profile_misses.load(Ordering::Relaxed),
@@ -494,12 +501,12 @@ impl PlannerService {
             base_misses: self.totals.base_misses.load(Ordering::Relaxed),
             plan_hits: self.totals.plan_hits.load(Ordering::Relaxed),
             plan_misses: self.totals.plan_misses.load(Ordering::Relaxed),
-            cached_profiles: self.profiles.lock().unwrap().len(),
-            cached_bases: self.bases.lock().unwrap().len(),
-            cached_plans: self.outcomes.lock().unwrap().len(),
+            cached_profiles: self.profiles.lock().unwrap_or_else(|e| e.into_inner()).len(),
+            cached_bases: self.bases.lock().unwrap_or_else(|e| e.into_inner()).len(),
+            cached_plans: self.outcomes.lock().unwrap_or_else(|e| e.into_inner()).len(),
             cached_frontiers: self.frontiers.len(),
             frontier_hits,
-            outcome_evictions: self.outcomes.lock().unwrap().evictions,
+            outcome_evictions: self.outcomes.lock().unwrap_or_else(|e| e.into_inner()).evictions,
             connections: self.totals.connections.load(Ordering::Relaxed),
             snapshots_written: self.totals.snapshots_written.load(Ordering::Relaxed),
             persisted_frontiers_loaded: self
@@ -521,16 +528,19 @@ impl PlannerService {
 
     /// Record one accepted socket connection (called by [`Server`]).
     pub(crate) fn note_connection(&self) {
+        // relaxed: monotone stats counter; no other memory is published through it.
         self.totals.connections.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one load-shed (`busy`) response (called by [`Server`]).
     pub(crate) fn note_shed(&self) {
+        // relaxed: monotone stats counter; no other memory is published through it.
         self.totals.requests_shed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one accept-loop error (called by [`Server`]'s backoff path).
     pub(crate) fn note_accept_error(&self) {
+        // relaxed: monotone stats counter; no other memory is published through it.
         self.totals.accept_errors.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -539,22 +549,26 @@ impl PlannerService {
     /// service so the shutdown summary reflects them.
     pub fn note_sync_retries(&self, n: usize) {
         if n > 0 {
+            // relaxed: monotone stats counter; no other memory is published through it.
             self.totals.sync_retries.fetch_add(n, Ordering::Relaxed);
         }
     }
 
     /// Record one answered warm-forward to the ring owner (ISSUE 8).
     pub(crate) fn note_forward(&self) {
+        // relaxed: monotone stats counter; no other memory is published through it.
         self.totals.forwards.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one forward that degraded to a local solve.
     pub(crate) fn note_forward_fallback(&self) {
+        // relaxed: monotone stats counter; no other memory is published through it.
         self.totals.forward_fallbacks.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one completed gossip exchange that merged `n` entries.
     pub(crate) fn note_gossip(&self, n: usize) {
+        // relaxed: monotone stats counter; no other memory is published through it.
         self.totals.gossip_rounds.fetch_add(1, Ordering::Relaxed);
         self.totals.gossip_merged_entries.fetch_add(n, Ordering::Relaxed);
     }
@@ -566,7 +580,7 @@ impl PlannerService {
     /// counts ⇒ nothing new to persist; the unconditional shutdown
     /// snapshot covers the overwrite case.
     pub fn persistable_entries(&self) -> (usize, usize) {
-        (self.frontiers.len(), self.bases.lock().unwrap().len())
+        (self.frontiers.len(), self.bases.lock().unwrap_or_else(|e| e.into_inner()).len())
     }
 
     /// The cached profile for a workload (building and caching it on
@@ -580,11 +594,11 @@ impl PlannerService {
     /// lock, so two racing cold requests may both build — the results are
     /// bit-identical and the second insert is a no-op overwrite.
     fn profile_for(&self, fp: u64, env: &ClusterEnv, graph: &Graph) -> (Arc<Profile>, bool) {
-        if let Some(p) = self.profiles.lock().unwrap().get(&fp) {
+        if let Some(p) = self.profiles.lock().unwrap_or_else(|e| e.into_inner()).get(&fp) {
             return (p.clone(), true);
         }
         let built = Arc::new(Profile::analytic(env, graph));
-        self.profiles.lock().unwrap().insert(fp, built.clone());
+        self.profiles.lock().unwrap_or_else(|e| e.into_inner()).insert(fp, built.clone());
         (built, false)
     }
 
@@ -609,6 +623,7 @@ impl PlannerService {
         on_event: Option<&(dyn Fn(&PlanEvent) + Sync)>,
     ) -> PlanResponse {
         let t0 = Instant::now();
+        // relaxed: monotone stats counter; no other memory is published through it.
         self.totals.requests.fetch_add(1, Ordering::Relaxed);
 
         // Field validation before anything is built from the request
@@ -637,6 +652,7 @@ impl PlannerService {
         let (profile, prof_hit) = self.profile_for(fp, &env, &graph);
         let profile_secs = if prof_hit { 0.0 } else { t_prof.elapsed().as_secs_f64() };
         if prof_hit {
+            // relaxed: monotone stats counter; no other memory is published through it.
             self.totals.profile_hits.fetch_add(1, Ordering::Relaxed);
         } else {
             self.totals.profile_misses.fetch_add(1, Ordering::Relaxed);
@@ -645,7 +661,8 @@ impl PlannerService {
         // Completed-outcome fast path: the planner is deterministic, so a
         // strictly repeated request replays the stored result.
         let outcome_key = PlannerService::outcome_key_for(fp, req);
-        if let Some(hit) = self.outcomes.lock().unwrap().get(&outcome_key) {
+        if let Some(hit) = self.outcomes.lock().unwrap_or_else(|e| e.into_inner()).get(&outcome_key) {
+            // relaxed: monotone stats counter; no other memory is published through it.
             self.totals.plan_hits.fetch_add(1, Ordering::Relaxed);
             return PlanResponse {
                 id: req.id.clone(),
@@ -707,13 +724,14 @@ impl PlannerService {
             // Batch-generic bases: the key carries no batch dimension, so
             // requests for every mini-batch of one workload share them.
             let key = (fp, pp);
-            if let Some(b) = self.bases.lock().unwrap().get(&key) {
+            if let Some(b) = self.bases.lock().unwrap_or_else(|e| e.into_inner()).get(&key) {
                 // Shape guard (ISSUE 4): a base restored from a damaged
                 // state snapshot could carry the wrong layer/edge counts
                 // — checksums catch corruption, not a buggy writer — and
                 // materialising it would drive the solver out of bounds.
                 // A mismatched entry is rebuilt (and overwritten) below.
                 if b.num_layers() == graph.num_layers() && b.num_edges() == graph.edges.len() {
+                    // relaxed: monotone stats counter; no other memory is published through it.
                     base_hits.fetch_add(1, Ordering::Relaxed);
                     self.totals.base_hits.fetch_add(1, Ordering::Relaxed);
                     return b.clone();
@@ -722,7 +740,7 @@ impl PlannerService {
             let built = Arc::new(CostBase::new(&profile, &graph, pp));
             base_misses.fetch_add(1, Ordering::Relaxed);
             self.totals.base_misses.fetch_add(1, Ordering::Relaxed);
-            self.bases.lock().unwrap().insert(key, built.clone());
+            self.bases.lock().unwrap_or_else(|e| e.into_inner()).insert(key, built.clone());
             built
         };
         let hooks = SolveHooks {
@@ -760,7 +778,7 @@ impl PlannerService {
         // the request deadline measured from a *later* start than the
         // token's, so a self-truncated solve implies an expired token.
         if token.cause().is_none() {
-            self.outcomes.lock().unwrap().insert(
+            self.outcomes.lock().unwrap_or_else(|e| e.into_inner()).insert(
                 outcome_key,
                 Outcome {
                     status,
@@ -784,6 +802,7 @@ impl PlannerService {
             cache: CacheStats {
                 profile_hits: prof_hit as usize,
                 profile_misses: !prof_hit as usize,
+                // relaxed: advisory per-request statistics.
                 base_hits: base_hits.load(Ordering::Relaxed),
                 base_misses: base_misses.load(Ordering::Relaxed),
                 plan_hits: 0,
@@ -820,6 +839,7 @@ impl PlannerService {
         std::thread::scope(|scope| {
             for _ in 0..workers {
                 scope.spawn(|| loop {
+                    // relaxed: pure ticket dispenser — each worker takes a unique index; results are published through the mutex.
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= reqs.len() {
                         break;
@@ -829,11 +849,11 @@ impl PlannerService {
                         req.threads = Some(threads_each);
                     }
                     let resp = self.plan_cancellable(&req, cancel, None);
-                    out.lock().unwrap().push((i, resp));
+                    out.lock().unwrap_or_else(|e| e.into_inner()).push((i, resp));
                 });
             }
         });
-        let mut rows = out.into_inner().unwrap();
+        let mut rows = out.into_inner().unwrap_or_else(|e| e.into_inner());
         rows.sort_by_key(|(i, _)| *i);
         rows.into_iter().map(|(_, r)| r).collect()
     }
@@ -845,6 +865,7 @@ impl PlannerService {
 
     /// Snapshots written so far (feeds the metadata `seq` stamp).
     fn snapshots_written(&self) -> usize {
+        // relaxed: monotone stats counter; no other memory is published through it.
         self.totals.snapshots_written.load(Ordering::Relaxed)
     }
 
@@ -881,6 +902,7 @@ impl PlannerService {
     ) -> Result<(std::path::PathBuf, snapshot::MergedStamp), String> {
         let report = snapshot::save(self, dir, tag)?;
         let (new_frontiers, new_bases) = report.absorbed;
+        // relaxed: monotone stats counter; no other memory is published through it.
         self.totals.snapshots_written.fetch_add(1, Ordering::Relaxed);
         self.totals.persisted_frontiers_loaded.fetch_add(new_frontiers, Ordering::Relaxed);
         self.totals.persisted_bases_loaded.fetch_add(new_bases, Ordering::Relaxed);
@@ -896,6 +918,7 @@ impl PlannerService {
     pub fn load_state(&self, dir: &std::path::Path) -> LoadOutcome {
         let out = snapshot::load(self, dir);
         if let LoadOutcome::Loaded { frontiers, bases } = &out {
+            // relaxed: monotone stats counter; no other memory is published through it.
             self.totals.persisted_frontiers_loaded.fetch_add(*frontiers, Ordering::Relaxed);
             self.totals.persisted_bases_loaded.fetch_add(*bases, Ordering::Relaxed);
         }
@@ -914,6 +937,7 @@ impl PlannerService {
     /// newly added, which also feed the `persisted_*_loaded` counters.
     pub fn merge_snapshot(&self, snap: &Snapshot) -> (usize, usize) {
         let (new_frontiers, new_bases) = snap.apply_to(self);
+        // relaxed: monotone stats counter; no other memory is published through it.
         self.totals.persisted_frontiers_loaded.fetch_add(new_frontiers, Ordering::Relaxed);
         self.totals.persisted_bases_loaded.fetch_add(new_bases, Ordering::Relaxed);
         (new_frontiers, new_bases)
@@ -925,7 +949,7 @@ impl PlannerService {
     /// always served locally, whoever owns it on the ring. LRU order is
     /// not perturbed.
     pub fn outcome_is_cached(&self, fp: u64, req: &PlanRequest) -> bool {
-        self.outcomes.lock().unwrap().contains(&PlannerService::outcome_key_for(fp, req))
+        self.outcomes.lock().unwrap_or_else(|e| e.into_inner()).contains(&PlannerService::outcome_key_for(fp, req))
     }
 
     /// Adopt a peer-computed response into the completed-outcome cache,
@@ -941,7 +965,7 @@ impl PlannerService {
         if !matches!(resp.status, Status::Ok | Status::Infeasible) {
             return false;
         }
-        self.outcomes.lock().unwrap().insert(
+        self.outcomes.lock().unwrap_or_else(|e| e.into_inner()).insert(
             PlannerService::outcome_key_for(fp, req),
             Outcome {
                 status: resp.status,

@@ -453,6 +453,7 @@ impl Server {
                         // connection cap: shed on the accepting thread —
                         // one best-effort busy frame, then close. Bounded
                         // time (no planner work), bounded threads.
+                        // relaxed: admission is advisory — a few racing accepts may overshoot the cap briefly and are shed; the counter is not a synchronization point.
                         if active.load(Ordering::Relaxed) >= opts.max_connections {
                             service.note_shed();
                             shed_connection(stream, opts.max_connections, "connections");
@@ -696,6 +697,7 @@ fn handle_connection(
                             service,
                             &line,
                             shutdown,
+                            // relaxed: the active-connection figure in responses is informational; an off-by-a-few read is fine.
                             active.load(Ordering::Relaxed),
                             ctx,
                         );

@@ -49,6 +49,7 @@ struct Inner {
 
 impl Inner {
     fn cancelled(&self) -> bool {
+        // relaxed: one-way latch — a late observation only delays cooperative stop by one poll.
         if self.cancelled.load(Ordering::Relaxed) {
             return true;
         }
@@ -110,6 +111,7 @@ impl CancelToken {
     /// Request cancellation (idempotent; visible to all clones and
     /// children).
     pub fn cancel(&self) {
+        // relaxed: one-way latch store; pollers tolerate bounded lag, and no data rides on the flag.
         self.inner.cancelled.store(true, Ordering::Relaxed);
     }
 

@@ -317,6 +317,7 @@ impl ArmedPlan {
                     continue;
                 }
             }
+            // relaxed: monotone stats counter; no other memory is published through it.
             INJECTED_TOTAL.fetch_add(1, Ordering::Relaxed);
             return Some(match &rule.action {
                 Action::Fail => Injected::Error(std::io::Error::new(
@@ -387,6 +388,7 @@ fn env_plan() -> Option<Arc<ArmedPlan>> {
 /// simulate. With no plan armed this is one atomic load.
 pub fn check(site: Site) -> Option<Injected> {
     ENV_INIT.call_once(init_from_env);
+    // relaxed: fast-path gate only — when it reads true, the ARMED mutex below provides the real synchronization; a stale false merely skips injection for one call.
     if !ACTIVE.load(Ordering::Relaxed) {
         return None;
     }
@@ -397,6 +399,7 @@ pub fn check(site: Site) -> Option<Injected> {
 /// Lifetime count of faults injected in this process (monotonic; the
 /// serving front end surfaces it as `ServiceStats::faults_injected`).
 pub fn injected_total() -> usize {
+    // relaxed: monotone stats counter; no other memory is published through it.
     INJECTED_TOTAL.load(Ordering::Relaxed)
 }
 

@@ -202,6 +202,7 @@ impl DirLock {
             let token = format!(
                 "{}-{}",
                 std::process::id(),
+                // relaxed: uniqueness of the token is all that matters; the counter orders nothing.
                 SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
             );
             loop {

@@ -57,6 +57,7 @@ impl ThreadBudget {
 
     /// Permits currently unleased.
     pub fn available(&self) -> usize {
+        // relaxed: the permit count is self-contained state — the CAS/fetch gives atomicity, and no other memory is published through it.
         self.available.load(Ordering::Relaxed)
     }
 
@@ -64,6 +65,7 @@ impl ThreadBudget {
     /// value in `0..=want`; callers must run correctly (serially) on a
     /// zero grant.
     pub fn lease(&self, want: usize) -> Lease<'_> {
+        // relaxed: the permit count is self-contained state — the CAS/fetch gives atomicity, and no other memory is published through it.
         let mut cur = self.available.load(Ordering::Relaxed);
         loop {
             let take = cur.min(want);
@@ -84,6 +86,7 @@ impl ThreadBudget {
 
     fn release(&self, n: usize) {
         if n > 0 {
+            // relaxed: the permit count is self-contained state — the CAS/fetch gives atomicity, and no other memory is published through it.
             self.available.fetch_add(n, Ordering::Relaxed);
         }
     }
@@ -102,12 +105,14 @@ pub struct Lease<'a> {
 impl Lease<'_> {
     /// Permits this lease currently holds.
     pub fn granted(&self) -> usize {
+        // relaxed: the permit count is self-contained state — the CAS/fetch gives atomicity, and no other memory is published through it.
         self.held.load(Ordering::Relaxed)
     }
 
     /// Return one permit early (idempotent at zero). `true` if a permit
     /// was actually returned.
     pub fn release_one(&self) -> bool {
+        // relaxed: the permit count is self-contained state — the CAS/fetch gives atomicity, and no other memory is published through it.
         let mut cur = self.held.load(Ordering::Relaxed);
         loop {
             if cur == 0 {
@@ -131,6 +136,7 @@ impl Lease<'_> {
 
 impl Drop for Lease<'_> {
     fn drop(&mut self) {
+        // relaxed: the permit count is self-contained state — the CAS/fetch gives atomicity, and no other memory is published through it.
         self.budget.release(self.held.swap(0, Ordering::Relaxed));
     }
 }

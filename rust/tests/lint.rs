@@ -1,0 +1,125 @@
+//! The lint engine, turned on itself.
+//!
+//! Three layers of assurance:
+//!
+//! 1. **The tree is clean** — `lint_tree` over the real `rust/src/` with
+//!    the repo's `lint.allow` must report zero diagnostics. This is the
+//!    same check CI runs via the `uniap_lint` binary; having it inside
+//!    `cargo test` means tier-1 alone catches regressions.
+//! 2. **The fixtures fire** — each deliberately-violating fixture under
+//!    `rust/src/analysis/fixtures/` produces exactly the expected
+//!    diagnostics at the expected positions, and each clean twin produces
+//!    none. Fixtures are linted under synthetic paths because rule scope
+//!    is path-driven.
+//! 3. **The allowlist is honest** — the repo `lint.allow` parses,
+//!    round-trips, and carries no stale entries: every entry must
+//!    suppress at least one diagnostic of the unfiltered tree.
+
+use std::path::PathBuf;
+
+use uniap::analysis::{lint_source, lint_tree, Allowlist};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn repo_allowlist() -> Allowlist {
+    let path = repo_root().join("lint.allow");
+    let text = std::fs::read_to_string(&path).expect("repo lint.allow exists");
+    match Allowlist::parse(&text) {
+        Ok(a) => a,
+        Err((line, msg)) => panic!("lint.allow:{line}: {msg}"),
+    }
+}
+
+#[test]
+fn tree_is_lint_clean_under_repo_allowlist() {
+    let src = repo_root().join("rust/src");
+    let report = lint_tree(&src, &repo_allowlist()).expect("tree walk succeeds");
+    let rendered = report.render();
+    assert!(report.diagnostics.is_empty(), "rust/src must lint clean:\n{rendered}");
+    let n = report.files_checked;
+    assert!(n > 40, "walk saw only {n} files — wrong root?");
+    assert!(report.suppressed > 0, "lint.allow should suppress something");
+}
+
+#[test]
+fn allowlist_round_trips_and_has_no_stale_entries() {
+    let allow = repo_allowlist();
+    let round = Allowlist::parse(&allow.serialize()).expect("serialized form re-parses");
+    assert_eq!(allow, round, "parse of serialize is the identity on entries");
+
+    // Unfiltered tree: every allowlist entry must still pay its way.
+    let src = repo_root().join("rust/src");
+    let raw = lint_tree(&src, &Allowlist::default()).expect("tree walk succeeds");
+    for entry in &allow.entries {
+        let single = Allowlist { entries: vec![entry.clone()] };
+        let used = raw
+            .diagnostics
+            .iter()
+            .any(|d| single.suppresses(d.rule.id(), &d.file, &d.snippet));
+        let label = format!("{} {} {}", entry.rule, entry.path, entry.needle);
+        assert!(used, "stale lint.allow entry (suppresses nothing): {label}");
+    }
+}
+
+/// Assert `source` linted under `path` yields exactly `expected`
+/// `(line, col, rule-id)` triples, in order.
+fn expect_diags(path: &str, source: &str, expected: &[(usize, usize, &str)]) {
+    let diags = lint_source(path, source);
+    let got: Vec<(usize, usize, &str)> =
+        diags.iter().map(|d| (d.line, d.col, d.rule.id())).collect();
+    let rendered: Vec<String> = diags.iter().map(|d| d.render()).collect();
+    let rendered = rendered.join("\n");
+    assert_eq!(got, expected, "wrong diagnostics for {path}:\n{rendered}");
+}
+
+#[test]
+fn fixture_float_determinism() {
+    let bad = include_str!("../src/analysis/fixtures/float_bad.rs");
+    expect_diags("cost/float_bad.rs", bad, &[(8, 15, "float-determinism")]);
+    let ok = include_str!("../src/analysis/fixtures/float_ok.rs");
+    expect_diags("metrics/float_ok.rs", ok, &[]);
+}
+
+#[test]
+fn fixture_no_panic_serving() {
+    let bad = include_str!("../src/analysis/fixtures/panic_bad.rs");
+    let want = [(4, 31, "no-panic-serving"), (9, 11, "no-panic-serving")];
+    expect_diags("service/panic_bad.rs", bad, &want);
+    let ok = include_str!("../src/analysis/fixtures/panic_ok.rs");
+    expect_diags("service/panic_ok.rs", ok, &[]);
+    // Scope is path-driven: the same violating source is fine outside the
+    // serving layer.
+    expect_diags("metrics/panic_bad.rs", bad, &[]);
+}
+
+#[test]
+fn fixture_atomics_hygiene() {
+    let bad = include_str!("../src/analysis/fixtures/atomics_bad.rs");
+    let want = [(7, 26, "atomics-hygiene"), (11, 18, "atomics-hygiene")];
+    expect_diags("util/atomics_bad.rs", bad, &want);
+    // The load-into-`if` site gets the sharper control-flow message.
+    let diags = lint_source("util/atomics_bad.rs", bad);
+    let msg = &diags[1].message;
+    assert!(msg.contains("control flow"), "expected control-flow wording: {msg}");
+    let ok = include_str!("../src/analysis/fixtures/atomics_ok.rs");
+    expect_diags("util/atomics_ok.rs", ok, &[]);
+}
+
+#[test]
+fn fixture_wall_clock() {
+    let bad = include_str!("../src/analysis/fixtures/wallclock_bad.rs");
+    expect_diags("planner/wallclock_bad.rs", bad, &[(6, 14, "wall-clock")]);
+    let ok = include_str!("../src/analysis/fixtures/wallclock_ok.rs");
+    expect_diags("planner/wallclock_ok.rs", ok, &[]);
+}
+
+#[test]
+fn fixture_sentinel_ban() {
+    let bad = include_str!("../src/analysis/fixtures/sentinel_bad.rs");
+    let want = [(4, 5, "sentinel-ban"), (8, 5, "sentinel-ban")];
+    expect_diags("planner/sentinel_bad.rs", bad, &want);
+    let ok = include_str!("../src/analysis/fixtures/sentinel_ok.rs");
+    expect_diags("planner/sentinel_ok.rs", ok, &[]);
+}
