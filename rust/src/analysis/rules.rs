@@ -330,12 +330,15 @@ fn bare_assign(code: &str) -> Option<usize> {
 /// no-panic-serving: panics are forbidden on the request path — a panic
 /// in a connection handler kills availability, and a panic while a lock
 /// is held poisons shared caches. Scope: `service/`, `dag/` (request
-/// parsing/lowering), `util/net.rs`, `util/fsio.rs`. The indexing
-/// sub-rule skips `dag/`: its indices are validated once at the IR
-/// boundary and re-checking every hop would drown the signal.
+/// parsing/lowering), `cluster/` (inline cluster specs reach
+/// `stage_ranks` and friends from request-driven planning — ISSUE 10),
+/// `util/net.rs`, `util/fsio.rs`. The indexing sub-rule skips `dag/`:
+/// its indices are validated once at the IR boundary and re-checking
+/// every hop would drown the signal.
 fn no_panic_serving(path: &str, s: &Scrubbed, out: &mut Vec<Diagnostic>) {
     let in_scope = path.starts_with("service/")
         || path.starts_with("dag/")
+        || path.starts_with("cluster/")
         || path == "util/net.rs"
         || path == "util/fsio.rs";
     if !in_scope {

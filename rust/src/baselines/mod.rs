@@ -214,7 +214,7 @@ pub fn deepspeed_zero3(profile: &Profile, graph: &Graph, batch: usize) -> Baseli
         let placement = vec![0usize; graph.num_layers()];
         let choice = vec![k; graph.num_layers()];
         let mem = crate::cost::stage_memory(graph, &costs, &placement, &choice);
-        if mem[0] > costs.mem_limit {
+        if mem[0] > costs.stage_limit(0) {
             return None;
         }
         let tpi = crate::cost::objective_tpi(graph, &costs, &placement, &choice);

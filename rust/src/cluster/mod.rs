@@ -1,5 +1,5 @@
 //! Cluster model: devices, links, hierarchical topology, and the paper's
-//! five evaluation environments (EnvA–EnvE).
+//! five evaluation environments (EnvA–EnvE) plus the heterogeneous EnvF.
 //!
 //! The paper profiles real hardware (§3.1); this reproduction has no GPUs,
 //! so the cluster model is the *simulated substrate*: a parametric
@@ -9,13 +9,27 @@
 //! tables the real profiler would measure. DESIGN.md documents this
 //! substitution.
 //!
-//! Rank layout: global rank = `node * gpus_per_node + local`, and local
-//! ranks are grouped in blocks of `group_size` connected by the fast link
+//! Rank layout: global rank = node start + local rank, and local ranks are
+//! grouped in blocks of `group_size` connected by the fast link
 //! (Appendix F, Figure 8: TITAN Xp pairs behind a PCIe switch, QPI between
-//! the pairs).
+//! the pairs). Groups are scoped to their node: a group never spans a node
+//! boundary, even when `group_size` does not divide the node's GPU count.
+//!
+//! Heterogeneity (AMP-style, beyond the paper's Appendix H scope): an
+//! optional per-node device table (`node_table`) describes mixed GPU
+//! generations and uneven node sizes. When the table is empty the cluster
+//! is the legacy homogeneous mesh described by `device` × `nodes` ×
+//! `gpus_per_node`, and every consumer lowers to bit-identical arithmetic.
+//! When populated, `device` remains the *reference* spec that profiling is
+//! anchored on (choose the fastest generation), and stage cost/memory
+//! bottleneck on the slowest/smallest member of each rank block — the same
+//! rule `tier_of` already applies to links.
+
+use crate::util::fsio::{f64_from_hex, f64_to_hex};
+use crate::util::json::Json;
 
 /// Peak capabilities of one accelerator.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DeviceSpec {
     /// Marketing name (reporting only).
     pub name: String,
@@ -27,17 +41,67 @@ pub struct DeviceSpec {
     pub mem_bytes: f64,
 }
 
-/// A cluster: homogeneous devices in a two-level (group / node) hierarchy.
-#[derive(Debug, Clone)]
+impl DeviceSpec {
+    /// Peak FLOP/s for a dtype.
+    pub fn peak_flops(&self, dtype: crate::graph::Dtype) -> f64 {
+        match dtype {
+            crate::graph::Dtype::Fp32 => self.flops_f32,
+            crate::graph::Dtype::Fp16Mixed => self.flops_f16,
+        }
+    }
+
+    /// Canonical JSON (floats as bit-hex so round-trips are exact).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("name", self.name.as_str())
+            .field("flops_f32", f64_to_hex(self.flops_f32))
+            .field("flops_f16", f64_to_hex(self.flops_f16))
+            .field("mem_bytes", f64_to_hex(self.mem_bytes))
+    }
+
+    /// Parse from JSON; floats accept plain numbers or bit-hex strings.
+    pub fn from_json(v: &Json) -> Result<DeviceSpec, String> {
+        let name = v
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or("device: missing string `name`")?
+            .to_string();
+        Ok(DeviceSpec {
+            name,
+            flops_f32: float_field(v, "flops_f32")?,
+            flops_f16: float_field(v, "flops_f16")?,
+            mem_bytes: float_field(v, "mem_bytes")?,
+        })
+    }
+}
+
+/// One machine of a heterogeneous cluster: its device generation and how
+/// many of them it carries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    /// Device generation installed in this node.
+    pub device: DeviceSpec,
+    /// Accelerators in this node (may differ per node).
+    pub gpus: usize,
+}
+
+/// A cluster: devices in a two-level (group / node) hierarchy.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterEnv {
-    /// Environment name (EnvA…EnvE or custom).
+    /// Environment name (EnvA…EnvF or custom).
     pub name: String,
     /// Number of machines.
     pub nodes: usize,
-    /// Accelerators per machine.
+    /// Accelerators per machine (homogeneous default; see `node_table`).
     pub gpus_per_node: usize,
-    /// Device spec (homogeneous — Appendix H scopes out heterogeneity).
+    /// Reference device spec. For homogeneous clusters this is *the*
+    /// device; for heterogeneous ones it anchors profiling (pick the
+    /// fastest generation so per-stage scales are ≥ 1).
     pub device: DeviceSpec,
+    /// Per-node overrides (mixed generations, uneven sizes). Empty means
+    /// homogeneous: `nodes` × `gpus_per_node` × `device`. When non-empty
+    /// its length must equal `nodes` and it defines the rank layout.
+    pub node_table: Vec<NodeSpec>,
     /// Devices per fast-link group within a node.
     pub group_size: usize,
     /// Per-direction bandwidth inside a group (PCIe switch / NVLink), B/s.
@@ -60,27 +124,99 @@ pub enum LinkTier {
     InterNode,
 }
 
+/// Read an `f64` field that may be a plain JSON number or a bit-hex string
+/// (the canonical emission; exact round-trip).
+fn float_field(v: &Json, key: &str) -> Result<f64, String> {
+    let field = v.get(key).ok_or_else(|| format!("missing numeric `{key}`"))?;
+    if let Json::Num(x) = field {
+        return Ok(*x);
+    }
+    match field.as_str() {
+        Some(s) => f64_from_hex(s).map_err(|e| format!("`{key}`: {e}")),
+        None => Err(format!("`{key}` must be a number or bit-hex string")),
+    }
+}
+
 impl ClusterEnv {
     /// Total accelerator count `n`.
     pub fn total_devices(&self) -> usize {
-        self.nodes * self.gpus_per_node
+        if self.node_table.is_empty() {
+            self.nodes * self.gpus_per_node
+        } else {
+            self.node_table.iter().map(|n| n.gpus).sum()
+        }
+    }
+
+    /// True when a per-node device table is present (the heterogeneous
+    /// code paths engage; with a repeated-entry table they reproduce the
+    /// homogeneous arithmetic bit-identically).
+    pub fn is_heterogeneous(&self) -> bool {
+        !self.node_table.is_empty()
+    }
+
+    /// GPU count of one node.
+    pub fn gpus_in(&self, node: usize) -> usize {
+        self.node_table
+            .get(node)
+            .map(|n| n.gpus)
+            .unwrap_or(self.gpus_per_node)
     }
 
     /// Node index of a global rank.
     pub fn node_of(&self, rank: usize) -> usize {
-        rank / self.gpus_per_node
+        if self.node_table.is_empty() {
+            return rank / self.gpus_per_node;
+        }
+        let mut rest = rank;
+        for (i, node) in self.node_table.iter().enumerate() {
+            if rest < node.gpus {
+                return i;
+            }
+            rest -= node.gpus;
+        }
+        self.node_table.len().saturating_sub(1)
     }
 
-    /// Fast-link group index of a global rank (global group id).
+    /// Global rank of a node's first device.
+    pub fn node_start(&self, node: usize) -> usize {
+        if self.node_table.is_empty() {
+            return node * self.gpus_per_node;
+        }
+        self.node_table.iter().take(node).map(|n| n.gpus).sum()
+    }
+
+    /// Device spec of a global rank (reference spec when homogeneous).
+    pub fn device_of(&self, rank: usize) -> &DeviceSpec {
+        self.node_table
+            .get(self.node_of(rank))
+            .map(|n| &n.device)
+            .unwrap_or(&self.device)
+    }
+
+    /// Fast-link group index of a global rank.
+    ///
+    /// Group ids are node-scoped: `rank / group_size` would alias the last
+    /// partial group of a node with the first group of the next whenever
+    /// `group_size` does not divide the node's GPU count, claiming a
+    /// fast link across machines. Each node owns
+    /// `ceil(gpus / group_size)` group ids instead.
     pub fn group_of(&self, rank: usize) -> usize {
-        rank / self.group_size
+        let gs = self.group_size.max(1);
+        let node = self.node_of(rank);
+        let local = rank - self.node_start(node);
+        let groups_before: usize = (0..node)
+            .map(|i| (self.gpus_in(i) + gs - 1) / gs)
+            .sum();
+        groups_before + local / gs
     }
 
     /// The slowest link tier spanned by a set of ranks.
     pub fn tier_of(&self, ranks: &[usize]) -> LinkTier {
-        debug_assert!(!ranks.is_empty());
-        let n0 = self.node_of(ranks[0]);
-        let g0 = self.group_of(ranks[0]);
+        let Some(&first) = ranks.first() else {
+            return LinkTier::IntraGroup;
+        };
+        let n0 = self.node_of(first);
+        let g0 = self.group_of(first);
         let mut tier = LinkTier::IntraGroup;
         for &r in ranks {
             if self.node_of(r) != n0 {
@@ -145,12 +281,43 @@ impl ClusterEnv {
         bytes / self.tier_bw(tier) + self.tier_latency(tier)
     }
 
-    /// Peak FLOP/s for a dtype.
+    /// Peak FLOP/s of the *reference* device for a dtype (profiling anchor).
     pub fn peak_flops(&self, dtype: crate::graph::Dtype) -> f64 {
-        match dtype {
-            crate::graph::Dtype::Fp32 => self.device.flops_f32,
-            crate::graph::Dtype::Fp16Mixed => self.device.flops_f16,
+        self.device.peak_flops(dtype)
+    }
+
+    /// Compute slowdown of a stage's rank block relative to the reference
+    /// device: `max over members of ref_peak / member_peak`, clamped to
+    /// ≥ 1 — ring collectives bottleneck on the slowest link (`tier_of`),
+    /// and synchronous compute bottlenecks on the slowest member the same
+    /// way. Exactly `1.0` for homogeneous clusters and repeated-entry
+    /// tables, which keeps the legacy arithmetic bit-identical.
+    pub fn stage_comp_scale(&self, ranks: &[usize], dtype: crate::graph::Dtype) -> f64 {
+        let reference = self.device.peak_flops(dtype);
+        let mut scale = 1.0f64;
+        for &r in ranks {
+            let peak = self.device_of(r).peak_flops(dtype);
+            if peak > 0.0 {
+                let s = reference / peak;
+                if s > scale {
+                    scale = s;
+                }
+            }
         }
+        scale
+    }
+
+    /// Usable device memory of a stage's rank block: the *smallest* member
+    /// (every member holds the same shard sizes under DP/TP replication).
+    pub fn stage_mem_bytes(&self, ranks: &[usize]) -> f64 {
+        ranks
+            .iter()
+            .map(|&r| self.device_of(r).mem_bytes)
+            .fold(None, |acc: Option<f64>, m| match acc {
+                Some(cur) if cur <= m => Some(cur),
+                _ => Some(m),
+            })
+            .unwrap_or(self.device.mem_bytes)
     }
 
     /// Contiguous rank block assigned to pipeline stage `i` of `pp` stages.
@@ -159,25 +326,38 @@ impl ClusterEnv {
     /// consecutive stages crosses the cheapest possible boundary and
     /// intra-stage collectives stay within nodes whenever `n/pp` divides
     /// the node size — the layout the paper's profiler evaluates.
-    pub fn stage_ranks(&self, pp: usize, stage: usize) -> Vec<usize> {
+    ///
+    /// Errors (rather than panicking — this is reachable from
+    /// request-driven planning) when `pp` is zero, does not divide the
+    /// device count, or `stage` is out of range.
+    pub fn stage_ranks(&self, pp: usize, stage: usize) -> Result<Vec<usize>, String> {
         let n = self.total_devices();
-        assert!(pp >= 1 && n % pp == 0, "pp_size must divide device count");
-        assert!(stage < pp);
+        if pp < 1 {
+            return Err("pp_size must be at least 1".to_string());
+        }
+        if n % pp != 0 {
+            return Err(format!("pp_size {pp} must divide device count {n}"));
+        }
+        if stage >= pp {
+            return Err(format!("stage {stage} out of range for pp_size {pp}"));
+        }
         let per = n / pp;
-        (stage * per..(stage + 1) * per).collect()
+        Ok((stage * per..(stage + 1) * per).collect())
     }
 
     /// Ranks of the `t`-th TP group inside a stage block for a `(dp, tp)`
     /// factorisation: TP is innermost (consecutive ranks — fastest links),
     /// DP strides by `tp` (Appendix F case study layout).
     pub fn tp_group(&self, stage_ranks: &[usize], tp: usize, dp_index: usize) -> Vec<usize> {
-        stage_ranks[dp_index * tp..(dp_index + 1) * tp].to_vec()
+        stage_ranks.iter().copied().skip(dp_index * tp).take(tp).collect()
     }
 
     /// Ranks of the `k`-th DP group (one member per TP group).
     pub fn dp_group(&self, stage_ranks: &[usize], tp: usize, tp_index: usize) -> Vec<usize> {
-        let dp = stage_ranks.len() / tp;
-        (0..dp).map(|j| stage_ranks[j * tp + tp_index]).collect()
+        if tp == 0 {
+            return Vec::new();
+        }
+        stage_ranks.iter().copied().skip(tp_index).step_by(tp).collect()
     }
 
     // ---- paper environments -------------------------------------------
@@ -194,6 +374,7 @@ impl ClusterEnv {
                 flops_f16: 125e12,
                 mem_bytes: 32e9,
             },
+            node_table: Vec::new(),
             group_size: 8,
             intra_group_bw: 130e9, // NVLink effective bus bandwidth
             inter_group_bw: 130e9,
@@ -216,6 +397,7 @@ impl ClusterEnv {
                 flops_f16: 12.15e12, // no tensor cores
                 mem_bytes: 12e9,
             },
+            node_table: Vec::new(),
             group_size: 2,
             intra_group_bw: 11e9, // PCIe 3.0 x16 effective
             inter_group_bw: 6e9,  // across QPI
@@ -237,6 +419,7 @@ impl ClusterEnv {
                 flops_f16: 280e12,
                 mem_bytes: 40e9,
             },
+            node_table: Vec::new(),
             group_size: 2, // PCIe pairs under one switch
             intra_group_bw: 22e9, // PCIe 4.0 x16 effective
             inter_group_bw: 14e9, // through host bridges
@@ -274,6 +457,7 @@ impl ClusterEnv {
                 flops_f16: 24.5e12,
                 mem_bytes: 16e9,
             },
+            node_table: Vec::new(),
             group_size: 4,
             intra_group_bw: 12e9,  // PCIe
             inter_group_bw: 12e9,
@@ -283,16 +467,204 @@ impl ClusterEnv {
         }
     }
 
-    /// Environment by CLI name.
-    pub fn by_name(name: &str) -> Option<ClusterEnv> {
-        match name.to_ascii_lowercase().as_str() {
-            "enva" | "a" => Some(Self::env_a()),
-            "envb" | "b" => Some(Self::env_b()),
-            "envc" | "c" => Some(Self::env_c()),
-            "envd" | "d" => Some(Self::env_d()),
-            "enve" | "e" => Some(Self::env_e()),
-            _ => None,
+    /// EnvF: heterogeneous zoo env — one EnvA-class V100 node plus one
+    /// EnvB-class TITAN Xp node behind EnvB's link hierarchy. The V100s
+    /// are the reference (fastest) generation; synchronous stages placed
+    /// on the TITAN node run ≈ 1.29× slower in FP32 and hold 12 GB
+    /// instead of 32 GB, so the pipeline DP should hand that block fewer
+    /// layers.
+    pub fn env_f() -> ClusterEnv {
+        let v100 = DeviceSpec {
+            name: "V100-SXM2-32GB".to_string(),
+            flops_f32: 15.7e12,
+            flops_f16: 125e12,
+            mem_bytes: 32e9,
+        };
+        let titan = DeviceSpec {
+            name: "TITAN-Xp-12GB".to_string(),
+            flops_f32: 12.15e12,
+            flops_f16: 12.15e12,
+            mem_bytes: 12e9,
+        };
+        ClusterEnv {
+            name: "EnvF".to_string(),
+            nodes: 2,
+            gpus_per_node: 4,
+            device: v100.clone(),
+            node_table: vec![
+                NodeSpec { device: v100, gpus: 4 },
+                NodeSpec { device: titan, gpus: 4 },
+            ],
+            group_size: 2,
+            intra_group_bw: 11e9,
+            inter_group_bw: 6e9,
+            inter_node_bw: 1.1e9,
+            link_latency: 10e-6,
+            net_latency: 50e-6,
         }
+    }
+
+    /// Environment by CLI name. Accepts the letter shorthands, any case
+    /// variant, and the `EnvD-{n}n` family that [`Self::env_d_nodes`]
+    /// generates (so fingerprints/reports naming such an env resolve back).
+    pub fn by_name(name: &str) -> Option<ClusterEnv> {
+        let lower = name.to_ascii_lowercase();
+        match lower.as_str() {
+            "enva" | "a" => return Some(Self::env_a()),
+            "envb" | "b" => return Some(Self::env_b()),
+            "envc" | "c" => return Some(Self::env_c()),
+            "envd" | "d" => return Some(Self::env_d()),
+            "enve" | "e" => return Some(Self::env_e()),
+            "envf" | "f" => return Some(Self::env_f()),
+            _ => {}
+        }
+        let nodes = lower.strip_prefix("envd-")?.strip_suffix('n')?;
+        let nodes: usize = nodes.parse().ok()?;
+        if nodes < 1 {
+            return None;
+        }
+        Some(Self::env_d_nodes(nodes))
+    }
+
+    // ---- inline cluster specs (request schema) ------------------------
+
+    /// Structural validity: positive shapes, positive finite bandwidths,
+    /// finite non-negative latencies, and a device table (when present)
+    /// matching `nodes` with non-empty members.
+    pub fn validate(&self) -> Result<(), String> {
+        fn device_ok(d: &DeviceSpec, what: &str) -> Result<(), String> {
+            for (field, v) in [
+                ("flops_f32", d.flops_f32),
+                ("flops_f16", d.flops_f16),
+                ("mem_bytes", d.mem_bytes),
+            ] {
+                if !v.is_finite() || v <= 0.0 {
+                    return Err(format!("cluster: {what}.{field} must be finite and positive"));
+                }
+            }
+            Ok(())
+        }
+        if self.name.is_empty() {
+            return Err("cluster: name must be non-empty".to_string());
+        }
+        if self.nodes < 1 || self.gpus_per_node < 1 || self.group_size < 1 {
+            return Err("cluster: nodes, gpus_per_node, group_size must be >= 1".to_string());
+        }
+        device_ok(&self.device, "device")?;
+        for (field, v) in [
+            ("intra_group_bw", self.intra_group_bw),
+            ("inter_group_bw", self.inter_group_bw),
+            ("inter_node_bw", self.inter_node_bw),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("cluster: {field} must be finite and positive"));
+            }
+        }
+        for (field, v) in [
+            ("link_latency", self.link_latency),
+            ("net_latency", self.net_latency),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("cluster: {field} must be finite and non-negative"));
+            }
+        }
+        if !self.node_table.is_empty() {
+            if self.node_table.len() != self.nodes {
+                return Err(format!(
+                    "cluster: node_table has {} entries for {} nodes",
+                    self.node_table.len(),
+                    self.nodes
+                ));
+            }
+            for (i, node) in self.node_table.iter().enumerate() {
+                if node.gpus < 1 {
+                    return Err(format!("cluster: node_table[{i}].gpus must be >= 1"));
+                }
+                device_ok(&node.device, "node_table device")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical JSON for the inline `"cluster"` request field and for
+    /// reports. Floats emit as bit-hex strings so a round-trip is exact.
+    pub fn to_json(&self) -> Json {
+        let table: Vec<Json> = self
+            .node_table
+            .iter()
+            .map(|n| {
+                Json::obj()
+                    .field("device", n.device.to_json())
+                    .field("gpus", n.gpus)
+            })
+            .collect();
+        Json::obj()
+            .field("name", self.name.as_str())
+            .field("nodes", self.nodes)
+            .field("gpus_per_node", self.gpus_per_node)
+            .field("device", self.device.to_json())
+            .field("node_table", Json::Arr(table))
+            .field("group_size", self.group_size)
+            .field("intra_group_bw", f64_to_hex(self.intra_group_bw))
+            .field("inter_group_bw", f64_to_hex(self.inter_group_bw))
+            .field("inter_node_bw", f64_to_hex(self.inter_node_bw))
+            .field("link_latency", f64_to_hex(self.link_latency))
+            .field("net_latency", f64_to_hex(self.net_latency))
+    }
+
+    /// Parse an inline cluster spec. Floats accept plain JSON numbers or
+    /// the canonical bit-hex strings; `node_table` is optional (empty =
+    /// homogeneous). Validates before returning.
+    pub fn from_json(v: &Json) -> Result<ClusterEnv, String> {
+        let name = v
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or("cluster: missing string `name`")?
+            .to_string();
+        let nodes = v
+            .get("nodes")
+            .and_then(|n| n.as_usize())
+            .ok_or("cluster: missing integer `nodes`")?;
+        let gpus_per_node = v
+            .get("gpus_per_node")
+            .and_then(|n| n.as_usize())
+            .ok_or("cluster: missing integer `gpus_per_node`")?;
+        let device = DeviceSpec::from_json(
+            v.get("device").ok_or("cluster: missing object `device`")?,
+        )?;
+        let mut node_table = Vec::new();
+        if let Some(table) = v.get("node_table").filter(|t| !t.is_null()) {
+            let items = table.as_arr().ok_or("cluster: `node_table` must be an array")?;
+            for (i, item) in items.iter().enumerate() {
+                let dev = item
+                    .get("device")
+                    .ok_or_else(|| format!("cluster: node_table[{i}] missing `device`"))?;
+                let gpus = item
+                    .get("gpus")
+                    .and_then(|g| g.as_usize())
+                    .ok_or_else(|| format!("cluster: node_table[{i}] missing integer `gpus`"))?;
+                node_table.push(NodeSpec { device: DeviceSpec::from_json(dev)?, gpus });
+            }
+        }
+        let group_size = v
+            .get("group_size")
+            .and_then(|n| n.as_usize())
+            .ok_or("cluster: missing integer `group_size`")?;
+        let env = ClusterEnv {
+            name,
+            nodes,
+            gpus_per_node,
+            device,
+            node_table,
+            group_size,
+            intra_group_bw: float_field(v, "intra_group_bw").map_err(|e| format!("cluster: {e}"))?,
+            inter_group_bw: float_field(v, "inter_group_bw").map_err(|e| format!("cluster: {e}"))?,
+            inter_node_bw: float_field(v, "inter_node_bw").map_err(|e| format!("cluster: {e}"))?,
+            link_latency: float_field(v, "link_latency").map_err(|e| format!("cluster: {e}"))?,
+            net_latency: float_field(v, "net_latency").map_err(|e| format!("cluster: {e}"))?,
+        };
+        env.validate()?;
+        Ok(env)
     }
 }
 
@@ -307,6 +679,7 @@ mod tests {
         assert_eq!(ClusterEnv::env_c().total_devices(), 8);
         assert_eq!(ClusterEnv::env_d().total_devices(), 16);
         assert_eq!(ClusterEnv::env_e().total_devices(), 32);
+        assert_eq!(ClusterEnv::env_f().total_devices(), 8);
     }
 
     #[test]
@@ -343,16 +716,25 @@ mod tests {
     #[test]
     fn stage_ranks_are_contiguous_partitions() {
         let e = ClusterEnv::env_b();
-        let s0 = e.stage_ranks(2, 0);
-        let s1 = e.stage_ranks(2, 1);
+        let s0 = e.stage_ranks(2, 0).unwrap();
+        let s1 = e.stage_ranks(2, 1).unwrap();
         assert_eq!(s0, vec![0, 1, 2, 3]);
         assert_eq!(s1, vec![4, 5, 6, 7]);
     }
 
     #[test]
+    fn stage_ranks_rejects_bad_shapes_without_panicking() {
+        let e = ClusterEnv::env_b(); // 8 devices
+        assert!(e.stage_ranks(0, 0).is_err(), "pp=0 must error, not divide by zero");
+        assert!(e.stage_ranks(3, 0).is_err(), "3 does not divide 8");
+        assert!(e.stage_ranks(2, 2).is_err(), "stage out of range");
+        assert!(e.stage_ranks(2, 1).is_ok());
+    }
+
+    #[test]
     fn tp_inner_dp_outer_layout() {
         let e = ClusterEnv::env_b();
-        let stage = e.stage_ranks(2, 0); // [0,1,2,3]
+        let stage = e.stage_ranks(2, 0).unwrap(); // [0,1,2,3]
         // (dp=2, tp=2): TP groups {0,1} and {2,3}; DP groups {0,2}, {1,3}
         assert_eq!(e.tp_group(&stage, 2, 0), vec![0, 1]);
         assert_eq!(e.tp_group(&stage, 2, 1), vec![2, 3]);
@@ -372,9 +754,172 @@ mod tests {
 
     #[test]
     fn by_name_resolves() {
-        for n in ["EnvA", "envb", "c", "EnvD", "enve"] {
-            assert!(ClusterEnv::by_name(n).is_some());
+        for n in ["EnvA", "envb", "c", "EnvD", "enve", "EnvF", "f"] {
+            assert!(ClusterEnv::by_name(n).is_some(), "{n} should resolve");
         }
         assert!(ClusterEnv::by_name("envz").is_none());
+    }
+
+    #[test]
+    fn by_name_accepts_env_d_nodes_family() {
+        // env_d_nodes names itself `EnvD-{n}n`; by_name must resolve the
+        // generated name (any case) back to the same environment.
+        for n in [1usize, 2, 3, 8] {
+            let made = ClusterEnv::env_d_nodes(n);
+            let back = ClusterEnv::by_name(&made.name).expect("generated name resolves");
+            assert_eq!(back, made);
+            let upper = ClusterEnv::by_name(&made.name.to_ascii_uppercase()).unwrap();
+            assert_eq!(upper, made);
+        }
+        assert!(ClusterEnv::by_name("envd-0n").is_none());
+        assert!(ClusterEnv::by_name("envd-xn").is_none());
+        assert!(ClusterEnv::by_name("envd-2").is_none());
+    }
+
+    #[test]
+    fn group_ids_never_span_node_boundaries() {
+        // Regression for the `rank / group_size` aliasing bug: with
+        // group_size = 2 on 3-GPU nodes, rank 2 (last of node 0) and
+        // rank 3 (first of node 1) used to share group id 1.
+        let mut e = ClusterEnv::env_b();
+        e.gpus_per_node = 3;
+        e.group_size = 2;
+        assert_eq!(e.node_of(2), 0);
+        assert_eq!(e.node_of(3), 1);
+        assert_ne!(e.group_of(2), e.group_of(3), "group must not cross the node boundary");
+        // node 0 owns groups {0, 1}; node 1 owns groups {2, 3}
+        assert_eq!(e.group_of(0), 0);
+        assert_eq!(e.group_of(1), 0);
+        assert_eq!(e.group_of(2), 1);
+        assert_eq!(e.group_of(3), 2);
+        assert_eq!(e.group_of(4), 2);
+        assert_eq!(e.group_of(5), 3);
+        // and tier_of sees the boundary pair as inter-node, not fast-link
+        assert_eq!(e.tier_of(&[2, 3]), LinkTier::InterNode);
+    }
+
+    #[test]
+    fn group_ids_match_legacy_formula_when_divisible() {
+        // When group_size divides every node, the node-scoped id reduces
+        // to the legacy `rank / group_size` — presets are unaffected.
+        for e in [
+            ClusterEnv::env_a(),
+            ClusterEnv::env_b(),
+            ClusterEnv::env_c(),
+            ClusterEnv::env_d(),
+            ClusterEnv::env_e(),
+        ] {
+            for rank in 0..e.total_devices() {
+                assert_eq!(e.group_of(rank), rank / e.group_size, "{} rank {rank}", e.name);
+            }
+        }
+    }
+
+    #[test]
+    fn envf_table_layout_and_bottlenecks() {
+        let e = ClusterEnv::env_f();
+        assert!(e.is_heterogeneous());
+        assert_eq!(e.device_of(0).name, "V100-SXM2-32GB");
+        assert_eq!(e.device_of(4).name, "TITAN-Xp-12GB");
+        assert_eq!(e.node_of(3), 0);
+        assert_eq!(e.node_of(4), 1);
+        // fast block: scale exactly 1; slow block: V100/TITAN fp32 ratio
+        let fast = e.stage_ranks(2, 0).unwrap();
+        let slow = e.stage_ranks(2, 1).unwrap();
+        let df = e.stage_comp_scale(&fast, crate::graph::Dtype::Fp32);
+        let ds = e.stage_comp_scale(&slow, crate::graph::Dtype::Fp32);
+        assert_eq!(df, 1.0);
+        assert!((ds - 15.7e12 / 12.15e12).abs() < 1e-12);
+        // a block spanning both generations bottlenecks on the slower one
+        let all = e.stage_ranks(1, 0).unwrap();
+        assert_eq!(e.stage_comp_scale(&all, crate::graph::Dtype::Fp32), ds);
+        // memory bottlenecks on the smallest member
+        assert_eq!(e.stage_mem_bytes(&fast), 32e9);
+        assert_eq!(e.stage_mem_bytes(&slow), 12e9);
+        assert_eq!(e.stage_mem_bytes(&all), 12e9);
+    }
+
+    #[test]
+    fn uneven_node_table_drives_rank_layout() {
+        let mut e = ClusterEnv::env_f();
+        e.node_table[0].gpus = 2; // 2 × V100 + 4 × TITAN = 6 devices
+        assert_eq!(e.total_devices(), 6);
+        assert_eq!(e.node_of(1), 0);
+        assert_eq!(e.node_of(2), 1);
+        assert_eq!(e.node_start(1), 2);
+        assert_eq!(e.device_of(2).name, "TITAN-Xp-12GB");
+        // node-scoped groups: node 0 has 1 group (2 GPUs / gs 2),
+        // node 1 has 2
+        assert_eq!(e.group_of(1), 0);
+        assert_eq!(e.group_of(2), 1);
+        assert_eq!(e.group_of(4), 2);
+    }
+
+    #[test]
+    fn homogeneous_env_scales_are_exactly_one() {
+        for e in [ClusterEnv::env_a(), ClusterEnv::env_b(), ClusterEnv::env_e()] {
+            let ranks: Vec<usize> = (0..e.total_devices()).collect();
+            for dt in [crate::graph::Dtype::Fp32, crate::graph::Dtype::Fp16Mixed] {
+                assert_eq!(e.stage_comp_scale(&ranks, dt), 1.0);
+            }
+            assert_eq!(e.stage_mem_bytes(&ranks), e.device.mem_bytes);
+        }
+        // repeated-entry table: het path engaged, scale still exactly 1.0
+        let mut e = ClusterEnv::env_b();
+        e.node_table = vec![
+            NodeSpec { device: e.device.clone(), gpus: e.gpus_per_node },
+            NodeSpec { device: e.device.clone(), gpus: e.gpus_per_node },
+        ];
+        assert!(e.is_heterogeneous());
+        let ranks: Vec<usize> = (0..8).collect();
+        assert_eq!(e.stage_comp_scale(&ranks, crate::graph::Dtype::Fp32), 1.0);
+        assert_eq!(e.stage_mem_bytes(&ranks), e.device.mem_bytes);
+    }
+
+    #[test]
+    fn cluster_json_roundtrip_is_exact() {
+        for e in [ClusterEnv::env_b(), ClusterEnv::env_f()] {
+            let text = e.to_json().to_string();
+            let back = ClusterEnv::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, e);
+        }
+        // plain JSON numbers parse too (hand-written specs)
+        let spec = r#"{"name":"tiny","nodes":1,"gpus_per_node":2,
+            "device":{"name":"gpu","flops_f32":1e12,"flops_f16":2e12,"mem_bytes":8e9},
+            "group_size":2,"intra_group_bw":1e10,"inter_group_bw":5e9,
+            "inter_node_bw":1e9,"link_latency":1e-6,"net_latency":1e-5}"#;
+        let e = ClusterEnv::from_json(&Json::parse(spec).unwrap()).unwrap();
+        assert_eq!(e.total_devices(), 2);
+        assert!(!e.is_heterogeneous());
+    }
+
+    #[test]
+    fn cluster_from_json_rejects_malformed() {
+        let ok = ClusterEnv::env_f().to_json().to_string();
+        let v = Json::parse(&ok).unwrap();
+        // drop a required field
+        if let Json::Obj(fields) = &v {
+            for (key, _) in fields {
+                let Json::Obj(kept) = v.clone() else { unreachable!() };
+                let pruned = Json::Obj(kept.into_iter().filter(|(k, _)| k != key).collect());
+                // node_table is optional; everything else is required
+                if key == "node_table" {
+                    assert!(ClusterEnv::from_json(&pruned).is_ok());
+                } else {
+                    assert!(ClusterEnv::from_json(&pruned).is_err(), "missing {key} must fail");
+                }
+            }
+        } else {
+            panic!("expected object");
+        }
+        // table length must match nodes
+        let mut bad = ClusterEnv::env_f();
+        bad.node_table.pop();
+        let text = bad.to_json().to_string();
+        assert!(ClusterEnv::from_json(&Json::parse(&text).unwrap()).is_err());
+        // zero shapes rejected
+        let mut zero = ClusterEnv::env_b();
+        zero.group_size = 0;
+        assert!(zero.validate().is_err());
     }
 }

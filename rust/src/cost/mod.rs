@@ -111,8 +111,19 @@ pub struct CostMatrices {
     pub num_micro: usize,
     /// Global mini-batch size `B`.
     pub batch: usize,
-    /// Per-device memory limit `m` (bytes).
+    /// Per-device memory limit `m` (bytes) — the reference device's
+    /// budget; heterogeneous stages override it via `stage_mem_limit`.
     pub mem_limit: f64,
+    /// Compute-only per-micro-batch share of `a` (`3·t_fwd·B/(dp·c)`) —
+    /// the part that rescales with per-stage device speed. Empty for
+    /// homogeneous clusters (the legacy fast path).
+    pub a_comp: Vec<Vec<f64>>,
+    /// Per-stage compute slowdown vs the reference device (slowest member
+    /// of each stage's rank block). Empty when homogeneous.
+    pub stage_comp_scale: Vec<f64>,
+    /// Per-stage memory limit (smallest member of each stage's rank
+    /// block, after the safety reserve). Empty when homogeneous.
+    pub stage_mem_limit: Vec<f64>,
 }
 
 impl CostMatrices {
@@ -124,6 +135,30 @@ impl CostMatrices {
     /// Number of strategies.
     pub fn num_strategies(&self) -> usize {
         self.strategies.len()
+    }
+
+    /// True when per-stage device heterogeneity is active.
+    pub fn is_heterogeneous(&self) -> bool {
+        !self.stage_comp_scale.is_empty()
+    }
+
+    /// `A[u][k]` as seen by pipeline stage `stage`: the compute share is
+    /// rescaled by the stage's slowest-member slowdown — `tier_of`'s
+    /// bottleneck rule applied to compute. Falls through to the legacy
+    /// `a[u][k]` when the scale table is empty, and stays bit-identical
+    /// when it holds exact `1.0` entries (`x + y·0.0 == x` for the
+    /// non-negative finite costs the model produces).
+    pub fn stage_a(&self, u: usize, k: usize, stage: usize) -> f64 {
+        match self.stage_comp_scale.get(stage) {
+            None => self.a[u][k],
+            Some(&scale) => self.a[u][k] + self.a_comp[u][k] * (scale - 1.0),
+        }
+    }
+
+    /// Memory limit of one pipeline stage (the smallest member's budget
+    /// when heterogeneous; the global limit otherwise).
+    pub fn stage_limit(&self, stage: usize) -> f64 {
+        *self.stage_mem_limit.get(stage).unwrap_or(&self.mem_limit)
     }
 
     /// Restrict the strategy dictionary to the given indices (baselines
@@ -150,6 +185,9 @@ impl CostMatrices {
             num_micro: self.num_micro,
             batch: self.batch,
             mem_limit: self.mem_limit,
+            a_comp: self.a_comp.iter().map(pick_row).collect(),
+            stage_comp_scale: self.stage_comp_scale.clone(),
+            stage_mem_limit: self.stage_mem_limit.clone(),
         }
     }
 }
@@ -239,6 +277,14 @@ pub struct CostBase {
     /// branch fan-outs and skip tensors included — so the R/R′ resharding
     /// matrices price cross-cluster traffic with no solver changes.
     edge_act: Vec<f64>,
+    /// Per-stage compute slowdown vs the reference device (slowest member
+    /// of each stage's rank block — `ClusterEnv::stage_comp_scale`).
+    /// Empty when the cluster has no device table: the homogeneous fast
+    /// path, bit-identical to the pre-heterogeneity model.
+    stage_comp_scale: Vec<f64>,
+    /// Per-stage memory limit (smallest member of each stage's rank
+    /// block, after the safety reserve). Empty when homogeneous.
+    stage_mem_limit: Vec<f64>,
 }
 
 impl CostBase {
@@ -280,10 +326,33 @@ impl CostBase {
         let s_count = strategies.len();
         let v = graph.num_layers();
 
-        // Representative stage rank blocks (devices are homogeneous, so
-        // stage 0 and 1 stand in for every pair of consecutive stages).
-        let stage0 = env.stage_ranks(pp_size, 0);
-        let stage1 = if pp_size > 1 { env.stage_ranks(pp_size, 1) } else { stage0.clone() };
+        // Representative stage rank blocks for the *communication* probes:
+        // link tiers depend only on the topology (which is uniform across
+        // the contiguous stage layout), so stage 0 and 1 stand in for
+        // every pair of consecutive stages. Compute speed and memory are
+        // NOT uniform on heterogeneous tables — those are captured per
+        // stage below.
+        let stage0 = env.stage_ranks(pp_size, 0).expect("pp_size divides n (asserted)");
+        let stage1 = if pp_size > 1 {
+            env.stage_ranks(pp_size, 1).expect("stage 1 < pp_size")
+        } else {
+            stage0.clone()
+        };
+
+        // Per-stage heterogeneity: compute bottlenecks on the slowest
+        // member of each stage's rank block (the rule `tier_of` applies
+        // to links), memory on the smallest. Empty for homogeneous
+        // clusters so the legacy arithmetic is untouched bit for bit.
+        let mut stage_comp_scale = Vec::new();
+        let mut stage_mem_limit = Vec::new();
+        if env.is_heterogeneous() {
+            for stage in 0..pp_size {
+                let ranks = env.stage_ranks(pp_size, stage).expect("stage < pp_size");
+                stage_comp_scale.push(env.stage_comp_scale(&ranks, graph.dtype));
+                stage_mem_limit
+                    .push((env.stage_mem_bytes(&ranks) - profile.ctx_mem_bytes) / MEM_SAFETY);
+            }
+        }
 
         let elem = graph.dtype.elem_bytes();
         let c_dtype = graph.dtype.c_dtype();
@@ -378,6 +447,8 @@ impl CostBase {
             act_out: graph.layers.iter().map(|l| l.act_out_bytes).collect(),
             act_store: graph.layers.iter().map(|l| l.act_store_bytes).collect(),
             edge_act: graph.edges.iter().map(|&(u, _)| graph.layers[u].act_out_bytes).collect(),
+            stage_comp_scale,
+            stage_mem_limit,
         }
     }
 
@@ -393,11 +464,13 @@ impl CostBase {
         let inv_c = 1.0 / num_micro as f64;
         let frac = schedule.inflight_fraction(self.pp_size, num_micro);
 
+        let het = !self.stage_comp_scale.is_empty();
         let mut a = vec![vec![0.0; s_count]; v];
         let mut a_fwd = vec![vec![0.0; s_count]; v];
         let mut a_bwd = vec![vec![0.0; s_count]; v];
         let mut per_iter = vec![vec![0.0; s_count]; v];
         let mut m = vec![vec![0.0; s_count]; v];
+        let mut a_comp = if het { vec![vec![0.0; s_count]; v] } else { Vec::new() };
         for u in 0..v {
             for (k, st) in self.strategies.iter().enumerate() {
                 let dp = st.dp as f64;
@@ -419,6 +492,11 @@ impl CostBase {
                 a_bwd[u][k] = b;
                 per_iter[u][k] = it;
                 a[u][k] = f + b + it / num_micro as f64;
+                if het {
+                    // compute-only per-micro share of `a` (fwd + 2× bwd),
+                    // the part `stage_a` rescales per device generation
+                    a_comp[u][k] = 3.0 * fwd_comp * inv_c;
+                }
 
                 let m_act = self.act_store[u] * b_rep / st.tp as f64;
                 m[u][k] = self.m_state[u][k] + m_act * frac;
@@ -454,6 +532,9 @@ impl CostBase {
             num_micro,
             batch,
             mem_limit: self.mem_limit,
+            a_comp,
+            stage_comp_scale: self.stage_comp_scale.clone(),
+            stage_mem_limit: self.stage_mem_limit.clone(),
         }
     }
 }
@@ -584,6 +665,8 @@ impl CostBase {
             .field("act_out", hexvec_to_json(&self.act_out))
             .field("act_store", hexvec_to_json(&self.act_store))
             .field("edge_act", hexvec_to_json(&self.edge_act))
+            .field("stage_comp_scale", hexvec_to_json(&self.stage_comp_scale))
+            .field("stage_mem_limit", hexvec_to_json(&self.stage_mem_limit))
     }
 
     /// Inverse of [`CostBase::to_json`]. Shape-checks every matrix so a
@@ -641,11 +724,34 @@ impl CostBase {
                 xs
             },
             edge_act: hexvec_from_json(j, "edge_act")?,
+            stage_comp_scale: {
+                let xs = hexvec_from_json(j, "stage_comp_scale")?;
+                if !xs.is_empty() && xs.len() != pp_size {
+                    return Err(format!(
+                        "\"stage_comp_scale\" has {} entries, expected 0 or {pp_size}",
+                        xs.len()
+                    ));
+                }
+                xs
+            },
+            stage_mem_limit: {
+                let xs = hexvec_from_json(j, "stage_mem_limit")?;
+                if !xs.is_empty() && xs.len() != pp_size {
+                    return Err(format!(
+                        "\"stage_mem_limit\" has {} entries, expected 0 or {pp_size}",
+                        xs.len()
+                    ));
+                }
+                xs
+            },
             strategies,
             pp_size,
             mem_limit,
             act_out,
         };
+        if base.stage_comp_scale.len() != base.stage_mem_limit.len() {
+            return Err("heterogeneous stage tables must have matching lengths".to_string());
+        }
         Ok(base)
     }
 
@@ -685,6 +791,8 @@ impl CostBase {
             && vec_eq(&self.act_out, &other.act_out)
             && vec_eq(&self.act_store, &other.act_store)
             && vec_eq(&self.edge_act, &other.edge_act)
+            && vec_eq(&self.stage_comp_scale, &other.stage_comp_scale)
+            && vec_eq(&self.stage_mem_limit, &other.stage_mem_limit)
     }
 }
 
@@ -735,7 +843,9 @@ pub fn objective_tpi(
     let mut p = vec![0.0; pp];
     let mut o = vec![0.0; pp.saturating_sub(1)];
     for u in 0..graph.num_layers() {
-        p[placement[u]] += costs.a[u][choice[u]];
+        // `stage_a` = `a` for homogeneous clusters; on heterogeneous ones
+        // it rescales the compute share by the stage's slowest member.
+        p[placement[u]] += costs.stage_a(u, choice[u], placement[u]);
     }
     for (e, &(u, vtx)) in graph.edges.iter().enumerate() {
         let (su, sv) = (placement[u], placement[vtx]);
@@ -802,8 +912,9 @@ mod tests {
         let s_count = strategies.len();
         let v = graph.num_layers();
 
-        let stage0 = env.stage_ranks(pp_size, 0);
-        let stage1 = if pp_size > 1 { env.stage_ranks(pp_size, 1) } else { stage0.clone() };
+        let stage0 = env.stage_ranks(pp_size, 0).unwrap();
+        let stage1 =
+            if pp_size > 1 { env.stage_ranks(pp_size, 1).unwrap() } else { stage0.clone() };
 
         let elem = graph.dtype.elem_bytes();
         let c_dtype = graph.dtype.c_dtype();
@@ -893,6 +1004,9 @@ mod tests {
             num_micro,
             batch,
             mem_limit: profile.mem_limit() / MEM_SAFETY,
+            a_comp: Vec::new(),
+            stage_comp_scale: Vec::new(),
+            stage_mem_limit: Vec::new(),
         }
     }
 
@@ -1219,5 +1333,131 @@ mod tests {
                 "hop {edge}: {plain} vs {skip}"
             );
         }
+    }
+
+    #[test]
+    fn repeated_device_table_is_bit_identical_to_legacy() {
+        // Property pinned by ISSUE 10: a homogeneous cluster pushed
+        // through the heterogeneous code path (device table with one
+        // repeated entry) must produce bit-identical coefficients. The
+        // per-stage scale comes out exactly 1.0, and `x + y·(1.0−1.0)`
+        // is bitwise `x` for the model's non-negative finite costs.
+        use crate::cluster::NodeSpec;
+        let g = models::bert_huge();
+        let legacy_env = ClusterEnv::env_b();
+        let mut het_env = legacy_env.clone();
+        het_env.node_table = (0..het_env.nodes)
+            .map(|_| NodeSpec { device: het_env.device.clone(), gpus: het_env.gpus_per_node })
+            .collect();
+        assert!(het_env.is_heterogeneous());
+        let p_legacy = Profile::analytic(&legacy_env, &g);
+        let p_het = Profile::analytic(&het_env, &g);
+        for pp in crate::util::divisors(8) {
+            let want = CostBase::new(&p_legacy, &g, pp);
+            let got = CostBase::new(&p_het, &g, pp);
+            assert_eq!(got.stage_comp_scale.len(), pp, "het path must engage");
+            assert!(got.stage_comp_scale.iter().all(|&s| s == 1.0));
+            for (batch, c) in [(16usize, 4usize), (8, 2), (64, 8)] {
+                for sched in [Schedule::GPipe, Schedule::OneF1B] {
+                    let mw = want.materialize(batch, c, sched);
+                    let mg = got.materialize(batch, c, sched);
+                    assert_eq!(mg.a, mw.a, "pp={pp} B={batch} c={c}");
+                    assert_eq!(mg.a_fwd, mw.a_fwd);
+                    assert_eq!(mg.a_bwd, mw.a_bwd);
+                    assert_eq!(mg.per_iter, mw.per_iter);
+                    assert_eq!(mg.m, mw.m);
+                    assert_eq!(mg.r, mw.r);
+                    assert_eq!(mg.rp, mw.rp);
+                    assert_eq!(mg.mem_limit.to_bits(), mw.mem_limit.to_bits());
+                    for stage in 0..pp {
+                        assert_eq!(
+                            mg.stage_limit(stage).to_bits(),
+                            mw.mem_limit.to_bits(),
+                            "repeated table stage limit == legacy limit"
+                        );
+                        for u in 0..mg.num_layers() {
+                            for k in 0..mg.num_strategies() {
+                                assert_eq!(
+                                    mg.stage_a(u, k, stage).to_bits(),
+                                    mw.a[u][k].to_bits(),
+                                    "stage_a must fall through bit-identically"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn envf_slows_and_shrinks_the_titan_stage() {
+        // EnvF: stage 0 = 4 × V100 (reference), stage 1 = 4 × TITAN Xp.
+        // The TITAN block's compute is scaled by the fp32 peak ratio and
+        // its memory limit drops to the 12 GB card.
+        let g = models::bert_huge();
+        let env = ClusterEnv::env_f();
+        let p = Profile::analytic(&env, &g);
+        let c = cost_modeling(&p, &g, 2, 16, 4);
+        assert!(c.is_heterogeneous());
+        assert_eq!(c.stage_comp_scale[0], 1.0);
+        let ratio = 15.7e12 / 12.15e12;
+        assert!((c.stage_comp_scale[1] - ratio).abs() < 1e-12);
+        // fast stage sees the reference costs, slow stage strictly more
+        for k in 0..c.num_strategies() {
+            assert_eq!(c.stage_a(5, k, 0).to_bits(), c.a[5][k].to_bits());
+            assert!(c.stage_a(5, k, 1) > c.a[5][k], "TITAN stage must be slower (k={k})");
+            // and the surcharge is exactly the compute share × (ratio − 1)
+            let want = c.a[5][k] + c.a_comp[5][k] * (ratio - 1.0);
+            assert!((c.stage_a(5, k, 1) - want).abs() < 1e-15);
+        }
+        // memory: stage 0 plans against 32 GB, stage 1 against 12 GB
+        assert!(c.stage_limit(1) < c.stage_limit(0));
+        let want_slow = (12e9 - p.ctx_mem_bytes) / MEM_SAFETY;
+        assert!((c.stage_limit(1) - want_slow).abs() < 1.0);
+        // objective: the same assignment costs more when its layers sit
+        // on the slow stage
+        let placement_fast_heavy = vec![0, 0, 0, 1];
+        let placement_slow_heavy = vec![0, 1, 1, 1];
+        let g4 = models::synthetic_chain(4, 5e11, 2e7, 2e6);
+        let p4 = Profile::analytic(&env, &g4);
+        let c4 = cost_modeling(&p4, &g4, 2, 16, 4);
+        let choice = vec![0usize; 4];
+        let fast = objective_tpi(&g4, &c4, &placement_fast_heavy, &choice);
+        let slow = objective_tpi(&g4, &c4, &placement_slow_heavy, &choice);
+        assert!(
+            fast < slow,
+            "loading the TITAN block with 3 of 4 layers must cost more: {fast} vs {slow}"
+        );
+    }
+
+    #[test]
+    fn het_base_json_roundtrip_keeps_stage_tables() {
+        let g = models::bert_huge();
+        let p = Profile::analytic(&ClusterEnv::env_f(), &g);
+        let base = CostBase::new(&p, &g, 2);
+        let text = base.to_json().to_string();
+        let back = CostBase::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.content_eq(&base));
+        let want = base.materialize(16, 4, Schedule::GPipe);
+        let got = back.materialize(16, 4, Schedule::GPipe);
+        assert_eq!(got.a_comp, want.a_comp);
+        assert_eq!(got.stage_comp_scale, want.stage_comp_scale);
+        assert_eq!(got.stage_mem_limit, want.stage_mem_limit);
+        // a homogeneous base must NOT content-match its het twin
+        let hom = CostBase::new(&Profile::analytic(&ClusterEnv::env_b(), &g), &g, 2);
+        assert!(!hom.content_eq(&base));
+        // stage-table length must match pp_size on load
+        let mut bad = base.to_json();
+        if let Json::Obj(fields) = &mut bad {
+            for (k, v) in fields.iter_mut() {
+                if k == "stage_comp_scale" {
+                    if let Json::Arr(xs) = v {
+                        xs.pop();
+                    }
+                }
+            }
+        }
+        assert!(CostBase::from_json(&bad).is_err());
     }
 }

@@ -36,10 +36,15 @@ USAGE: uniap <command> [options]
 COMMANDS:
   plan       --model <bert|t5|t5-16|vit|swin|llama-7b|llama-13b
                       |unet|unet-small|diamond>
-             --env <EnvA|EnvB|EnvC|EnvD|EnvE> --batch <B>
+             --env <EnvA|EnvB|EnvC|EnvD|EnvD-{n}n|EnvE|EnvF> --batch <B>
              (unet/diamond are operator DAGs, linearized into virtual
              layers before planning; request files may also inline a
              \"dag\" object — see examples/requests_dag.json)
+             (EnvF is the heterogeneous zoo env — one V100 node + one
+             TITAN node; [--cluster <file.json>] plans against an inline
+             cluster description instead of a preset, and request files
+             may inline the same object under \"cluster\" — see
+             examples/requests_cluster.json)
              [--method <uniap|galvatron|alpa|inter|intra|megatron|deepspeed>]
              [--engine <auto|chain|miqp>] [--schedule <gpipe|1f1b>]
              [--deadline SECS] [--max-pp N] [--threads N] [--json] [--quiet]
@@ -117,6 +122,14 @@ fn plan_request(args: &Args) -> Result<PlanRequest, String> {
     if threads > 0 {
         req.threads = Some(threads);
     }
+    let cluster_path = args.get("cluster", "");
+    if !cluster_path.is_empty() {
+        let text = std::fs::read_to_string(&cluster_path)
+            .map_err(|e| format!("--cluster {cluster_path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("--cluster {cluster_path}: {e}"))?;
+        req.cluster =
+            Some(ClusterEnv::from_json(&j).map_err(|e| format!("--cluster {cluster_path}: {e}"))?);
+    }
     Ok(req)
 }
 
@@ -139,8 +152,7 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
         return Ok(());
     }
     ok_or_cli_error(&resp)?;
-    // names resolved successfully above, so these lookups cannot fail
-    let env = ClusterEnv::by_name(&req.env).unwrap();
+    let env = uniap::service::resolve_env(&req)?;
     let workload = resolve_workload(&req)?;
     let graph = workload.graph;
     println!("# {} · {} · B={} · {}", req.method.label(), graph.name, req.batch, env.name);
@@ -237,7 +249,7 @@ fn validate_responses(
         }
         let Some(plan) = &resp.plan else { continue };
         let req = &reqs[i];
-        let env = ClusterEnv::by_name(&req.env).ok_or(format!("unknown env {:?}", req.env))?;
+        let env = uniap::service::resolve_env(req)?;
         // DAG workloads validate against the *lowered* chain — the graph
         // the plan was actually solved over
         let graph = resolve_workload(req)?.graph;
@@ -508,7 +520,24 @@ fn cmd_profile(args: &Args) -> Result<(), String> {
     if let Some(report) = &workload.linearization {
         println!("{}", report.summary());
     }
-    println!("devices: {} × {} ({} GiB)", env.total_devices(), env.device.name, env.device.mem_bytes / 1e9);
+    if env.is_heterogeneous() {
+        println!("devices: {} across {} nodes:", env.total_devices(), env.node_table.len());
+        for (i, node) in env.node_table.iter().enumerate() {
+            println!(
+                "  node {i}: {} × {} ({} GiB)",
+                node.gpus,
+                node.device.name,
+                node.device.mem_bytes / 1e9
+            );
+        }
+    } else {
+        println!(
+            "devices: {} × {} ({} GiB)",
+            env.total_devices(),
+            env.device.name,
+            env.device.mem_bytes / 1e9
+        );
+    }
     let mut seen = std::collections::BTreeSet::new();
     let mut table = uniap::report::Table::new(&["layer type", "tp=1 (ms/sample)", "tp=2", "tp=4"]);
     for l in &graph.layers {

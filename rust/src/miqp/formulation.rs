@@ -90,8 +90,8 @@ pub fn constraint_violations(
     // (5): memory.
     let mem = crate::cost::stage_memory(graph, costs, placement, choice);
     for (i, m) in mem.iter().enumerate() {
-        if *m > costs.mem_limit {
-            out.push(format!("(5) stage {i} memory {m:.3e} > {:.3e}", costs.mem_limit));
+        if *m > costs.stage_limit(i) {
+            out.push(format!("(5) stage {i} memory {m:.3e} > {:.3e}", costs.stage_limit(i)));
         }
     }
     // edges must land on same or consecutive stages (else (3)/(4) leave
@@ -117,8 +117,10 @@ pub fn objective_from_constraints(
     let mut p = vec![0.0; pp];
     let mut o = vec![0.0; pp.saturating_sub(1)];
     // (3): Σ_u P_ui · S_u'A_u + Σ_e P_ui P_vi · S_u'R_uv S_v = p_i
+    // (A_u is stage-dependent on heterogeneous clusters: the slowest
+    // device in the stage's rank block bottlenecks the collective)
     for u in 0..graph.num_layers() {
-        p[placement[u]] += costs.a[u][choice[u]];
+        p[placement[u]] += costs.stage_a(u, choice[u], placement[u]);
     }
     for (e, &(u, w)) in graph.edges.iter().enumerate() {
         if placement[u] == placement[w] {

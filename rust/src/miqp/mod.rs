@@ -224,11 +224,12 @@ impl<'a> Search<'a> {
         for stage in lo..=hi {
             for k in 0..self.costs.num_strategies() {
                 let mem = self.costs.m[depth][k];
-                if stage_mem[stage] + mem > self.costs.mem_limit {
+                if stage_mem[stage] + mem > self.costs.stage_limit(stage) {
                     continue;
                 }
                 // accumulate p_i / o_j deltas from edges into `depth`
-                let mut p_delta = self.costs.a[depth][k];
+                // (stage-aware: heterogeneous stages scale compute time)
+                let mut p_delta = self.costs.stage_a(depth, k, stage);
                 let mut o_deltas: Vec<(usize, f64)> = Vec::new();
                 let mut valid = true;
                 for &(e, u) in &self.preds[depth] {

@@ -472,18 +472,47 @@ pub fn solve_chain_with(
 
     let stopped = || cancel.is_some_and(|t| t.should_stop());
 
-    // Memory-feasibility frontier — shared across candidates with equal
-    // memory matrices when the sweep hooks a memo in, derived locally
-    // otherwise (cheap: one pass over M).
-    let shared;
-    let built;
-    let feas: &MemFrontier = if let Some(m) = memo {
-        shared = m.frontier_for(costs);
-        &shared
-    } else {
-        built = MemFrontier::build(&costs.m, costs.mem_limit);
-        &built
-    };
+    // --- heterogeneous stage classes (ISSUE 10) -------------------------
+    // Homogeneous clusters share ONE interval table across every stage —
+    // the legacy path, bit-identical to pre-heterogeneity builds. On a
+    // device table, stages with distinct (compute-scale, memory-limit)
+    // pairs see genuinely different stage costs, so each distinct pair
+    // derives its own matrices (`a` := `stage_a`, `mem_limit` := the
+    // stage's own budget) and its own interval table; the pipeline DP
+    // then composes candidate boundaries against the right class, which
+    // is what lets it place *unequal* layer counts on unequal hardware.
+    let het = costs.is_heterogeneous();
+    let mut class_of_stage = vec![0usize; pp];
+    let mut classes: Vec<CostMatrices> = Vec::new();
+    if het {
+        let mut keys: Vec<(u64, u64)> = Vec::new();
+        for stage in 0..pp {
+            let key = (
+                costs.stage_comp_scale.get(stage).copied().unwrap_or(1.0).to_bits(),
+                costs.stage_limit(stage).to_bits(),
+            );
+            class_of_stage[stage] = match keys.iter().position(|&k| k == key) {
+                Some(i) => i,
+                None => {
+                    keys.push(key);
+                    let mut derived = costs.clone();
+                    for u in 0..v {
+                        for k in 0..s {
+                            derived.a[u][k] = costs.stage_a(u, k, stage);
+                        }
+                    }
+                    derived.mem_limit = costs.stage_limit(stage);
+                    // fully stage-resolved: the derived table must not be
+                    // re-adjusted by stage-aware consumers
+                    derived.a_comp = Vec::new();
+                    derived.stage_comp_scale = Vec::new();
+                    derived.stage_mem_limit = Vec::new();
+                    classes.push(derived);
+                    keys.len() - 1
+                }
+            };
+        }
+    }
 
     // Row fan-out: an explicit `cfg.row_helpers` wins (tests and benches
     // pin the worker count); otherwise lease whatever the machine has
@@ -508,15 +537,53 @@ pub fn solve_chain_with(
 
     // Objective (2) ≥ c · pᵢ for any stage, so interval prefixes costing
     // more than incumbent/c can never improve on the incumbent.
-    let ic = interval_costs(costs, feas, cut() / c, cancel, helpers);
+    let hom_table: Option<IntervalCosts>;
+    let mut class_tables: Vec<IntervalCosts> = Vec::new();
+    if het {
+        hom_table = None;
+        for cls in &classes {
+            // per-class frontier: the memory matrices are shared but the
+            // budget is the class's own, so the memo (keyed on the
+            // original matrices) does not apply — derive locally (cheap)
+            let cls_feas = MemFrontier::build(&cls.m, cls.mem_limit);
+            class_tables.push(interval_costs(cls, &cls_feas, cut() / c, cancel, helpers));
+            if stopped() {
+                break;
+            }
+        }
+    } else {
+        // Memory-feasibility frontier — shared across candidates with
+        // equal memory matrices when the sweep hooks a memo in, derived
+        // locally otherwise (cheap: one pass over M).
+        let shared;
+        let built;
+        let feas: &MemFrontier = if let Some(m) = memo {
+            shared = m.frontier_for(costs);
+            &shared
+        } else {
+            built = MemFrontier::build(&costs.m, costs.mem_limit);
+            &built
+        };
+        hom_table = Some(interval_costs(costs, feas, cut() / c, cancel, helpers));
+    }
     drop(row_lease); // return the row helpers to the budget immediately
     if stopped() {
-        return None; // the table above may be partial — abandon the solve
+        return None; // the tables above may be partial — abandon the solve
     }
+    let ic_for = |stage: usize| -> &IntervalCosts {
+        match &hom_table {
+            Some(t) => t,
+            None => &class_tables[class_of_stage[stage]],
+        }
+    };
+    let costs_for_stage =
+        |stage: usize| -> &CostMatrices { if het { &classes[class_of_stage[stage]] } else { costs } };
 
     // Admissible completion bound for incumbent pruning: every layer after
     // the current stage end contributes at least its cheapest per-micro
-    // cost to some p_i, and the bottleneck term never shrinks.
+    // cost to some p_i, and the bottleneck term never shrinks. The minima
+    // come from the *unscaled* rows — heterogeneous stages only cost more
+    // (scales are clamped ≥ 1), so the bound stays admissible there.
     let mut suffix_min = vec![0.0; v + 1];
     for u in (0..v).rev() {
         let row_min = costs.a[u].iter().cloned().fold(INF, f64::min);
@@ -528,6 +595,7 @@ pub fn solve_chain_with(
     let mut history: Vec<Vec<Vec<Vec<Point>>>> = Vec::with_capacity(pp);
 
     // Stage 0: intervals [0, r].
+    let ic0 = ic_for(0);
     let mut front0 = vec![vec![Vec::<Point>::new(); s]; v];
     let cut0 = cut();
     for (r, row) in front0.iter_mut().enumerate() {
@@ -539,7 +607,7 @@ pub fn solve_chain_with(
             let mut best = INF;
             let mut best_kin = 0;
             for kin in 0..s {
-                let cost = ic.get(0, r, kin, kout);
+                let cost = ic0.get(0, r, kin, kout);
                 if cost < best {
                     best = cost;
                     best_kin = kin;
@@ -554,6 +622,7 @@ pub fn solve_chain_with(
 
     for stage in 1..pp {
         let prev = &history[stage - 1];
+        let ic_s = ic_for(stage);
         let mut next = vec![vec![Vec::<Point>::new(); s]; v];
         let cut_s = cut();
         for r in stage - 1..v {
@@ -568,7 +637,7 @@ pub fn solve_chain_with(
                         for kin2 in 0..s {
                             let o = costs.rp[r][kout][kin2]; // edge r → r+1
                             for kout2 in 0..s {
-                                let p_cost = ic.get(r + 1, r2, kin2, kout2);
+                                let p_cost = ic_s.get(r + 1, r2, kin2, kout2);
                                 if !p_cost.is_finite() {
                                     continue;
                                 }
@@ -628,11 +697,12 @@ pub fn solve_chain_with(
     }
     bounds.reverse();
 
-    // Recover interior assignments per stage.
+    // Recover interior assignments per stage (against the stage's own
+    // class matrices, so the recovery sees the same costs the DP did).
     let mut placement = vec![0usize; v];
     let mut choice = vec![0usize; v];
     for (stage, &(l, r, kin, kout)) in bounds.iter().enumerate() {
-        let assign = interval_assignment(costs, l, r, kin, kout)?;
+        let assign = interval_assignment(costs_for_stage(stage), l, r, kin, kout)?;
         for (off, &k) in assign.iter().enumerate() {
             placement[l + off] = stage;
             choice[l + off] = k;
@@ -717,7 +787,7 @@ pub fn brute_force(graph: &Graph, costs: &CostMatrices) -> Option<(f64, Vec<usiz
         let mut choice = vec![0usize; v];
         'outer: loop {
             let mem = crate::cost::stage_memory(graph, costs, &placement, &choice);
-            if mem.iter().all(|&m| m <= costs.mem_limit) {
+            if mem.iter().enumerate().all(|(i, &m)| m <= costs.stage_limit(i)) {
                 let tpi = crate::cost::objective_tpi(graph, costs, &placement, &choice);
                 if best.as_ref().map_or(true, |(b, _, _)| tpi < *b) {
                     best = Some((tpi, placement.clone(), choice.clone()));
@@ -797,7 +867,7 @@ mod tests {
 
     #[test]
     fn pareto_insert_keeps_non_dominated() {
-        let mk = |sum, mx| Point { sum, mx, prev_r: 0, prev_kout: 0, prev_idx: 0, kin: 0 };
+        let mk = |sum, mx| Point { sum, mx, prev: None, kin: 0 };
         let mut f = vec![];
         pareto_insert(&mut f, mk(1.0, 3.0));
         pareto_insert(&mut f, mk(3.0, 1.0));
@@ -957,5 +1027,61 @@ mod tests {
         let plan = solve_chain(&g, &costs, &PlannerConfig::default()).expect("feasible");
         assert!(plan.check(&g, &costs).is_empty());
         assert!(plan.est_tpi > 0.0 && plan.est_tpi.is_finite());
+    }
+
+    #[test]
+    fn envf_chain_matches_brute_force() {
+        // The per-stage class tables must stay exactly optimal on a
+        // heterogeneous cluster, not just heuristically better.
+        let g = models::synthetic_chain(5, 5e11, 2e7, 2e6);
+        let env = ClusterEnv::env_f();
+        let p = Profile::analytic(&env, &g);
+        let costs = cost_modeling(&p, &g, 2, 8, 2);
+        assert!(costs.is_heterogeneous());
+        let plan = solve_chain(&g, &costs, &PlannerConfig::default()).expect("feasible");
+        let (tpi_bf, _, _) = brute_force(&g, &costs).expect("feasible");
+        let rel = (plan.est_tpi - tpi_bf).abs() / tpi_bf;
+        assert!(rel < 1e-9, "chain {} vs brute force {tpi_bf}", plan.est_tpi);
+    }
+
+    #[test]
+    fn envf_two_stage_plan_gives_slower_block_fewer_layers() {
+        // Directed ISSUE-10 acceptance test: on a uniform chain across
+        // EnvF's V100 block (stage 0) and TITAN block (stage 1), the DP
+        // must assign strictly fewer layers to the slower hardware.
+        let g = models::synthetic_chain(8, 5e11, 2e7, 2e6);
+        let env = ClusterEnv::env_f();
+        let p = Profile::analytic(&env, &g);
+        let costs = cost_modeling(&p, &g, 2, 8, 2);
+        let plan = solve_chain(&g, &costs, &PlannerConfig::default()).expect("feasible");
+        let fast = plan.placement.iter().filter(|&&st| st == 0).count();
+        let slow = plan.placement.iter().filter(|&&st| st == 1).count();
+        assert!(
+            slow < fast,
+            "slow block got {slow} of 8 layers, fast got {fast} — expected an unequal split"
+        );
+        assert!(plan.check(&g, &costs).is_empty());
+    }
+
+    #[test]
+    fn repeated_table_chain_plan_is_bit_identical() {
+        // Homogeneous cluster through the heterogeneous DP path (single
+        // stage class, scale exactly 1.0) must return the same plan bits.
+        use crate::cluster::NodeSpec;
+        let g = models::synthetic_chain(8, 5e11, 2e7, 2e6);
+        let legacy = ClusterEnv::env_b();
+        let mut het = legacy.clone();
+        het.node_table = (0..het.nodes)
+            .map(|_| NodeSpec { device: het.device.clone(), gpus: het.gpus_per_node })
+            .collect();
+        let cfg = PlannerConfig::default();
+        let cl = cost_modeling(&Profile::analytic(&legacy, &g), &g, 2, 16, 4);
+        let ch = cost_modeling(&Profile::analytic(&het, &g), &g, 2, 16, 4);
+        assert!(!cl.is_heterogeneous() && ch.is_heterogeneous());
+        let pl = solve_chain(&g, &cl, &cfg).expect("feasible");
+        let ph = solve_chain(&g, &ch, &cfg).expect("feasible");
+        assert_eq!(pl.placement, ph.placement);
+        assert_eq!(pl.choice, ph.choice);
+        assert_eq!(pl.est_tpi.to_bits(), ph.est_tpi.to_bits());
     }
 }

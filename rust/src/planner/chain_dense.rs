@@ -11,7 +11,10 @@
 //! relation the regression tests in `rust/tests/paper_shapes.rs` pin.
 //!
 //! Do not extend this module: new planner work belongs in
-//! [`crate::planner::chain`].
+//! [`crate::planner::chain`]. In particular it predates heterogeneous
+//! clusters and prices every stage with the reference device (`costs.a`,
+//! global `mem_limit`); cross-validation against it is only meaningful
+//! on homogeneous cost matrices.
 
 use crate::cost::CostMatrices;
 use crate::graph::Graph;

@@ -259,11 +259,11 @@ impl Plan {
         }
         let mem = crate::cost::stage_memory(graph, costs, &self.placement, &self.choice);
         for (i, m) in mem.iter().enumerate() {
-            if *m > costs.mem_limit {
+            if *m > costs.stage_limit(i) {
                 bad.push(format!(
                     "stage {i} exceeds memory: {} > {} (5)",
                     crate::util::gib(*m),
-                    crate::util::gib(costs.mem_limit)
+                    crate::util::gib(costs.stage_limit(i))
                 ));
             }
         }

@@ -61,6 +61,7 @@ pub fn local_env(workers: usize, calib: Option<&CpuCalibration>) -> ClusterEnv {
             flops_f16: flops,
             mem_bytes: 4e9,
         },
+        node_table: Vec::new(),
         group_size: workers.max(1),
         intra_group_bw: 8e9, // memcpy-class
         inter_group_bw: 8e9,

@@ -53,7 +53,7 @@
 //! metadata stamp added *inside* the checksummed payload:
 //!
 //! ```json
-//! {"format":"uniap-state","version":2,
+//! {"format":"uniap-state","version":3,
 //!  "payload":{"meta":{"writer":"12345","seq":3},
 //!             "frontiers":[{"key":"…16 hex…","frontier":{…}}…],
 //!             "bases":[{"fp":"…16 hex…","pp":2,"base":{…}}…]},

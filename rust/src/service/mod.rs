@@ -142,6 +142,16 @@ pub fn resolve_workload(req: &PlanRequest) -> Result<ResolvedWorkload, String> {
     resolve_model(&req.model)
 }
 
+/// Resolve the cluster a request plans against: the inline `cluster`
+/// payload wins over the preset name (exactly as `dag` wins over `model`),
+/// otherwise `env` is looked up in the preset zoo.
+pub fn resolve_env(req: &PlanRequest) -> Result<ClusterEnv, String> {
+    if let Some(cluster) = &req.cluster {
+        return Ok(cluster.clone());
+    }
+    ClusterEnv::by_name(&req.env).ok_or_else(|| format!("unknown env {:?}", req.env))
+}
+
 /// Name-only resolution (no inline payload) — shared by `uniap plan`,
 /// `uniap profile` and request validation tooling.
 pub fn resolve_model(name: &str) -> Result<ResolvedWorkload, String> {
@@ -191,6 +201,21 @@ pub fn workload_fingerprint_tagged(kind: WorkloadKind, env: &ClusterEnv, graph: 
     h.f64(env.inter_node_bw);
     h.f64(env.link_latency);
     h.f64(env.net_latency);
+    // Device table: hashed only when present, so every pre-heterogeneity
+    // fingerprint is unchanged (warm snapshots stay valid), while a
+    // heterogeneous env can never alias its homogeneous reference —
+    // including a *repeated-entry* table, which plans bit-identically but
+    // is still a distinct cluster description.
+    if !env.node_table.is_empty() {
+        h.usize(env.node_table.len());
+        for node in &env.node_table {
+            h.str(&node.device.name);
+            h.f64(node.device.flops_f32);
+            h.f64(node.device.flops_f16);
+            h.f64(node.device.mem_bytes);
+            h.usize(node.gpus);
+        }
+    }
     h.str(&graph.name);
     h.usize(graph.layers.len());
     for l in &graph.layers {
@@ -634,8 +659,9 @@ impl PlannerService {
             return PlanResponse::error(&req.id, format!("invalid request: {e}"));
         }
 
-        let Some(env) = ClusterEnv::by_name(&req.env) else {
-            return PlanResponse::error(&req.id, format!("unknown env {:?}", req.env));
+        let env = match resolve_env(req) {
+            Ok(e) => e,
+            Err(e) => return PlanResponse::error(&req.id, e),
         };
         // Inline DAGs and the branching zoo lower to a chain graph here;
         // everything downstream (profiles, cost bases, solvers, caches,

@@ -7,6 +7,7 @@
 //! format of `uniap serve --requests <file.json>`.
 
 use crate::baselines::BaselineKind;
+use crate::cluster::ClusterEnv;
 use crate::cost::Schedule;
 use crate::dag::OpDag;
 use crate::planner::Engine;
@@ -26,7 +27,8 @@ pub struct PlanRequest {
     /// Model zoo name (`bert`, `t5`, `vit`, `swin`, `llama-7b`, …; DAG
     /// models `unet`, `unet-small`, `diamond`). Ignored when `dag` is set.
     pub model: String,
-    /// Environment preset name (`EnvA`…`EnvE`).
+    /// Environment preset name (`EnvA`…`EnvF`, `EnvD-{n}n`). Ignored when
+    /// `cluster` is set.
     pub env: String,
     /// Global mini-batch size `B`.
     pub batch: usize,
@@ -49,6 +51,10 @@ pub struct PlanRequest {
     /// the service validates and linearizes it into a chain of virtual
     /// layers, then plans that chain exactly like any zoo model.
     pub dag: Option<OpDag>,
+    /// Inline cluster description (possibly heterogeneous: per-node device
+    /// table, uneven node sizes). When present it wins over `env`, exactly
+    /// as `dag` wins over `model`.
+    pub cluster: Option<ClusterEnv>,
     /// Fleet-internal marker (ISSUE 8): set by a node warm-forwarding
     /// this request to its ring owner. A server never re-forwards a
     /// relayed request, which makes forwarding loop-free even when two
@@ -78,8 +84,16 @@ impl PlanRequest {
             max_pp: None,
             threads: None,
             dag: None,
+            cluster: None,
             relay: false,
         }
+    }
+
+    /// A UniAP request for an inline (possibly heterogeneous) cluster.
+    pub fn new_cluster(id: &str, model: &str, cluster: ClusterEnv, batch: usize) -> PlanRequest {
+        let mut req = PlanRequest::new(id, model, "", batch);
+        req.cluster = Some(cluster);
+        req
     }
 
     /// A UniAP request for an inline operator DAG.
@@ -125,6 +139,12 @@ impl PlanRequest {
             // responses at every seam — in-process, batch file, socket.
             dag.validate().map_err(|e| format!("\"dag\": {e}"))?;
         }
+        if let Some(cluster) = &self.cluster {
+            // Same policy for inline clusters: degenerate shapes and
+            // non-finite bandwidths become typed errors, never a panicked
+            // solve (`stage_ranks` on a request-driven path).
+            cluster.validate().map_err(|e| format!("\"cluster\": {e}"))?;
+        }
         Ok(())
     }
 
@@ -143,6 +163,7 @@ impl PlanRequest {
             .field("max_pp", self.max_pp.map_or(Json::Null, Json::from))
             .field("threads", self.threads.map_or(Json::Null, Json::from))
             .field("dag", self.dag.as_ref().map_or(Json::Null, OpDag::to_json))
+            .field("cluster", self.cluster.as_ref().map_or(Json::Null, ClusterEnv::to_json))
             .field("relay", self.relay)
     }
 
@@ -167,7 +188,16 @@ impl PlanRequest {
         } else {
             req_str("model")?
         };
-        let env = req_str("env")?;
+        let cluster = match j.get("cluster").filter(|v| !v.is_null()) {
+            None => None,
+            Some(c) => Some(ClusterEnv::from_json(c).map_err(|e| format!("\"cluster\": {e}"))?),
+        };
+        let env = if cluster.is_some() {
+            // the inline payload wins; a name is allowed but not required
+            j.get("env").and_then(Json::as_str).unwrap_or("").to_string()
+        } else {
+            req_str("env")?
+        };
         let batch = j
             .get("batch")
             .and_then(Json::as_usize)
@@ -206,6 +236,7 @@ impl PlanRequest {
             req.relay = r.as_bool().ok_or("\"relay\" must be a boolean")?;
         }
         req.dag = dag;
+        req.cluster = cluster;
         // field-type checks above, value-range checks here — notably the
         // non-finite deadlines that the sentinel-aware number parsing
         // (util::json) now lets through as real f64 values
@@ -365,6 +396,31 @@ mod tests {
         let mut bad = PlanRequest::new_dag("b", crate::graph::models::diamond(), "EnvB", 8);
         bad.dag.as_mut().unwrap().ops[1].name = "stem".into(); // duplicate name
         assert!(bad.validate().unwrap_err().contains("duplicate op name"));
+    }
+
+    #[test]
+    fn cluster_requests_roundtrip_and_validate() {
+        let req = PlanRequest::new_cluster("c1", "bert", ClusterEnv::env_f(), 16);
+        let back = PlanRequest::parse(&req.to_json().to_string()).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(back.env, "");
+        assert!(back.cluster.as_ref().unwrap().is_heterogeneous());
+
+        // a cluster-carrying request doesn't need an env name on the wire
+        let inline = ClusterEnv::env_b().to_json().to_string();
+        let parsed =
+            PlanRequest::parse(&format!(r#"{{"model":"bert","batch":8,"cluster":{inline}}}"#))
+                .unwrap();
+        assert_eq!(parsed.cluster, Some(ClusterEnv::env_b()));
+
+        // malformed inline clusters are typed parse errors, not panics
+        let err = PlanRequest::parse(r#"{"model":"bert","batch":8,"cluster":{"nodes":0}}"#);
+        assert!(err.is_err());
+
+        // validate() catches a cluster mutated after construction
+        let mut bad = PlanRequest::new_cluster("b", "bert", ClusterEnv::env_b(), 8);
+        bad.cluster.as_mut().unwrap().nodes = 0;
+        assert!(bad.validate().unwrap_err().contains("\"cluster\""));
     }
 
     #[test]

@@ -982,7 +982,7 @@ fn try_forward(
     if req.relay || req.validate().is_err() {
         return None;
     }
-    let env = crate::cluster::ClusterEnv::by_name(&req.env)?;
+    let env = super::resolve_env(req).ok()?;
     let resolved = super::resolve_workload(req).ok()?;
     let fp = super::workload_fingerprint_tagged(resolved.kind, &env, &resolved.graph);
     if fleet.owns_locally(fp) || service.outcome_is_cached(fp, req) {

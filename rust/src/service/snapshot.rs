@@ -66,7 +66,15 @@ use super::PlannerService;
 /// content key in a version-1 file hashes differently; loading one would
 /// be pure dead weight, and merging one could resurrect the aliasing the
 /// tag exists to prevent. Old files cold-start with a logged reason.
-pub const SNAPSHOT_VERSION: usize = 2;
+///
+/// **3** — heterogeneous clusters: serialized `CostBase` entries gained
+/// the per-stage `stage_comp_scale` / `stage_mem_limit` tables, which a
+/// version-2 reader's `from_json` rejects (and whose absence a version-3
+/// reader rejects), and fingerprints hash the device table when one is
+/// present. Homogeneous fingerprints are unchanged, but a mixed-version
+/// fleet merging base payloads across the schema change would shed every
+/// entry as unreadable — bump so old files cold-start explicitly instead.
+pub const SNAPSHOT_VERSION: usize = 3;
 
 /// Merged snapshot file name inside `--state-dir`.
 pub const SNAPSHOT_FILE: &str = "state.json";
@@ -495,7 +503,11 @@ mod tests {
         ));
 
         // version from the future → cold start naming the version
-        let future = text.replacen("\"version\":2", "\"version\":999", 1);
+        let future = text.replacen(
+            &format!("\"version\":{SNAPSHOT_VERSION}"),
+            "\"version\":999",
+            1,
+        );
         std::fs::write(&path, &future).unwrap();
         match fresh.load_state(&dir) {
             LoadOutcome::ColdStart { reason: Some(r) } => assert!(r.contains("999"), "{r}"),

@@ -89,6 +89,14 @@ fn stage_timing(graph: &Graph, costs: &CostMatrices, plan: &Plan) -> StageTiming
         bwd[s] += costs.a_bwd[u][k] + costs.per_iter[u][k] / costs.num_micro as f64;
         iter_tail[s] = 0.0;
         mem[s] += costs.m[u][k];
+        // Heterogeneous stage: the slowest device in the rank block
+        // stretches compute (not comm). Split the cost model's per-micro
+        // compute surcharge fwd:bwd as 1:2, matching `a_comp`'s 3×t_fwd.
+        if let Some(&sc) = costs.stage_comp_scale.get(s) {
+            let extra = costs.a_comp[u][k] * (sc - 1.0);
+            fwd[s] += extra / 3.0;
+            bwd[s] += extra * (2.0 / 3.0);
+        }
     }
     let mut o_fwd = vec![0.0; pp.saturating_sub(1)];
     for (e, &(u, w)) in graph.edges.iter().enumerate() {
@@ -177,9 +185,18 @@ pub fn simulate_with_costs(
     let tpi_std = crate::util::stddev(&tpis);
     let thr: Vec<f64> = tpis.iter().map(|&x| plan.batch as f64 / x).collect();
 
-    // memory with fragmentation overhead
+    // memory with fragmentation overhead, against each stage's own budget
+    // (the smallest device in a heterogeneous rank block bottlenecks it)
     let peak_mem: Vec<f64> = t.mem.iter().map(|&m| m * cfg.mem_overhead).collect();
-    let oom = peak_mem.iter().any(|&m| m > profile.mem_limit());
+    let oom = peak_mem.iter().enumerate().any(|(s, &m)| {
+        let limit = match profile.env.stage_ranks(plan.pp_size, s) {
+            Ok(ranks) if profile.env.is_heterogeneous() => {
+                profile.env.stage_mem_bytes(&ranks) - profile.ctx_mem_bytes
+            }
+            _ => profile.mem_limit(),
+        };
+        m > limit
+    });
 
     // bubble fraction: ideal is full overlap of c micro-batches on the
     // bottleneck stage.

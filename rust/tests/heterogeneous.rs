@@ -1,0 +1,243 @@
+//! Heterogeneous-cluster battery (ISSUE 10).
+//!
+//! Pins the two halves of the acceptance criteria end to end:
+//!
+//! * **Backwards bit-identity** — any homogeneous environment pushed
+//!   through the heterogeneous code path (a device table with one
+//!   repeated entry) must produce bit-identical cost coefficients and
+//!   plans to the legacy path, all the way through the UOP sweep and the
+//!   serving cache layer.
+//! * **Forward value** — on the mixed V100/TITAN EnvF the planner must
+//!   exploit the asymmetry: unequal layer counts on unequal hardware, a
+//!   strictly better modeled TPI than a homogeneity-forced plan, stage
+//!   memory held to the *smaller* device's budget, and cache fingerprints
+//!   that never alias the homogeneous reference.
+
+use uniap::cluster::{ClusterEnv, NodeSpec};
+use uniap::cost::{cost_modeling, objective_tpi, stage_memory};
+use uniap::graph::models;
+use uniap::planner::{chain, uop, PlannerConfig};
+use uniap::profiling::Profile;
+use uniap::service::{
+    workload_fingerprint, PlanRequest, PlannerService, Status,
+};
+
+/// `env` with its implicit homogeneity spelled out as a repeated-entry
+/// device table — the degenerate heterogeneous description of the same
+/// physical cluster.
+fn with_repeated_table(env: &ClusterEnv) -> ClusterEnv {
+    let mut het = env.clone();
+    het.node_table = (0..het.nodes)
+        .map(|_| NodeSpec { device: het.device.clone(), gpus: het.gpus_per_node })
+        .collect();
+    het
+}
+
+#[test]
+fn repeated_table_uop_sweep_is_bit_identical_to_legacy() {
+    // The full Algorithm 1 sweep (cost bases, materialisation, frontier
+    // memo, incumbent sharing) must not notice a repeated-entry table.
+    let g = models::bert_huge();
+    let legacy = ClusterEnv::env_b();
+    let het = with_repeated_table(&legacy);
+    let cfg = PlannerConfig { threads: 1, ..Default::default() };
+    let a = uop(&Profile::analytic(&legacy, &g), &g, 16, &cfg);
+    let b = uop(&Profile::analytic(&het, &g), &g, 16, &cfg);
+    let (pa, pb) = (a.best.expect("feasible"), b.best.expect("feasible"));
+    assert_eq!(pa.pp_size, pb.pp_size);
+    assert_eq!(pa.num_micro, pb.num_micro);
+    assert_eq!(pa.placement, pb.placement);
+    assert_eq!(pa.choice, pb.choice);
+    assert_eq!(pa.est_tpi.to_bits(), pb.est_tpi.to_bits(), "TPI must match to the bit");
+    // every candidate's logged optimum matches too, not just the winner
+    for (la, lb) in a.log.iter().zip(b.log.iter()) {
+        assert_eq!((la.pp_size, la.num_micro), (lb.pp_size, lb.num_micro));
+        assert_eq!(
+            la.tpi.map(f64::to_bits),
+            lb.tpi.map(f64::to_bits),
+            "candidate pp={} c={} diverged",
+            la.pp_size,
+            la.num_micro
+        );
+    }
+}
+
+#[test]
+fn every_homogeneous_preset_survives_the_repeated_table_path() {
+    // Property over the whole preset zoo: repeated-entry coefficients are
+    // bit-identical at the cost-matrix level (the solver inputs).
+    let g = models::synthetic_chain(6, 5e11, 2e7, 2e6);
+    for env in [
+        ClusterEnv::env_a(),
+        ClusterEnv::env_b(),
+        ClusterEnv::env_c(),
+        ClusterEnv::env_d(),
+        ClusterEnv::env_e(),
+    ] {
+        let het = with_repeated_table(&env);
+        let pl = Profile::analytic(&env, &g);
+        let ph = Profile::analytic(&het, &g);
+        let n = env.total_devices();
+        for pp in [1usize, 2] {
+            if n % pp != 0 {
+                continue;
+            }
+            let cl = cost_modeling(&pl, &g, pp, 8, 2);
+            let ch = cost_modeling(&ph, &g, pp, 8, 2);
+            for u in 0..cl.num_layers() {
+                for k in 0..cl.num_strategies() {
+                    for stage in 0..pp {
+                        assert_eq!(
+                            cl.stage_a(u, k, stage).to_bits(),
+                            ch.stage_a(u, k, stage).to_bits(),
+                            "{}: a[{u}][{k}] stage {stage}",
+                            env.name
+                        );
+                    }
+                }
+            }
+            for stage in 0..pp {
+                assert_eq!(
+                    cl.stage_limit(stage).to_bits(),
+                    ch.stage_limit(stage).to_bits(),
+                    "{}: stage {stage} memory budget",
+                    env.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn envf_vs_homogeneous_throughput() {
+    // EXPERIMENTS.md §PR 10 gate: priced by the true (heterogeneous)
+    // objective, the heterogeneity-aware plan strictly beats the plan a
+    // homogeneity-forced cost model picks for the same cluster.
+    let g = models::synthetic_chain(8, 5e11, 2e7, 2e6);
+    let het_env = ClusterEnv::env_f();
+    let mut hom_env = het_env.clone();
+    hom_env.node_table.clear(); // forced homogeneous: every rank "is" the V100 reference
+    let cfg = PlannerConfig::default();
+    let het_costs = cost_modeling(&Profile::analytic(&het_env, &g), &g, 2, 8, 2);
+    let hom_costs = cost_modeling(&Profile::analytic(&hom_env, &g), &g, 2, 8, 2);
+    let het_plan = chain::solve_chain(&g, &het_costs, &cfg).expect("feasible");
+    let hom_plan = chain::solve_chain(&g, &hom_costs, &cfg).expect("feasible");
+    assert_ne!(
+        het_plan.placement, hom_plan.placement,
+        "the het-aware split must differ from the balanced homogeneous one"
+    );
+    let het_tpi = objective_tpi(&g, &het_costs, &het_plan.placement, &het_plan.choice);
+    let forced_tpi = objective_tpi(&g, &het_costs, &hom_plan.placement, &hom_plan.choice);
+    assert!(
+        het_tpi < forced_tpi,
+        "het-aware TPI {het_tpi} must strictly beat the homogeneity-forced {forced_tpi}"
+    );
+}
+
+#[test]
+fn envf_plan_respects_the_smaller_titan_memory() {
+    // Stage 1's budget is the TITAN's 12 GB, not the reference V100's 32.
+    let g = models::bert_huge();
+    let env = ClusterEnv::env_f();
+    let p = Profile::analytic(&env, &g);
+    let costs = cost_modeling(&p, &g, 2, 16, 4);
+    assert!(
+        costs.stage_limit(1) < costs.stage_limit(0),
+        "TITAN stage budget {} must undercut the V100 stage's {}",
+        costs.stage_limit(1),
+        costs.stage_limit(0)
+    );
+    if let Some(plan) = chain::solve_chain(&g, &costs, &PlannerConfig::default()) {
+        assert!(plan.check(&g, &costs).is_empty(), "{:?}", plan.check(&g, &costs));
+        let mem = stage_memory(&g, &costs, &plan.placement, &plan.choice);
+        assert!(mem[1] <= costs.stage_limit(1));
+    }
+}
+
+#[test]
+fn device_table_changes_the_workload_fingerprint() {
+    let g = models::bert_huge();
+    let het = ClusterEnv::env_f();
+    let mut hom = het.clone();
+    hom.node_table.clear();
+    assert_ne!(
+        workload_fingerprint(&het, &g),
+        workload_fingerprint(&hom, &g),
+        "heterogeneous EnvF must never alias its homogeneous reference"
+    );
+
+    // a repeated-entry table plans bit-identically, yet it is a distinct
+    // cluster description and must key its own cache entries
+    let legacy = ClusterEnv::env_b();
+    let repeated = with_repeated_table(&legacy);
+    assert_ne!(workload_fingerprint(&legacy, &g), workload_fingerprint(&repeated, &g));
+
+    // swapping which node hosts the slow block re-keys caches too
+    let mut flipped = het.clone();
+    flipped.node_table.swap(0, 1);
+    assert_ne!(workload_fingerprint(&het, &g), workload_fingerprint(&flipped, &g));
+}
+
+#[test]
+fn envd_family_names_resolve_back_to_their_env() {
+    // The fingerprint/report names env_d_nodes generates must round-trip
+    // through by_name (ISSUE 10 satellite).
+    for n in [1usize, 2, 3, 4, 8] {
+        let name = format!("EnvD-{n}n");
+        let env = ClusterEnv::by_name(&name)
+            .unwrap_or_else(|| panic!("{name} must resolve"));
+        assert_eq!(env.nodes, n);
+        assert_eq!(env.name, name);
+        // case variants too
+        assert!(ClusterEnv::by_name(&name.to_ascii_lowercase()).is_some());
+        assert!(ClusterEnv::by_name(&name.to_ascii_uppercase()).is_some());
+    }
+}
+
+#[test]
+fn inline_cluster_request_matches_named_envf_and_replays_from_cache() {
+    let service = PlannerService::new();
+    let mut named = PlanRequest::new("named", "bert", "EnvF", 16);
+    named.max_pp = Some(2);
+    let a = service.plan(&named);
+    assert_eq!(a.status, Status::Ok, "{:?}", a.error);
+    let plan_a = a.plan.expect("EnvF bert plan");
+
+    // the same cluster sent inline hashes to the same workload, so the
+    // second request must replay the cached outcome bit-identically
+    let mut inline = PlanRequest::new_cluster("inline", "bert", ClusterEnv::env_f(), 16);
+    inline.max_pp = Some(2);
+    let before = service.stats().plan_hits;
+    let b = service.plan(&inline);
+    assert_eq!(b.status, Status::Ok, "{:?}", b.error);
+    let plan_b = b.plan.expect("inline cluster plan");
+    assert_eq!(plan_a.placement, plan_b.placement);
+    assert_eq!(plan_a.choice, plan_b.choice);
+    assert_eq!(plan_a.est_tpi.to_bits(), plan_b.est_tpi.to_bits());
+    assert!(
+        service.stats().plan_hits > before,
+        "identical workload content must hit the outcome cache"
+    );
+
+    // wire round-trip: the inline request survives JSON exactly
+    let back = PlanRequest::parse(&inline.to_json().to_string()).expect("round-trip");
+    assert_eq!(back, inline);
+}
+
+#[test]
+fn request_driven_bad_cluster_is_a_typed_error_not_a_panic() {
+    // stage_ranks used to assert!; a request naming a degenerate cluster
+    // must come back as an error response (satellite: typed errors).
+    let service = PlannerService::new();
+    let mut cluster = ClusterEnv::env_f();
+    cluster.nodes = 0; // malformed on purpose
+    let mut req = PlanRequest::new("bad", "bert", "", 16);
+    req.cluster = Some(cluster);
+    let resp = service.plan(&req);
+    assert_eq!(resp.status, Status::Error);
+    assert!(
+        resp.error.as_deref().unwrap_or("").contains("cluster"),
+        "{:?}",
+        resp.error
+    );
+}
